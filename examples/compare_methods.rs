@@ -1,0 +1,52 @@
+//! Compare every draft-tree policy on the same workload — the paper's
+//! Table-1 contest in miniature, over the sim backend so it runs in
+//! seconds. Prints accepted tokens/step, virtual latency per token in the
+//! 7B regime, draft dispatch counts, and tree shapes.
+//!
+//!   cargo run --release --example compare_methods -- [budget] [temp]
+
+use dyspec::config::{EngineConfig, LatencyRegime, PolicyKind};
+use dyspec::data::prompts::PromptSet;
+use dyspec::engine::stats::RunAggregate;
+use dyspec::engine::SpecEngine;
+use dyspec::models::sim::{SimModel, SimSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let budget: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let temp: f32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.0);
+    let regime = LatencyRegime::pair_7b();
+    let prompts = PromptSet::by_name("c4", 6, 128, 3).unwrap();
+
+    println!(
+        "policy           tok/step  lat/token   draft_dispatches  mean_tree  (budget {budget}, temp {temp}, 7b regime)"
+    );
+    for policy in PolicyKind::all() {
+        let spec = SimSpec::for_dataset("c4", 1.2, 42);
+        let (draft, target) = SimModel::pair(spec);
+        let cfg = EngineConfig {
+            policy,
+            tree_budget: budget,
+            target_temp: temp,
+            max_new_tokens: 128,
+            seed: 5,
+            ..EngineConfig::default()
+        };
+        let mut engine = SpecEngine::new(Box::new(draft), Box::new(target), cfg, Some(regime));
+        let mut agg = RunAggregate::default();
+        let mut dispatches = 0u64;
+        for p in prompts.iter() {
+            let stats = engine.generate(p);
+            dispatches += stats.total_draft_dispatches();
+            agg.add(&stats);
+        }
+        println!(
+            "{:<16} {:>7.2}  {:>9.5}  {:>16}  {:>9.1}",
+            policy.name(),
+            agg.emitted_per_step(),
+            agg.virtual_latency_per_token(),
+            dispatches,
+            agg.mean_tree_size(),
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the end-to-end path a new user runs first.
+//!
+//! Loads the AOT-compiled draft/target transformers (`make artifacts`),
+//! verifies the PJRT wiring against the python golden outputs, then serves
+//! one prompt from each dataset profile with DySpec speculative decoding
+//! and prints acceptance + latency against the autoregressive baseline.
+//!
+//!   cargo run --release --example quickstart
+
+use dyspec::config::{EngineConfig, PolicyKind};
+use dyspec::data::prompts::PromptSet;
+use dyspec::engine::SpecEngine;
+use dyspec::models::hlo::HloModel;
+use dyspec::models::LogitModel;
+use dyspec::runtime::artifacts::{Artifacts, Role};
+use dyspec::runtime::PjrtRuntime;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let arts = Artifacts::load("artifacts")
+        .map_err(|e| format!("{e} (run `make artifacts` first)"))?;
+    let mut rt = PjrtRuntime::cpu()?;
+    let seq = arts.seq_small();
+    println!("PJRT platform: {} | vocab {} | seq {}", rt.platform(), arts.vocab_size(), seq);
+
+    // The paper's protocol scaled down: 64-token prompt, 48 generated,
+    // budget 16 (full-size runs live in the bench harness).
+    let prompt_len = 64;
+    let max_new = 48;
+
+    for dataset in ["cnn", "c4", "owt"] {
+        let prompts = PromptSet::by_name(dataset, 1, prompt_len, 7).unwrap();
+        let mut results = Vec::new();
+        for policy in [PolicyKind::DySpec, PolicyKind::Baseline] {
+            let draft = HloModel::load(&mut rt, &arts, Role::Draft, seq, false)?;
+            let target = HloModel::load(&mut rt, &arts, Role::Target, seq, false)?;
+            let cfg = EngineConfig {
+                policy,
+                tree_budget: 16,
+                max_new_tokens: max_new,
+                target_temp: 0.6,
+                seed: 11,
+                ..EngineConfig::default()
+            };
+            let mut engine =
+                SpecEngine::new(Box::new(draft), Box::new(target), cfg, None);
+            let t = std::time::Instant::now();
+            let stats = engine.generate(prompts.get(0));
+            results.push((policy, stats, t.elapsed().as_secs_f64()));
+        }
+        let (_, spec_stats, spec_wall) = &results[0];
+        let (_, base_stats, base_wall) = &results[1];
+        println!(
+            "{dataset:>4}: dyspec {:.2} tok/step, {:.1} tok/s | baseline {:.1} tok/s | speedup {:.2}x",
+            spec_stats.mean_emitted_per_step(),
+            spec_stats.tokens.len() as f64 / spec_wall,
+            base_stats.tokens.len() as f64 / base_wall,
+            (base_wall / base_stats.tokens.len() as f64)
+                / (spec_wall / spec_stats.tokens.len() as f64),
+        );
+    }
+    println!("\nquickstart OK — see `dyspec bench --experiment table1` for the paper tables");
+    Ok(())
+}

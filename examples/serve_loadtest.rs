@@ -1,0 +1,97 @@
+//! Serving load test: starts the coordinator + TCP server in-process,
+//! replays a Poisson request trace through real client connections, and
+//! reports throughput, latency percentiles and backpressure counts — the
+//! end-to-end driver for the serving layer (DESIGN.md deliverable (b)).
+//!
+//!   cargo run --release --example serve_loadtest -- [requests] [rate_rps] [workers]
+
+use std::sync::Arc;
+
+use dyspec::config::Config;
+use dyspec::coordinator::{Coordinator, ModelFactory};
+use dyspec::data::prompts::PromptSet;
+use dyspec::data::trace::RequestTrace;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+use dyspec::server::{Client, Server};
+use dyspec::util::Histogram;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(48);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40.0);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let mut cfg = Config::new();
+    cfg.server.workers = workers;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.engine.tree_budget = 24;
+
+    let factory: ModelFactory = Arc::new(|| {
+        let spec = SimSpec::for_dataset("c4", 1.2, 77);
+        let (d, t) = SimModel::pair(spec);
+        (Box::new(d) as Box<dyn LogitModel>, Box::new(t) as Box<dyn LogitModel>)
+    });
+    let coord = Coordinator::start(cfg.clone(), factory);
+    let server = Server::bind(&cfg.server.addr, coord).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    let prompts = PromptSet::by_name("c4", 8, 64, 5).unwrap();
+    let trace = RequestTrace::poisson(n_requests, rate, prompts.len(), 64, 0.6, 9);
+    println!(
+        "replaying {} requests at {:.0} rps over {} workers -> {addr}",
+        trace.len(),
+        rate,
+        workers
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for ev in trace.events.clone() {
+        let addr = addr.clone();
+        let prompt: Vec<u32> = prompts.get(ev.prompt_idx).to_vec();
+        handles.push(std::thread::spawn(move || {
+            let wait = ev.at_secs - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            let sent = std::time::Instant::now();
+            let mut client = Client::connect(&addr).ok()?;
+            let reply = client
+                .generate_detailed(&prompt, ev.max_new_tokens, ev.temperature)
+                .ok()?;
+            let e2e = sent.elapsed().as_secs_f64();
+            let tokens = reply.get("tokens")?.as_arr()?.len();
+            Some((e2e, tokens))
+        }));
+    }
+
+    let mut lat = Histogram::new();
+    let mut total_tokens = 0usize;
+    let mut failures = 0usize;
+    for h in handles {
+        match h.join().expect("client thread") {
+            Some((e2e, tokens)) => {
+                lat.record(e2e);
+                total_tokens += tokens;
+            }
+            None => failures += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "done in {wall:.2}s: {} ok / {failures} failed | {:.0} tokens/s | e2e p50 {:.3}s p99 {:.3}s",
+        lat.len(),
+        total_tokens as f64 / wall,
+        lat.p50(),
+        lat.p99(),
+    );
+
+    let mut client = Client::connect(&addr).expect("stats conn");
+    println!("server metrics: {}", client.stats().unwrap().to_string());
+    client.shutdown().expect("shutdown");
+    server_thread.join().unwrap();
+}

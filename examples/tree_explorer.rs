@@ -1,0 +1,73 @@
+//! Tree explorer: build draft trees with every policy and inspect their
+//! structure — layer widths, depth, estimate distribution, attention-mask
+//! block counts under each token order (paper Appendix C).
+//!
+//!   cargo run --release --example tree_explorer -- [budget] [noise] [threshold]
+
+use dyspec::config::{EngineConfig, PolicyKind};
+use dyspec::draft::make_policy;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::tree::{
+    block_count, dfs_order, hpd_order, insertion_order, TokenTree, TreeMask,
+};
+use dyspec::util::Rng;
+
+fn describe(name: &str, tree: &TokenTree) {
+    let widths = tree.layer_widths();
+    println!("--- {name}: {} nodes, depth {} ---", tree.size(), tree.depth());
+    println!("  layer widths: {widths:?}");
+    println!(
+        "  Σ estimates (expected accepted bound): {:.3}",
+        tree.total_estimate()
+    );
+    for (label, order) in [
+        ("insertion", insertion_order(tree)),
+        ("dfs", dfs_order(tree)),
+        ("hpd", hpd_order(tree)),
+    ] {
+        let mask = TreeMask::from_tree(tree, &order);
+        println!(
+            "  {label:<9} order: {} mask blocks (32x32), {} attend bits",
+            block_count(&mask, 32),
+            mask.count_ones()
+        );
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let budget: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let noise: f32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1.2);
+    let threshold: f64 = args
+        .get(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0 / budget as f64);
+
+    let spec = SimSpec::for_dataset("owt", noise, 42);
+    let prefix: Vec<u32> = (0..16).map(|i| (i * 37 + 5) % 512).collect();
+    println!(
+        "budget={budget} noise={noise} threshold={threshold} (owt profile)\n"
+    );
+
+    for policy_kind in [
+        PolicyKind::DySpec,
+        PolicyKind::DySpecThreshold,
+        PolicyKind::Sequoia,
+        PolicyKind::SpecInfer,
+        PolicyKind::Chain,
+    ] {
+        let cfg = EngineConfig {
+            policy: policy_kind,
+            tree_budget: budget,
+            threshold,
+            max_depth: 48,
+            ..EngineConfig::default()
+        };
+        let (mut draft, _) = SimModel::pair(spec);
+        let mut rng = Rng::new(7);
+        let policy = make_policy(policy_kind);
+        let tree = policy.build(&mut draft, &prefix, &cfg, &mut rng);
+        describe(policy_kind.name(), &tree);
+        println!();
+    }
+}

@@ -1,0 +1,223 @@
+"""AOT compile path: train tiny models, lower forwards to HLO text, write
+artifacts/ for the rust runtime. Runs ONCE via `make artifacts`; python is
+never on the request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 rust crate binds) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts written (all consumed by rust/src/runtime/):
+  {target,draft}_s{S}.hlo.txt      forward graphs, ref attention
+  target_pallas_s{S_small}.hlo.txt forward with the L1 Pallas kernel inlined
+  {target,draft}_params.bin        f32 LE weights, concatenated param_order
+  meta.json                        configs, param tables, artifact index,
+                                   train stats, corpus profiles
+  golden.json                      pinned logits for cross-language checks
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .model import (
+    CONFIGS,
+    MAX_POSITIONS,
+    VOCAB_SIZE,
+    causal_mask,
+    forward,
+    make_forward_fn,
+    param_order,
+    param_shapes,
+)
+from .train import train_all
+
+SEQ_SMALL = 320   # 256 prefix budget + 64-token trees (Tables 1-3 regime)
+SEQ_LARGE = 1024  # 256 prefix budget + 768-token trees (Table 4 regime)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 64-bit-id workaround)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg, seq_len: int, attn_impl: str) -> str:
+    fn, specs = make_forward_fn(cfg, seq_len, attn_impl)
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def flatten_params(cfg, params) -> np.ndarray:
+    """Concatenate all weights (param_order) into one f32 vector."""
+    chunks = [np.asarray(params[n], np.float32).ravel() for n in param_order(cfg)]
+    return np.concatenate(chunks)
+
+
+def param_table(cfg):
+    """[{name, shape, offset, size}] — the rust loader's slicing map."""
+    table, offset = [], 0
+    shapes = param_shapes(cfg)
+    for name in param_order(cfg):
+        shape = shapes[name]
+        size = int(np.prod(shape))
+        table.append(
+            {"name": name, "shape": list(shape), "offset": offset, "size": size}
+        )
+        offset += size
+    return table
+
+
+def golden_logits(params_by_role, seq_len=SEQ_SMALL):
+    """Pinned forward outputs so rust can verify its PJRT wiring end-to-end."""
+    tokens = (np.arange(seq_len, dtype=np.int32) * 7 + 3) % VOCAB_SIZE
+    positions = np.arange(seq_len, dtype=np.int32)
+    mask = np.asarray(causal_mask(seq_len))
+    out = {
+        "tokens_formula": "(7*i + 3) % vocab",
+        "seq_len": seq_len,
+        "positions": "arange",
+        "mask": "causal",
+    }
+    for role, params in params_by_role.items():
+        logits = forward(
+            params, CONFIGS[role], jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(mask),
+        )
+        last = np.asarray(logits)[-1]
+        out[role] = {
+            "last_row_first8": [float(x) for x in last[:8]],
+            "last_row_argmax": int(last.argmax()),
+            "last_row_sum": float(last.sum()),
+        }
+    return out
+
+
+def file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--skip-train",
+        action="store_true",
+        help="random-init weights (CI smoke only; acceptance rates collapse)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+
+    if args.skip_train:
+        from .model import init_params
+
+        target_params = init_params(CONFIGS["target"], jax.random.PRNGKey(0))
+        draft_params = init_params(CONFIGS["draft"], jax.random.PRNGKey(1))
+        train_stats = {"skipped": True}
+    else:
+        print("[aot] training models ...")
+        target_params, draft_params, train_stats = train_all()
+
+    params_by_role = {"target": target_params, "draft": draft_params}
+    artifacts = []
+
+    # --- weights ---
+    for role, params in params_by_role.items():
+        path = os.path.join(args.out_dir, f"{role}_params.bin")
+        flatten_params(CONFIGS[role], params).tofile(path)
+        artifacts.append(os.path.basename(path))
+        print(f"[aot] wrote {path} ({os.path.getsize(path)} bytes)")
+
+    # --- HLO graphs ---
+    graph_index = []
+    jobs = [
+        ("target", SEQ_SMALL, "ref"),
+        ("draft", SEQ_SMALL, "ref"),
+        ("target", SEQ_LARGE, "ref"),
+        ("draft", SEQ_LARGE, "ref"),
+        ("target", SEQ_SMALL, "pallas"),
+    ]
+    for role, seq, impl in jobs:
+        suffix = f"_pallas_s{seq}" if impl == "pallas" else f"_s{seq}"
+        fname = f"{role}{suffix}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        print(f"[aot] lowering {fname} ...")
+        text = lower_model(CONFIGS[role], seq, impl)
+        with open(path, "w") as f:
+            f.write(text)
+        graph_index.append(
+            {
+                "file": fname,
+                "role": role,
+                "seq_len": seq,
+                "attn_impl": impl,
+                "num_params": len(param_order(CONFIGS[role])),
+            }
+        )
+        artifacts.append(fname)
+        print(f"[aot]   {len(text)} chars")
+
+    # --- golden outputs ---
+    print("[aot] computing golden logits ...")
+    golden = golden_logits(params_by_role)
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    artifacts.append("golden.json")
+
+    # --- meta (the make sentinel; write LAST) ---
+    meta = {
+        "vocab_size": VOCAB_SIZE,
+        "max_positions": MAX_POSITIONS,
+        "seq_small": SEQ_SMALL,
+        "seq_large": SEQ_LARGE,
+        "models": {
+            role: {
+                "dim": cfg.dim,
+                "layers": cfg.layers,
+                "heads": cfg.heads,
+                "mlp_mult": cfg.mlp_mult,
+                "params": param_table(cfg),
+                "total_f32": sum(e["size"] for e in param_table(cfg)),
+            }
+            for role, cfg in CONFIGS.items()
+        },
+        "graphs": graph_index,
+        "train": train_stats,
+        "corpus_profiles": {
+            name: {
+                "seed": p.seed,
+                "sticky_mass": p.sticky_mass,
+                "skew": p.skew,
+                "vocab": corpus.VOCAB_SIZE,
+            }
+            for name, p in corpus.PROFILES.items()
+        },
+        "sha256": {
+            a: file_sha256(os.path.join(args.out_dir, a)) for a in artifacts
+        },
+        "build_seconds": round(time.time() - t0, 1),
+    }
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] done in {meta['build_seconds']}s -> {args.out_dir}/meta.json")
+
+
+if __name__ == "__main__":
+    main()

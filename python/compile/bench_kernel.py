@@ -1,0 +1,99 @@
+"""Table 5 kernel-time companion: times the Pallas block-sparse kernel
+(interpret mode) against the dense jnp reference on random tree masks, with
+and without DFS-equivalent reordering, reporting block counts alongside.
+
+Interpret-mode timings are STRUCTURE-ONLY evidence (python dispatch
+dominates; see DESIGN.md §Hardware-Adaptation) — the hardware-independent
+result is the block-count reduction, which the rust bench reproduces
+exactly (`cargo bench --bench table5_attention`).
+
+Usage: python -m compile.bench_kernel [--sizes 256,512] [--trials 3]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ref import masked_attention_ref
+from .kernels.tree_attention import block_occupancy, tree_attention
+
+
+def random_tree_parents(n, rng):
+    return [None if i == 0 else int(rng.integers(0, i)) for i in range(n)]
+
+
+def mask_from_parents(parents, order):
+    n = len(parents)
+    pos = {node: i for i, node in enumerate(order)}
+    mask = np.zeros((n, n), np.float32)
+    for node in range(n):
+        i = pos[node]
+        mask[i, i] = 1.0
+        p = parents[node]
+        while p is not None:
+            mask[i, pos[p]] = 1.0
+            p = parents[p]
+    return mask
+
+
+def dfs_order(parents):
+    children = {}
+    for i, p in enumerate(parents):
+        if p is not None:
+            children.setdefault(p, []).append(i)
+    out, stack = [], [0]
+    while stack:
+        node = stack.pop()
+        out.append(node)
+        for c in reversed(children.get(node, [])):
+            stack.append(c)
+    return out
+
+
+def time_fn(fn, *args, trials=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(trials):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / trials
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="256,512")
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--head-dim", type=int, default=32)
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",")]
+    rng = np.random.default_rng(0)
+
+    print(f"{'size':>6} {'reorder':>8} {'blocks':>7} {'pallas_s':>9} {'ref_s':>8}")
+    for size in sizes:
+        parents = random_tree_parents(size, rng)
+        q, k, v = [
+            jnp.asarray(rng.normal(size=(args.heads, size, args.head_dim)), jnp.float32)
+            for _ in range(3)
+        ]
+        for reorder in (False, True):
+            order = dfs_order(parents) if reorder else list(range(size))
+            mask = jnp.asarray(mask_from_parents(parents, order))
+            blocks = int(block_occupancy(mask, 32, 32).sum())
+            t_pallas = time_fn(
+                lambda q=q, k=k, v=v, m=mask: tree_attention(q, k, v, m),
+                trials=args.trials,
+            )
+            t_ref = time_fn(
+                lambda q=q, k=k, v=v, m=mask: masked_attention_ref(q, k, v, m),
+                trials=args.trials,
+            )
+            print(
+                f"{size:>6} {str(reorder):>8} {blocks:>7} {t_pallas:>9.4f} {t_ref:>8.4f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Seeded synthetic corpora with dataset-like entropy profiles.
+
+The paper evaluates on C4 (en), OpenWebText and CNN-DailyMail. We cannot ship
+those datasets, so we substitute three seeded Markov-chain corpora whose
+*entropy profiles* are separated the way the real datasets are separated
+(DESIGN.md §3): `cnn` is low-entropy/repetitive (summarization prose),
+`c4` is medium, `owt` is high-entropy web text.
+
+CRITICAL INVARIANT: this generator is implemented twice — here (to train the
+models) and in `rust/src/data/markov.rs` (to sample serving prompts). Both
+use the same SplitMix64 stream and the same sampling logic so that, for the
+same (profile, seed), python and rust produce byte-identical token streams.
+`python/tests/test_corpus.py` pins golden values; `rust/src/data/markov.rs`
+unit tests pin the SAME golden values.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+VOCAB_SIZE = 512
+# Number of "sticky" preferred successors per state in the Markov table.
+_NUM_SUCC = 8
+
+_MASK64 = (1 << 64) - 1
+
+
+def splitmix64(state: int):
+    """One SplitMix64 step. Returns (new_state, output). Matches rust/src/util/rng.rs."""
+    state = (state + 0x9E3779B97F4A7C15) & _MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+class SplitMix64:
+    """Tiny deterministic RNG, bit-identical with the rust implementation."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK64
+
+    def next_u64(self) -> int:
+        self.state, z = splitmix64(self.state)
+        return z
+
+    def next_f64(self) -> float:
+        # 53-bit mantissa trick, same as rust side.
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_below(self, n: int) -> int:
+        # Simple modulo draw; bias is irrelevant at our vocab sizes and it is
+        # the easiest contract to keep identical across languages.
+        return self.next_u64() % n
+
+
+@dataclass(frozen=True)
+class Profile:
+    """A dataset profile = Markov-chain shape parameters."""
+
+    name: str
+    seed: int
+    # Probability mass concentrated on the _NUM_SUCC preferred successors.
+    sticky_mass: float
+    # Temperature-ish skew among the preferred successors (1.0 = uniform).
+    skew: float
+
+
+# Entropy ordering: cnn < c4 < owt (repetitive news < web crawl < open web).
+PROFILES = {
+    "cnn": Profile("cnn", seed=0xC44_0001, sticky_mass=0.92, skew=2.0),
+    "c4": Profile("c4", seed=0xC44_0002, sticky_mass=0.80, skew=1.3),
+    "owt": Profile("owt", seed=0xC44_0003, sticky_mass=0.62, skew=1.0),
+}
+
+
+def successor_table(profile: Profile):
+    """Preferred-successor table + per-rank weights for one profile.
+
+    Returns (succ[int vocab x _NUM_SUCC], rank_mass[_NUM_SUCC]). Deterministic
+    in the profile seed only. The rust port must reproduce this exactly.
+    """
+    rng = SplitMix64(profile.seed)
+    succ = np.zeros((VOCAB_SIZE, _NUM_SUCC), dtype=np.int64)
+    for s in range(VOCAB_SIZE):
+        for j in range(_NUM_SUCC):
+            succ[s, j] = rng.next_below(VOCAB_SIZE)
+    # rank weights: w_j ∝ skew^{-j}, scaled to sticky_mass in total.
+    w = np.array([profile.skew ** (-j) for j in range(_NUM_SUCC)])
+    w = w / w.sum() * profile.sticky_mass
+    return succ, w
+
+
+def next_token(state: int, succ, rank_mass, sticky_mass: float, rng: SplitMix64) -> int:
+    """Sample the next token of the chain. Mirrors rust data::markov::next_token."""
+    u = rng.next_f64()
+    if u < sticky_mass:
+        # Walk the rank masses.
+        acc = 0.0
+        for j in range(succ.shape[1]):
+            acc += rank_mass[j]
+            if u < acc:
+                return int(succ[state, j])
+        return int(succ[state, -1])
+    # Uniform exploration over the whole vocab.
+    return rng.next_below(VOCAB_SIZE)
+
+
+def generate(profile_name: str, n_tokens: int, stream_seed: int = 1):
+    """Generate `n_tokens` tokens of the given profile as an int64 array."""
+    profile = PROFILES[profile_name]
+    succ, rank_mass = successor_table(profile)
+    rng = SplitMix64(profile.seed ^ (stream_seed * 0x9E3779B97F4A7C15) & _MASK64)
+    out = np.zeros(n_tokens, dtype=np.int64)
+    state = rng.next_below(VOCAB_SIZE)
+    for i in range(n_tokens):
+        state = next_token(state, succ, rank_mass, profile.sticky_mass, rng)
+        out[i] = state
+    return out
+
+
+def batches(profile_name: str, n_batches: int, batch: int, seq: int, stream_seed: int = 1):
+    """Yield (batch, seq+1) int arrays for LM training (inputs + shifted targets)."""
+    toks = generate(profile_name, n_batches * batch * (seq + 1), stream_seed)
+    toks = toks.reshape(n_batches, batch, seq + 1)
+    for i in range(n_batches):
+        yield toks[i]

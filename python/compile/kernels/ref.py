@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the L1 kernel and model building blocks.
+
+Everything here is the *reference semantics*; the Pallas kernel in
+`tree_attention.py` and the rust engine are both validated against these
+functions. Keep this file boring and obviously-correct.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def masked_attention_ref(q, k, v, mask):
+    """Dense masked attention, the oracle for the Pallas tree kernel.
+
+    Args:
+      q, k, v: [heads, seq, head_dim] float arrays.
+      mask: [seq, seq] — 1.0 where query i may attend to key j, else 0.0.
+            (Tree attention: j is an ancestor of i, or both in the prefix
+            with j <= i — the rust side builds it, we only consume it.)
+
+    Returns:
+      [heads, seq, head_dim] attention output.
+    """
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, dtype=q.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    scores = jnp.where(mask[None, :, :] > 0, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-20)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def rms_norm_ref(x, weight, eps=1e-5):
+    """RMSNorm (Llama-style), oracle for model.rms_norm."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * weight
+
+
+def softmax_ref(logits, axis=-1):
+    z = logits - logits.max(axis=axis, keepdims=True)
+    e = jnp.exp(z)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def block_occupancy_ref(mask, block_q, block_k):
+    """[nq, nk] bool — True where the mask tile has any nonzero entry.
+
+    This is the paper's block-count object (Table 5, Fig 8/9): the number of
+    True entries is the number of attention blocks a block-sparse kernel must
+    compute. The rust `tree::blocks` module reimplements this for the bench.
+    """
+    s_q, s_k = mask.shape
+    nq, nk = s_q // block_q, s_k // block_k
+    tiles = mask[: nq * block_q, : nk * block_k].reshape(nq, block_q, nk, block_k)
+    return tiles.any(axis=(1, 3))

@@ -1,0 +1,126 @@
+"""L1 — Pallas block-sparse tree attention kernel.
+
+The paper's Appendix-C contribution is a Triton FlashAttention variant that
+takes an *arbitrary* tree attention mask and skips score blocks whose mask
+tile is entirely zero. DySpec's DFS token reorder then minimizes the number
+of non-zero tiles, so the kernel does proportionally less work.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): Triton's
+threadblock/shared-memory scheme becomes a Pallas grid over
+(head, q_block) with BlockSpec-staged VMEM tiles; the kv dimension is an
+in-kernel `lax.fori_loop` whose carries (running max / denominator /
+weighted-V accumulator) are the Pallas analogue of Triton's register
+accumulators; the tile-skip predicate is an occupancy table (one `any()`
+per tile, computed in the traced graph) consumed with `lax.cond`, so dead
+tiles cost a branch instead of a matmul — on a real TPU, Mosaic prunes the
+corresponding DMA + MXU work. We run `interpret=True` — mandatory for
+CPU-PJRT — so correctness is exercised here and *efficiency* is reported
+through the hardware-independent block-count metric, exactly the paper's
+own proxy (Table 5, Fig 8/9).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def block_occupancy(mask, block_q, block_k):
+    """[nq, nk] int32 occupancy table (traced; part of the lowered graph).
+
+    Entry (i, j) is 1 iff the (block_q x block_k) mask tile (i, j) contains
+    any attendable position. Its sum is the paper's "block count" metric.
+    """
+    s_q, s_k = mask.shape
+    nq, nk = s_q // block_q, s_k // block_k
+    tiles = mask.reshape(nq, block_q, nk, block_k)
+    return (tiles.max(axis=(1, 3)) > 0).astype(jnp.int32)
+
+
+def _tree_attn_kernel(occ_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
+                      *, block_k, num_kv, scale):
+    """One (head, q_block) grid step: online softmax over kv blocks.
+
+    occ_ref:  [1, num_kv] occupancy row for this q block.
+    q_ref:    [block_q, head_dim] Q tile for this (head, q_block).
+    k_ref:    [seq, head_dim] full K for this head (tiles sliced in-loop).
+    v_ref:    [seq, head_dim] full V for this head.
+    mask_ref: [block_q, seq] mask rows for this q block.
+    o_ref:    [block_q, head_dim] output tile.
+    """
+    q = q_ref[...]
+    block_q, head_dim = q.shape
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+
+        def compute(_):
+            k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+            v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+            mask = pl.load(mask_ref, (slice(None), pl.dslice(j * block_k, block_k)))
+            s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+            s = jnp.where(mask > 0, s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+            # Rows that are still fully masked keep m == NEG_INF; shift by a
+            # safe pivot so exp() stays finite and their p rows are zeroed.
+            pivot = jnp.maximum(m_cur, NEG_INF / 2)
+            p = jnp.where(mask > 0, jnp.exp(s - pivot), 0.0)
+            alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - pivot))
+            l_cur = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+            acc_cur = acc_prev * alpha + jnp.dot(
+                p, v, preferred_element_type=jnp.float32
+            )
+            return m_cur, l_cur, acc_cur
+
+        # The block-sparsity payoff: tiles with zero occupancy cost a branch.
+        return lax.cond(occ_ref[0, j] > 0, compute, lambda _: carry, operand=None)
+
+    m0 = jnp.full((block_q, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+    _, l_fin, acc_fin = lax.fori_loop(0, num_kv, body, (m0, l0, acc0))
+    o_ref[...] = (acc_fin / jnp.maximum(l_fin, 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def tree_attention(q, k, v, mask, block_q=32, block_k=32):
+    """Block-sparse tree attention.
+
+    Args:
+      q, k, v: [heads, seq, head_dim] f32.
+      mask: [seq, seq] f32 — 1.0 where query i attends to key j, 0 otherwise.
+      block_q, block_k: tile sizes (the paper uses 32; must divide seq).
+
+    Returns:
+      [heads, seq, head_dim] f32, matching `ref.masked_attention_ref` on all
+      rows with at least one attendable key (fully-masked rows return 0).
+    """
+    heads, seq, head_dim = q.shape
+    assert seq % block_q == 0 and seq % block_k == 0, (seq, block_q, block_k)
+    num_q = seq // block_q
+    num_kv = seq // block_k
+    scale = 1.0 / (head_dim ** 0.5)
+    occ = block_occupancy(mask, block_q, block_k)  # [num_q, num_kv]
+
+    kernel = functools.partial(
+        _tree_attn_kernel, block_k=block_k, num_kv=num_kv, scale=scale
+    )
+    grid = (heads, num_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, num_kv), lambda h, qb: (qb, 0)),
+            pl.BlockSpec((None, block_q, head_dim), lambda h, qb: (h, qb, 0)),
+            pl.BlockSpec((None, seq, head_dim), lambda h, qb: (h, 0, 0)),
+            pl.BlockSpec((None, seq, head_dim), lambda h, qb: (h, 0, 0)),
+            pl.BlockSpec((block_q, seq), lambda h, qb: (qb, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, head_dim), lambda h, qb: (h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, seq, head_dim), q.dtype),
+        interpret=True,
+    )(occ, q, k, v, mask)

@@ -1,0 +1,236 @@
+"""L2 — GPT-style transformer in JAX (target + draft variants).
+
+This is the compute graph that `aot.py` lowers to HLO text for the rust
+runtime. It stands in for the paper's Llama2 targets / JF-68M draft
+(DESIGN.md §3): the DySpec algorithm only consumes per-position (draft,
+target) distribution pairs, so any pair of trained LMs with bounded KL
+reproduces the relevant behaviour.
+
+Architecture (Llama-flavoured, positions learned so we avoid RoPE's
+dynamic-slice churn in fixed-shape AOT graphs):
+
+    tok_emb[V, d] + pos_emb[S_max, d]
+    N x { RMSNorm -> MHA(tree mask) -> residual;
+          RMSNorm -> GELU MLP (4d)  -> residual }
+    RMSNorm -> logits = x @ tok_emb.T        (weight tying)
+
+Every forward takes an explicit [S, S] attention mask and [S] position ids;
+the rust side is responsible for building causal masks (autoregressive /
+prefill) and tree masks (speculative verification). One HLO artifact is
+exported per (model, S, attention-impl) triple.
+
+Attention impl is switchable: "ref" (fused jnp, what XLA optimizes best on
+CPU) or "pallas" (the L1 block-sparse kernel, lowered into the same HLO).
+Both are exported; rust integration tests check they agree.
+"""
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import masked_attention_ref, rms_norm_ref
+from .kernels.tree_attention import tree_attention
+
+VOCAB_SIZE = 512
+MAX_POSITIONS = 1024
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (also serialized into meta.json)."""
+
+    name: str
+    vocab: int
+    dim: int
+    layers: int
+    heads: int
+    mlp_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+# The two model roles. The scale substitution is documented in DESIGN.md §3;
+# dims chosen so that target/draft FLOP ratio is ~8x (the JF68M->7B pairing's
+# regime is then dialed in with the rust LatencyModel).
+TARGET_CONFIG = ModelConfig("target", VOCAB_SIZE, dim=256, layers=4, heads=8)
+DRAFT_CONFIG = ModelConfig("draft", VOCAB_SIZE, dim=128, layers=2, heads=4)
+
+CONFIGS = {"target": TARGET_CONFIG, "draft": DRAFT_CONFIG}
+
+# Parameter layout: a flat name -> array dict with a DETERMINISTIC ordering
+# (param_order). The rust runtime feeds buffers positionally in this order;
+# aot.py records names+shapes+offsets in meta.json.
+
+
+def param_order(cfg: ModelConfig):
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.layers):
+        names += [
+            f"l{i}.attn_norm",
+            f"l{i}.wq",
+            f"l{i}.wk",
+            f"l{i}.wv",
+            f"l{i}.wo",
+            f"l{i}.mlp_norm",
+            f"l{i}.w_up",
+            f"l{i}.w_down",
+        ]
+    names.append("final_norm")
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d, m = cfg.dim, cfg.dim * cfg.mlp_mult
+    shapes = {
+        "tok_emb": (cfg.vocab, d),
+        "pos_emb": (MAX_POSITIONS, d),
+        "final_norm": (d,),
+    }
+    for i in range(cfg.layers):
+        shapes.update(
+            {
+                f"l{i}.attn_norm": (d,),
+                f"l{i}.wq": (d, d),
+                f"l{i}.wk": (d, d),
+                f"l{i}.wv": (d, d),
+                f"l{i}.wo": (d, d),
+                f"l{i}.mlp_norm": (d,),
+                f"l{i}.w_up": (d, m),
+                f"l{i}.w_down": (m, d),
+            }
+        )
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Scaled-normal init; norms start at 1."""
+    shapes = param_shapes(cfg)
+    params = {}
+    for name in param_order(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5)
+            )
+    return params
+
+
+def _attention(params, cfg: ModelConfig, i: int, x, mask, attn_impl: str):
+    """Multi-head attention over an explicit mask."""
+    s = x.shape[0]
+    q = x @ params[f"l{i}.wq"]
+    k = x @ params[f"l{i}.wk"]
+    v = x @ params[f"l{i}.wv"]
+
+    def split(t):  # [S, d] -> [heads, S, head_dim]
+        return t.reshape(s, cfg.heads, cfg.head_dim).transpose(1, 0, 2)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    if attn_impl == "pallas":
+        out = tree_attention(qh, kh, vh, mask, block_q=32, block_k=32)
+    else:
+        out = masked_attention_ref(qh, kh, vh, mask)
+    out = out.transpose(1, 0, 2).reshape(s, cfg.dim)
+    return out @ params[f"l{i}.wo"]
+
+
+def forward(params, cfg: ModelConfig, tokens, positions, mask, attn_impl="ref"):
+    """Logits for every position.
+
+    Args:
+      params: name -> array dict (see param_shapes).
+      tokens: [S] int32 token ids (pad arbitrary; pad rows just get ignored).
+      positions: [S] int32 position ids into pos_emb (prefix: 0..P-1;
+                 tree node at depth t: P+t).
+      mask: [S, S] f32, 1.0 = may attend. Must give every live row at least
+            one attendable key (rust guarantees: every row attends to itself).
+      attn_impl: "ref" | "pallas".
+
+    Returns: [S, vocab] f32 logits.
+    """
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions]
+    for i in range(cfg.layers):
+        h = rms_norm_ref(x, params[f"l{i}.attn_norm"])
+        x = x + _attention(params, cfg, i, h, mask, attn_impl)
+        h = rms_norm_ref(x, params[f"l{i}.mlp_norm"])
+        h = jax.nn.gelu(h @ params[f"l{i}.w_up"]) @ params[f"l{i}.w_down"]
+        x = x + h
+    x = rms_norm_ref(x, params["final_norm"])
+    return x @ params["tok_emb"].T
+
+
+def make_forward_fn(cfg: ModelConfig, seq_len: int, attn_impl="ref"):
+    """A fixed-shape forward suitable for jax.jit().lower().
+
+    Signature: (*flat_params, tokens[S] i32, positions[S] i32,
+                mask[S,S] f32) -> (logits[S, V] f32,)
+    Flat params follow param_order(cfg) so the rust runtime can feed
+    positionally. Returns (fn, example ShapeDtypeStructs).
+    """
+    names = param_order(cfg)
+    shapes = param_shapes(cfg)
+
+    def fn(*args):
+        flat = args[: len(names)]
+        tokens, positions, mask = args[len(names):]
+        params = dict(zip(names, flat))
+        return (forward(params, cfg, tokens, positions, mask, attn_impl),)
+
+    specs = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names]
+    specs += [
+        jax.ShapeDtypeStruct((seq_len,), jnp.int32),
+        jax.ShapeDtypeStruct((seq_len,), jnp.int32),
+        jax.ShapeDtypeStruct((seq_len, seq_len), jnp.float32),
+    ]
+    return fn, specs
+
+
+def causal_mask(seq_len: int):
+    return jnp.tril(jnp.ones((seq_len, seq_len), jnp.float32))
+
+
+def loss_fn(params, cfg: ModelConfig, batch, attn_impl="ref"):
+    """Next-token cross-entropy over a [B, S+1] batch (teacher forcing)."""
+    inputs = batch[:, :-1]
+    targets = batch[:, 1:]
+    s = inputs.shape[1]
+    mask = causal_mask(s)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def one(seq):
+        return forward(params, cfg, seq, positions, mask, attn_impl)
+
+    logits = jax.vmap(one)(inputs)  # [B, S, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def distill_loss_fn(draft_params, target_params, batch, attn_impl="ref"):
+    """KL(target || draft) on teacher logits — trains the draft to
+    approximate the target (paper Eq. 1's bounded-KL premise)."""
+    inputs = batch[:, :-1]
+    s = inputs.shape[1]
+    mask = causal_mask(s)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def one_t(seq):
+        return forward(target_params, TARGET_CONFIG, seq, positions, mask, attn_impl)
+
+    def one_d(seq):
+        return forward(draft_params, DRAFT_CONFIG, seq, positions, mask, attn_impl)
+
+    t_logits = jax.lax.stop_gradient(jax.vmap(one_t)(inputs))
+    d_logits = jax.vmap(one_d)(inputs)
+    t_logp = jax.nn.log_softmax(t_logits, axis=-1)
+    d_logp = jax.nn.log_softmax(d_logits, axis=-1)
+    return (jnp.exp(t_logp) * (t_logp - d_logp)).sum(-1).mean()

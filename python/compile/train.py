@@ -1,0 +1,141 @@
+"""Build-time training: target LM on the synthetic corpus + draft distill.
+
+Runs once inside `make artifacts` (seeded, CPU, ~1-2 minutes). Produces the
+weight arrays that `aot.py` serializes next to the lowered HLO. The point is
+NOT model quality per se — it is producing a (draft, target) pair whose KL
+divergence is small-but-nonzero (paper Eq. 1), with realistic entropy
+profiles, so that acceptance-rate behaviour matches the paper's regime.
+
+Adam is hand-rolled (~20 lines) to keep the build path dependency-free
+beyond jax itself.
+"""
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import (
+    DRAFT_CONFIG,
+    TARGET_CONFIG,
+    distill_loss_fn,
+    init_params,
+    loss_fn,
+)
+
+BATCH = 16
+SEQ = 64
+TARGET_STEPS = 240
+DISTILL_STEPS = 240
+LR = 3e-3
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def _mixed_pool(tokens_per_profile: int, stream_seed: int):
+    """Training pool: equal parts of the three dataset profiles."""
+    pools = [
+        corpus.generate(name, tokens_per_profile, stream_seed)
+        for name in ("cnn", "c4", "owt")
+    ]
+    return np.concatenate(pools)
+
+
+def _sample_batch(pool, rng, batch=BATCH, seq=SEQ):
+    starts = rng.integers(0, len(pool) - seq - 1, size=batch)
+    return np.stack([pool[s : s + seq + 1] for s in starts]).astype(np.int32)
+
+
+def train_target(pool, log=print):
+    params = init_params(TARGET_CONFIG, jax.random.PRNGKey(0))
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, TARGET_CONFIG, batch)
+        params, state = adam_update(params, grads, state, LR)
+        return params, state, loss
+
+    rng = np.random.default_rng(12345)
+    t0 = time.time()
+    first = last = None
+    for i in range(TARGET_STEPS):
+        batch = jnp.asarray(_sample_batch(pool, rng))
+        params, state, loss = step(params, state, batch)
+        if i == 0:
+            first = float(loss)
+        last = float(loss)
+        if i % 40 == 0:
+            log(f"  target step {i:4d} loss {float(loss):.4f}")
+    log(
+        f"  target: loss {first:.4f} -> {last:.4f} "
+        f"({TARGET_STEPS} steps, {time.time() - t0:.1f}s)"
+    )
+    assert last < first, "target LM failed to learn the corpus"
+    return params, {"first_loss": first, "last_loss": last}
+
+
+def train_draft(target_params, pool, log=print):
+    params = init_params(DRAFT_CONFIG, jax.random.PRNGKey(1))
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(distill_loss_fn)(
+            params, target_params, batch
+        )
+        params, state = adam_update(params, grads, state, LR)
+        return params, state, loss
+
+    rng = np.random.default_rng(54321)
+    t0 = time.time()
+    first = last = None
+    for i in range(DISTILL_STEPS):
+        batch = jnp.asarray(_sample_batch(pool, rng))
+        params, state, loss = step(params, state, batch)
+        if i == 0:
+            first = float(loss)
+        last = float(loss)
+        if i % 40 == 0:
+            log(f"  draft step {i:4d} KL {float(loss):.4f}")
+    log(
+        f"  draft: KL(T||D) {first:.4f} -> {last:.4f} "
+        f"({DISTILL_STEPS} steps, {time.time() - t0:.1f}s)"
+    )
+    assert last < first, "draft distillation failed to reduce KL"
+    return params, {"first_kl": first, "last_kl": last}
+
+
+@functools.lru_cache(maxsize=1)
+def _cached_pool():
+    return _mixed_pool(60_000, stream_seed=7)
+
+
+def train_all(log=print):
+    """Train both models; returns (target_params, draft_params, stats)."""
+    pool = _cached_pool()
+    log(f"corpus pool: {len(pool)} tokens (3 profiles)")
+    target_params, tstats = train_target(pool, log)
+    draft_params, dstats = train_draft(target_params, pool, log)
+    return target_params, draft_params, {"target": tstats, "draft": dstats}

@@ -1,0 +1,128 @@
+"""L1 kernel vs oracle — the CORE correctness signal for the Pallas kernel.
+
+Hypothesis sweeps shapes, dtypes and mask structures; every case asserts
+allclose against the dense-reference oracle in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import block_occupancy_ref, masked_attention_ref
+from compile.kernels.tree_attention import block_occupancy, tree_attention
+
+
+def random_tree_mask(rng, seq, prefix):
+    """Causal prefix + random token-tree tail, like the rust engine builds."""
+    mask = np.zeros((seq, seq), np.float32)
+    mask[:prefix, :prefix] = np.tril(np.ones((prefix, prefix)))
+    parents = {}
+    for i in range(prefix, seq):
+        # Attach to a random earlier tree node (or the prefix root).
+        parents[i] = int(rng.integers(prefix - 1, i))
+        mask[i, i] = 1.0
+        j = i
+        while j >= prefix:
+            j = parents[j]
+            mask[i, j] = 1.0
+        mask[i, : prefix] = np.tril(np.ones(prefix))[prefix - 1]  # sees full prefix
+    return mask
+
+
+def _mk_qkv(rng, heads, seq, head_dim, dtype=np.float32):
+    return [
+        jnp.asarray(rng.normal(size=(heads, seq, head_dim)), dtype)
+        for _ in range(3)
+    ]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    seq_blocks=st.integers(2, 6),
+    head_dim=st.sampled_from([8, 16, 32]),
+    block=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_random_tree(heads, seq_blocks, head_dim, block, seed):
+    seq = seq_blocks * block
+    rng = np.random.default_rng(seed)
+    q, k, v = _mk_qkv(rng, heads, seq, head_dim)
+    prefix = max(1, seq // 2)
+    mask = jnp.asarray(random_tree_mask(rng, seq, prefix))
+    out = tree_attention(q, k, v, mask, block_q=block, block_k=block)
+    ref = masked_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seq_blocks=st.integers(2, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_causal(seq_blocks, seed):
+    seq = seq_blocks * 32
+    rng = np.random.default_rng(seed)
+    q, k, v = _mk_qkv(rng, 2, seq, 16)
+    mask = jnp.asarray(np.tril(np.ones((seq, seq), np.float32)))
+    out = tree_attention(q, k, v, mask)
+    ref = masked_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-4)
+
+
+def test_kernel_block_diagonal_mask():
+    """Disjoint diagonal blocks — heavy sparsity, many skipped tiles."""
+    seq, block = 128, 32
+    rng = np.random.default_rng(0)
+    q, k, v = _mk_qkv(rng, 2, seq, 16)
+    mask = np.zeros((seq, seq), np.float32)
+    for b in range(seq // block):
+        s = slice(b * block, (b + 1) * block)
+        mask[s, s] = np.tril(np.ones((block, block)))
+    mask = jnp.asarray(mask)
+    out = tree_attention(q, k, v, mask)
+    ref = masked_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-4)
+    # Exactly the diagonal tiles are occupied.
+    occ = np.asarray(block_occupancy(mask, block, block))
+    assert occ.sum() == seq // block
+
+
+def test_fully_masked_rows_return_zero():
+    """Rows with no attendable key must not produce NaNs (pad rows)."""
+    seq = 64
+    rng = np.random.default_rng(1)
+    q, k, v = _mk_qkv(rng, 1, seq, 8)
+    mask = np.tril(np.ones((seq, seq), np.float32))
+    mask[40:, :] = 0.0  # dead pad rows
+    out = np.asarray(tree_attention(q, k, v, jnp.asarray(mask)))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out[0, 40:], 0.0)
+
+
+def test_occupancy_matches_ref():
+    rng = np.random.default_rng(2)
+    mask = (rng.random((96, 96)) < 0.05).astype(np.float32)
+    got = np.asarray(block_occupancy(jnp.asarray(mask), 32, 32)).astype(bool)
+    want = np.asarray(block_occupancy_ref(jnp.asarray(mask), 32, 32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_block_sizes_must_divide_seq():
+    rng = np.random.default_rng(3)
+    q, k, v = _mk_qkv(rng, 1, 48, 8)
+    mask = jnp.ones((48, 48), jnp.float32)
+    with pytest.raises(AssertionError):
+        tree_attention(q, k, v, mask, block_q=32, block_k=32)
+
+
+def test_kernel_is_jittable_and_deterministic():
+    rng = np.random.default_rng(4)
+    q, k, v = _mk_qkv(rng, 2, 64, 16)
+    mask = jnp.asarray(np.tril(np.ones((64, 64), np.float32)))
+    f = jax.jit(lambda q, k, v, m: tree_attention(q, k, v, m))
+    a = np.asarray(f(q, k, v, mask))
+    b = np.asarray(f(q, k, v, mask))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,139 @@
+"""L2 model semantics: shapes, causality, tree-mask behaviour, pallas parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CONFIGS,
+    DRAFT_CONFIG,
+    TARGET_CONFIG,
+    VOCAB_SIZE,
+    causal_mask,
+    forward,
+    init_params,
+    loss_fn,
+    make_forward_fn,
+    param_order,
+    param_shapes,
+)
+
+S = 64
+
+
+@pytest.fixture(scope="module")
+def draft_params():
+    return init_params(DRAFT_CONFIG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def target_params():
+    return init_params(TARGET_CONFIG, jax.random.PRNGKey(1))
+
+
+def _inputs(seq=S, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, VOCAB_SIZE, seq), jnp.int32)
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    return tokens, positions
+
+
+def test_forward_shape(draft_params):
+    tokens, positions = _inputs()
+    logits = forward(draft_params, DRAFT_CONFIG, tokens, positions, causal_mask(S))
+    assert logits.shape == (S, VOCAB_SIZE)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality(draft_params):
+    """Changing token t must not change logits at positions < t."""
+    tokens, positions = _inputs(seed=1)
+    mask = causal_mask(S)
+    base = forward(draft_params, DRAFT_CONFIG, tokens, positions, mask)
+    t = 40
+    mutated = tokens.at[t].set((tokens[t] + 1) % VOCAB_SIZE)
+    out = forward(draft_params, DRAFT_CONFIG, mutated, positions, mask)
+    np.testing.assert_allclose(
+        np.asarray(base[:t]), np.asarray(out[:t]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(base[t]), np.asarray(out[t]))
+
+
+def test_tree_mask_isolates_branches(draft_params):
+    """Two sibling branches after a shared prefix must not see each other:
+    the logits of branch A are unchanged when branch B's token mutates."""
+    prefix = 8
+    seq = 12  # prefix + 4 tree slots: A1 A2 B1 B2
+    tokens, _ = _inputs(seq, seed=2)
+    positions = jnp.asarray(
+        list(range(prefix)) + [prefix, prefix + 1, prefix, prefix + 1], jnp.int32
+    )
+    mask = np.zeros((seq, seq), np.float32)
+    mask[:prefix, :prefix] = np.tril(np.ones((prefix, prefix)))
+    for i in range(prefix, seq):
+        mask[i, :prefix] = 1.0
+        mask[i, i] = 1.0
+    mask[prefix + 1, prefix] = 1.0      # A2 -> A1
+    mask[prefix + 3, prefix + 2] = 1.0  # B2 -> B1
+    mask = jnp.asarray(mask)
+
+    base = forward(draft_params, DRAFT_CONFIG, tokens, positions, mask)
+    mutated = tokens.at[prefix + 2].set((tokens[prefix + 2] + 5) % VOCAB_SIZE)  # B1
+    out = forward(draft_params, DRAFT_CONFIG, mutated, positions, mask)
+    # A-branch rows and the prefix unchanged:
+    np.testing.assert_allclose(
+        np.asarray(base[: prefix + 2]), np.asarray(out[: prefix + 2]), atol=1e-5
+    )
+    # B rows change:
+    assert not np.allclose(np.asarray(base[prefix + 2]), np.asarray(out[prefix + 2]))
+
+
+def test_tree_mask_equals_chain_when_tree_is_a_path(draft_params):
+    """A tree that is a single chain == plain causal decoding (the rust
+    engine's temp-0 equivalence test relies on this)."""
+    tokens, positions = _inputs(seed=3)
+    chain = forward(draft_params, DRAFT_CONFIG, tokens, positions, causal_mask(S))
+    # Same structure expressed as "prefix + path tree".
+    prefix = 32
+    mask = np.zeros((S, S), np.float32)
+    mask[:prefix, :prefix] = np.tril(np.ones((prefix, prefix)))
+    for i in range(prefix, S):
+        mask[i, : i + 1] = 1.0
+    tree = forward(draft_params, DRAFT_CONFIG, tokens, positions, jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(chain), np.asarray(tree), atol=1e-5)
+
+
+def test_pallas_and_ref_models_agree(draft_params):
+    tokens, positions = _inputs()
+    mask = causal_mask(S)
+    ref = forward(draft_params, DRAFT_CONFIG, tokens, positions, mask, "ref")
+    pal = forward(draft_params, DRAFT_CONFIG, tokens, positions, mask, "pallas")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal), atol=3e-4, rtol=1e-3)
+
+
+def test_param_order_matches_shapes():
+    for cfg in CONFIGS.values():
+        order = param_order(cfg)
+        shapes = param_shapes(cfg)
+        assert set(order) == set(shapes)
+        assert len(order) == len(set(order))
+        assert order == param_order(cfg)  # stable
+
+
+def test_make_forward_fn_specs(target_params):
+    fn, specs = make_forward_fn(TARGET_CONFIG, 64)
+    n_params = len(param_order(TARGET_CONFIG))
+    assert len(specs) == n_params + 3
+    assert specs[-1].shape == (64, 64)
+    # And it actually traces:
+    lowered = jax.jit(fn).lower(*specs)
+    assert lowered is not None
+
+
+def test_loss_decreases_direction(draft_params):
+    """Sanity: loss_fn is ~log(V) at init on random tokens."""
+    rng = np.random.default_rng(0)
+    batch = jnp.asarray(rng.integers(0, VOCAB_SIZE, (2, 33)), jnp.int32)
+    loss = float(loss_fn(draft_params, DRAFT_CONFIG, batch))
+    assert 0.5 * np.log(VOCAB_SIZE) < loss < 2.0 * np.log(VOCAB_SIZE)

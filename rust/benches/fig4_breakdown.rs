@@ -1,0 +1,14 @@
+//! Regenerates the paper's fig4 (see DESIGN.md §5). Shares the runner with
+//! `dyspec bench --experiment fig4`.
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts {
+        prompts: std::env::var("DYSPEC_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(6),
+        out: Some("results/fig4.json".into()),
+        ..ExpOpts::default()
+    };
+    for table in run_experiment("fig4", &opts).expect("experiment") {
+        println!("{}", table.render());
+    }
+}

@@ -1,0 +1,151 @@
+//! Microbenchmarks of the L3 hot paths — the profile targets for the §Perf
+//! pass: tree construction (heap), sibling sampling, mask build, DFS
+//! reorder, block counting, verification walk, and the sim model dist.
+//! Reports ns/op with warmup + repetition (criterion-style, hand-rolled).
+
+use dyspec::bench::time_repeated;
+use dyspec::config::EngineConfig;
+use dyspec::draft::dyspec::DySpecPolicy;
+use dyspec::draft::TreePolicy;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+use dyspec::sampling::SiblingSampler;
+use dyspec::tree::{block_count, dfs_order, TreeMask};
+use dyspec::util::Rng;
+use dyspec::verify::{row_map, verify_tree};
+
+fn report(name: &str, secs_per_op: f64, unit: &str) {
+    let (scaled, suffix) = if secs_per_op < 1e-6 {
+        (secs_per_op * 1e9, "ns")
+    } else if secs_per_op < 1e-3 {
+        (secs_per_op * 1e6, "us")
+    } else {
+        (secs_per_op * 1e3, "ms")
+    };
+    println!("{name:<38} {scaled:>10.2} {suffix}/{unit}");
+}
+
+fn main() {
+    let spec = SimSpec::for_dataset("c4", 1.2, 42);
+    let prefix: Vec<u32> = (0..128).map(|i| (i * 13 + 7) % 512).collect();
+    let cfg = EngineConfig {
+        tree_budget: 64,
+        ..EngineConfig::default()
+    };
+
+    // Full Algorithm-1 build, including sim draft calls.
+    {
+        let (mut draft, _) = SimModel::pair(spec);
+        let mut rng = Rng::new(1);
+        let per = time_repeated(3, 30, || {
+            let t = DySpecPolicy.build(&mut draft, &prefix, &cfg, &mut rng);
+            std::hint::black_box(t.size());
+        });
+        report("dyspec_build (budget 64, sim draft)", per, "tree");
+    }
+
+    // Construction logic only: pre-drawn dists.
+    {
+        struct Canned {
+            dists: Vec<Vec<f32>>,
+            i: std::cell::Cell<usize>,
+        }
+        impl LogitModel for Canned {
+            fn vocab(&self) -> usize {
+                512
+            }
+            fn next_logits(&mut self, _ctx: &[u32]) -> Vec<f32> {
+                let i = self.i.get();
+                self.i.set((i + 1) % self.dists.len());
+                self.dists[i].clone()
+            }
+        }
+        let mut rng = Rng::new(2);
+        let dists: Vec<Vec<f32>> = (0..128)
+            .map(|_| (0..512).map(|_| rng.next_gaussian() as f32 * 3.0).collect())
+            .collect();
+        let mut model = Canned {
+            dists,
+            i: std::cell::Cell::new(0),
+        };
+        let mut rng = Rng::new(3);
+        let per = time_repeated(3, 50, || {
+            let t = DySpecPolicy.build(&mut model, &prefix, &cfg, &mut rng);
+            std::hint::black_box(t.size());
+        });
+        report("dyspec_build (canned dists)", per, "tree");
+    }
+
+    // Sibling sampler draw.
+    {
+        let mut rng = Rng::new(4);
+        let dist: Vec<f32> = {
+            let mut d: Vec<f32> = (0..512).map(|_| rng.next_f32() + 1e-3).collect();
+            dyspec::util::math::normalize(&mut d);
+            d
+        };
+        let per = time_repeated(10, 2000, || {
+            let mut s = SiblingSampler::new(dist.clone());
+            for _ in 0..8 {
+                std::hint::black_box(s.draw(&mut rng));
+            }
+        });
+        report("sibling_sampler (8 draws, V=512)", per, "op");
+    }
+
+    // Tree -> mask -> dfs -> block count over a 64-node DySpec tree.
+    let tree = {
+        let (mut draft, _) = SimModel::pair(spec);
+        let mut rng = Rng::new(5);
+        DySpecPolicy.build(&mut draft, &prefix, &cfg, &mut rng)
+    };
+    {
+        let per = time_repeated(10, 500, || {
+            std::hint::black_box(dfs_order(&tree).len());
+        });
+        report("dfs_order (64 nodes)", per, "op");
+        let order = dfs_order(&tree);
+        let per = time_repeated(10, 500, || {
+            std::hint::black_box(TreeMask::from_tree(&tree, &order).count_ones());
+        });
+        report("tree_mask_build (64 nodes)", per, "op");
+        let mask = TreeMask::from_tree(&tree, &order);
+        let per = time_repeated(10, 500, || {
+            std::hint::black_box(block_count(&mask, 32));
+        });
+        report("block_count (64 nodes, b=32)", per, "op");
+        let per = time_repeated(3, 100, || {
+            std::hint::black_box(mask.to_full_f32(128, 320).len());
+        });
+        report("full_mask_f32 (S=320)", per, "op");
+    }
+
+    // Verification walk.
+    {
+        let order = dfs_order(&tree);
+        let row_of = row_map(&tree, &order);
+        let mut rng = Rng::new(6);
+        let dists: Vec<Vec<f32>> = (0..order.len() + 1)
+            .map(|_| {
+                let mut d: Vec<f32> = (0..512).map(|_| rng.next_f32() + 1e-3).collect();
+                dyspec::util::math::normalize(&mut d);
+                d
+            })
+            .collect();
+        let per = time_repeated(10, 500, || {
+            std::hint::black_box(verify_tree(&tree, &dists, &row_of, &mut rng).emitted);
+        });
+        report("verify_tree (64 nodes)", per, "op");
+    }
+
+    // Sim model dist generation (the bench population driver).
+    {
+        let (mut draft, _) = SimModel::pair(spec);
+        let mut i = 0u32;
+        let per = time_repeated(10, 1000, || {
+            i += 1;
+            std::hint::black_box(draft.next_logits(&[i, 1, 2]).len());
+        });
+        report("sim_next_logits (V=512)", per, "op");
+    }
+}

@@ -1,0 +1,16 @@
+//! Regenerates the paper's Table3 (see DESIGN.md §5). Shares the runner
+//! with `dyspec bench --experiment table3`. Env: DYSPEC_BENCH_PROMPTS,
+//! DYSPEC_BENCH_TOKENS scale the population (paper: 1000 x 128).
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts {
+        prompts: std::env::var("DYSPEC_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(6),
+        max_new_tokens: std::env::var("DYSPEC_BENCH_TOKENS").ok().and_then(|v| v.parse().ok()).unwrap_or(128),
+        out: Some("results/table3.json".into()),
+        ..ExpOpts::default()
+    };
+    for table in run_experiment("table3", &opts).expect("experiment") {
+        println!("{}", table.render());
+    }
+}

@@ -1,0 +1,44 @@
+//! Benchmark harness + experiment runners for every table and figure in the
+//! paper's evaluation. `rust/benches/*.rs` and the `dyspec bench` CLI both
+//! dispatch into [`run_experiment`], so a table regenerates identically from
+//! either entry point.
+//!
+//! Measurement protocol: each cell does warmup + repeated timed runs and
+//! reports the paper's metrics — virtual latency/token under the configured
+//! hardware regime (DESIGN.md §3 explains the regime mapping) and emitted
+//! tokens per target step (the paper's parenthesized values).
+
+pub mod experiments;
+pub mod table;
+
+pub use experiments::run_experiment;
+pub use table::BenchTable;
+
+use crate::util::Timer;
+
+/// warmup + timed repetition helper for micro-measurements.
+pub fn time_repeated<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t = Timer::start();
+    for _ in 0..reps {
+        f();
+    }
+    t.elapsed_secs() / reps.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_repeated_returns_mean() {
+        let mut n = 0u64;
+        let per = time_repeated(2, 10, || {
+            n += 1;
+        });
+        assert_eq!(n, 12);
+        assert!(per >= 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Aligned-table rendering + JSON export for bench reports.
+
+use crate::util::json::Json;
+
+/// A rendered benchmark table.
+#[derive(Clone, Debug, Default)]
+pub struct BenchTable {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl BenchTable {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON export (one object per row).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|row| {
+                Json::Obj(
+                    self.headers
+                        .iter()
+                        .zip(row)
+                        .map(|(h, c)| {
+                            let v = c
+                                .parse::<f64>()
+                                .map(Json::Num)
+                                .unwrap_or_else(|_| Json::Str(c.clone()));
+                            (h.clone(), v)
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    /// Write JSON to a file, creating parent dirs.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = BenchTable::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("longer"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = BenchTable::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_export_types_numbers() {
+        let mut t = BenchTable::new("demo", &["k", "v"]);
+        t.row(vec!["x".into(), "1.25".into()]);
+        let j = t.to_json();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("v").unwrap().as_f64(), Some(1.25));
+        assert_eq!(rows[0].get("k").unwrap().as_str(), Some("x"));
+    }
+}

@@ -1,0 +1,157 @@
+//! Dependency-free CLI parsing: `dyspec <subcommand> [--key value]...
+//! [key=value]...`. Subcommands dispatch in main.rs; this module only
+//! tokenizes and validates the argument surface.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` and `key=value` pairs (the two spellings are merged).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli, String> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare -- is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--") && !next.contains('='))
+                    .unwrap_or(false)
+                {
+                    options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else if let Some((k, v)) = arg.split_once('=') {
+                options.insert(k.to_string(), v.to_string());
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Cli {
+            command,
+            positional,
+            options,
+            flags,
+        })
+    }
+
+    pub fn from_env() -> Result<Cli, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("invalid value for --{key}: {v}")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+dyspec — speculative decoding with dynamic token trees (paper reproduction)
+
+USAGE:
+  dyspec <command> [options] [key=value...]
+
+COMMANDS:
+  generate     run one generation (policy=dyspec|sequoia|specinfer|chain|baseline)
+  bench        run a paper experiment (--experiment table1|table2|table3|table4|
+               table5|fig2|fig4|fig5|fig9)
+  serve        start the TCP serving coordinator (--addr host:port)
+  client       send a prompt to a running server (--addr host:port --dataset c4)
+  selfcheck    verify artifacts + PJRT wiring against golden.json
+  help         show this text
+
+CONFIG KEYS (key=value, see config/mod.rs):
+  policy, tree_budget, threshold, max_depth, temp, draft_temp,
+  max_new_tokens, seed, backend (sim|hlo|hlo-pallas), regime (7b|13b|70b),
+  dataset (cnn|c4|owt), artifacts, prompt_len, num_prompts, addr, workers
+
+EXAMPLES:
+  dyspec generate policy=dyspec backend=hlo dataset=cnn temp=0
+  dyspec bench --experiment table1 --out results/table1.json
+  dyspec serve --addr 127.0.0.1:7341 backend=sim
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Cli {
+        Cli::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let cli = parse(&[
+            "bench",
+            "--experiment",
+            "table1",
+            "policy=dyspec",
+            "--verbose",
+            "--out=x.json",
+        ]);
+        assert_eq!(cli.command, "bench");
+        assert_eq!(cli.opt("experiment"), Some("table1"));
+        assert_eq!(cli.opt("policy"), Some("dyspec"));
+        assert_eq!(cli.opt("out"), Some("x.json"));
+        assert!(cli.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let cli = parse(&["generate", "hello"]);
+        assert_eq!(cli.positional, vec!["hello"]);
+    }
+
+    #[test]
+    fn opt_parse_with_default() {
+        let cli = parse(&["bench", "--runs", "5"]);
+        assert_eq!(cli.opt_parse("runs", 1usize).unwrap(), 5);
+        assert_eq!(cli.opt_parse("missing", 3usize).unwrap(), 3);
+        let bad = parse(&["bench", "--runs", "abc"]);
+        // "abc" is consumed as the value of --runs
+        assert!(bad.opt_parse::<usize>("runs", 1).is_err());
+    }
+
+    #[test]
+    fn empty_args_default_to_help() {
+        let cli = Cli::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(cli.command, "help");
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let cli = parse(&["serve", "--quiet", "--addr", "0.0.0.0:9"]);
+        assert!(cli.has_flag("quiet"));
+        assert_eq!(cli.opt("addr"), Some("0.0.0.0:9"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Aggregate serving metrics: admission/rejection counters, completed
+//! requests, token throughput, queue-wait and generation-latency
+//! histograms. Lock granularity is coarse (one mutex per histogram) —
+//! recording happens once per request, far off the token hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::Histogram;
+
+pub struct Metrics {
+    started_at: Instant,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    started: AtomicU64,
+    completed: AtomicU64,
+    tokens: AtomicU64,
+    queue_wait: Mutex<Histogram>,
+    gen_latency: Mutex<Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started_at: Instant::now(),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            started: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+            queue_wait: Mutex::new(Histogram::new()),
+            gen_latency: Mutex::new(Histogram::new()),
+        }
+    }
+
+    pub fn on_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_started(&self, queue_secs: f64) {
+        self.started.fetch_add(1, Ordering::Relaxed);
+        self.queue_wait.lock().unwrap().record(queue_secs);
+    }
+
+    pub fn on_completed(&self, tokens: usize, gen_secs: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.gen_latency.lock().unwrap().record(gen_secs);
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.tokens.load(Ordering::Relaxed)
+    }
+
+    /// Pending = admitted − started (queued, not yet picked up).
+    pub fn queue_depth(&self) -> u64 {
+        self.admitted()
+            .saturating_sub(self.started.load(Ordering::Relaxed))
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.started_at.elapsed().as_secs_f64().max(1e-9);
+        self.total_tokens() as f64 / secs
+    }
+
+    /// Snapshot as JSON (served by the `stats` protocol command).
+    pub fn snapshot(&self) -> Json {
+        let mut qw = self.queue_wait.lock().unwrap().clone();
+        let mut gl = self.gen_latency.lock().unwrap().clone();
+        Json::obj(vec![
+            ("admitted", Json::Num(self.admitted() as f64)),
+            ("rejected", Json::Num(self.rejected() as f64)),
+            ("completed", Json::Num(self.completed() as f64)),
+            ("queue_depth", Json::Num(self.queue_depth() as f64)),
+            ("total_tokens", Json::Num(self.total_tokens() as f64)),
+            ("tokens_per_sec", Json::Num(self.tokens_per_sec())),
+            ("queue_wait_p50", Json::Num(qw.p50())),
+            ("queue_wait_p99", Json::Num(qw.p99())),
+            ("gen_latency_p50", Json::Num(gl.p50())),
+            ("gen_latency_p99", Json::Num(gl.p99())),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_flow() {
+        let m = Metrics::new();
+        m.on_admitted();
+        m.on_admitted();
+        m.on_rejected();
+        m.on_started(0.1);
+        m.on_completed(128, 2.0);
+        assert_eq!(m.admitted(), 2);
+        assert_eq!(m.rejected(), 1);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.total_tokens(), 128);
+        assert_eq!(m.queue_depth(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_json_object() {
+        let m = Metrics::new();
+        m.on_admitted();
+        m.on_started(0.5);
+        m.on_completed(10, 1.0);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("completed").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("total_tokens").unwrap().as_usize(), Some(10));
+        assert!(snap.get("gen_latency_p50").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Bounded admission queue with fail-fast backpressure.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use super::metrics::Metrics;
+
+/// One admitted generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub submitted_at: Instant,
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub worker: usize,
+    pub tokens: Vec<u32>,
+    /// Engine steps taken (target-model dispatches).
+    pub steps: usize,
+    pub emitted_per_step: f64,
+    /// Seconds spent queued before a worker picked the request up.
+    pub queue_secs: f64,
+    /// Seconds of engine time.
+    pub gen_secs: f64,
+}
+
+/// Sender half (held by the coordinator/server).
+pub struct RequestQueue {
+    tx: Option<mpsc::SyncSender<Request>>,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize, metrics: Arc<Metrics>) -> (Self, mpsc::Receiver<Request>) {
+        let (tx, rx) = mpsc::sync_channel(capacity.max(1));
+        (
+            Self {
+                tx: Some(tx),
+                next_id: AtomicU64::new(1),
+                metrics,
+            },
+            rx,
+        )
+    }
+
+    /// Admit a request or reject immediately if the queue is full
+    /// (backpressure — the caller decides whether to retry).
+    pub fn try_submit(
+        &self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        temperature: f32,
+    ) -> Result<mpsc::Receiver<Response>, String> {
+        if prompt.is_empty() {
+            return Err("empty prompt".into());
+        }
+        let (respond, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            prompt,
+            max_new_tokens,
+            temperature,
+            submitted_at: Instant::now(),
+            respond,
+        };
+        let tx = self.tx.as_ref().ok_or("queue closed")?;
+        match tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.on_admitted();
+                Ok(rx)
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.on_rejected();
+                Err("queue full".into())
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err("queue closed".into()),
+        }
+    }
+
+    /// Close the queue: workers drain remaining requests, then exit.
+    pub fn close(&mut self) {
+        self.tx = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_empty_prompt() {
+        let metrics = Arc::new(Metrics::new());
+        let (q, _rx) = RequestQueue::new(4, metrics);
+        assert!(q.try_submit(vec![], 8, 0.0).is_err());
+    }
+
+    #[test]
+    fn ids_are_unique_and_increasing() {
+        let metrics = Arc::new(Metrics::new());
+        let (q, rx) = RequestQueue::new(4, metrics);
+        q.try_submit(vec![1], 8, 0.0).unwrap();
+        q.try_submit(vec![2], 8, 0.0).unwrap();
+        let a = rx.recv().unwrap();
+        let b = rx.recv().unwrap();
+        assert!(b.id > a.id);
+    }
+
+    #[test]
+    fn full_queue_rejects_and_counts() {
+        let metrics = Arc::new(Metrics::new());
+        let (q, _rx) = RequestQueue::new(1, metrics.clone());
+        q.try_submit(vec![1], 8, 0.0).unwrap();
+        assert!(q.try_submit(vec![2], 8, 0.0).is_err());
+        assert_eq!(metrics.rejected(), 1);
+        assert_eq!(metrics.admitted(), 1);
+    }
+
+    #[test]
+    fn close_disconnects() {
+        let metrics = Arc::new(Metrics::new());
+        let (mut q, rx) = RequestQueue::new(1, metrics);
+        q.close();
+        assert!(q.try_submit(vec![1], 8, 0.0).is_err());
+        assert!(rx.recv().is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Worker loop: pull requests FCFS from the shared queue, run the
+//! speculative engine, send responses. One engine (and model pair) per
+//! worker thread, constructed via the `ModelFactory`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::queue::{Request, Response};
+use super::ModelFactory;
+use crate::config::Config;
+use crate::engine::SpecEngine;
+use crate::log_debug;
+
+pub fn run_worker(
+    wid: usize,
+    cfg: Config,
+    factory: ModelFactory,
+    rx: Arc<Mutex<mpsc::Receiver<Request>>>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let (draft, target) = factory();
+    let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime);
+    log_debug!("worker {wid} up (policy={})", cfg.engine.policy);
+
+    loop {
+        // Pull one request; poll with timeout so shutdown is observed even
+        // while the queue is idle.
+        let req = {
+            let guard = rx.lock().expect("queue receiver poisoned");
+            guard.recv_timeout(Duration::from_millis(50))
+        };
+        match req {
+            Ok(req) => {
+                let queue_secs = req.submitted_at.elapsed().as_secs_f64();
+                metrics.on_started(queue_secs);
+
+                engine.cfg.target_temp = req.temperature;
+                engine.cfg.max_new_tokens = req.max_new_tokens;
+
+                let t = Instant::now();
+                let stats = engine.generate(&req.prompt);
+                let gen_secs = t.elapsed().as_secs_f64();
+
+                metrics.on_completed(stats.tokens.len(), gen_secs);
+                let resp = Response {
+                    id: req.id,
+                    worker: wid,
+                    steps: stats.steps.len(),
+                    emitted_per_step: stats.mean_emitted_per_step(),
+                    tokens: stats.tokens,
+                    queue_secs,
+                    gen_secs,
+                };
+                // Receiver may have given up; that's fine.
+                let _ = req.respond.send(resp);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    log_debug!("worker {wid} down");
+}

@@ -1,0 +1,194 @@
+//! Seeded Markov-chain corpora with dataset-like entropy profiles.
+//!
+//! EXACT port of `python/compile/corpus.py`. The python side trains the
+//! models on these streams; this side samples serving prompts from them.
+//! For the same (profile, stream seed) both languages produce byte-identical
+//! token sequences — pinned by the golden tests below AND by
+//! `python/tests/test_corpus.py::test_golden_token_prefix`. If you touch the
+//! sampling logic, update both.
+
+use crate::util::rng::SplitMix64;
+
+pub const VOCAB_SIZE: usize = 512;
+const NUM_SUCC: usize = 8;
+
+/// A dataset profile = Markov-chain shape parameters. Entropy ordering:
+/// cnn < c4 < owt (repetitive news < web crawl < open web).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Profile {
+    pub name: &'static str,
+    pub seed: u64,
+    /// Probability mass concentrated on the NUM_SUCC preferred successors.
+    pub sticky_mass: f64,
+    /// Skew among the preferred successors (1.0 = uniform).
+    pub skew: f64,
+}
+
+pub const PROFILE_NAMES: [&str; 3] = ["cnn", "c4", "owt"];
+
+impl Profile {
+    pub fn by_name(name: &str) -> Option<Profile> {
+        // Seeds match python: 0xC44_0001..3 (underscore = visual only).
+        match name {
+            "cnn" => Some(Profile {
+                name: "cnn",
+                seed: 0xC44_0001,
+                sticky_mass: 0.92,
+                skew: 2.0,
+            }),
+            "c4" => Some(Profile {
+                name: "c4",
+                seed: 0xC44_0002,
+                sticky_mass: 0.80,
+                skew: 1.3,
+            }),
+            "owt" => Some(Profile {
+                name: "owt",
+                seed: 0xC44_0003,
+                sticky_mass: 0.62,
+                skew: 1.0,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// A generated token stream plus its profile tables (reusable across draws).
+pub struct Corpus {
+    pub profile: Profile,
+    succ: Vec<[u32; NUM_SUCC]>,
+    rank_mass: [f64; NUM_SUCC],
+}
+
+impl Corpus {
+    pub fn new(profile: Profile) -> Self {
+        let mut rng = SplitMix64::new(profile.seed);
+        let mut succ = Vec::with_capacity(VOCAB_SIZE);
+        for _ in 0..VOCAB_SIZE {
+            let mut row = [0u32; NUM_SUCC];
+            for slot in &mut row {
+                *slot = rng.next_below(VOCAB_SIZE as u64) as u32;
+            }
+            succ.push(row);
+        }
+        // rank weights: w_j ∝ skew^{-j}, scaled to sticky_mass in total.
+        let mut w = [0f64; NUM_SUCC];
+        let mut total = 0.0;
+        for (j, slot) in w.iter_mut().enumerate() {
+            *slot = profile.skew.powi(-(j as i32));
+            total += *slot;
+        }
+        for slot in &mut w {
+            *slot = *slot / total * profile.sticky_mass;
+        }
+        Self {
+            profile,
+            succ,
+            rank_mass: w,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        Profile::by_name(name).map(Self::new)
+    }
+
+    /// Sample the next token. Mirrors python `corpus.next_token`.
+    fn next_token(&self, state: u32, rng: &mut SplitMix64) -> u32 {
+        let u = rng.next_f64();
+        if u < self.profile.sticky_mass {
+            let mut acc = 0.0;
+            for j in 0..NUM_SUCC {
+                acc += self.rank_mass[j];
+                if u < acc {
+                    return self.succ[state as usize][j];
+                }
+            }
+            return self.succ[state as usize][NUM_SUCC - 1];
+        }
+        rng.next_below(VOCAB_SIZE as u64) as u32
+    }
+
+    /// Generate `n` tokens for a stream seed. Identical to python
+    /// `corpus.generate(profile, n, stream_seed)`.
+    pub fn generate(&self, n: usize, stream_seed: u64) -> Vec<u32> {
+        let seed = self.profile.seed ^ stream_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = SplitMix64::new(seed);
+        let mut state = rng.next_below(VOCAB_SIZE as u64) as u32;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            state = self.next_token(state, &mut rng);
+            out.push(state);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_token_prefixes_match_python() {
+        // Same values as python/tests/test_corpus.py::test_golden_token_prefix.
+        let cases: [(&str, [u32; 8]); 3] = [
+            ("cnn", [347, 288, 427, 355, 419, 295, 425, 461]),
+            ("c4", [347, 382, 0, 393, 42, 50, 163, 75]),
+            ("owt", [501, 164, 89, 167, 247, 181, 509, 456]),
+        ];
+        for (name, want) in cases {
+            let corpus = Corpus::by_name(name).unwrap();
+            let got = corpus.generate(8, 1);
+            assert_eq!(got, want, "profile {name}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_stream_seed() {
+        let corpus = Corpus::by_name("c4").unwrap();
+        assert_eq!(corpus.generate(64, 3), corpus.generate(64, 3));
+        assert_ne!(corpus.generate(64, 3), corpus.generate(64, 4));
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let corpus = Corpus::by_name("owt").unwrap();
+        let toks = corpus.generate(2048, 9);
+        assert!(toks.iter().all(|&t| (t as usize) < VOCAB_SIZE));
+    }
+
+    fn bigram_entropy(tokens: &[u32]) -> f64 {
+        use std::collections::HashMap;
+        let mut counts: HashMap<u32, HashMap<u32, u64>> = HashMap::new();
+        for w in tokens.windows(2) {
+            *counts.entry(w[0]).or_default().entry(w[1]).or_insert(0) += 1;
+        }
+        let total: u64 = counts.values().map(|s| s.values().sum::<u64>()).sum();
+        let mut h = 0.0;
+        for succs in counts.values() {
+            let n: u64 = succs.values().sum();
+            let hs: f64 = succs
+                .values()
+                .map(|&c| {
+                    let p = c as f64 / n as f64;
+                    -p * p.log2()
+                })
+                .sum();
+            h += n as f64 / total as f64 * hs;
+        }
+        h
+    }
+
+    #[test]
+    fn entropy_ordering_cnn_lt_c4_lt_owt() {
+        let h: Vec<f64> = PROFILE_NAMES
+            .iter()
+            .map(|name| bigram_entropy(&Corpus::by_name(name).unwrap().generate(40_000, 2)))
+        .collect();
+        assert!(h[0] < h[1] && h[1] < h[2], "{h:?}");
+    }
+
+    #[test]
+    fn unknown_profile_is_none() {
+        assert!(Corpus::by_name("wikipedia").is_none());
+    }
+}

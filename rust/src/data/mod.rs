@@ -1,0 +1,11 @@
+//! Synthetic data substrate: the three dataset-profile corpora (shared,
+//! bit-identical, with the python training side), serving prompts sampled
+//! from them, and request traces for the coordinator load tests.
+
+pub mod markov;
+pub mod prompts;
+pub mod trace;
+
+pub use markov::{Corpus, Profile, PROFILE_NAMES};
+pub use prompts::PromptSet;
+pub use trace::{RequestTrace, TraceEvent};

@@ -1,0 +1,76 @@
+//! Serving prompts: fixed-length windows drawn from a profile corpus,
+//! following the paper's evaluation protocol (first 128 tokens as the fixed
+//! prompt, 128 generated as completion; §5.1).
+
+use super::markov::Corpus;
+
+/// A pool of prompts for one dataset profile.
+pub struct PromptSet {
+    pub profile: &'static str,
+    pub prompt_len: usize,
+    prompts: Vec<Vec<u32>>,
+}
+
+impl PromptSet {
+    /// Draw `count` prompts of `prompt_len` tokens. Each prompt comes from
+    /// its own stream seed so prompts are independent draws from the
+    /// profile's distribution (the paper samples 1000 pieces per dataset).
+    pub fn generate(corpus: &Corpus, count: usize, prompt_len: usize, base_seed: u64) -> Self {
+        let prompts = (0..count)
+            .map(|i| corpus.generate(prompt_len, base_seed.wrapping_add(i as u64 + 1)))
+            .collect();
+        Self {
+            profile: corpus.profile.name,
+            prompt_len,
+            prompts,
+        }
+    }
+
+    pub fn by_name(name: &str, count: usize, prompt_len: usize, base_seed: u64) -> Option<Self> {
+        Corpus::by_name(name).map(|c| Self::generate(&c, count, prompt_len, base_seed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> &[u32] {
+        &self.prompts[i % self.prompts.len()]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &[u32]> {
+        self.prompts.iter().map(|p| p.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_shapes() {
+        let ps = PromptSet::by_name("cnn", 5, 128, 100).unwrap();
+        assert_eq!(ps.len(), 5);
+        assert!(ps.iter().all(|p| p.len() == 128));
+    }
+
+    #[test]
+    fn prompts_are_distinct_and_deterministic() {
+        let a = PromptSet::by_name("c4", 3, 32, 7).unwrap();
+        let b = PromptSet::by_name("c4", 3, 32, 7).unwrap();
+        for i in 0..3 {
+            assert_eq!(a.get(i), b.get(i));
+        }
+        assert_ne!(a.get(0), a.get(1));
+    }
+
+    #[test]
+    fn get_wraps_around() {
+        let ps = PromptSet::by_name("owt", 2, 16, 1).unwrap();
+        assert_eq!(ps.get(0), ps.get(2));
+    }
+}

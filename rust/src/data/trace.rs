@@ -1,0 +1,108 @@
+//! Request traces for the serving coordinator: Poisson arrivals over the
+//! prompt pool, with per-request generation budgets. This is the synthetic
+//! stand-in for a production request log (DESIGN.md §3) — the coordinator
+//! benches replay these traces.
+
+use crate::util::Rng;
+
+/// One request arrival.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time offset from trace start, seconds.
+    pub at_secs: f64,
+    /// Index into the prompt pool.
+    pub prompt_idx: usize,
+    /// Tokens to generate.
+    pub max_new_tokens: usize,
+    /// Sampling temperature for the target.
+    pub temperature: f32,
+}
+
+/// A replayable arrival trace.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl RequestTrace {
+    /// Poisson arrivals at `rate_rps` for `n_requests`, cycling over
+    /// `pool_size` prompts. Deterministic in `seed`.
+    pub fn poisson(
+        n_requests: usize,
+        rate_rps: f64,
+        pool_size: usize,
+        max_new_tokens: usize,
+        temperature: f32,
+        seed: u64,
+    ) -> Self {
+        assert!(rate_rps > 0.0 && pool_size > 0);
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let events = (0..n_requests)
+            .map(|i| {
+                // Exponential inter-arrival via inverse CDF.
+                let u = rng.next_f64().max(1e-12);
+                t += -u.ln() / rate_rps;
+                TraceEvent {
+                    at_secs: t,
+                    prompt_idx: i % pool_size,
+                    max_new_tokens,
+                    temperature,
+                }
+            })
+            .collect();
+        Self { events }
+    }
+
+    /// All requests at t=0 (closed-loop batch replay).
+    pub fn burst(n_requests: usize, pool_size: usize, max_new_tokens: usize, temperature: f32) -> Self {
+        let events = (0..n_requests)
+            .map(|i| TraceEvent {
+                at_secs: 0.0,
+                prompt_idx: i % pool_size,
+                max_new_tokens,
+                temperature,
+            })
+            .collect();
+        Self { events }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn duration_secs(&self) -> f64 {
+        self.events.last().map(|e| e.at_secs).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_monotone_and_deterministic() {
+        let a = RequestTrace::poisson(50, 10.0, 8, 128, 0.6, 1);
+        let b = RequestTrace::poisson(50, 10.0, 8, 128, 0.6, 1);
+        assert_eq!(a.events, b.events);
+        assert!(a.events.windows(2).all(|w| w[0].at_secs <= w[1].at_secs));
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let tr = RequestTrace::poisson(2000, 50.0, 4, 16, 0.0, 2);
+        let rate = tr.len() as f64 / tr.duration_secs();
+        assert!((rate - 50.0).abs() < 5.0, "rate={rate}");
+    }
+
+    #[test]
+    fn burst_all_at_zero() {
+        let tr = RequestTrace::burst(5, 2, 64, 0.0);
+        assert!(tr.events.iter().all(|e| e.at_secs == 0.0));
+        assert_eq!(tr.events[4].prompt_idx, 0); // cycles pool
+    }
+}

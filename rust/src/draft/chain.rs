@@ -1,0 +1,110 @@
+//! Chain speculation (classic speculative decoding, Leviathan et al. 2023 /
+//! Chen et al. 2023): a single path of `tree_budget` tokens — the degenerate
+//! token "tree" of Figure 1a/1b. Also `NoSpeculation`, the autoregressive
+//! baseline that builds an empty tree (the engine then just samples one
+//! target token per step).
+
+use super::TreePolicy;
+use crate::config::{EngineConfig, PolicyKind};
+use crate::models::LogitModel;
+use crate::sampling::sample;
+use crate::tree::{TokenTree, ROOT};
+use crate::util::Rng;
+
+pub struct ChainPolicy;
+
+impl TreePolicy for ChainPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Chain
+    }
+
+    fn build(
+        &self,
+        draft: &mut dyn LogitModel,
+        prefix: &[u32],
+        cfg: &EngineConfig,
+        rng: &mut Rng,
+    ) -> TokenTree {
+        let root_dist = super::draft_dist(draft, prefix, cfg.draft_temp);
+        let mut tree = TokenTree::new(*prefix.last().expect("empty prefix"), root_dist);
+        let mut ctx = prefix.to_vec();
+        let mut node = ROOT;
+        let depth_cap = cfg.tree_budget.min(cfg.max_depth);
+        for _ in 0..depth_cap {
+            let dist = tree.node(node).draft_dist.clone();
+            if dist.iter().sum::<f32>() <= 0.0 {
+                break;
+            }
+            let token = sample(&dist, rng) as u32;
+            let est = tree.node(node).est * dist[token as usize] as f64;
+            let child = tree.add_child(node, token, est);
+            ctx.push(token);
+            let child_dist = super::draft_dist(draft, &ctx, cfg.draft_temp);
+            tree.node_mut(child).draft_dist = child_dist;
+            node = child;
+        }
+        tree
+    }
+}
+
+/// Autoregressive baseline: no speculation at all.
+pub struct NoSpeculation;
+
+impl TreePolicy for NoSpeculation {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Baseline
+    }
+
+    fn build(
+        &self,
+        draft: &mut dyn LogitModel,
+        prefix: &[u32],
+        cfg: &EngineConfig,
+        _rng: &mut Rng,
+    ) -> TokenTree {
+        let root_dist = super::draft_dist(draft, prefix, cfg.draft_temp);
+        TokenTree::new(*prefix.last().expect("empty prefix"), root_dist)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::draft::testutil::{prefix, sim_draft};
+
+    #[test]
+    fn chain_is_a_path() {
+        let cfg = EngineConfig {
+            tree_budget: 12,
+            ..EngineConfig::default()
+        };
+        let mut draft = sim_draft(0.8, 42);
+        let mut rng = Rng::new(1);
+        let tree = ChainPolicy.build(&mut draft, &prefix(), &cfg, &mut rng);
+        tree.check_invariants().unwrap();
+        assert_eq!(tree.size(), 12);
+        assert_eq!(tree.depth(), 12);
+        for id in tree.speculated() {
+            assert!(tree.node(id).children.len() <= 1);
+        }
+    }
+
+    #[test]
+    fn chain_estimates_are_path_products() {
+        let cfg = EngineConfig {
+            tree_budget: 6,
+            ..EngineConfig::default()
+        };
+        let mut draft = sim_draft(0.8, 42);
+        let mut rng = Rng::new(2);
+        let tree = ChainPolicy.build(&mut draft, &prefix(), &cfg, &mut rng);
+        for id in tree.speculated() {
+            let node = tree.node(id);
+            if let Some(p) = node.parent {
+                if p != ROOT {
+                    assert!(node.est <= tree.node(p).est + 1e-12);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Draft-tree construction policies. `TreePolicy` is the pluggable strategy
+//! interface; DySpec's dynamic trees (Algorithms 1 and 2) sit next to the
+//! baselines the paper compares against (Sequoia, SpecInfer, chain).
+//!
+//! Contract shared by all policies (required for unbiased verification):
+//!   - every node's `draft_dist` holds the temperature-applied draft
+//!     distribution conditioned on (prefix ++ path-to-node);
+//!   - children are stored in SAMPLING order, and sibling k was drawn from
+//!     the residual with siblings < k zeroed-and-renormalized;
+//!   - whether a sampled token is KEPT never depends on the token identity
+//!     (the paper's problem-2 constraint — anything else biases the output).
+
+pub mod chain;
+pub mod dyspec;
+pub mod sequoia;
+pub mod specinfer;
+pub mod threshold;
+
+use crate::config::{EngineConfig, PolicyKind};
+use crate::models::LogitModel;
+use crate::tree::TokenTree;
+use crate::util::Rng;
+
+/// A draft-tree construction strategy.
+pub trait TreePolicy {
+    fn kind(&self) -> PolicyKind;
+
+    /// Build the speculated tree for `prefix`.
+    fn build(
+        &self,
+        draft: &mut dyn LogitModel,
+        prefix: &[u32],
+        cfg: &EngineConfig,
+        rng: &mut Rng,
+    ) -> TokenTree;
+}
+
+/// Instantiate the policy selected by the config.
+pub fn make_policy(kind: PolicyKind) -> Box<dyn TreePolicy> {
+    match kind {
+        PolicyKind::DySpec => Box::new(dyspec::DySpecPolicy),
+        PolicyKind::DySpecThreshold => Box::new(threshold::ThresholdPolicy),
+        PolicyKind::Sequoia => Box::new(sequoia::SequoiaPolicy::default()),
+        PolicyKind::SpecInfer => Box::new(specinfer::SpecInferPolicy),
+        PolicyKind::Chain => Box::new(chain::ChainPolicy),
+        PolicyKind::Baseline => Box::new(chain::NoSpeculation),
+    }
+}
+
+/// Shared helper: temperature-applied draft distribution for a context.
+pub(crate) fn draft_dist(
+    draft: &mut dyn LogitModel,
+    ctx: &[u32],
+    temp: f32,
+) -> Vec<f32> {
+    crate::sampling::dist_from_logits(&draft.next_logits(ctx), temp)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::models::sim::{SimModel, SimSpec};
+
+    pub fn sim_draft(noise: f32, seed: u64) -> SimModel {
+        let spec = SimSpec::new(64, 2.0, noise, seed);
+        SimModel::pair(spec).0
+    }
+
+    pub fn prefix() -> Vec<u32> {
+        vec![3, 1, 4, 1, 5, 9, 2, 6]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::ROOT;
+
+    /// Every policy must satisfy the shared structural contract.
+    #[test]
+    fn all_policies_respect_budget_and_invariants() {
+        let cfg = EngineConfig {
+            tree_budget: 24,
+            ..EngineConfig::default()
+        };
+        for kind in [
+            PolicyKind::DySpec,
+            PolicyKind::DySpecThreshold,
+            PolicyKind::Sequoia,
+            PolicyKind::SpecInfer,
+            PolicyKind::Chain,
+        ] {
+            let policy = make_policy(kind);
+            let mut draft = testutil::sim_draft(0.8, 42);
+            let mut rng = Rng::new(7);
+            let tree = policy.build(&mut draft, &testutil::prefix(), &cfg, &mut rng);
+            assert!(tree.size() <= cfg.tree_budget, "{kind}: over budget");
+            assert!(tree.size() >= 1, "{kind}: empty tree");
+            tree.check_invariants().unwrap();
+            // every non-leaf node must carry its draft distribution
+            for id in tree.speculated() {
+                if !tree.node(id).children.is_empty() {
+                    assert!(
+                        !tree.node(id).draft_dist.is_empty(),
+                        "{kind}: inner node missing dist"
+                    );
+                }
+            }
+            assert!(!tree.node(ROOT).draft_dist.is_empty(), "{kind}: root dist");
+        }
+    }
+
+    #[test]
+    fn baseline_builds_empty_tree() {
+        let policy = make_policy(PolicyKind::Baseline);
+        let mut draft = testutil::sim_draft(0.8, 1);
+        let mut rng = Rng::new(1);
+        let tree = policy.build(
+            &mut draft,
+            &testutil::prefix(),
+            &EngineConfig::default(),
+            &mut rng,
+        );
+        assert_eq!(tree.size(), 0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Sequoia baseline (Chen et al. 2024): a *fixed* tree shape optimized
+//! offline from positional acceptance-rate estimates, then filled with
+//! sampled tokens at run time.
+//!
+//! Sequoia's dynamic program maximizes the expected accepted length given
+//! per-sibling-rank acceptance probabilities a(1) >= a(2) >= ... — the
+//! probability the k-th candidate at a position survives verification. With
+//! static weights w(node) = ∏ over the path of a(rank), the optimal
+//! budget-n subtree is the top-n nodes by weight (same exchange argument as
+//! DySpec's Appendix D, but over the FIXED weight table rather than
+//! run-time draft probabilities — that fixedness is exactly what the paper
+//! shows loses to DySpec on diverse inputs). We materialize the shape with
+//! a weight-ordered heap, which is equivalent to the DP for this objective.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::TreePolicy;
+use crate::config::{EngineConfig, PolicyKind};
+use crate::models::LogitModel;
+use crate::sampling::SiblingSampler;
+use crate::tree::{TokenTree, ROOT};
+use crate::util::Rng;
+
+/// Tree-shape node used during offline shape construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShapeNode {
+    pub parent: usize, // index into shape vec; usize::MAX for virtual root
+    pub rank: usize,   // sibling rank (0-based)
+    pub weight: f64,
+}
+
+struct ShapeCand {
+    weight: f64,
+    parent: usize,
+    rank: usize,
+    seq: u64,
+}
+
+impl PartialEq for ShapeCand {
+    fn eq(&self, other: &Self) -> bool {
+        self.weight == other.weight && self.seq == other.seq
+    }
+}
+impl Eq for ShapeCand {}
+impl PartialOrd for ShapeCand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ShapeCand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.weight
+            .partial_cmp(&other.weight)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Per-rank acceptance model: a(r) = alpha * beta^r (geometric decay over
+/// sibling rank, Sequoia's positional-acceptance fit), capped at `max_rank`.
+pub fn rank_accept(alpha: f64, beta: f64, rank: usize, max_rank: usize) -> f64 {
+    if rank >= max_rank {
+        0.0
+    } else {
+        alpha * beta.powi(rank as i32)
+    }
+}
+
+/// Offline shape optimization: top-`budget` nodes by weight.
+pub fn optimal_shape(budget: usize, alpha: f64, beta: f64, max_rank: usize, max_depth: usize) -> Vec<ShapeNode> {
+    let mut shape: Vec<ShapeNode> = Vec::with_capacity(budget);
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    heap.push(ShapeCand {
+        weight: rank_accept(alpha, beta, 0, max_rank),
+        parent: usize::MAX,
+        rank: 0,
+        seq,
+    });
+    let mut depth_of = Vec::with_capacity(budget);
+    while shape.len() < budget {
+        let Some(cand) = heap.pop() else { break };
+        if cand.weight <= 0.0 {
+            break;
+        }
+        let idx = shape.len();
+        let depth = if cand.parent == usize::MAX {
+            1
+        } else {
+            depth_of[cand.parent] + 1
+        };
+        shape.push(ShapeNode {
+            parent: cand.parent,
+            rank: cand.rank,
+            weight: cand.weight,
+        });
+        depth_of.push(depth);
+        // sibling candidate at the same position
+        let sib = rank_accept(alpha, beta, cand.rank + 1, max_rank);
+        if sib > 0.0 {
+            let parent_w = if cand.parent == usize::MAX {
+                1.0
+            } else {
+                shape[cand.parent].weight
+            };
+            seq += 1;
+            heap.push(ShapeCand {
+                weight: parent_w * sib / 1.0,
+                parent: cand.parent,
+                rank: cand.rank + 1,
+                seq,
+            });
+        }
+        // first child of the new node
+        if depth < max_depth {
+            let child = rank_accept(alpha, beta, 0, max_rank);
+            seq += 1;
+            heap.push(ShapeCand {
+                weight: cand.weight * child,
+                parent: idx,
+                rank: 0,
+                seq,
+            });
+        }
+    }
+    shape
+}
+
+pub struct SequoiaPolicy {
+    /// Sibling-rank decay for the positional acceptance fit.
+    pub beta: f64,
+    pub max_rank: usize,
+}
+
+impl Default for SequoiaPolicy {
+    fn default() -> Self {
+        Self {
+            beta: 0.55,
+            max_rank: 8,
+        }
+    }
+}
+
+impl TreePolicy for SequoiaPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Sequoia
+    }
+
+    fn build(
+        &self,
+        draft: &mut dyn LogitModel,
+        prefix: &[u32],
+        cfg: &EngineConfig,
+        rng: &mut Rng,
+    ) -> TokenTree {
+        let shape = optimal_shape(
+            cfg.tree_budget,
+            cfg.sequoia_accept_rate,
+            self.beta,
+            self.max_rank,
+            cfg.max_depth,
+        );
+        let root_dist = super::draft_dist(draft, prefix, cfg.draft_temp);
+        let mut tree = TokenTree::new(*prefix.last().expect("empty prefix"), root_dist);
+
+        // Fill the fixed shape with sampled tokens. Children of one shape
+        // node must be drawn rank-order from one residual sampler.
+        let mut ctx = prefix.to_vec();
+        let mut node_of_shape = vec![usize::MAX; shape.len()];
+        let mut sampler_of: Vec<Option<SiblingSampler>> = vec![None; shape.len() + 1];
+        sampler_of[0] = Some(SiblingSampler::new(tree.node(ROOT).draft_dist.clone()));
+
+        for (i, s) in shape.iter().enumerate() {
+            let (parent_tree, slot) = if s.parent == usize::MAX {
+                (ROOT, 0)
+            } else {
+                (node_of_shape[s.parent], s.parent + 1)
+            };
+            if parent_tree == usize::MAX {
+                continue; // ancestor dropped (draft mass exhausted)
+            }
+            // Lazily score the parent with the draft model.
+            if sampler_of[slot].is_none() {
+                if tree.node(parent_tree).draft_dist.is_empty() {
+                    ctx.truncate(prefix.len());
+                    ctx.extend(tree.path_tokens(parent_tree));
+                    let dist = super::draft_dist(draft, &ctx, cfg.draft_temp);
+                    tree.node_mut(parent_tree).draft_dist = dist;
+                }
+                sampler_of[slot] =
+                    Some(SiblingSampler::new(tree.node(parent_tree).draft_dist.clone()));
+            }
+            let Some((token, _p)) = sampler_of[slot].as_mut().unwrap().draw(rng) else {
+                continue;
+            };
+            let id = tree.add_child(parent_tree, token as u32, s.weight);
+            node_of_shape[i] = id;
+        }
+        tree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::draft::testutil::{prefix, sim_draft};
+
+    #[test]
+    fn shape_is_budget_sized_and_weight_sorted() {
+        let shape = optimal_shape(64, 0.75, 0.5, 8, 24);
+        assert_eq!(shape.len(), 64);
+        for w in shape.windows(2) {
+            assert!(w[0].weight >= w[1].weight - 1e-12);
+        }
+    }
+
+    #[test]
+    fn high_alpha_prefers_depth_low_alpha_prefers_width() {
+        let deep = optimal_shape(16, 0.95, 0.3, 8, 32);
+        let wide = optimal_shape(16, 0.3, 0.9, 8, 32);
+        let depth = |shape: &[ShapeNode]| {
+            let mut d = vec![0usize; shape.len()];
+            let mut maxd = 0;
+            for (i, s) in shape.iter().enumerate() {
+                d[i] = if s.parent == usize::MAX { 1 } else { d[s.parent] + 1 };
+                maxd = maxd.max(d[i]);
+            }
+            maxd
+        };
+        assert!(depth(&deep) > depth(&wide), "{} vs {}", depth(&deep), depth(&wide));
+    }
+
+    #[test]
+    fn shape_is_static_across_inputs() {
+        // The defining limitation vs DySpec: same shape regardless of query.
+        let a = optimal_shape(32, 0.75, 0.55, 8, 24);
+        let b = optimal_shape(32, 0.75, 0.55, 8, 24);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn builds_valid_tree() {
+        let cfg = EngineConfig {
+            tree_budget: 32,
+            ..EngineConfig::default()
+        };
+        let mut draft = sim_draft(0.8, 42);
+        let mut rng = Rng::new(1);
+        let tree = SequoiaPolicy::default().build(&mut draft, &prefix(), &cfg, &mut rng);
+        tree.check_invariants().unwrap();
+        assert!(tree.size() > 0 && tree.size() <= 32);
+    }
+
+    #[test]
+    fn rank_accept_decays() {
+        assert!(rank_accept(0.8, 0.5, 0, 8) > rank_accept(0.8, 0.5, 1, 8));
+        assert_eq!(rank_accept(0.8, 0.5, 8, 8), 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! SpecInfer baseline (Miao et al. 2023): fixed k-ary token tree with
+//! configurable per-layer branch widths — every layer-l node receives
+//! `widths[l]` children, irrespective of the draft distribution. The
+//! simplest fixed-structure baseline the paper compares against.
+
+use super::TreePolicy;
+use crate::config::{EngineConfig, PolicyKind};
+use crate::models::LogitModel;
+use crate::sampling::SiblingSampler;
+use crate::tree::{NodeId, TokenTree, ROOT};
+use crate::util::Rng;
+
+pub struct SpecInferPolicy;
+
+impl TreePolicy for SpecInferPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::SpecInfer
+    }
+
+    fn build(
+        &self,
+        draft: &mut dyn LogitModel,
+        prefix: &[u32],
+        cfg: &EngineConfig,
+        rng: &mut Rng,
+    ) -> TokenTree {
+        let root_dist = super::draft_dist(draft, prefix, cfg.draft_temp);
+        let mut tree = TokenTree::new(*prefix.last().expect("empty prefix"), root_dist);
+        let mut ctx = prefix.to_vec();
+        let mut frontier: Vec<NodeId> = vec![ROOT];
+
+        for layer in 0..cfg.max_depth {
+            let width = *cfg
+                .specinfer_widths
+                .get(layer)
+                .or(cfg.specinfer_widths.last())
+                .unwrap_or(&1);
+            if width == 0 || frontier.is_empty() || tree.size() >= cfg.tree_budget {
+                break;
+            }
+            let mut next = Vec::new();
+            for &node in &frontier {
+                if tree.node(node).draft_dist.is_empty() {
+                    ctx.truncate(prefix.len());
+                    ctx.extend(tree.path_tokens(node));
+                    let dist = super::draft_dist(draft, &ctx, cfg.draft_temp);
+                    tree.node_mut(node).draft_dist = dist;
+                }
+                let mut sampler =
+                    SiblingSampler::new(tree.node(node).draft_dist.clone());
+                // Estimated value for bookkeeping only (structure is fixed).
+                let mut v = if node == ROOT { 1.0 } else { tree.node(node).est };
+                for _ in 0..width {
+                    if tree.size() >= cfg.tree_budget {
+                        break;
+                    }
+                    let Some((token, p)) = sampler.draw(rng) else { break };
+                    let child = tree.add_child(node, token as u32, v * p as f64);
+                    v *= 1.0 - p as f64;
+                    next.push(child);
+                }
+            }
+            frontier = next;
+        }
+        tree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::draft::testutil::{prefix, sim_draft};
+
+    fn build(widths: Vec<usize>, budget: usize) -> TokenTree {
+        let cfg = EngineConfig {
+            tree_budget: budget,
+            specinfer_widths: widths,
+            ..EngineConfig::default()
+        };
+        let mut draft = sim_draft(0.8, 42);
+        let mut rng = Rng::new(1);
+        SpecInferPolicy.build(&mut draft, &prefix(), &cfg, &mut rng)
+    }
+
+    #[test]
+    fn layer_widths_follow_config() {
+        let tree = build(vec![4, 2, 1], 64);
+        tree.check_invariants().unwrap();
+        let widths = tree.layer_widths();
+        assert_eq!(widths[0], 4);
+        // each of the 4 layer-1 nodes gets 2 children
+        assert_eq!(widths[1], 8);
+        // layer 3 onward reuses the last width (1 child each)
+        assert_eq!(widths[2], 8);
+    }
+
+    #[test]
+    fn budget_truncates_fixed_shape() {
+        let tree = build(vec![4, 4, 4], 10);
+        assert!(tree.size() <= 10);
+    }
+
+    #[test]
+    fn structure_is_input_independent() {
+        // widths identical across different prefixes (fixed-pattern tree) —
+        // the limitation DySpec's dynamic trees remove.
+        let cfg = EngineConfig {
+            tree_budget: 64,
+            specinfer_widths: vec![3, 2, 1],
+            ..EngineConfig::default()
+        };
+        let mut rng = Rng::new(2);
+        let mut draft = sim_draft(0.8, 42);
+        let t1 = SpecInferPolicy.build(&mut draft, &[1, 2, 3], &cfg, &mut rng);
+        let t2 = SpecInferPolicy.build(&mut draft, &[9, 8, 7], &cfg, &mut rng);
+        assert_eq!(t1.layer_widths(), t2.layer_widths());
+    }
+}

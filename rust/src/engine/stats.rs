@@ -1,0 +1,244 @@
+//! Per-step and per-generation statistics — the raw material for every
+//! table and figure reproduction (accepted tokens/step, latency/token,
+//! component breakdowns, tree sizes over time).
+
+use crate::util::timer::ComponentTimes;
+
+/// Statistics for one engine step.
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    pub tree_size: usize,
+    pub tree_depth: usize,
+    /// Speculated tokens accepted by verification (excludes bonus).
+    pub accepted_speculated: usize,
+    /// Tokens emitted this step (accepted + 1 bonus; 1 for baseline).
+    pub emitted: usize,
+    pub draft_dispatches: u64,
+    pub target_dispatches: u64,
+    /// Measured wall time per component (Fig 4 buckets).
+    pub times: ComponentTimes,
+    /// Virtual step latency under the configured hardware regime.
+    pub virtual_secs: Option<f64>,
+}
+
+/// Statistics for one full generation.
+#[derive(Clone, Debug)]
+pub struct GenerationStats {
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub steps: Vec<StepStats>,
+}
+
+impl GenerationStats {
+    pub fn new(prompt_len: usize) -> Self {
+        Self {
+            prompt_len,
+            tokens: Vec::new(),
+            steps: Vec::new(),
+        }
+    }
+
+    /// Record a step, extending the context and truncating overshoot so the
+    /// generation holds exactly `max_new_tokens` (paper protocol: 128).
+    pub fn push_step(
+        &mut self,
+        output: crate::engine::StepOutput,
+        ctx: &mut Vec<u32>,
+        remaining: usize,
+    ) {
+        let mut tokens = output.tokens;
+        let mut step = output.step;
+        if tokens.len() > remaining {
+            tokens.truncate(remaining);
+            step.emitted = tokens.len();
+        }
+        ctx.extend_from_slice(&tokens);
+        self.tokens.extend_from_slice(&tokens);
+        self.steps.push(step);
+    }
+
+    /// Mean tokens emitted per target-model step — the paper's
+    /// "(accepted tokens)" parenthetical, and ≈ the acceleration rate in
+    /// the T_t-dominated regime (§5.3).
+    pub fn mean_emitted_per_step(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.tokens.len() as f64 / self.steps.len() as f64
+    }
+
+    pub fn mean_tree_size(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.tree_size as f64).sum::<f64>() / self.steps.len() as f64
+    }
+
+    /// Total measured wall time across all components.
+    pub fn total_measured_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.times.total()).sum()
+    }
+
+    /// Total virtual regime time (0.0 when no regime configured).
+    pub fn total_virtual_secs(&self) -> f64 {
+        self.steps.iter().filter_map(|s| s.virtual_secs).sum()
+    }
+
+    /// Virtual latency per emitted token — the paper's headline metric.
+    pub fn virtual_latency_per_token(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return 0.0;
+        }
+        self.total_virtual_secs() / self.tokens.len() as f64
+    }
+
+    /// Measured latency per emitted token.
+    pub fn measured_latency_per_token(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return 0.0;
+        }
+        self.total_measured_secs() / self.tokens.len() as f64
+    }
+
+    /// Merged component times across steps (Fig 4).
+    pub fn aggregate_times(&self) -> ComponentTimes {
+        let mut agg = ComponentTimes::new();
+        for s in &self.steps {
+            agg.merge(&s.times);
+        }
+        agg
+    }
+
+    pub fn total_draft_dispatches(&self) -> u64 {
+        self.steps.iter().map(|s| s.draft_dispatches).sum()
+    }
+}
+
+/// Aggregates over many generations (one bench cell).
+#[derive(Clone, Debug, Default)]
+pub struct RunAggregate {
+    pub generations: usize,
+    pub tokens: usize,
+    pub steps: usize,
+    pub virtual_secs: f64,
+    pub measured_secs: f64,
+    pub sum_tree_size: f64,
+    pub times: ComponentTimes,
+}
+
+impl RunAggregate {
+    pub fn add(&mut self, g: &GenerationStats) {
+        self.generations += 1;
+        self.tokens += g.tokens.len();
+        self.steps += g.steps.len();
+        self.virtual_secs += g.total_virtual_secs();
+        self.measured_secs += g.total_measured_secs();
+        self.sum_tree_size += g.steps.iter().map(|s| s.tree_size as f64).sum::<f64>();
+        self.times.merge(&g.aggregate_times());
+    }
+
+    pub fn emitted_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.steps as f64
+        }
+    }
+
+    pub fn virtual_latency_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.virtual_secs / self.tokens as f64
+        }
+    }
+
+    pub fn measured_latency_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.measured_secs / self.tokens as f64
+        }
+    }
+
+    pub fn mean_tree_size(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.sum_tree_size / self.steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(emitted: usize, tree: usize, virt: f64) -> StepStats {
+        StepStats {
+            emitted,
+            tree_size: tree,
+            virtual_secs: Some(virt),
+            ..StepStats::default()
+        }
+    }
+
+    #[test]
+    fn per_step_means() {
+        let mut g = GenerationStats::new(4);
+        let mut ctx = vec![1, 2, 3, 4];
+        for _ in 0..3 {
+            g.push_step(
+                crate::engine::StepOutput {
+                    tokens: vec![7, 8],
+                    step: step(2, 10, 0.5),
+                },
+                &mut ctx,
+                100,
+            );
+        }
+        assert_eq!(g.tokens.len(), 6);
+        assert!((g.mean_emitted_per_step() - 2.0).abs() < 1e-12);
+        assert!((g.mean_tree_size() - 10.0).abs() < 1e-12);
+        assert!((g.total_virtual_secs() - 1.5).abs() < 1e-12);
+        assert!((g.virtual_latency_per_token() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncates_overshoot() {
+        let mut g = GenerationStats::new(1);
+        let mut ctx = vec![1];
+        g.push_step(
+            crate::engine::StepOutput {
+                tokens: vec![5, 6, 7],
+                step: step(3, 4, 0.1),
+            },
+            &mut ctx,
+            2,
+        );
+        assert_eq!(g.tokens, vec![5, 6]);
+        assert_eq!(ctx, vec![1, 5, 6]);
+        assert_eq!(g.steps[0].emitted, 2);
+    }
+
+    #[test]
+    fn aggregate_combines() {
+        let mut g = GenerationStats::new(1);
+        let mut ctx = vec![1];
+        g.push_step(
+            crate::engine::StepOutput {
+                tokens: vec![5],
+                step: step(1, 8, 0.2),
+            },
+            &mut ctx,
+            10,
+        );
+        let mut agg = RunAggregate::default();
+        agg.add(&g);
+        agg.add(&g);
+        assert_eq!(agg.generations, 2);
+        assert_eq!(agg.tokens, 2);
+        assert!((agg.virtual_latency_per_token() - 0.2).abs() < 1e-12);
+        assert!((agg.mean_tree_size() - 8.0).abs() < 1e-12);
+    }
+}

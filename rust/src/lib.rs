@@ -1,0 +1,35 @@
+//! # DySpec — faster speculative decoding with dynamic token tree structure
+//!
+//! A production-quality Rust + JAX + Pallas reproduction of
+//! *DySpec: Faster Speculative Decoding with Dynamic Token Tree Structure*
+//! (Xiong et al., 2024), organized as a three-layer serving stack:
+//!
+//! - **L3 (this crate)** — the coordinator: draft-tree construction
+//!   ([`draft`], Algorithms 1 & 2 plus the Sequoia/SpecInfer/chain
+//!   baselines), unbiased multi-branch verification ([`verify`],
+//!   Algorithm 3), the speculative decoding engine ([`engine`]), tree
+//!   attention masks + block-sparsity reorders ([`tree`], Appendix C), and
+//!   a request router / continuous batcher ([`coordinator`], [`server`]).
+//! - **L2** — a JAX transformer (`python/compile/model.py`), AOT-lowered to
+//!   HLO text and executed from rust via PJRT ([`runtime`], [`models::hlo`]).
+//! - **L1** — a Pallas block-sparse tree-attention kernel
+//!   (`python/compile/kernels/tree_attention.py`) inlined into the L2 graph.
+//!
+//! Python runs once at build time (`make artifacts`); the serving binary is
+//! pure rust. See DESIGN.md for the paper-to-module map and EXPERIMENTS.md
+//! for reproduction results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod draft;
+pub mod engine;
+pub mod models;
+pub mod runtime;
+pub mod sampling;
+pub mod server;
+pub mod tree;
+pub mod util;
+pub mod verify;

@@ -1,0 +1,243 @@
+//! `dyspec` — leader binary: generation, paper benchmarks, serving, and
+//! artifact self-check. See `dyspec help` (cli::USAGE).
+
+use std::sync::Arc;
+
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+use dyspec::cli::{Cli, USAGE};
+use dyspec::config::{Config, ModelBackend};
+use dyspec::coordinator::{Coordinator, ModelFactory};
+use dyspec::data::prompts::PromptSet;
+use dyspec::engine::SpecEngine;
+use dyspec::models::hlo::HloModel;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+use dyspec::runtime::artifacts::{Artifacts, GraphKey, Role};
+use dyspec::runtime::PjrtRuntime;
+use dyspec::server::{Client, Server};
+use dyspec::util::json::Json;
+
+fn main() {
+    let cli = match Cli::from_env() {
+        Ok(cli) => cli,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match cli.command.as_str() {
+        "generate" => cmd_generate(&cli),
+        "bench" => cmd_bench(&cli),
+        "serve" => cmd_serve(&cli),
+        "client" => cmd_client(&cli),
+        "selfcheck" => cmd_selfcheck(&cli),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command: {other}\n\n{USAGE}")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+/// Build a Config from the CLI's key=value options.
+fn config_from(cli: &Cli) -> Result<Config, String> {
+    let mut cfg = if let Some(preset) = cli.opt("preset") {
+        Config::preset(preset)?
+    } else {
+        Config::new()
+    };
+    for (k, v) in &cli.options {
+        if matches!(
+            k.as_str(),
+            "experiment" | "out" | "preset" | "runs" | "prompts" | "noise"
+        ) {
+            continue; // harness-level options, not config keys
+        }
+        cfg.set(k, v)?;
+    }
+    Ok(cfg)
+}
+
+/// Construct the (draft, target) pair for the configured backend.
+fn build_models(cfg: &Config) -> Result<(Box<dyn LogitModel>, Box<dyn LogitModel>), String> {
+    match cfg.backend {
+        ModelBackend::Sim => {
+            let spec = SimSpec::for_dataset(&cfg.dataset, 1.0, cfg.engine.seed ^ 0xDA7A);
+            let (d, t) = SimModel::pair(spec);
+            Ok((Box::new(d), Box::new(t)))
+        }
+        ModelBackend::Hlo | ModelBackend::HloPallas => {
+            let pallas = cfg.backend == ModelBackend::HloPallas;
+            let arts = Artifacts::load(&cfg.artifacts_dir).map_err(|e| e.to_string())?;
+            let mut rt = PjrtRuntime::cpu().map_err(|e| e.to_string())?;
+            let seq = arts.seq_small();
+            let target = HloModel::load(&mut rt, &arts, Role::Target, seq, pallas)
+                .map_err(|e| e.to_string())?;
+            let draft = HloModel::load(&mut rt, &arts, Role::Draft, seq, false)
+                .map_err(|e| e.to_string())?;
+            Ok((Box::new(draft), Box::new(target)))
+        }
+    }
+}
+
+fn cmd_generate(cli: &Cli) -> Result<(), String> {
+    let cfg = config_from(cli)?;
+    let prompts = PromptSet::by_name(&cfg.dataset, 1, cfg.prompt_len, cfg.engine.seed + 100)
+        .ok_or("bad dataset")?;
+    let (draft, target) = build_models(&cfg)?;
+    let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime);
+
+    let t = std::time::Instant::now();
+    let stats = engine.generate(prompts.get(0));
+    let wall = t.elapsed().as_secs_f64();
+
+    println!(
+        "policy={} backend={} dataset={} temp={} budget={}",
+        cfg.engine.policy,
+        cfg.backend.name(),
+        cfg.dataset,
+        cfg.engine.target_temp,
+        cfg.engine.tree_budget
+    );
+    println!(
+        "generated {} tokens in {} steps ({:.2} tokens/step), wall {:.3}s",
+        stats.tokens.len(),
+        stats.steps.len(),
+        stats.mean_emitted_per_step(),
+        wall
+    );
+    if cfg.regime.is_some() {
+        println!(
+            "virtual latency/token ({} regime): {:.5}s",
+            cfg.regime.unwrap().name,
+            stats.virtual_latency_per_token()
+        );
+    }
+    println!("component breakdown:");
+    for (label, secs, frac) in stats.aggregate_times().breakdown() {
+        println!("  {label:<16} {secs:>9.4}s  {:.1}%", frac * 100.0);
+    }
+    let shown: Vec<String> = stats.tokens.iter().take(32).map(|t| t.to_string()).collect();
+    println!("tokens[..32]: {}", shown.join(" "));
+    Ok(())
+}
+
+fn cmd_bench(cli: &Cli) -> Result<(), String> {
+    let experiment = cli.opt("experiment").ok_or("missing --experiment")?;
+    let opts = ExpOpts {
+        prompts: cli.opt_parse("prompts", 6usize)?,
+        max_new_tokens: cli.opt_parse("max_new_tokens", 128usize)?,
+        noise: cli.opt_parse("noise", 1.0f32)?,
+        seed: cli.opt_parse("seed", 1u64)?,
+        out: cli.opt("out").map(String::from),
+    };
+    for table in run_experiment(experiment, &opts)? {
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<(), String> {
+    let cfg = config_from(cli)?;
+    let factory: ModelFactory = {
+        let cfg = cfg.clone();
+        Arc::new(move || build_models(&cfg).expect("worker model construction"))
+    };
+    let coord = Coordinator::start(cfg.clone(), factory);
+    let server = Server::bind(&cfg.server.addr, coord).map_err(|e| e.to_string())?;
+    println!("dyspec serving on {} (backend={}, policy={}, workers={})",
+        server.local_addr().map_err(|e| e.to_string())?,
+        cfg.backend.name(),
+        cfg.engine.policy,
+        cfg.server.workers
+    );
+    server.run().map_err(|e| e.to_string())
+}
+
+fn cmd_client(cli: &Cli) -> Result<(), String> {
+    let cfg = config_from(cli)?;
+    let addr = cli.opt("addr").unwrap_or(&cfg.server.addr);
+    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+    if cli.has_flag("stats") {
+        println!("{}", client.stats()?.to_string());
+        return Ok(());
+    }
+    if cli.has_flag("shutdown") {
+        client.shutdown()?;
+        println!("server shut down");
+        return Ok(());
+    }
+    let prompts = PromptSet::by_name(&cfg.dataset, 1, cfg.prompt_len, cfg.engine.seed + 100)
+        .ok_or("bad dataset")?;
+    let reply = client.generate_detailed(
+        prompts.get(0),
+        cfg.engine.max_new_tokens,
+        cfg.engine.target_temp,
+    )?;
+    println!("{}", reply.to_string());
+    Ok(())
+}
+
+/// Verify artifacts + the PJRT wiring: load the target model and compare a
+/// pinned forward pass against golden.json from the python side.
+fn cmd_selfcheck(cli: &Cli) -> Result<(), String> {
+    let cfg = config_from(cli)?;
+    let arts = Artifacts::load(&cfg.artifacts_dir).map_err(|e| e.to_string())?;
+    let golden = arts.golden().map_err(|e| e.to_string())?;
+    let seq = golden
+        .get("seq_len")
+        .and_then(Json::as_usize)
+        .ok_or("golden.json missing seq_len")?;
+    let vocab = arts.vocab_size();
+    println!("artifacts: vocab={vocab} seq_small={} seq_large={}", arts.seq_small(), arts.seq_large());
+
+    let mut rt = PjrtRuntime::cpu().map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let tokens: Vec<i32> = (0..seq as i32).map(|i| (7 * i + 3) % vocab as i32).collect();
+    let positions: Vec<i32> = (0..seq as i32).collect();
+    let mask = dyspec::tree::mask::causal_f32(seq, seq);
+
+    for role in [Role::Target, Role::Draft] {
+        let model = rt
+            .load(&arts, GraphKey { role, seq_len: seq, pallas: false })
+            .map_err(|e| e.to_string())?;
+        let logits = model
+            .forward(&tokens, &positions, &mask)
+            .map_err(|e| e.to_string())?;
+        let last = &logits[(seq - 1) * vocab..seq * vocab];
+        let want = golden
+            .at(&[role.name(), "last_row_first8"])
+            .and_then(Json::as_arr)
+            .ok_or("golden missing role data")?;
+        let mut max_err = 0f64;
+        for (i, w) in want.iter().enumerate() {
+            let w = w.as_f64().unwrap_or(f64::NAN);
+            max_err = max_err.max((last[i] as f64 - w).abs());
+        }
+        let argmax = dyspec::util::math::argmax(last);
+        let want_argmax = golden
+            .at(&[role.name(), "last_row_argmax"])
+            .and_then(Json::as_usize)
+            .ok_or("golden missing argmax")?;
+        let ok = max_err < 2e-3 && argmax == want_argmax;
+        println!(
+            "{}: max|Δlogit| = {max_err:.2e}, argmax {} (want {}) -> {}",
+            role.name(),
+            argmax,
+            want_argmax,
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        if !ok {
+            return Err(format!("{} golden check failed", role.name()));
+        }
+    }
+    println!("selfcheck OK: python-jax and rust-PJRT agree");
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! `LogitModel` backed by the AOT-compiled JAX transformer (PJRT CPU).
+//!
+//! `next_logits` runs a causal forward padded to the artifact's fixed
+//! sequence length; `score_tree` runs the paper's parallel verification: one
+//! forward over prefix + speculated tokens with a tree attention mask,
+//! returning per-node logits in a single dispatch.
+
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+use super::{CallCounts, LogitModel};
+use crate::runtime::artifacts::{Artifacts, GraphKey, Role};
+use crate::runtime::CompiledModel;
+use crate::tree::{NodeId, TokenTree, TreeMask};
+
+pub struct HloModel {
+    model: Rc<CompiledModel>,
+    role: Role,
+    counts: CallCounts,
+    /// Reusable causal-mask buffer keyed by live length (the mask is the
+    /// only O(S^2) input; rebuilding it per call dominated the profile).
+    cached_causal: Option<(usize, Vec<f32>)>,
+}
+
+impl HloModel {
+    pub fn new(model: Rc<CompiledModel>, role: Role) -> Self {
+        Self {
+            model,
+            role,
+            counts: CallCounts::default(),
+            cached_causal: None,
+        }
+    }
+
+    /// Compile-and-wrap helper.
+    pub fn load(
+        runtime: &mut crate::runtime::PjrtRuntime,
+        arts: &Artifacts,
+        role: Role,
+        seq_len: usize,
+        pallas: bool,
+    ) -> Result<Self> {
+        let key = GraphKey {
+            role,
+            seq_len,
+            pallas,
+        };
+        let model = runtime.load(arts, key).context("loading model graph")?;
+        Ok(Self::new(model, role))
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.model.seq_len
+    }
+
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    fn causal_mask(&mut self, live: usize) -> &[f32] {
+        let s = self.model.seq_len;
+        let rebuild = match &self.cached_causal {
+            Some((l, _)) => *l != live,
+            None => true,
+        };
+        if rebuild {
+            self.cached_causal = Some((live, crate::tree::mask::causal_f32(live, s)));
+        }
+        &self.cached_causal.as_ref().unwrap().1
+    }
+}
+
+impl LogitModel for HloModel {
+    fn vocab(&self) -> usize {
+        self.model.vocab
+    }
+
+    fn next_logits(&mut self, ctx: &[u32]) -> Vec<f32> {
+        let s = self.model.seq_len;
+        let v = self.model.vocab;
+        assert!(
+            !ctx.is_empty() && ctx.len() <= s,
+            "context length {} out of range (seq {s})",
+            ctx.len()
+        );
+        let mut tokens = vec![0i32; s];
+        for (i, &t) in ctx.iter().enumerate() {
+            tokens[i] = t as i32;
+        }
+        let positions: Vec<i32> = (0..s as i32).collect();
+        let model = self.model.clone();
+        let mask = self.causal_mask(ctx.len());
+        let logits = model
+            .forward(&tokens, &positions, mask)
+            .expect("PJRT forward failed");
+        self.counts.add_dispatch(1);
+        let row = ctx.len() - 1;
+        logits[row * v..(row + 1) * v].to_vec()
+    }
+
+    fn score_tree(
+        &mut self,
+        prefix: &[u32],
+        tree: &TokenTree,
+        order: &[NodeId],
+    ) -> Vec<Vec<f32>> {
+        let s = self.model.seq_len;
+        let v = self.model.vocab;
+        let p = prefix.len();
+        assert!(p + order.len() <= s, "prefix+tree exceed seq {s}");
+        assert!(!prefix.is_empty());
+
+        let mut tokens = vec![0i32; s];
+        let mut positions = vec![0i32; s];
+        for (i, &t) in prefix.iter().enumerate() {
+            tokens[i] = t as i32;
+            positions[i] = i as i32;
+        }
+        for (i, &id) in order.iter().enumerate() {
+            tokens[p + i] = tree.node(id).token as i32;
+            // node at depth d sits at context position p + d - 1
+            positions[p + i] = (p + tree.node(id).depth - 1) as i32;
+        }
+        for (i, pos) in positions.iter_mut().enumerate().skip(p + order.len()) {
+            *pos = (i % s) as i32;
+        }
+        let mask = TreeMask::from_tree(tree, order).to_full_f32(p, s);
+        let logits = self
+            .model
+            .forward(&tokens, &positions, &mask)
+            .expect("PJRT tree forward failed");
+        self.counts.add_dispatch((order.len() + 1) as u64);
+
+        let mut rows = Vec::with_capacity(order.len() + 1);
+        let root_row = p - 1;
+        rows.push(logits[root_row * v..(root_row + 1) * v].to_vec());
+        for i in 0..order.len() {
+            let r = p + i;
+            rows.push(logits[r * v..(r + 1) * v].to_vec());
+        }
+        rows
+    }
+
+    fn call_counts(&self) -> CallCounts {
+        self.counts
+    }
+
+    fn reset_call_counts(&mut self) {
+        self.counts = CallCounts::default();
+    }
+}

@@ -1,0 +1,128 @@
+//! Model abstraction: everything the algorithms need from a language model
+//! is (a) next-token logits for a context and (b) logits at every node of a
+//! speculated tree. Three backends implement it:
+//!   - `sim`: correlated draft/target distribution simulator (pure rust,
+//!     no PJRT) — drives the algorithm-level benches and property tests.
+//!   - `hlo`: the AOT-compiled JAX transformer via PJRT CPU.
+//!   - `latency`: not a model — a cost ledger (`CallCounter`) that turns
+//!     call counts into the paper's hardware-regime virtual latencies.
+
+pub mod hlo;
+pub mod sim;
+
+use crate::tree::{NodeId, TokenTree};
+
+/// Per-model call accounting, consumed by the latency regimes: the paper's
+/// cost model (§4.3) is `N·T_d + T_t` per step for greedy construction and
+/// `D·T_d + T_t` for layered construction, so we track both call units.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CallCounts {
+    /// Model invocations that would each be one accelerator dispatch
+    /// (a single-position draft step, or one batched layer/tree scoring).
+    pub dispatches: u64,
+    /// Total positions scored across all dispatches.
+    pub positions: u64,
+}
+
+impl CallCounts {
+    pub fn add_dispatch(&mut self, positions: u64) {
+        self.dispatches += 1;
+        self.positions += positions;
+    }
+}
+
+/// A causal LM scoring interface.
+///
+/// Deliberately NOT `Send`: the HLO backend holds PJRT raw pointers. The
+/// coordinator constructs models inside each worker thread instead of
+/// sharing them across threads.
+pub trait LogitModel {
+    fn vocab(&self) -> usize;
+
+    /// Logits over the vocab for the token following `ctx`.
+    fn next_logits(&mut self, ctx: &[u32]) -> Vec<f32>;
+
+    /// Logits at the tree root (after `prefix`) and at every node of
+    /// `order`, in one verification pass. Row 0 corresponds to the root
+    /// (distribution over first-layer speculations); row i+1 to order[i].
+    ///
+    /// Default implementation walks root-paths with `next_logits` — exact
+    /// for any causal backend; the HLO backend overrides it with a single
+    /// tree-masked forward (the paper's parallel verification).
+    fn score_tree(
+        &mut self,
+        prefix: &[u32],
+        tree: &TokenTree,
+        order: &[NodeId],
+    ) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(order.len() + 1);
+        out.push(self.next_logits(prefix));
+        let mut ctx = prefix.to_vec();
+        for &id in order {
+            ctx.truncate(prefix.len());
+            ctx.extend(tree.path_tokens(id));
+            out.push(self.next_logits(&ctx));
+        }
+        out
+    }
+
+    /// Dispatch/position counters since construction (see `CallCounts`).
+    fn call_counts(&self) -> CallCounts {
+        CallCounts::default()
+    }
+
+    fn reset_call_counts(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::ROOT;
+
+    /// Toy deterministic model: logits favor (last ctx token + 1) mod V.
+    struct Succ {
+        vocab: usize,
+        counts: CallCounts,
+    }
+
+    impl LogitModel for Succ {
+        fn vocab(&self) -> usize {
+            self.vocab
+        }
+
+        fn next_logits(&mut self, ctx: &[u32]) -> Vec<f32> {
+            self.counts.add_dispatch(1);
+            let mut l = vec![0.0; self.vocab];
+            let next = (ctx.last().copied().unwrap_or(0) as usize + 1) % self.vocab;
+            l[next] = 10.0;
+            l
+        }
+
+        fn call_counts(&self) -> CallCounts {
+            self.counts
+        }
+    }
+
+    #[test]
+    fn default_score_tree_walks_paths() {
+        let mut m = Succ {
+            vocab: 8,
+            counts: CallCounts::default(),
+        };
+        let mut t = TokenTree::new(2, vec![]);
+        let a = t.add_child(ROOT, 3, 0.9);
+        let b = t.add_child(a, 4, 0.8);
+        let c = t.add_child(ROOT, 5, 0.1);
+        let rows = m.score_tree(&[1, 2], &t, &[a, b, c]);
+        assert_eq!(rows.len(), 4);
+        // root row: successor of 2 is 3
+        assert_eq!(crate::util::math::argmax(&rows[0]), 3);
+        // row for a (ctx ...2,3): successor 4
+        assert_eq!(crate::util::math::argmax(&rows[1]), 4);
+        // row for b (ctx ...3,4): successor 5
+        assert_eq!(crate::util::math::argmax(&rows[2]), 5);
+        // row for c (ctx ...2,5): successor 6
+        assert_eq!(crate::util::math::argmax(&rows[3]), 6);
+        assert_eq!(m.call_counts().dispatches, 4);
+    }
+}

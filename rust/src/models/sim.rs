@@ -1,0 +1,292 @@
+//! Correlated draft/target simulator.
+//!
+//! For algorithm-level experiments we need a (draft, target) model pair with
+//! a *dialable* KL divergence (paper Eq. 1) and dataset-like entropy — but
+//! no accelerator in the loop. `SimSpec` derives, for any context, shared
+//! base logits from a context hash (clamped log-normal sharpness), a draft
+//! view as base + small jitter, and a target view as base TILTED toward a
+//! pivot token drawn from the base distribution — the Hypothesis-1
+//! generative story (acceptance calibrated to draft probability, Fig 2).
+//! Both roles are deterministic in (spec, context), so draft and target
+//! views of the same context are consistent across calls — exactly the
+//! property the unbiasedness proofs rely on. DESIGN.md §8 has the full
+//! rationale; EXPERIMENTS.md §Calibration the fitted constants.
+
+use super::{CallCounts, LogitModel};
+use crate::util::rng::splitmix64;
+use crate::util::Rng;
+
+/// Shared spec for a draft/target pair.
+#[derive(Clone, Copy, Debug)]
+pub struct SimSpec {
+    pub vocab: usize,
+    /// Base logit scale — higher = sharper (lower-entropy) distributions.
+    pub concentration: f32,
+    /// Target-tilt scale — higher = larger KL(D||T) (never exactly 0:
+    /// the draft always keeps its own small jitter).
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl SimSpec {
+    pub fn new(vocab: usize, concentration: f32, noise: f32, seed: u64) -> Self {
+        Self {
+            vocab,
+            concentration,
+            noise,
+            seed,
+        }
+    }
+
+    /// Profile-calibrated spec. Concentration models DRAFT/TARGET AGREEMENT
+    /// sharpness, calibrated so the per-dataset accepted-tokens ordering
+    /// matches the paper's tables (C4 > CNN > OWT for the JF68M pairing —
+    /// distillation transfers best on C4-like web text); corpus entropy
+    /// ordering lives separately in data::markov.
+    pub fn for_dataset(dataset: &str, noise: f32, seed: u64) -> Self {
+        // Calibrated (see EXPERIMENTS.md §Calibration) so that the JF68M->7B
+        // regime lands on the paper's accepted-tokens range at budget 64.
+        let concentration = match dataset {
+            "c4" => 4.5,
+            "cnn" => 3.9,
+            "owt" => 3.1,
+            _ => 3.9,
+        };
+        // Calibration override (used by the tuning sweep in EXPERIMENTS.md).
+        let concentration = std::env::var("DYSPEC_SIM_CONC")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .map(|scale: f32| concentration * scale)
+            .unwrap_or(concentration);
+        Self::new(512, concentration, noise, seed)
+    }
+
+    /// Order-sensitive context hash.
+    fn ctx_hash(&self, ctx: &[u32]) -> u64 {
+        let mut h = self.seed ^ 0x5851_F42D_4C95_7F2D;
+        for &t in ctx {
+            let mut s = h ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            h = splitmix64(&mut s);
+        }
+        h
+    }
+
+    /// Shared base logits — the draft model's belief about this context.
+    fn base_logits(&self, h: u64) -> (Vec<f32>, f32) {
+        // Clamped log-normal sharpness: real LLM next-token distributions at
+        // draft temperature 0.6 are never uniform-over-vocab flat (top-prob
+        // stays ≳0.2) — unbounded flat tails produce degenerate star trees.
+        let mult = {
+            let mut rng = Rng::new(h ^ 0x5AA5_5AA5_5AA5_5AA5);
+            (1.1 * rng.next_gaussian() as f32).exp().clamp(0.5, 6.0)
+        };
+        let sharp = self.concentration * mult;
+        let mut rng = Rng::new(h);
+        // PERF (§Perf bench-driver): paired Box-Muller — one (ln, sqrt,
+        // sincos) per TWO logits instead of per one; ~1.8x faster dist
+        // generation, identical marginal distribution.
+        let mut logits = vec![0f32; self.vocab];
+        let mut i = 0;
+        while i < self.vocab {
+            let u1 = rng.next_f64().max(1e-300);
+            let u2 = rng.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            logits[i] = sharp * (r * theta.cos()) as f32;
+            if i + 1 < self.vocab {
+                logits[i + 1] = sharp * (r * theta.sin()) as f32;
+            }
+            i += 2;
+        }
+        (logits, mult)
+    }
+
+    /// Target logits: the base belief TILTED toward a pivot token that the
+    /// target "actually wants", with the pivot drawn from the base
+    /// distribution itself. This is the Hypothesis-1 generative story: the
+    /// draft's probability of guessing the target's choice scales with its
+    /// own confidence, so acceptance is calibrated to draft probability
+    /// (paper Fig 2). The tilt is STRONGER on flat (hard) contexts — where
+    /// real drafts diverge most — via the 1/sqrt(sharpness) factor; `noise`
+    /// dials the overall KL(D‖T) (paper Eq. 1).
+    pub fn target_logits(&self, ctx: &[u32]) -> Vec<f32> {
+        let h = self.ctx_hash(ctx);
+        let (mut logits, sharp_mult) = self.base_logits(h);
+        // Deterministic pivot ~ softmax(base / 0.6).
+        let dist = crate::util::math::softmax_temp(&logits, 0.6);
+        let mut rng = Rng::new(h ^ 0x7A26_E7A2_6E7A_26E7);
+        let u = rng.next_f64() as f32;
+        let mut acc = 0.0;
+        let mut pivot = 0;
+        for (i, &p) in dist.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                pivot = i;
+                break;
+            }
+        }
+        let beta = (2.4 * self.noise / sharp_mult.sqrt()).clamp(0.3, 8.0);
+        logits[pivot] += beta;
+        logits
+    }
+
+    /// Draft logits: the base belief plus a small independent perturbation
+    /// (the draft neither knows the pivot nor matches the target exactly).
+    pub fn draft_logits(&self, ctx: &[u32]) -> Vec<f32> {
+        let h = self.ctx_hash(ctx);
+        let (mut logits, _) = self.base_logits(h);
+        let mut rng = Rng::new(h ^ 0xD5AF_7CAF_0000_0001);
+        for l in &mut logits {
+            *l += 0.25 * rng.next_gaussian() as f32;
+        }
+        logits
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Target,
+    Draft,
+}
+
+/// One role's view of a `SimSpec` pair.
+pub struct SimModel {
+    spec: SimSpec,
+    role: Role,
+    counts: CallCounts,
+}
+
+impl SimModel {
+    pub fn new(spec: SimSpec, role: Role) -> Self {
+        Self {
+            spec,
+            role,
+            counts: CallCounts::default(),
+        }
+    }
+
+    /// Convenience: build the (draft, target) pair.
+    pub fn pair(spec: SimSpec) -> (SimModel, SimModel) {
+        (
+            SimModel::new(spec, Role::Draft),
+            SimModel::new(spec, Role::Target),
+        )
+    }
+}
+
+impl LogitModel for SimModel {
+    fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+
+    fn next_logits(&mut self, ctx: &[u32]) -> Vec<f32> {
+        self.counts.add_dispatch(1);
+        match self.role {
+            Role::Target => self.spec.target_logits(ctx),
+            Role::Draft => self.spec.draft_logits(ctx),
+        }
+    }
+
+    fn call_counts(&self) -> CallCounts {
+        self.counts
+    }
+
+    fn reset_call_counts(&mut self) {
+        self.counts = CallCounts::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::{kl_divergence, softmax_temp, tv_distance};
+
+    #[test]
+    fn deterministic_per_context() {
+        let spec = SimSpec::new(64, 2.0, 0.5, 1);
+        let a = spec.target_logits(&[1, 2, 3]);
+        let b = spec.target_logits(&[1, 2, 3]);
+        assert_eq!(a, b);
+        let c = spec.target_logits(&[1, 2, 4]);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn order_sensitive_hash() {
+        let spec = SimSpec::new(64, 2.0, 0.5, 1);
+        assert_ne!(spec.target_logits(&[1, 2]), spec.target_logits(&[2, 1]));
+    }
+
+    #[test]
+    fn low_noise_means_low_kl() {
+        // noise dials the target tilt; at the minimum tilt the pair is
+        // close in KL but never identical (the draft keeps its own jitter).
+        let ctxs: Vec<Vec<u32>> = (0..40).map(|i| vec![i, i + 2]).collect();
+        let mean_kl = |noise: f32| {
+            let spec = SimSpec::new(128, 2.0, noise, 3);
+            ctxs.iter()
+                .map(|c| {
+                    let d = softmax_temp(&spec.draft_logits(c), 1.0);
+                    let t = softmax_temp(&spec.target_logits(c), 1.0);
+                    kl_divergence(&d, &t)
+                })
+                .sum::<f32>()
+                / ctxs.len() as f32
+        };
+        assert!(mean_kl(0.1) < mean_kl(2.0));
+        assert!(mean_kl(0.1) < 0.5, "low-noise KL too large");
+    }
+
+    #[test]
+    fn noise_dial_controls_kl() {
+        let ctxs: Vec<Vec<u32>> = (0..50).map(|i| vec![i, i + 1, i * 3]).collect();
+        let mut kls = Vec::new();
+        for noise in [0.25f32, 1.0, 3.0] {
+            let spec = SimSpec::new(128, 2.0, noise, 7);
+            let mean_kl: f32 = ctxs
+                .iter()
+                .map(|c| {
+                    let d = softmax_temp(&spec.draft_logits(c), 1.0);
+                    let t = softmax_temp(&spec.target_logits(c), 1.0);
+                    kl_divergence(&d, &t)
+                })
+                .sum::<f32>()
+                / ctxs.len() as f32;
+            kls.push(mean_kl);
+        }
+        assert!(kls[0] < kls[1] && kls[1] < kls[2], "{kls:?}");
+    }
+
+    #[test]
+    fn concentration_controls_entropy() {
+        use crate::util::math::entropy;
+        let ctx = vec![9, 8, 7];
+        let sharp = SimSpec::new(128, 3.0, 0.0, 1);
+        let flat = SimSpec::new(128, 0.5, 0.0, 1);
+        let h_sharp = entropy(&softmax_temp(&sharp.target_logits(&ctx), 1.0));
+        let h_flat = entropy(&softmax_temp(&flat.target_logits(&ctx), 1.0));
+        assert!(h_sharp < h_flat);
+    }
+
+    #[test]
+    fn pair_views_are_consistent() {
+        let spec = SimSpec::new(64, 2.0, 0.5, 11);
+        let (mut draft, mut target) = SimModel::pair(spec);
+        let ctx = vec![1, 2, 3];
+        let d1 = draft.next_logits(&ctx);
+        let t1 = target.next_logits(&ctx);
+        let d = softmax_temp(&d1, 1.0);
+        let t = softmax_temp(&t1, 1.0);
+        // correlated but not identical
+        assert!(tv_distance(&d, &t) > 0.0);
+        assert!(kl_divergence(&d, &t) < 3.0);
+        assert_eq!(draft.call_counts().dispatches, 1);
+    }
+
+    #[test]
+    fn dataset_entropy_ordering() {
+        let cnn = SimSpec::for_dataset("cnn", 0.5, 1);
+        let owt = SimSpec::for_dataset("owt", 0.5, 1);
+        assert!(cnn.concentration > owt.concentration);
+    }
+}

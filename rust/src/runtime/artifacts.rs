@@ -1,0 +1,259 @@
+//! Artifact registry: parses `artifacts/meta.json` (written by
+//! `python/compile/aot.py`), exposes graph/weight paths, loads weight blobs,
+//! and verifies the build is complete before the runtime touches PJRT.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// Which compiled graph to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GraphKey {
+    pub role: Role,
+    pub seq_len: usize,
+    pub pallas: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    Target,
+    Draft,
+}
+
+impl Role {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Target => "target",
+            Role::Draft => "draft",
+        }
+    }
+}
+
+/// One weight-table entry (mirrors meta.json "params").
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Loaded artifact metadata.
+pub struct Artifacts {
+    dir: PathBuf,
+    meta: Json,
+}
+
+impl Artifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                meta_path.display()
+            )
+        })?;
+        let meta = parse(&text).map_err(|e| anyhow::anyhow!("parsing meta.json: {e}"))?;
+        Ok(Self { dir, meta })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.meta
+            .get("vocab_size")
+            .and_then(Json::as_usize)
+            .unwrap_or(512)
+    }
+
+    pub fn max_positions(&self) -> usize {
+        self.meta
+            .get("max_positions")
+            .and_then(Json::as_usize)
+            .unwrap_or(1024)
+    }
+
+    pub fn seq_small(&self) -> usize {
+        self.meta
+            .get("seq_small")
+            .and_then(Json::as_usize)
+            .unwrap_or(320)
+    }
+
+    pub fn seq_large(&self) -> usize {
+        self.meta
+            .get("seq_large")
+            .and_then(Json::as_usize)
+            .unwrap_or(1024)
+    }
+
+    /// Resolve a graph file, verifying it is in the meta index.
+    pub fn graph_path(&self, key: GraphKey) -> Result<PathBuf> {
+        let want_impl = if key.pallas { "pallas" } else { "ref" };
+        let graphs = self
+            .meta
+            .get("graphs")
+            .and_then(Json::as_arr)
+            .context("meta.json missing graphs")?;
+        for g in graphs {
+            let role = g.get("role").and_then(Json::as_str).unwrap_or("");
+            let seq = g.get("seq_len").and_then(Json::as_usize).unwrap_or(0);
+            let impl_ = g.get("attn_impl").and_then(Json::as_str).unwrap_or("");
+            if role == key.role.name() && seq == key.seq_len && impl_ == want_impl {
+                let file = g
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("graph entry missing file")?;
+                let path = self.dir.join(file);
+                if !path.exists() {
+                    bail!("graph file missing: {}", path.display());
+                }
+                return Ok(path);
+            }
+        }
+        bail!(
+            "no graph for role={} seq={} impl={want_impl} in meta.json",
+            key.role.name(),
+            key.seq_len
+        )
+    }
+
+    /// Weight table for a role, in feed order.
+    pub fn param_table(&self, role: Role) -> Result<Vec<ParamEntry>> {
+        let list = self
+            .meta
+            .at(&["models", role.name(), "params"])
+            .and_then(Json::as_arr)
+            .context("meta.json missing param table")?;
+        list.iter()
+            .map(|e| {
+                Ok(ParamEntry {
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("param name")?
+                        .to_string(),
+                    shape: e
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: e.get("offset").and_then(Json::as_usize).context("offset")?,
+                    size: e.get("size").and_then(Json::as_usize).context("size")?,
+                })
+            })
+            .collect()
+    }
+
+    /// Load and validate a role's weight blob (f32 little-endian).
+    pub fn load_params(&self, role: Role) -> Result<Vec<f32>> {
+        let path = self.dir.join(format!("{}_params.bin", role.name()));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expect = self
+            .meta
+            .at(&["models", role.name(), "total_f32"])
+            .and_then(Json::as_usize)
+            .context("total_f32")?;
+        if bytes.len() != expect * 4 {
+            bail!(
+                "{}: expected {} f32 ({} bytes), found {} bytes",
+                path.display(),
+                expect,
+                expect * 4,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Golden logits (artifacts/golden.json) for the wiring smoke test.
+    pub fn golden(&self) -> Result<Json> {
+        let path = self.dir.join("golden.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        parse(&text).map_err(|e| anyhow::anyhow!("parsing golden.json: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_or_skip() -> Option<Artifacts> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Artifacts::load(dir).ok()
+    }
+
+    #[test]
+    fn meta_parses_when_built() {
+        let Some(arts) = artifacts_or_skip() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(arts.vocab_size(), 512);
+        assert!(arts.seq_small() >= 64);
+        assert!(arts.seq_large() > arts.seq_small());
+        let table = arts.param_table(Role::Target).unwrap();
+        assert_eq!(table[0].name, "tok_emb");
+        // offsets contiguous
+        let mut offset = 0;
+        for e in &table {
+            assert_eq!(e.offset, offset);
+            assert_eq!(e.size, e.shape.iter().product::<usize>());
+            offset += e.size;
+        }
+    }
+
+    #[test]
+    fn graph_paths_resolve_when_built() {
+        let Some(arts) = artifacts_or_skip() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for role in [Role::Target, Role::Draft] {
+            let key = GraphKey {
+                role,
+                seq_len: arts.seq_small(),
+                pallas: false,
+            };
+            assert!(arts.graph_path(key).unwrap().exists());
+        }
+        // pallas variant exists for target at seq_small
+        assert!(arts
+            .graph_path(GraphKey {
+                role: Role::Target,
+                seq_len: arts.seq_small(),
+                pallas: true
+            })
+            .is_ok());
+        // and not for bogus sizes
+        assert!(arts
+            .graph_path(GraphKey {
+                role: Role::Target,
+                seq_len: 12345,
+                pallas: false
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn params_load_when_built() {
+        let Some(arts) = artifacts_or_skip() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let flat = arts.load_params(Role::Draft).unwrap();
+        assert!(!flat.is_empty());
+        assert!(flat.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,181 @@
+//! Sampling primitives for speculative decoding: temperature application,
+//! categorical draws, and the zero-and-renormalize scheme used when drawing
+//! multiple sibling tokens from one distribution (Algorithm 1 lines 9-11).
+
+use crate::util::math::softmax_temp;
+use crate::util::Rng;
+
+/// Convert logits to a sampling distribution at `temp` (0 = greedy one-hot).
+pub fn dist_from_logits(logits: &[f32], temp: f32) -> Vec<f32> {
+    softmax_temp(logits, temp)
+}
+
+/// Draw one index from a normalized distribution via inverse CDF.
+/// Falls back to the last positive entry under floating-point slack.
+pub fn sample(dist: &[f32], rng: &mut Rng) -> usize {
+    debug_assert!(!dist.is_empty());
+    let u = rng.next_f64() as f32;
+    let mut acc = 0.0f32;
+    let mut last_pos = 0;
+    for (i, &p) in dist.iter().enumerate() {
+        if p > 0.0 {
+            last_pos = i;
+            acc += p;
+            if u < acc {
+                return i;
+            }
+        }
+    }
+    last_pos
+}
+
+/// A distribution we progressively zero-and-renormalize as sibling samples
+/// are drawn (the "-/-" residual of Figure 3).
+///
+/// PERF (§Perf L3.2): the residual is kept UN-normalized with a running
+/// `mass`; renormalization is implicit in the scaled inverse-CDF draw and
+/// the returned probability `dist[tok]/mass`. This removes two full
+/// vocab-length passes (zero + renormalize) per sibling draw versus the
+/// textbook Algorithm-1 lines 9-11, with identical semantics (unit tests
+/// pin the equivalence).
+#[derive(Clone, Debug)]
+pub struct SiblingSampler {
+    dist: Vec<f32>,
+    /// Remaining (un-normalized) mass of `dist`.
+    mass: f32,
+    exhausted: bool,
+}
+
+impl SiblingSampler {
+    pub fn new(dist: Vec<f32>) -> Self {
+        let mass = dist.iter().sum::<f32>();
+        Self {
+            exhausted: mass <= 0.0,
+            dist,
+            mass,
+        }
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.exhausted
+    }
+
+    /// Probability the CURRENT renormalized residual assigns to `tok`.
+    pub fn current_prob(&self, tok: usize) -> f32 {
+        if self.mass <= 0.0 {
+            0.0
+        } else {
+            self.dist[tok] / self.mass
+        }
+    }
+
+    /// Draw the next sibling: sample from the current residual, then zero
+    /// it out. Returns (token, prob-under-current-residual) — the `R[y]` of
+    /// Algorithm 1 line 7 — or None when the draft mass is exhausted.
+    pub fn draw(&mut self, rng: &mut Rng) -> Option<(usize, f32)> {
+        if self.exhausted {
+            return None;
+        }
+        // Scaled inverse-CDF over the un-normalized residual.
+        let u = rng.next_f64() as f32 * self.mass;
+        let mut acc = 0.0f32;
+        let mut tok = usize::MAX;
+        let mut last_pos = usize::MAX;
+        for (i, &p) in self.dist.iter().enumerate() {
+            if p > 0.0 {
+                last_pos = i;
+                acc += p;
+                if u < acc {
+                    tok = i;
+                    break;
+                }
+            }
+        }
+        if tok == usize::MAX {
+            tok = last_pos; // float slack fallback
+        }
+        if tok == usize::MAX {
+            self.exhausted = true;
+            return None;
+        }
+        let p_raw = self.dist[tok];
+        let p = (p_raw / self.mass).min(1.0); // float slack on the last token
+        self.dist[tok] = 0.0;
+        self.mass -= p_raw;
+        if self.mass <= 1e-12 {
+            self.exhausted = true;
+        }
+        Some((tok, p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_respects_distribution() {
+        let mut rng = Rng::new(1);
+        let dist = vec![0.1, 0.6, 0.3];
+        let n = 30_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[sample(&dist, &mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let freq = c as f32 / n as f32;
+            assert!((freq - dist[i]).abs() < 0.02, "i={i} freq={freq}");
+        }
+    }
+
+    #[test]
+    fn sample_onehot_is_deterministic() {
+        let mut rng = Rng::new(2);
+        let dist = vec![0.0, 0.0, 1.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(sample(&dist, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn sibling_sampler_never_repeats() {
+        let mut rng = Rng::new(3);
+        let dist = vec![0.4, 0.3, 0.2, 0.1];
+        let mut s = SiblingSampler::new(dist);
+        let mut seen = Vec::new();
+        while let Some((tok, p)) = s.draw(&mut rng) {
+            assert!(!seen.contains(&tok), "repeated {tok}");
+            assert!(p > 0.0 && p <= 1.0);
+            seen.push(tok);
+        }
+        assert_eq!(seen.len(), 4);
+        assert!(s.exhausted());
+    }
+
+    #[test]
+    fn sibling_sampler_residual_probs_renormalize() {
+        // After drawing the 0.5 token, the other entry must have prob 1.
+        let mut rng = Rng::new(4);
+        let mut s = SiblingSampler::new(vec![0.5, 0.5]);
+        let (first, p1) = s.draw(&mut rng).unwrap();
+        assert!((p1 - 0.5).abs() < 1e-6);
+        let (second, p2) = s.draw(&mut rng).unwrap();
+        assert_ne!(first, second);
+        assert!((p2 - 1.0).abs() < 1e-6);
+        assert!(s.draw(&mut rng).is_none());
+    }
+
+    #[test]
+    fn onehot_exhausts_after_one_draw() {
+        let mut rng = Rng::new(5);
+        let mut s = SiblingSampler::new(vec![0.0, 1.0, 0.0]);
+        assert_eq!(s.draw(&mut rng).unwrap().0, 1);
+        assert!(s.draw(&mut rng).is_none());
+    }
+
+    #[test]
+    fn dist_from_logits_temp0() {
+        let d = dist_from_logits(&[1.0, 5.0, 2.0], 0.0);
+        assert_eq!(d, vec![0.0, 1.0, 0.0]);
+    }
+}

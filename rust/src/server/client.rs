@@ -1,0 +1,101 @@
+//! Blocking client for the line-JSON protocol — used by the examples, the
+//! load-test driver and the `dyspec client` subcommand.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::util::json::{parse, Json};
+
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self {
+            writer: stream,
+            reader,
+        })
+    }
+
+    /// Send one raw line, read one JSON reply.
+    pub fn send_raw(&mut self, line: &str) -> Result<Json, String> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| e.to_string())?;
+        let mut reply = String::new();
+        self.reader
+            .read_line(&mut reply)
+            .map_err(|e| e.to_string())?;
+        parse(reply.trim()).map_err(|e| format!("bad reply: {e}"))
+    }
+
+    fn send(&mut self, msg: Json) -> Result<Json, String> {
+        let reply = self.send_raw(&msg.to_string())?;
+        if let Some(err) = reply.get("error").and_then(Json::as_str) {
+            return Err(err.to_string());
+        }
+        Ok(reply)
+    }
+
+    /// Generate tokens for a prompt.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new_tokens: usize,
+        temperature: f32,
+    ) -> Result<Vec<u32>, String> {
+        let msg = Json::obj(vec![
+            (
+                "prompt",
+                Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("max_new_tokens", Json::Num(max_new_tokens as f64)),
+            ("temperature", Json::Num(temperature as f64)),
+        ]);
+        let reply = self.send(msg)?;
+        reply
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .ok_or("reply missing tokens")?
+            .iter()
+            .map(|t| {
+                t.as_usize()
+                    .map(|v| v as u32)
+                    .ok_or_else(|| "bad token".to_string())
+            })
+            .collect()
+    }
+
+    /// Full generation reply (includes timing fields).
+    pub fn generate_detailed(
+        &mut self,
+        prompt: &[u32],
+        max_new_tokens: usize,
+        temperature: f32,
+    ) -> Result<Json, String> {
+        let msg = Json::obj(vec![
+            (
+                "prompt",
+                Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("max_new_tokens", Json::Num(max_new_tokens as f64)),
+            ("temperature", Json::Num(temperature as f64)),
+        ]);
+        self.send(msg)
+    }
+
+    pub fn stats(&mut self) -> Result<Json, String> {
+        self.send(Json::obj(vec![("cmd", Json::Str("stats".into()))]))
+    }
+
+    pub fn shutdown(&mut self) -> Result<(), String> {
+        self.send(Json::obj(vec![("cmd", Json::Str("shutdown".into()))]))?;
+        Ok(())
+    }
+}

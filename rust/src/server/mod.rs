@@ -1,0 +1,172 @@
+//! TCP serving frontend + blocking client.
+//!
+//! Line-delimited JSON protocol (one request / one response per line):
+//!
+//!   -> {"prompt":[1,2,3],"max_new_tokens":128,"temperature":0.6}
+//!   <- {"id":1,"tokens":[...],"steps":12,"emitted_per_step":4.2,
+//!       "queue_secs":0.001,"gen_secs":0.8}
+//!   -> {"cmd":"stats"}
+//!   <- {"admitted":...,"completed":...,...}
+//!   -> {"cmd":"shutdown"}        (stops the accept loop)
+//!
+//! Errors come back as {"error":"..."} — including "queue full"
+//! backpressure rejections.
+
+pub mod client;
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::Coordinator;
+use crate::{log_info, log_warn};
+
+pub use client::Client;
+pub use protocol::{ClientMessage, ServerReply};
+
+/// Serve `coordinator` on `addr` until a shutdown command arrives.
+/// Returns the bound local address once listening (port 0 supported).
+pub struct Server {
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, coordinator: Coordinator) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Self {
+            listener,
+            coordinator: Arc::new(coordinator),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept loop: one thread per connection (connections are few and
+    /// long-lived in this workload; the worker pool bounds real concurrency).
+    pub fn run(&self) -> std::io::Result<()> {
+        log_info!("serving on {}", self.local_addr()?);
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let coord = self.coordinator.clone();
+                    let stop = self.stop.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, &coord, &stop) {
+                            log_warn!("connection error: {e}");
+                        }
+                    });
+                }
+                Err(e) => log_warn!("accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match protocol::parse_client_message(&line) {
+            Ok(ClientMessage::Generate {
+                prompt,
+                max_new_tokens,
+                temperature,
+            }) => match coord.generate(prompt, max_new_tokens, temperature) {
+                Ok(resp) => protocol::response_json(&resp),
+                Err(e) => protocol::error_json(&e),
+            },
+            Ok(ClientMessage::Stats) => coord.metrics.snapshot(),
+            Ok(ClientMessage::Shutdown) => {
+                stop.store(true, Ordering::SeqCst);
+                // Poke the accept loop awake.
+                if let Ok(addr) = writer.local_addr() {
+                    let _ = TcpStream::connect(addr);
+                }
+                protocol::ok_json()
+            }
+            Err(e) => protocol::error_json(&e),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    log_info!("peer {peer} disconnected");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::ModelFactory;
+    use crate::models::sim::{SimModel, SimSpec};
+    use crate::models::LogitModel;
+
+    fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let factory: ModelFactory = Arc::new(|| {
+            let spec = SimSpec::new(64, 2.0, 0.5, 9);
+            let (d, t) = SimModel::pair(spec);
+            (
+                Box::new(d) as Box<dyn LogitModel>,
+                Box::new(t) as Box<dyn LogitModel>,
+            )
+        });
+        let mut cfg = Config::new();
+        cfg.server.workers = 2;
+        cfg.engine.tree_budget = 8;
+        let coord = Coordinator::start(cfg, factory);
+        let server = Server::bind("127.0.0.1:0", coord).unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let _ = server.run();
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn end_to_end_generate_stats_shutdown() {
+        let (addr, handle) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let tokens = client.generate(&[1, 2, 3], 12, 0.6).unwrap();
+        assert_eq!(tokens.len(), 12);
+
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("completed").unwrap().as_usize(), Some(1));
+
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_line_returns_error() {
+        let (addr, handle) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let reply = client.send_raw("this is not json").unwrap();
+        assert!(reply.get("error").is_some());
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+}

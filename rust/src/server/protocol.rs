@@ -1,0 +1,143 @@
+//! Wire protocol: JSON line encoding/decoding for client/server messages.
+
+use crate::coordinator::Response;
+use crate::util::json::{parse, Json};
+
+/// Messages a client may send.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientMessage {
+    Generate {
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        temperature: f32,
+    },
+    Stats,
+    Shutdown,
+}
+
+/// Replies (already JSON-shaped; kept as an alias for readability).
+pub type ServerReply = Json;
+
+pub fn parse_client_message(line: &str) -> Result<ClientMessage, String> {
+    let doc = parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if let Some(cmd) = doc.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => Ok(ClientMessage::Stats),
+            "shutdown" => Ok(ClientMessage::Shutdown),
+            other => Err(format!("unknown cmd: {other}")),
+        };
+    }
+    let prompt = doc
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or("missing prompt")?
+        .iter()
+        .map(|t| t.as_usize().map(|v| v as u32).ok_or("non-numeric token"))
+        .collect::<Result<Vec<u32>, _>>()?;
+    let max_new_tokens = doc
+        .get("max_new_tokens")
+        .and_then(Json::as_usize)
+        .unwrap_or(128);
+    let temperature = doc
+        .get("temperature")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.6) as f32;
+    Ok(ClientMessage::Generate {
+        prompt,
+        max_new_tokens,
+        temperature,
+    })
+}
+
+pub fn response_json(resp: &Response) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(resp.id as f64)),
+        ("worker", Json::Num(resp.worker as f64)),
+        (
+            "tokens",
+            Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ),
+        ("steps", Json::Num(resp.steps as f64)),
+        ("emitted_per_step", Json::Num(resp.emitted_per_step)),
+        ("queue_secs", Json::Num(resp.queue_secs)),
+        ("gen_secs", Json::Num(resp.gen_secs)),
+    ])
+}
+
+pub fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+pub fn ok_json() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate() {
+        let msg = parse_client_message(
+            r#"{"prompt":[1,2,3],"max_new_tokens":16,"temperature":0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            msg,
+            ClientMessage::Generate {
+                prompt: vec![1, 2, 3],
+                max_new_tokens: 16,
+                temperature: 0.5
+            }
+        );
+    }
+
+    #[test]
+    fn parse_defaults() {
+        let msg = parse_client_message(r#"{"prompt":[7]}"#).unwrap();
+        match msg {
+            ClientMessage::Generate {
+                max_new_tokens,
+                temperature,
+                ..
+            } => {
+                assert_eq!(max_new_tokens, 128);
+                assert!((temperature - 0.6).abs() < 1e-6);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn parse_commands_and_errors() {
+        assert_eq!(
+            parse_client_message(r#"{"cmd":"stats"}"#).unwrap(),
+            ClientMessage::Stats
+        );
+        assert_eq!(
+            parse_client_message(r#"{"cmd":"shutdown"}"#).unwrap(),
+            ClientMessage::Shutdown
+        );
+        assert!(parse_client_message(r#"{"cmd":"dance"}"#).is_err());
+        assert!(parse_client_message("{}").is_err());
+        assert!(parse_client_message("garbage").is_err());
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let resp = Response {
+            id: 3,
+            worker: 1,
+            tokens: vec![4, 5],
+            steps: 2,
+            emitted_per_step: 1.0,
+            queue_secs: 0.1,
+            gen_secs: 0.2,
+        };
+        let json = response_json(&resp);
+        let text = json.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(back.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,259 @@
+//! The speculated-token tree (Figure 3 of the paper), as a flat arena.
+//!
+//! Node 0 is always the ROOT and represents the last accepted context token:
+//! it carries the draft distribution conditioned on the full prefix, from
+//! which first-layer speculations are sampled. All other nodes are
+//! *speculated tokens*; `tree.size()` counts only those (the paper's "tree
+//! size"/guess budget counts speculated tokens, not the root).
+
+use crate::util::math::entropy;
+
+pub type NodeId = usize;
+pub const ROOT: NodeId = 0;
+
+/// One tree node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// The speculated token (undefined semantic for ROOT; stored as the last
+    /// prefix token for debugging).
+    pub token: u32,
+    pub parent: Option<NodeId>,
+    /// Children in SAMPLING order — verification walks them in this order
+    /// and the order determines the sibling-rejection products (paper §4.1).
+    pub children: Vec<NodeId>,
+    /// Depth below root (root = 0; first speculated layer = 1).
+    pub depth: usize,
+    /// Estimated acceptance value `v` at the time this node was created
+    /// (the heap key in Algorithm 1). 1.0 for ROOT.
+    pub est: f64,
+    /// Draft distribution D(· | path up to and including this node) — the
+    /// distribution this node's children are sampled from, stored
+    /// pre-sibling-zeroing (Algorithm 3 re-derives the residual walk).
+    /// Empty until the draft model has scored this node.
+    pub draft_dist: Vec<f32>,
+}
+
+/// Flat-arena token tree.
+#[derive(Clone, Debug)]
+pub struct TokenTree {
+    nodes: Vec<Node>,
+}
+
+impl TokenTree {
+    /// New tree whose root holds the draft distribution after the prefix.
+    pub fn new(last_prefix_token: u32, root_dist: Vec<f32>) -> Self {
+        Self {
+            nodes: vec![Node {
+                token: last_prefix_token,
+                parent: None,
+                children: Vec::new(),
+                depth: 0,
+                est: 1.0,
+                draft_dist: root_dist,
+            }],
+        }
+    }
+
+    /// Number of speculated tokens (excludes ROOT).
+    pub fn size(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    /// Append a speculated token under `parent`; returns its id.
+    pub fn add_child(&mut self, parent: NodeId, token: u32, est: f64) -> NodeId {
+        let id = self.nodes.len();
+        let depth = self.nodes[parent].depth + 1;
+        self.nodes.push(Node {
+            token,
+            parent: Some(parent),
+            children: Vec::new(),
+            depth,
+            est,
+            draft_dist: Vec::new(),
+        });
+        self.nodes[parent].children.push(id);
+        id
+    }
+
+    /// Maximum depth over speculated nodes (0 for an empty tree).
+    pub fn depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Ids of speculated nodes in insertion order (excludes ROOT).
+    pub fn speculated(&self) -> impl Iterator<Item = NodeId> + '_ {
+        1..self.nodes.len()
+    }
+
+    /// Path from ROOT (exclusive) down to `id` (inclusive).
+    pub fn path_from_root(&self, id: NodeId) -> Vec<NodeId> {
+        let mut path = Vec::new();
+        let mut cur = Some(id);
+        while let Some(n) = cur {
+            if n == ROOT {
+                break;
+            }
+            path.push(n);
+            cur = self.nodes[n].parent;
+        }
+        path.reverse();
+        path
+    }
+
+    /// Token sequence along the path root→id (speculated tokens only).
+    pub fn path_tokens(&self, id: NodeId) -> Vec<u32> {
+        self.path_from_root(id)
+            .into_iter()
+            .map(|n| self.nodes[n].token)
+            .collect()
+    }
+
+    /// True iff `anc` is a strict ancestor of `id` (ROOT is ancestor of all).
+    pub fn is_ancestor(&self, anc: NodeId, id: NodeId) -> bool {
+        let mut cur = self.nodes[id].parent;
+        while let Some(n) = cur {
+            if n == anc {
+                return true;
+            }
+            cur = self.nodes[n].parent;
+        }
+        false
+    }
+
+    /// Subtree sizes (node + descendants) for every node, O(n) since
+    /// children always have larger arena indices than parents.
+    pub fn subtree_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![1usize; self.nodes.len()];
+        for id in (1..self.nodes.len()).rev() {
+            let parent = self.nodes[id].parent.unwrap();
+            sizes[parent] += sizes[id];
+        }
+        sizes
+    }
+
+    /// Per-layer widths (index 0 = first speculated layer).
+    pub fn layer_widths(&self) -> Vec<usize> {
+        let mut widths = Vec::new();
+        for node in self.nodes.iter().skip(1) {
+            let layer = node.depth - 1;
+            if widths.len() <= layer {
+                widths.resize(layer + 1, 0);
+            }
+            widths[layer] += 1;
+        }
+        widths
+    }
+
+    /// Σ over speculated nodes of their estimated acceptance value — the
+    /// greedy objective of Algorithm 1 / Appendix D.
+    pub fn total_estimate(&self) -> f64 {
+        self.nodes.iter().skip(1).map(|n| n.est).sum()
+    }
+
+    /// Mean entropy of the stored draft distributions (diagnostics).
+    pub fn mean_dist_entropy(&self) -> f32 {
+        let dists: Vec<&Node> = self
+            .nodes
+            .iter()
+            .filter(|n| !n.draft_dist.is_empty())
+            .collect();
+        if dists.is_empty() {
+            return 0.0;
+        }
+        dists.iter().map(|n| entropy(&n.draft_dist)).sum::<f32>() / dists.len() as f32
+    }
+
+    /// Structural sanity — used by property tests and debug assertions.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (id, node) in self.nodes.iter().enumerate() {
+            match node.parent {
+                None if id != ROOT => return Err(format!("non-root {id} has no parent")),
+                Some(p) if p >= id => {
+                    return Err(format!("parent {p} not before child {id}"))
+                }
+                Some(p) if self.nodes[p].depth + 1 != node.depth => {
+                    return Err(format!("depth mismatch at {id}"))
+                }
+                _ => {}
+            }
+            for &c in &node.children {
+                if self.nodes[c].parent != Some(id) {
+                    return Err(format!("child link broken {id}->{c}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain3() -> TokenTree {
+        let mut t = TokenTree::new(9, vec![0.5, 0.5]);
+        let a = t.add_child(ROOT, 1, 0.9);
+        let b = t.add_child(a, 2, 0.8);
+        t.add_child(b, 3, 0.7);
+        t
+    }
+
+    #[test]
+    fn sizes_and_depth() {
+        let t = chain3();
+        assert_eq!(t.size(), 3);
+        assert_eq!(t.num_nodes(), 4);
+        assert_eq!(t.depth(), 3);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn path_and_ancestry() {
+        let mut t = TokenTree::new(0, vec![]);
+        let a = t.add_child(ROOT, 10, 0.9);
+        let b = t.add_child(a, 11, 0.5);
+        let c = t.add_child(ROOT, 12, 0.4);
+        assert_eq!(t.path_tokens(b), vec![10, 11]);
+        assert!(t.is_ancestor(ROOT, b));
+        assert!(t.is_ancestor(a, b));
+        assert!(!t.is_ancestor(c, b));
+        assert!(!t.is_ancestor(b, a));
+    }
+
+    #[test]
+    fn subtree_sizes_and_layers() {
+        let mut t = TokenTree::new(0, vec![]);
+        let a = t.add_child(ROOT, 1, 0.9); // layer 1
+        let _b = t.add_child(ROOT, 2, 0.5); // layer 1
+        t.add_child(a, 3, 0.4); // layer 2
+        let sizes = t.subtree_sizes();
+        assert_eq!(sizes[ROOT], 4);
+        assert_eq!(sizes[a], 2);
+        assert_eq!(t.layer_widths(), vec![2, 1]);
+    }
+
+    #[test]
+    fn total_estimate_sums_speculated_only() {
+        let t = chain3();
+        assert!((t.total_estimate() - 2.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn children_keep_sampling_order() {
+        let mut t = TokenTree::new(0, vec![]);
+        let ids: Vec<_> = (0..4).map(|i| t.add_child(ROOT, i as u32, 0.5)).collect();
+        assert_eq!(t.node(ROOT).children, ids);
+    }
+}

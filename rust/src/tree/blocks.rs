@@ -1,0 +1,138 @@
+//! Block-occupancy metric (paper Definition 1, Table 5, Fig 8/9): the number
+//! of (b x b) tiles of the attention mask containing at least one attendable
+//! position. This is what a block-sparse kernel must compute, so it is the
+//! hardware-independent efficiency measure the paper itself reports; the
+//! python L1 kernel computes the identical table (`block_occupancy`).
+
+use super::mask::TreeMask;
+
+/// Occupancy table: out[qb][kb] = true iff tile has any set bit. The mask is
+/// zero-padded up to a block multiple (same convention as the kernel).
+pub fn occupancy(mask: &TreeMask, block: usize) -> Vec<Vec<bool>> {
+    assert!(block > 0);
+    let n = mask.n;
+    let nb = n.div_ceil(block);
+    let mut occ = vec![vec![false; nb]; nb];
+    for i in 0..n {
+        for j in 0..n {
+            if mask.get(i, j) {
+                occ[i / block][j / block] = true;
+            }
+        }
+    }
+    occ
+}
+
+/// Number of occupied tiles.
+pub fn block_count(mask: &TreeMask, block: usize) -> usize {
+    occupancy(mask, block)
+        .iter()
+        .map(|row| row.iter().filter(|&&b| b).count())
+        .sum()
+}
+
+/// Block count of a full (prefix + tree) mask where the prefix is causal and
+/// every tree row attends to the entire prefix (the Fig-9 object). Computed
+/// analytically for the prefix part + exactly for the tree part:
+///   - prefix x prefix: lower-triangular tiles = nb*(nb+1)/2
+///   - tree rows x prefix cols: all occupied
+///   - prefix rows x tree cols: none
+///   - tree x tree: `block_count` of the tree mask, offset by prefix%block.
+/// For exactness with unaligned prefixes we just materialize the composite
+/// occupancy directly.
+pub fn block_count_with_prefix(mask: &TreeMask, prefix_len: usize, block: usize) -> usize {
+    let n = mask.n + prefix_len;
+    let nb = n.div_ceil(block);
+    let mut occ = vec![false; nb * nb];
+    // causal prefix
+    for i in 0..prefix_len {
+        let bi = i / block;
+        // row i occupies tiles 0..=i/block
+        for bj in 0..=(i / block) {
+            occ[bi * nb + bj] = true;
+        }
+    }
+    // tree rows see full prefix
+    for i in 0..mask.n {
+        let bi = (prefix_len + i) / block;
+        for bj in 0..prefix_len.div_ceil(block) {
+            occ[bi * nb + bj] = true;
+        }
+        // tree-tree bits
+        for j in 0..mask.n {
+            if mask.get(i, j) {
+                occ[bi * nb + (prefix_len + j) / block] = true;
+            }
+        }
+    }
+    occ.iter().filter(|&&b| b).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::arena::{TokenTree, ROOT};
+    use crate::tree::reorder::{dfs_order, insertion_order};
+    use crate::util::Rng;
+
+    #[test]
+    fn causal_block_count_is_triangle() {
+        let m = TreeMask::causal(64);
+        // 64/16 = 4 tiles per side; lower triangle = 4*5/2 = 10
+        assert_eq!(block_count(&m, 16), 10);
+    }
+
+    #[test]
+    fn diagonal_only() {
+        let mut m = TreeMask::causal(32);
+        // strip to diagonal
+        for i in 0..32 {
+            for j in 0..32 {
+                m.set(i, j, i == j);
+            }
+        }
+        assert_eq!(block_count(&m, 16), 2);
+    }
+
+    #[test]
+    fn unaligned_sizes_pad() {
+        let m = TreeMask::causal(20); // 20 with block 16 -> 2x2 tiles, lower tri = 3
+        assert_eq!(block_count(&m, 16), 3);
+    }
+
+    #[test]
+    fn dfs_never_worse_than_insertion_on_random_trees() {
+        // The paper's core Appendix-C claim, checked on BFS-ish random trees
+        // where insertion order interleaves branches.
+        let mut rng = Rng::new(7);
+        let mut wins = 0;
+        for seed in 0..20 {
+            let mut t = TokenTree::new(0, vec![]);
+            let mut rng2 = Rng::new(seed);
+            for i in 0..64 {
+                let parent = if i == 0 { ROOT } else { rng2.next_below(t.num_nodes()) };
+                t.add_child(parent, rng.next_below(512) as u32, 0.5);
+            }
+            let ins = block_count(&TreeMask::from_tree(&t, &insertion_order(&t)), 16);
+            let dfs = block_count(&TreeMask::from_tree(&t, &dfs_order(&t)), 16);
+            assert!(dfs <= ins, "seed {seed}: dfs {dfs} > insertion {ins}");
+            if dfs < ins {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 10, "reorder should strictly help usually: {wins}/20");
+    }
+
+    #[test]
+    fn with_prefix_composition() {
+        // empty tree: just the causal prefix triangle
+        let t = TokenTree::new(0, vec![]);
+        let m = TreeMask::from_tree(&t, &[]);
+        assert_eq!(block_count_with_prefix(&m, 64, 16), 10);
+        // one-node tree adds one row: prefix tiles (4) + self tile (1)
+        let mut t2 = TokenTree::new(0, vec![]);
+        let a = t2.add_child(ROOT, 1, 0.5);
+        let m2 = TreeMask::from_tree(&t2, &[a]);
+        assert_eq!(block_count_with_prefix(&m2, 64, 16), 10 + 4 + 1);
+    }
+}

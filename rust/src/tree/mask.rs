@@ -1,0 +1,191 @@
+//! Tree attention masks (paper §2 "Tree Attention"): mask[i][j] = 1 iff
+//! query i may attend to key j — j is an ancestor of i (or i itself), plus
+//! the full causal prefix. Produces both the compact tree-only mask (for
+//! block-count metrics) and the full [S,S] f32 buffer the AOT model expects.
+
+use super::arena::{NodeId, TokenTree, ROOT};
+
+/// Boolean mask over an ordered set of tree nodes.
+#[derive(Clone, Debug)]
+pub struct TreeMask {
+    pub n: usize,
+    bits: Vec<bool>, // row-major n x n
+}
+
+impl TreeMask {
+    /// Build the tree-only mask for `order` (a permutation of speculated
+    /// node ids): entry (i, j) set iff order[j] is an ancestor-or-self of
+    /// order[i].
+    pub fn from_tree(tree: &TokenTree, order: &[NodeId]) -> Self {
+        let n = order.len();
+        // node id -> row index
+        let max_id = order.iter().copied().max().unwrap_or(0);
+        let mut row_of = vec![usize::MAX; max_id + 1];
+        for (i, &id) in order.iter().enumerate() {
+            row_of[id] = i;
+        }
+        let mut bits = vec![false; n * n];
+        for (i, &id) in order.iter().enumerate() {
+            bits[i * n + i] = true;
+            // Walk ancestors up to (but excluding) ROOT.
+            let mut cur = tree.node(id).parent;
+            while let Some(p) = cur {
+                if p == ROOT {
+                    break;
+                }
+                let j = row_of[p];
+                debug_assert_ne!(j, usize::MAX, "ancestor not in order");
+                bits[i * n + j] = true;
+                cur = tree.node(p).parent;
+            }
+        }
+        Self { n, bits }
+    }
+
+    /// Plain causal (lower-triangular) mask — the prefix block.
+    pub fn causal(n: usize) -> Self {
+        let mut bits = vec![false; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                bits[i * n + j] = true;
+            }
+        }
+        Self { n, bits }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.bits[i * self.n + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.bits[i * self.n + j] = v;
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Embed this tree mask into a full [s, s] f32 buffer at `prefix_len`:
+    /// rows/cols [0, prefix_len) are causal prefix, rows [prefix_len,
+    /// prefix_len + n) are tree tokens that see the whole prefix plus their
+    /// tree ancestors. Rows beyond prefix_len + n are PAD: they attend only
+    /// to themselves (keeps softmax finite; outputs unused).
+    pub fn to_full_f32(&self, prefix_len: usize, s: usize) -> Vec<f32> {
+        let n = self.n;
+        assert!(prefix_len + n <= s, "prefix {prefix_len} + tree {n} > seq {s}");
+        let mut out = vec![0.0f32; s * s];
+        for i in 0..prefix_len {
+            for j in 0..=i {
+                out[i * s + j] = 1.0;
+            }
+        }
+        for i in 0..n {
+            let row = (prefix_len + i) * s;
+            for j in 0..prefix_len {
+                out[row + j] = 1.0;
+            }
+            for j in 0..n {
+                if self.get(i, j) {
+                    out[row + prefix_len + j] = 1.0;
+                }
+            }
+        }
+        for i in (prefix_len + n)..s {
+            out[i * s + i] = 1.0;
+        }
+        out
+    }
+}
+
+/// Full causal [s, s] f32 mask with pad-self rows beyond `live`.
+pub fn causal_f32(live: usize, s: usize) -> Vec<f32> {
+    assert!(live <= s);
+    let mut out = vec![0.0f32; s * s];
+    for i in 0..live {
+        for j in 0..=i {
+            out[i * s + j] = 1.0;
+        }
+    }
+    for i in live..s {
+        out[i * s + i] = 1.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::arena::ROOT;
+
+    fn sample_tree() -> (TokenTree, Vec<NodeId>) {
+        // root -> a -> b
+        //      \-> c
+        let mut t = TokenTree::new(0, vec![]);
+        let a = t.add_child(ROOT, 1, 0.9);
+        let b = t.add_child(a, 2, 0.8);
+        let c = t.add_child(ROOT, 3, 0.5);
+        (t, vec![a, b, c])
+    }
+
+    #[test]
+    fn ancestor_bits() {
+        let (t, order) = sample_tree();
+        let m = TreeMask::from_tree(&t, &order);
+        // rows: a=0, b=1, c=2
+        assert!(m.get(0, 0) && m.get(1, 1) && m.get(2, 2)); // self
+        assert!(m.get(1, 0)); // b sees a
+        assert!(!m.get(0, 1)); // a does not see b
+        assert!(!m.get(1, 2) && !m.get(2, 1)); // b, c unrelated
+        assert!(!m.get(2, 0)); // c does not see a
+    }
+
+    #[test]
+    fn permuted_order_permutes_mask() {
+        let (t, order) = sample_tree();
+        let m = TreeMask::from_tree(&t, &[order[2], order[0], order[1]]);
+        // rows: c=0, a=1, b=2
+        assert!(m.get(2, 1)); // b sees a
+        assert!(!m.get(1, 0)); // a does not see c
+    }
+
+    #[test]
+    fn full_mask_layout() {
+        let (t, order) = sample_tree();
+        let m = TreeMask::from_tree(&t, &order);
+        let s = 8;
+        let p = 3;
+        let full = m.to_full_f32(p, s);
+        // prefix causal:
+        assert_eq!(full[0 * s + 0], 1.0);
+        assert_eq!(full[0 * s + 1], 0.0);
+        assert_eq!(full[2 * s + 0], 1.0);
+        // tree row b (= row p+1) sees prefix + a + itself:
+        assert_eq!(full[(p + 1) * s + 0], 1.0);
+        assert_eq!(full[(p + 1) * s + p], 1.0); // a
+        assert_eq!(full[(p + 1) * s + p + 1], 1.0); // self
+        assert_eq!(full[(p + 1) * s + p + 2], 0.0); // not c
+        // pad rows self-attend only:
+        assert_eq!(full[7 * s + 7], 1.0);
+        assert_eq!(full[7 * s + 0], 0.0);
+    }
+
+    #[test]
+    fn causal_matches_treemask_causal() {
+        let m = TreeMask::causal(4);
+        assert!(m.get(3, 0) && m.get(3, 3) && !m.get(0, 3));
+        assert_eq!(m.count_ones(), 10);
+        let f = causal_f32(2, 4);
+        assert_eq!(f[1 * 4 + 0], 1.0);
+        assert_eq!(f[2 * 4 + 2], 1.0); // pad self
+        assert_eq!(f[2 * 4 + 0], 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn full_mask_overflow_panics() {
+        let (t, order) = sample_tree();
+        let m = TreeMask::from_tree(&t, &order);
+        let _ = m.to_full_f32(6, 8); // 6 + 3 > 8
+    }
+}

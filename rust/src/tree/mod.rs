@@ -1,0 +1,13 @@
+//! Token-tree substrate: the speculated-token tree arena, tree attention
+//! masks, block-sparsity-friendly reorders (paper Appendix C), and the
+//! block-occupancy metric (Table 5, Fig 8/9).
+
+pub mod arena;
+pub mod blocks;
+pub mod mask;
+pub mod reorder;
+
+pub use arena::{NodeId, TokenTree, ROOT};
+pub use blocks::{block_count, block_count_with_prefix, occupancy};
+pub use mask::TreeMask;
+pub use reorder::{dfs_order, hpd_order, insertion_order};

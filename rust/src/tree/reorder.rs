@@ -1,0 +1,163 @@
+//! Block-sparsity-friendly token orders (paper Appendix C).
+//!
+//! The number of non-zero blocks in the tree attention mask depends on the
+//! token permutation. Heavy-path decomposition (HPD) is near-optimal because
+//! it packs long root-to-leaf paths into contiguous index ranges (a path of
+//! length L contributes O(L^2 / b^2) blocks when contiguous). DySpec's trees
+//! give earlier siblings larger subtrees, so plain DFS in child order closely
+//! approximates HPD — the paper uses DFS; we implement all three orders and
+//! benchmark them against each other (Table 5, Fig 6/7/9).
+
+use super::arena::{NodeId, TokenTree, ROOT};
+
+/// Insertion (construction) order — the paper's "original order" baseline.
+/// For Algorithm 1 this is the heap-pop order.
+pub fn insertion_order(tree: &TokenTree) -> Vec<NodeId> {
+    tree.speculated().collect()
+}
+
+/// Depth-first order, children visited in sampling order. The paper's
+/// reorder: "DYSPEC leverages DFS to rearrange node indices".
+pub fn dfs_order(tree: &TokenTree) -> Vec<NodeId> {
+    let mut out = Vec::with_capacity(tree.size());
+    // Explicit stack; push children reversed so the FIRST child is popped
+    // first (sampling order preserved).
+    let mut stack: Vec<NodeId> = tree.node(ROOT).children.iter().rev().copied().collect();
+    while let Some(id) = stack.pop() {
+        out.push(id);
+        for &c in tree.node(id).children.iter().rev() {
+            stack.push(c);
+        }
+    }
+    out
+}
+
+/// Heavy-path-decomposition order (Sleator & Tarjan 1981): DFS visiting
+/// children in DESCENDING subtree size, so the heaviest path stays
+/// contiguous. The near-optimal reference order.
+pub fn hpd_order(tree: &TokenTree) -> Vec<NodeId> {
+    let sizes = tree.subtree_sizes();
+    let mut out = Vec::with_capacity(tree.size());
+    let mut stack: Vec<NodeId> = sorted_children(tree, ROOT, &sizes);
+    while let Some(id) = stack.pop() {
+        out.push(id);
+        stack.extend(sorted_children(tree, id, &sizes));
+    }
+    out
+}
+
+/// Children of `id` sorted so that, after pushing to a LIFO stack, they pop
+/// in descending subtree size (heaviest first).
+fn sorted_children(tree: &TokenTree, id: NodeId, sizes: &[usize]) -> Vec<NodeId> {
+    let mut kids: Vec<NodeId> = tree.node(id).children.clone();
+    // ascending, so the heaviest is on top of the stack
+    kids.sort_by_key(|&c| sizes[c]);
+    kids
+}
+
+/// Check that `order` is a permutation of the speculated nodes.
+pub fn is_permutation(tree: &TokenTree, order: &[NodeId]) -> bool {
+    if order.len() != tree.size() {
+        return false;
+    }
+    let mut seen = vec![false; tree.num_nodes()];
+    for &id in order {
+        if id == ROOT || id >= tree.num_nodes() || seen[id] {
+            return false;
+        }
+        seen[id] = true;
+    }
+    true
+}
+
+/// Check the DFS-contiguity property: every node's subtree occupies a
+/// contiguous range (true for dfs/hpd orders, generally false for insertion).
+pub fn subtrees_contiguous(tree: &TokenTree, order: &[NodeId]) -> bool {
+    let mut pos = vec![usize::MAX; tree.num_nodes()];
+    for (i, &id) in order.iter().enumerate() {
+        pos[id] = i;
+    }
+    let sizes = tree.subtree_sizes();
+    for &id in order {
+        let lo = pos[id];
+        let hi = lo + sizes[id];
+        // all descendants must be in [lo, hi)
+        for &other in order {
+            if tree.is_ancestor(id, other) {
+                let p = pos[other];
+                if p < lo || p >= hi {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_tree(n: usize, seed: u64) -> TokenTree {
+        let mut rng = Rng::new(seed);
+        let mut t = TokenTree::new(0, vec![]);
+        for i in 0..n {
+            let parent = if i == 0 {
+                ROOT
+            } else {
+                rng.next_below(t.num_nodes())
+            };
+            t.add_child(parent, i as u32, 0.5);
+        }
+        t
+    }
+
+    #[test]
+    fn orders_are_permutations() {
+        let t = random_tree(40, 1);
+        for order in [insertion_order(&t), dfs_order(&t), hpd_order(&t)] {
+            assert!(is_permutation(&t, &order));
+        }
+    }
+
+    #[test]
+    fn dfs_and_hpd_are_subtree_contiguous() {
+        for seed in 0..5 {
+            let t = random_tree(30, seed);
+            assert!(subtrees_contiguous(&t, &dfs_order(&t)));
+            assert!(subtrees_contiguous(&t, &hpd_order(&t)));
+        }
+    }
+
+    #[test]
+    fn dfs_respects_child_sampling_order() {
+        let mut t = TokenTree::new(0, vec![]);
+        let a = t.add_child(ROOT, 1, 0.9);
+        let b = t.add_child(ROOT, 2, 0.5);
+        let a1 = t.add_child(a, 3, 0.4);
+        let order = dfs_order(&t);
+        assert_eq!(order, vec![a, a1, b]);
+    }
+
+    #[test]
+    fn hpd_visits_heavy_child_first() {
+        let mut t = TokenTree::new(0, vec![]);
+        let light = t.add_child(ROOT, 1, 0.9); // subtree size 1
+        let heavy = t.add_child(ROOT, 2, 0.5); // subtree size 3
+        let h1 = t.add_child(heavy, 3, 0.4);
+        let h2 = t.add_child(h1, 4, 0.3);
+        assert_eq!(hpd_order(&t), vec![heavy, h1, h2, light]);
+    }
+
+    #[test]
+    fn chain_orders_agree() {
+        let mut t = TokenTree::new(0, vec![]);
+        let mut p = ROOT;
+        for i in 0..10 {
+            p = t.add_child(p, i, 0.5);
+        }
+        assert_eq!(dfs_order(&t), insertion_order(&t));
+        assert_eq!(hpd_order(&t), insertion_order(&t));
+    }
+}

@@ -1,0 +1,171 @@
+//! Numeric helpers over probability vectors: softmax with temperature,
+//! log-sum-exp, normalization, KL/TV distances. Distributions are plain
+//! `Vec<f32>`/`&[f32]`; all helpers keep vectors finite and normalized.
+
+/// Numerically-stable log-sum-exp.
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let sum: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + sum.ln()
+}
+
+/// Softmax with temperature. `temp == 0` means greedy: a one-hot on the
+/// argmax (ties broken toward the lowest index), which is how the paper's
+/// temperature-0 rows are defined.
+pub fn softmax_temp(logits: &[f32], temp: f32) -> Vec<f32> {
+    if temp <= 0.0 {
+        let mut out = vec![0.0; logits.len()];
+        out[argmax(logits)] = 1.0;
+        return out;
+    }
+    let scaled: Vec<f32> = logits.iter().map(|&x| x / temp).collect();
+    let lse = log_sum_exp(&scaled);
+    scaled.iter().map(|&x| (x - lse).exp()).collect()
+}
+
+/// Index of the maximum element (first on ties). Panics on empty input.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Normalize in place to sum 1. Returns false (leaving the input zeroed) if
+/// the total mass is not positive — the caller must handle exhaustion, which
+/// is exactly DySpec's Algorithm-3 early-return condition.
+pub fn normalize(xs: &mut [f32]) -> bool {
+    let sum: f32 = xs.iter().sum();
+    if sum <= 0.0 || !sum.is_finite() {
+        xs.iter_mut().for_each(|x| *x = 0.0);
+        return false;
+    }
+    let inv = 1.0 / sum;
+    xs.iter_mut().for_each(|x| *x *= inv);
+    true
+}
+
+/// The speculative-decoding residual `norm(relu(t - d))`, used after a
+/// rejection to keep the output distribution unbiased. Returns false if the
+/// residual has no mass (t <= d pointwise), in which case `out` is zeroed.
+pub fn residual(t: &[f32], d: &[f32], out: &mut Vec<f32>) -> bool {
+    out.clear();
+    out.extend(t.iter().zip(d).map(|(&ti, &di)| (ti - di).max(0.0)));
+    normalize(out)
+}
+
+/// KL(p || q) in nats, with the usual 0 log 0 = 0 convention.
+pub fn kl_divergence(p: &[f32], q: &[f32]) -> f32 {
+    p.iter()
+        .zip(q)
+        .filter(|(&pi, _)| pi > 0.0)
+        .map(|(&pi, &qi)| pi * (pi / qi.max(1e-12)).ln())
+        .sum()
+}
+
+/// Total-variation distance 0.5 * Σ|p - q|.
+pub fn tv_distance(p: &[f32], q: &[f32]) -> f32 {
+    0.5 * p
+        .iter()
+        .zip(q)
+        .map(|(&pi, &qi)| (pi - qi).abs())
+        .sum::<f32>()
+}
+
+/// Shannon entropy in nats.
+pub fn entropy(p: &[f32]) -> f32 {
+    -p.iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| x * x.ln())
+        .sum::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax_temp(&[0.5, -1.0, 3.0, 0.0], 1.0);
+        assert_close(p.iter().sum::<f32>(), 1.0, 1e-6);
+        assert!(p.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn softmax_temp_zero_is_argmax_onehot() {
+        let p = softmax_temp(&[0.5, 3.0, -1.0], 0.0);
+        assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_low_temp_sharpens() {
+        let hot = softmax_temp(&[1.0, 2.0, 3.0], 1.0);
+        let cold = softmax_temp(&[1.0, 2.0, 3.0], 0.25);
+        assert!(cold[2] > hot[2]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let p = softmax_temp(&[1e4, 1e4 - 1.0], 1.0);
+        assert!(p.iter().all(|x| x.is_finite()));
+        // f32 exp/ln at this magnitude costs a few ulps of mass
+        assert_close(p.iter().sum::<f32>(), 1.0, 1e-3);
+    }
+
+    #[test]
+    fn normalize_zero_mass_reports_false() {
+        let mut xs = vec![0.0, 0.0];
+        assert!(!normalize(&mut xs));
+        assert_eq!(xs, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn residual_relu_norm() {
+        let t = vec![0.5, 0.3, 0.2];
+        let d = vec![0.7, 0.1, 0.2];
+        let mut r = Vec::new();
+        assert!(residual(&t, &d, &mut r));
+        assert_close(r[0], 0.0, 1e-6);
+        assert_close(r[1], 1.0, 1e-6);
+        assert_close(r[2], 0.0, 1e-6);
+    }
+
+    #[test]
+    fn residual_exhausted_when_t_le_d() {
+        let t = vec![0.5, 0.5];
+        let mut r = Vec::new();
+        assert!(!residual(&t, &t.clone(), &mut r));
+    }
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        let p = vec![0.25, 0.75];
+        assert_close(kl_divergence(&p, &p), 0.0, 1e-6);
+        let q = vec![0.75, 0.25];
+        assert!(kl_divergence(&p, &q) > 0.0);
+    }
+
+    #[test]
+    fn tv_bounds() {
+        let p = vec![1.0, 0.0];
+        let q = vec![0.0, 1.0];
+        assert_close(tv_distance(&p, &q), 1.0, 1e-6);
+        assert_close(tv_distance(&p, &p), 0.0, 1e-6);
+    }
+
+    #[test]
+    fn entropy_uniform_is_log_n() {
+        let p = vec![0.25; 4];
+        assert_close(entropy(&p), (4.0f32).ln(), 1e-5);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dependency-free utilities shared across the stack: deterministic RNG,
+//! numeric helpers, latency statistics, a minimal JSON writer/reader, and a
+//! leveled logger. Everything here is deliberately boring; the substance of
+//! the reproduction lives in `tree`, `draft`, `verify` and `engine`.
+
+pub mod json;
+pub mod log;
+pub mod math;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Histogram;
+pub use timer::Timer;

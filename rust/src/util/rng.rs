@@ -1,0 +1,163 @@
+//! Deterministic RNG: SplitMix64 core (bit-identical with
+//! `python/compile/corpus.py` — the cross-language corpus contract) plus a
+//! xoshiro256** generator seeded from it for bulk sampling.
+
+/// One SplitMix64 step; returns the output and advances `state`.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// SplitMix64 stream — matches `corpus.SplitMix64` in python exactly.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        splitmix64(&mut self.state)
+    }
+
+    /// Uniform in [0, 1) with 53-bit mantissa; same contract as python.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Simple modulo draw — bias is irrelevant at
+    /// our vocab sizes and it is the easiest contract to keep identical
+    /// across languages (python mirrors this exactly).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// xoshiro256** 1.0 — the general-purpose generator for everything that does
+/// NOT need to match python (verification draws, workload jitter, ...).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Seed the state from a SplitMix64 stream, per the xoshiro authors.
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Derive an independent child stream (for per-request / per-worker RNGs).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    /// Standard normal via Box-Muller (used by the sim models).
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix64_golden_seed42() {
+        // Same goldens as python/tests/test_corpus.py::test_splitmix64_golden.
+        let mut rng = SplitMix64::new(42);
+        assert_eq!(rng.next_u64(), 13679457532755275413);
+        let rest: Vec<u64> = (0..3).map(|_| rng.next_u64()).collect();
+        assert_eq!(
+            rest,
+            vec![2949826092126892291, 5139283748462763858, 6349198060258255764]
+        );
+    }
+
+    #[test]
+    fn splitmix_f64_unit_interval() {
+        let mut rng = SplitMix64::new(7);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.next_f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((0.4..0.6).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_forked_streams_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut fork = a.fork();
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| fork.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(9);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(rng.next_below(17) < 17);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Component timing: a scoped stopwatch plus a named-section accumulator
+//! used by the engine to produce the paper's Fig-4 execution breakdown.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates wall time per named component (draft inference, target
+/// inference, tree construction, mask generation, sampling, verification —
+/// the exact bars of the paper's Fig. 4).
+#[derive(Clone, Debug, Default)]
+pub struct ComponentTimes {
+    totals: BTreeMap<&'static str, f64>,
+}
+
+impl ComponentTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a component label.
+    pub fn time<T>(&mut self, label: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(label, t.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, label: &'static str, secs: f64) {
+        *self.totals.entry(label).or_insert(0.0) += secs;
+    }
+
+    pub fn get(&self, label: &str) -> f64 {
+        self.totals.get(label).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &ComponentTimes) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_insert(0.0) += v;
+        }
+    }
+
+    /// (label, seconds, fraction-of-total), descending by time.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total().max(1e-12);
+        let mut rows: Vec<_> = self
+            .totals
+            .iter()
+            .map(|(&k, &v)| (k, v, v / total))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn component_times_accumulate() {
+        let mut ct = ComponentTimes::new();
+        ct.add("draft", 0.5);
+        ct.add("draft", 0.5);
+        ct.add("target", 3.0);
+        assert_eq!(ct.get("draft"), 1.0);
+        assert_eq!(ct.total(), 4.0);
+        let rows = ct.breakdown();
+        assert_eq!(rows[0].0, "target");
+        assert!((rows[0].2 - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut ct = ComponentTimes::new();
+        let x = ct.time("x", || 41 + 1);
+        assert_eq!(x, 42);
+        assert!(ct.get("x") >= 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = ComponentTimes::new();
+        let mut b = ComponentTimes::new();
+        a.add("k", 1.0);
+        b.add("k", 2.0);
+        a.merge(&b);
+        assert_eq!(a.get("k"), 3.0);
+    }
+}

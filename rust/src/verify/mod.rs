@@ -1,0 +1,266 @@
+//! Multi-branch rejection verification (paper Algorithm 3).
+//!
+//! Walks the speculated tree from the root; at each node, children are
+//! tried in sampling order with acceptance probability min(1, R[y]/D[y])
+//! where R starts as the target distribution and is residualized
+//! (`norm(relu(R − D))`) after every rejection while D has the rejected
+//! token zeroed + renormalized. The walk guarantees the emitted sequence is
+//! distributed EXACTLY as target-only decoding (the unbiasedness property
+//! tests in rust/tests/unbiasedness.rs check this end to end).
+//!
+//! DySpec-specific detail (paper A.3): if D's mass hits zero mid-node, we
+//! return immediately — the corresponding construction estimate is 0 and
+//! such branches are never extended.
+
+use crate::tree::{NodeId, TokenTree, ROOT};
+use crate::util::math::{argmax, normalize, residual};
+use crate::util::Rng;
+
+/// Result of one verification walk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerifyOutcome {
+    /// Speculated tokens accepted, in order along the root path.
+    pub accepted: Vec<u32>,
+    /// Node ids matching `accepted`.
+    pub accepted_nodes: Vec<NodeId>,
+    /// The extra token emitted at the end (from the target or residual
+    /// distribution) — speculative decoding always emits >= 1 token/step.
+    pub bonus: u32,
+    /// Total emitted tokens = accepted.len() + 1.
+    pub emitted: usize,
+}
+
+/// Verify a speculated tree.
+///
+/// `target_dists` row 0 is the (temperature-applied) target distribution at
+/// the root; row `row_of[id]` is the distribution at node `id`. `row_of`
+/// comes from the verification order used to score the tree.
+pub fn verify_tree(
+    tree: &TokenTree,
+    target_dists: &[Vec<f32>],
+    row_of: &[usize],
+    rng: &mut Rng,
+) -> VerifyOutcome {
+    let mut accepted = Vec::new();
+    let mut accepted_nodes = Vec::new();
+    let mut current = ROOT;
+
+    loop {
+        let node = tree.node(current);
+        let row = if current == ROOT { 0 } else { row_of[current] };
+        let target = &target_dists[row];
+
+        if node.children.is_empty() {
+            // Everything on this path accepted: bonus from the target.
+            let bonus = sample_checked(target, rng);
+            return VerifyOutcome {
+                emitted: accepted.len() + 1,
+                accepted,
+                accepted_nodes,
+                bonus,
+            };
+        }
+
+        let mut d = node.draft_dist.clone();
+        debug_assert_eq!(d.len(), target.len(), "draft/target vocab mismatch");
+        let mut r = target.clone();
+        let mut moved = false;
+
+        for &child in &node.children {
+            let y = tree.node(child).token as usize;
+            let d_y = d[y];
+            let accept_prob = if d_y > 0.0 {
+                (r[y] / d_y).min(1.0)
+            } else {
+                // Draft claims zero mass for a token it sampled — only
+                // possible via float underflow; treat as reject.
+                0.0
+            };
+            if (rng.next_f64() as f32) < accept_prob {
+                accepted.push(y as u32);
+                accepted_nodes.push(child);
+                current = child;
+                moved = true;
+                break;
+            }
+            // Reject: residualize target, zero draft.
+            let mut res = Vec::new();
+            if residual(&r, &d, &mut res) {
+                r = res;
+            } else {
+                // Residual empty (target mass fully covered): emit argmax of
+                // the remaining target as a numerically-safe fallback.
+                r = vec![0.0; d.len()];
+                r[argmax(target)] = 1.0;
+            }
+            d[y] = 0.0;
+            if !normalize(&mut d) {
+                // DySpec early return: draft mass exhausted (paper A.3).
+                let bonus = sample_checked(&r, rng);
+                return VerifyOutcome {
+                    emitted: accepted.len() + 1,
+                    accepted,
+                    accepted_nodes,
+                    bonus,
+                };
+            }
+        }
+
+        if !moved {
+            // All children rejected: bonus from the final residual.
+            let bonus = sample_checked(&r, rng);
+            return VerifyOutcome {
+                emitted: accepted.len() + 1,
+                accepted,
+                accepted_nodes,
+                bonus,
+            };
+        }
+    }
+}
+
+fn sample_checked(dist: &[f32], rng: &mut Rng) -> u32 {
+    if dist.iter().sum::<f32>() <= 0.0 {
+        return argmax(dist) as u32;
+    }
+    crate::sampling::sample(dist, rng) as u32
+}
+
+/// Convenience: build `row_of` (node id -> target_dists row) from the
+/// verification order used to score the tree.
+pub fn row_map(tree: &TokenTree, order: &[NodeId]) -> Vec<usize> {
+    let mut row_of = vec![usize::MAX; tree.num_nodes()];
+    row_of[ROOT] = 0;
+    for (i, &id) in order.iter().enumerate() {
+        row_of[id] = i + 1;
+    }
+    row_of
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::ROOT;
+
+    fn onehot(v: usize, i: usize) -> Vec<f32> {
+        let mut d = vec![0.0; v];
+        d[i] = 1.0;
+        d
+    }
+
+    /// Chain with draft == target: everything must be accepted.
+    #[test]
+    fn perfect_draft_accepts_all() {
+        let v = 8;
+        let mut tree = TokenTree::new(0, onehot(v, 1));
+        let a = tree.add_child(ROOT, 1, 1.0);
+        tree.node_mut(a).draft_dist = onehot(v, 2);
+        let b = tree.add_child(a, 2, 1.0);
+        tree.node_mut(b).draft_dist = onehot(v, 3);
+        let order = vec![a, b];
+        let dists = vec![onehot(v, 1), onehot(v, 2), onehot(v, 3)];
+        let row_of = row_map(&tree, &order);
+        let mut rng = Rng::new(1);
+        let out = verify_tree(&tree, &dists, &row_of, &mut rng);
+        assert_eq!(out.accepted, vec![1, 2]);
+        assert_eq!(out.bonus, 3);
+        assert_eq!(out.emitted, 3);
+    }
+
+    /// Target disagrees at the first token: nothing accepted, bonus follows
+    /// the residual (= target since the rejected draft token has target
+    /// mass 0).
+    #[test]
+    fn disjoint_support_rejects_all() {
+        let v = 8;
+        let mut tree = TokenTree::new(0, onehot(v, 1));
+        let a = tree.add_child(ROOT, 1, 1.0);
+        tree.node_mut(a).draft_dist = onehot(v, 2);
+        let order = vec![a];
+        let dists = vec![onehot(v, 5), onehot(v, 6)];
+        let row_of = row_map(&tree, &order);
+        let mut rng = Rng::new(2);
+        let out = verify_tree(&tree, &dists, &row_of, &mut rng);
+        assert!(out.accepted.is_empty());
+        assert_eq!(out.bonus, 5);
+        assert_eq!(out.emitted, 1);
+    }
+
+    /// Two siblings where target favors the SECOND: the walk must reject
+    /// the first and accept the second via the residual rule.
+    #[test]
+    fn sibling_residual_walk() {
+        let v = 4;
+        let draft = vec![0.5, 0.5, 0.0, 0.0];
+        let target = vec![0.0, 1.0, 0.0, 0.0];
+        let mut tree = TokenTree::new(0, draft.clone());
+        let a = tree.add_child(ROOT, 0, 0.5); // draft's token 0 first
+        let b = tree.add_child(ROOT, 1, 0.25);
+        tree.node_mut(a).draft_dist = onehot(v, 2);
+        tree.node_mut(b).draft_dist = onehot(v, 3);
+        let order = vec![a, b];
+        let dists = vec![target, onehot(v, 2), onehot(v, 3)];
+        let row_of = row_map(&tree, &order);
+        let mut rng = Rng::new(3);
+        let out = verify_tree(&tree, &dists, &row_of, &mut rng);
+        // token 0: accept prob min(1, 0/0.5) = 0 -> rejected
+        // residual: relu(target - draft) = [0, .5, 0, 0] -> norm [0,1,0,0]
+        // D: zero token 0, renorm -> [0,1,0,0]; child b token 1: prob 1 -> accept
+        assert_eq!(out.accepted, vec![1]);
+        assert_eq!(out.accepted_nodes, vec![b]);
+        assert_eq!(out.bonus, 3); // leaf target
+    }
+
+    /// Draft exhaustion mid-node triggers the DySpec early return.
+    #[test]
+    fn draft_exhaustion_early_return() {
+        let v = 4;
+        // Draft is one-hot on token 0; target one-hot on token 1.
+        let mut tree = TokenTree::new(0, onehot(v, 0));
+        let a = tree.add_child(ROOT, 0, 1.0);
+        tree.node_mut(a).draft_dist = onehot(v, 0);
+        let order = vec![a];
+        let dists = vec![onehot(v, 1), onehot(v, 1)];
+        let row_of = row_map(&tree, &order);
+        let mut rng = Rng::new(4);
+        let out = verify_tree(&tree, &dists, &row_of, &mut rng);
+        // reject token 0 (target mass 0); D zeroed everywhere -> early return
+        assert!(out.accepted.is_empty());
+        assert_eq!(out.bonus, 1);
+    }
+
+    /// Accepted tokens always form a root path.
+    #[test]
+    fn accepted_is_root_path() {
+        let v = 16;
+        let mut rng = Rng::new(5);
+        for seed in 0..50u64 {
+            let mut c = Rng::new(seed);
+            // random 2-level tree with random dists
+            let rand_dist = |rng: &mut Rng| {
+                let mut d: Vec<f32> = (0..v).map(|_| rng.next_f32().max(1e-3)).collect();
+                crate::util::math::normalize(&mut d);
+                d
+            };
+            let mut tree = TokenTree::new(0, rand_dist(&mut c));
+            let a = tree.add_child(ROOT, c.next_below(v) as u32, 0.5);
+            let b = tree.add_child(ROOT, (c.next_below(v - 1) + 1) as u32, 0.3);
+            tree.node_mut(a).draft_dist = rand_dist(&mut c);
+            tree.node_mut(b).draft_dist = rand_dist(&mut c);
+            let x = tree.add_child(a, c.next_below(v) as u32, 0.2);
+            tree.node_mut(x).draft_dist = rand_dist(&mut c);
+            let order = vec![a, b, x];
+            let dists: Vec<Vec<f32>> = (0..4).map(|_| rand_dist(&mut c)).collect();
+            let row_of = row_map(&tree, &order);
+            let out = verify_tree(&tree, &dists, &row_of, &mut rng);
+            // verify path property
+            for w in out.accepted_nodes.windows(2) {
+                assert_eq!(tree.node(w[1]).parent, Some(w[0]));
+            }
+            if let Some(&first) = out.accepted_nodes.first() {
+                assert_eq!(tree.node(first).parent, Some(ROOT));
+            }
+            assert_eq!(out.emitted, out.accepted.len() + 1);
+        }
+    }
+}
