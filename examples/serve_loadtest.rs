@@ -3,11 +3,19 @@
 //! reports throughput, latency percentiles and backpressure counts — the
 //! end-to-end driver for the serving layer (DESIGN.md deliverable (b)).
 //!
-//!   cargo run --release --example serve_loadtest -- [requests] [rate_rps] [workers]
+//!   cargo run --release --example serve_loadtest -- \
+//!       [requests] [rate_rps] [workers] [scheduler]
+//!
+//! `scheduler` is `fcfs` (default) or `continuous` — the latter runs the
+//! step-level batcher (`sched/`), so one worker multiplexes many
+//! connections into shared verification dispatches. Compare:
+//!
+//!   cargo run --release --example serve_loadtest -- 48 40 1 fcfs
+//!   cargo run --release --example serve_loadtest -- 48 40 1 continuous
 
 use std::sync::Arc;
 
-use dyspec::config::Config;
+use dyspec::config::{Config, SchedKind};
 use dyspec::coordinator::{Coordinator, ModelFactory};
 use dyspec::data::prompts::PromptSet;
 use dyspec::data::trace::RequestTrace;
@@ -21,11 +29,17 @@ fn main() {
     let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(48);
     let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40.0);
     let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let scheduler = args
+        .get(3)
+        .and_then(|s| SchedKind::parse(s))
+        .unwrap_or(SchedKind::Fcfs);
 
     let mut cfg = Config::new();
     cfg.server.workers = workers;
     cfg.server.addr = "127.0.0.1:0".into();
     cfg.engine.tree_budget = 24;
+    cfg.sched.kind = scheduler;
+    cfg.sched.max_active = 16;
 
     let factory: ModelFactory = Arc::new(|| {
         let spec = SimSpec::for_dataset("c4", 1.2, 77);
@@ -42,10 +56,11 @@ fn main() {
     let prompts = PromptSet::by_name("c4", 8, 64, 5).unwrap();
     let trace = RequestTrace::poisson(n_requests, rate, prompts.len(), 64, 0.6, 9);
     println!(
-        "replaying {} requests at {:.0} rps over {} workers -> {addr}",
+        "replaying {} requests at {:.0} rps over {} workers ({} scheduler) -> {addr}",
         trace.len(),
         rate,
-        workers
+        workers,
+        scheduler.name()
     );
 
     let t0 = std::time::Instant::now();
@@ -65,17 +80,20 @@ fn main() {
                 .ok()?;
             let e2e = sent.elapsed().as_secs_f64();
             let tokens = reply.get("tokens")?.as_arr()?.len();
-            Some((e2e, tokens))
+            let ttft = reply.get("ttft_secs").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            Some((e2e, ttft, tokens))
         }));
     }
 
     let mut lat = Histogram::new();
+    let mut ttft = Histogram::new();
     let mut total_tokens = 0usize;
     let mut failures = 0usize;
     for h in handles {
         match h.join().expect("client thread") {
-            Some((e2e, tokens)) => {
+            Some((e2e, first, tokens)) => {
                 lat.record(e2e);
+                ttft.record(first);
                 total_tokens += tokens;
             }
             None => failures += 1,
@@ -83,11 +101,13 @@ fn main() {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "done in {wall:.2}s: {} ok / {failures} failed | {:.0} tokens/s | e2e p50 {:.3}s p99 {:.3}s",
+        "done in {wall:.2}s: {} ok / {failures} failed | {:.0} tokens/s | e2e p50 {:.3}s p99 {:.3}s | ttft p50 {:.3}s p99 {:.3}s",
         lat.len(),
         total_tokens as f64 / wall,
         lat.p50(),
         lat.p99(),
+        ttft.p50(),
+        ttft.p99(),
     );
 
     let mut client = Client::connect(&addr).expect("stats conn");

@@ -1,0 +1,18 @@
+//! Serving-layer concurrency benchmark: fcfs vs continuous batching at
+//! 1/4/16 closed-loop clients (see DESIGN.md §Scheduler). Shares the
+//! runner with `dyspec bench --experiment serve` and records the result
+//! as BENCH_serve.json at the repo root to seed the perf trajectory.
+//! Env: DYSPEC_BENCH_PROMPTS (requests per client), DYSPEC_BENCH_TOKENS.
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts {
+        prompts: std::env::var("DYSPEC_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4),
+        max_new_tokens: std::env::var("DYSPEC_BENCH_TOKENS").ok().and_then(|v| v.parse().ok()).unwrap_or(64),
+        out: Some("../BENCH_serve.json".into()),
+        ..ExpOpts::default()
+    };
+    for table in run_experiment("serve", &opts).expect("experiment") {
+        println!("{}", table.render());
+    }
+}

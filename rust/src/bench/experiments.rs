@@ -1,16 +1,20 @@
 //! Experiment runners — one per paper table/figure. See DESIGN.md §5 for
 //! the experiment index (paper object → workload → modules → bench target).
 
+use std::sync::Arc;
+
 use crate::bench::table::BenchTable;
-use crate::config::{EngineConfig, LatencyRegime, PolicyKind};
+use crate::config::{Config, EngineConfig, LatencyRegime, PolicyKind, SchedKind};
+use crate::coordinator::{Coordinator, ModelFactory};
 use crate::data::markov::Corpus;
 use crate::data::prompts::PromptSet;
 use crate::engine::stats::RunAggregate;
 use crate::engine::SpecEngine;
 use crate::models::sim::{SimModel, SimSpec};
+use crate::models::LogitModel;
 use crate::sampling::{dist_from_logits, sample};
 use crate::tree::{block_count, block_count_with_prefix, dfs_order, insertion_order, TokenTree, TreeMask, ROOT};
-use crate::util::Rng;
+use crate::util::{Histogram, Rng, Timer};
 
 /// Shared experiment options (CLI-overridable).
 #[derive(Clone, Debug)]
@@ -78,6 +82,7 @@ pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<Vec<BenchTable>, Str
         "fig7" => vec![fig7_mask_orders(opts)],
         "fig9" => vec![fig9_blockcount(opts)],
         "ablation" | "ablation_budget" => vec![ablation_budget(opts)],
+        "serve" => vec![serve_concurrency(opts)],
         other => return Err(format!("unknown experiment: {other}")),
     };
     if let Some(out) = &opts.out {
@@ -447,6 +452,123 @@ pub fn fig9_blockcount(opts: &ExpOpts) -> BenchTable {
     table
 }
 
+/// One serving cell: closed-loop clients against an in-process coordinator
+/// (one worker, sim models, 7b virtual-regime accounting). Returns
+/// (tokens, wall_secs, worker_virtual_secs, occupancy, per-request virtual
+/// latency histogram, per-request TTFT histogram).
+fn serve_cell(
+    kind: SchedKind,
+    clients: usize,
+    per_client: usize,
+    opts: &ExpOpts,
+) -> (usize, f64, f64, f64, Histogram, Histogram) {
+    let mut cfg = Config::new();
+    cfg.sched.kind = kind;
+    cfg.sched.max_active = 16;
+    cfg.sched.idle_tick_ms = 2;
+    cfg.server.workers = 1;
+    cfg.server.queue_capacity = 1024;
+    cfg.engine.tree_budget = 24;
+    cfg.engine.seed = opts.seed;
+    cfg.regime = Some(LatencyRegime::pair_7b());
+
+    let noise = opts.noise;
+    let seed = opts.seed;
+    let factory: ModelFactory = Arc::new(move || {
+        let spec = SimSpec::for_dataset("c4", noise, seed ^ 0xDA7A);
+        let (d, t) = SimModel::pair(spec);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    });
+    let coord = Arc::new(Coordinator::start(cfg, factory));
+    let prompts = PromptSet::by_name("c4", clients * per_client, 64, opts.seed)
+        .expect("dataset profile");
+
+    let t0 = Timer::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let coord = coord.clone();
+            let mine: Vec<Vec<u32>> = (0..per_client)
+                .map(|k| prompts.get(c * per_client + k).to_vec())
+                .collect();
+            let max_new = opts.max_new_tokens;
+            std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for p in mine {
+                    if let Ok(r) = coord.generate(p, max_new, 0.6) {
+                        out.push((r.virtual_secs, r.ttft_secs, r.tokens.len()));
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+
+    let mut lat_v = Histogram::new();
+    let mut ttft = Histogram::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        for (v, t, n) in h.join().expect("client thread") {
+            lat_v.record(v);
+            ttft.record(t);
+            tokens += n;
+        }
+    }
+    let wall = t0.elapsed_secs();
+    let vsecs = coord.metrics.virtual_secs();
+    let occupancy = coord.metrics.batch_occupancy();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+    (tokens, wall, vsecs, occupancy, lat_v, ttft)
+}
+
+/// Serving benchmark (ROADMAP "heavy traffic" deliverable): throughput and
+/// latency vs concurrency, fcfs vs continuous, on the sim model pair with
+/// 7b-regime virtual accounting. Throughput is tokens per VIRTUAL second —
+/// the regime-correct metric: continuous batching packs every active
+/// sequence into one target dispatch, so it strictly beats FCFS once
+/// clients > 1. `--out BENCH_serve.json` records the trajectory.
+pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
+    let mut table = BenchTable::new(
+        "Serve: throughput/latency vs concurrency, fcfs vs continuous (sim, 7b regime, 1 worker)",
+        &[
+            "scheduler",
+            "clients",
+            "requests",
+            "tokens",
+            "tok_per_vsec",
+            "wall_tok_per_sec",
+            "lat_p50_vsec",
+            "lat_p99_vsec",
+            "ttft_p50_s",
+            "occupancy",
+        ],
+    );
+    let per_client = opts.prompts.max(1);
+    for kind in [SchedKind::Fcfs, SchedKind::Continuous] {
+        for clients in [1usize, 4, 16] {
+            let (tokens, wall, vsecs, occupancy, mut lat_v, mut ttft) =
+                serve_cell(kind, clients, per_client, opts);
+            table.row(vec![
+                kind.name().into(),
+                format!("{clients}"),
+                format!("{}", clients * per_client),
+                format!("{tokens}"),
+                format!("{:.1}", tokens as f64 / vsecs.max(1e-9)),
+                format!("{:.1}", tokens as f64 / wall.max(1e-9)),
+                format!("{:.4}", lat_v.p50()),
+                format!("{:.4}", lat_v.p99()),
+                format!("{:.4}", ttft.p50()),
+                format!("{:.2}", occupancy),
+            ]);
+        }
+    }
+    table
+}
+
 /// Ablation (DESIGN.md §5 footnote): accepted tokens/step and 7B-regime
 /// latency as the speculative budget grows, dynamic (DySpec) vs the best
 /// fixed-shape baseline (Sequoia) — the paper's §1 motivation that fixed
@@ -548,6 +670,36 @@ mod tests {
         let first = gain(&t.rows[0]);
         let last = gain(t.rows.last().unwrap());
         assert!(last >= first * 0.8, "gain shrank: {first} -> {last}");
+    }
+
+    /// The serving acceptance criterion: at 16 concurrent clients the
+    /// continuous scheduler converts the shared dispatches into strictly
+    /// higher virtual-regime throughput than FCFS on the same workload.
+    #[test]
+    fn serve_continuous_beats_fcfs_at_16_clients() {
+        let opts = ExpOpts {
+            prompts: 1,
+            max_new_tokens: 24,
+            ..ExpOpts::default()
+        };
+        let t = &run_experiment("serve", &opts).unwrap()[0];
+        assert_eq!(t.rows.len(), 6); // 2 schedulers x 3 concurrency levels
+        let tput = |row: &Vec<String>| -> f64 { row[4].parse().unwrap() };
+        let fcfs16 = &t.rows[2];
+        let cont16 = &t.rows[5];
+        assert_eq!((fcfs16[0].as_str(), fcfs16[1].as_str()), ("fcfs", "16"));
+        assert_eq!(
+            (cont16[0].as_str(), cont16[1].as_str()),
+            ("continuous", "16")
+        );
+        // both schedulers served the full workload
+        assert_eq!(fcfs16[3], cont16[3]);
+        assert!(
+            tput(cont16) > tput(fcfs16),
+            "continuous {} <= fcfs {} tokens/vsec at 16 clients",
+            tput(cont16),
+            tput(fcfs16)
+        );
     }
 
     #[test]

@@ -84,8 +84,9 @@ USAGE:
 COMMANDS:
   generate     run one generation (policy=dyspec|sequoia|specinfer|chain|baseline)
   bench        run a paper experiment (--experiment table1|table2|table3|table4|
-               table5|fig2|fig4|fig5|fig9)
-  serve        start the TCP serving coordinator (--addr host:port)
+               table5|fig2|fig4|fig5|fig9|serve)
+  serve        start the TCP serving coordinator (--addr host:port,
+               scheduler=fcfs|continuous)
   client       send a prompt to a running server (--addr host:port --dataset c4)
   selfcheck    verify artifacts + PJRT wiring against golden.json
   help         show this text
@@ -93,12 +94,14 @@ COMMANDS:
 CONFIG KEYS (key=value, see config/mod.rs):
   policy, tree_budget, threshold, max_depth, temp, draft_temp,
   max_new_tokens, seed, backend (sim|hlo|hlo-pallas), regime (7b|13b|70b),
-  dataset (cnn|c4|owt), artifacts, prompt_len, num_prompts, addr, workers
+  dataset (cnn|c4|owt), artifacts, prompt_len, num_prompts, addr, workers,
+  scheduler (fcfs|continuous), global_budget, max_active, idle_tick_ms
 
 EXAMPLES:
   dyspec generate policy=dyspec backend=hlo dataset=cnn temp=0
   dyspec bench --experiment table1 --out results/table1.json
-  dyspec serve --addr 127.0.0.1:7341 backend=sim
+  dyspec bench --experiment serve --out BENCH_serve.json
+  dyspec serve --addr 127.0.0.1:7341 backend=sim scheduler=continuous
 ";
 
 #[cfg(test)]

@@ -65,6 +65,66 @@ impl fmt::Display for PolicyKind {
     }
 }
 
+/// Which serving scheduler multiplexes requests onto a worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    /// One request at a time per worker, FCFS from the shared queue.
+    Fcfs,
+    /// Step-level continuous batching: every target dispatch packs all
+    /// active sequences' trees under one cross-request token budget.
+    Continuous,
+}
+
+impl SchedKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fcfs" => Self::Fcfs,
+            "continuous" | "cb" => Self::Continuous,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Fcfs => "fcfs",
+            Self::Continuous => "continuous",
+        }
+    }
+}
+
+impl fmt::Display for SchedKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Scheduler-layer knobs (`sched/`, DESIGN.md §Scheduler).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedConfig {
+    pub kind: SchedKind,
+    /// Global speculated-token budget per verification dispatch, shared by
+    /// every sequence in the batch (0 = inherit `engine.tree_budget`). The
+    /// batcher clamps it up to the active-sequence count so each sequence
+    /// is guaranteed at least one frontier token per step.
+    pub global_budget: usize,
+    /// Max sequences simultaneously interleaved by one batcher.
+    pub max_active: usize,
+    /// Queue poll interval while idle, in ms — also the FCFS worker's
+    /// shutdown-poll tick (previously hardcoded at 50 ms).
+    pub idle_tick_ms: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            kind: SchedKind::Fcfs,
+            global_budget: 0,
+            max_active: 8,
+            idle_tick_ms: 50,
+        }
+    }
+}
+
 /// Which model backend drives draft/target scoring.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelBackend {
@@ -105,6 +165,14 @@ pub struct LatencyRegime {
     /// Target per-verification seconds (paper: 7B ~ 22 ms at bs 1+64; 13B ~
     /// 30 ms; offloaded 70B ~ 5 s).
     pub target_step_secs: f64,
+    /// SPECULATED tokens one target dispatch absorbs at
+    /// `target_step_secs` — the batch width the step time was calibrated
+    /// at (paper §5.1: bs 1+64, i.e. 64 speculated tokens; root rows ride
+    /// free, matching the engine's one-unit step). The continuous batcher
+    /// bills ceil(speculated / width) dispatch units, so packing beyond
+    /// the calibrated width is not free. `usize::MAX` for the offload
+    /// regime, whose step is weight-streaming-bound (flat per dispatch).
+    pub verify_width: usize,
 }
 
 impl LatencyRegime {
@@ -116,6 +184,7 @@ impl LatencyRegime {
             name: "7b",
             draft_step_secs: 0.00025,
             target_step_secs: 0.0225,
+            verify_width: 64,
         }
     }
 
@@ -125,6 +194,7 @@ impl LatencyRegime {
             name: "13b",
             draft_step_secs: 0.00025,
             target_step_secs: 0.0303,
+            verify_width: 64,
         }
     }
 
@@ -136,6 +206,7 @@ impl LatencyRegime {
             name: "70b-offload",
             draft_step_secs: 0.0025,
             target_step_secs: 5.0,
+            verify_width: usize::MAX,
         }
     }
 
@@ -217,6 +288,7 @@ impl Default for ServerConfig {
 pub struct Config {
     pub engine: EngineConfig,
     pub server: ServerConfig,
+    pub sched: SchedConfig,
     pub backend: ModelBackend,
     pub regime: Option<LatencyRegime>,
     pub dataset: String,
@@ -242,6 +314,7 @@ impl Config {
         Self {
             engine: EngineConfig::default(),
             server: ServerConfig::default(),
+            sched: SchedConfig::default(),
             backend: ModelBackend::Sim,
             regime: None,
             dataset: "c4".into(),
@@ -324,6 +397,22 @@ impl Config {
                 Ok(v) => self.server.max_batch = v,
                 Err(_) => return bad("max_batch"),
             },
+            "scheduler" => match SchedKind::parse(value) {
+                Some(k) => self.sched.kind = k,
+                None => return bad("scheduler"),
+            },
+            "global_budget" => match value.parse() {
+                Ok(v) => self.sched.global_budget = v,
+                Err(_) => return bad("global_budget"),
+            },
+            "max_active" => match value.parse() {
+                Ok(v) => self.sched.max_active = v,
+                Err(_) => return bad("max_active"),
+            },
+            "idle_tick_ms" => match value.parse() {
+                Ok(v) => self.sched.idle_tick_ms = v,
+                Err(_) => return bad("idle_tick_ms"),
+            },
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -393,6 +482,16 @@ impl Config {
         }
         m.insert("dataset".into(), self.dataset.clone());
         m.insert("prompt_len".into(), self.prompt_len.to_string());
+        m.insert("scheduler".into(), self.sched.kind.name().into());
+        m.insert(
+            "global_budget".into(),
+            self.sched.global_budget.to_string(),
+        );
+        m.insert("max_active".into(), self.sched.max_active.to_string());
+        m.insert(
+            "idle_tick_ms".into(),
+            self.sched.idle_tick_ms.to_string(),
+        );
         m
     }
 }
@@ -419,6 +518,24 @@ mod tests {
         assert!(cfg.set("tree_budget", "many").is_err());
         assert!(cfg.set("no_such_key", "1").is_err());
         assert!(cfg.set("dataset", "wikipedia").is_err());
+    }
+
+    #[test]
+    fn scheduler_keys_round_trip() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.sched.kind, SchedKind::Fcfs);
+        cfg.set("scheduler", "continuous").unwrap();
+        assert_eq!(cfg.sched.kind, SchedKind::Continuous);
+        cfg.set("global_budget", "96").unwrap();
+        cfg.set("max_active", "16").unwrap();
+        cfg.set("idle_tick_ms", "5").unwrap();
+        assert_eq!(cfg.sched.global_budget, 96);
+        assert_eq!(cfg.sched.max_active, 16);
+        assert_eq!(cfg.sched.idle_tick_ms, 5);
+        assert!(cfg.set("scheduler", "round-robin").is_err());
+        for k in [SchedKind::Fcfs, SchedKind::Continuous] {
+            assert_eq!(SchedKind::parse(k.name()), Some(k));
+        }
     }
 
     #[test]

@@ -19,6 +19,18 @@ pub struct Metrics {
     tokens: AtomicU64,
     queue_wait: Mutex<Histogram>,
     gen_latency: Mutex<Histogram>,
+    ttft: Mutex<Histogram>,
+    /// Tokens already generated for requests still in flight (gauge).
+    tokens_in_flight: AtomicU64,
+    /// Target verification dispatches across all workers.
+    dispatches: AtomicU64,
+    /// Σ over dispatches of the sequences each one served (occupancy num).
+    seq_steps: AtomicU64,
+    /// Σ speculated tokens actually allocated / Σ budget offered.
+    budget_used: AtomicU64,
+    budget_total: AtomicU64,
+    /// Virtual hardware-regime seconds consumed, in µs (atomic f64 stand-in).
+    virtual_micros: AtomicU64,
 }
 
 impl Metrics {
@@ -32,6 +44,13 @@ impl Metrics {
             tokens: AtomicU64::new(0),
             queue_wait: Mutex::new(Histogram::new()),
             gen_latency: Mutex::new(Histogram::new()),
+            ttft: Mutex::new(Histogram::new()),
+            tokens_in_flight: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
+            seq_steps: AtomicU64::new(0),
+            budget_used: AtomicU64::new(0),
+            budget_total: AtomicU64::new(0),
+            virtual_micros: AtomicU64::new(0),
         }
     }
 
@@ -52,6 +71,92 @@ impl Metrics {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
         self.gen_latency.lock().unwrap().record(gen_secs);
+    }
+
+    /// Record a request's time-to-first-token (queue wait included).
+    pub fn on_first_token(&self, secs: f64) {
+        self.ttft.lock().unwrap().record(secs);
+    }
+
+    /// Record `dispatches` target dispatches that together served
+    /// `seq_steps` sequence-steps, allocated `used` of `budget` speculated
+    /// tokens, and cost `virtual_secs` regime seconds. The continuous
+    /// batcher calls this once per step with dispatches = 1 and seq_steps =
+    /// the batch size; the FCFS worker calls it once per request with
+    /// dispatches = seq_steps = the engine step count.
+    pub fn on_dispatches(
+        &self,
+        dispatches: u64,
+        seq_steps: u64,
+        used: u64,
+        budget: u64,
+        virtual_secs: f64,
+    ) {
+        self.dispatches.fetch_add(dispatches, Ordering::Relaxed);
+        self.seq_steps.fetch_add(seq_steps, Ordering::Relaxed);
+        self.budget_used.fetch_add(used, Ordering::Relaxed);
+        self.budget_total.fetch_add(budget, Ordering::Relaxed);
+        self.virtual_micros
+            .fetch_add((virtual_secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Adjust the tokens-in-flight gauge as steps emit (`+`) and requests
+    /// retire (`-`).
+    pub fn tokens_in_flight_add(&self, n: u64) {
+        self.tokens_in_flight.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn tokens_in_flight_sub(&self, n: u64) {
+        // Saturating: retire may race a concurrent add on another worker.
+        let _ = self.tokens_in_flight.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |cur| Some(cur.saturating_sub(n)),
+        );
+    }
+
+    pub fn tokens_in_flight(&self) -> u64 {
+        self.tokens_in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Mean sequences served per target dispatch (1.0 for FCFS; > 1 is the
+    /// continuous-batching win).
+    pub fn batch_occupancy(&self) -> f64 {
+        let d = self.dispatches();
+        if d == 0 {
+            0.0
+        } else {
+            self.seq_steps.load(Ordering::Relaxed) as f64 / d as f64
+        }
+    }
+
+    /// Fraction of the offered speculation budget actually allocated.
+    pub fn budget_utilization(&self) -> f64 {
+        let total = self.budget_total.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            self.budget_used.load(Ordering::Relaxed) as f64 / total as f64
+        }
+    }
+
+    /// Virtual hardware-regime seconds consumed across all workers.
+    pub fn virtual_secs(&self) -> f64 {
+        self.virtual_micros.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    /// Tokens per virtual regime second (0 when no regime is configured).
+    pub fn virtual_tokens_per_sec(&self) -> f64 {
+        let v = self.virtual_secs();
+        if v <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens() as f64 / v
+        }
     }
 
     pub fn admitted(&self) -> u64 {
@@ -85,6 +190,7 @@ impl Metrics {
     pub fn snapshot(&self) -> Json {
         let mut qw = self.queue_wait.lock().unwrap().clone();
         let mut gl = self.gen_latency.lock().unwrap().clone();
+        let mut tt = self.ttft.lock().unwrap().clone();
         Json::obj(vec![
             ("admitted", Json::Num(self.admitted() as f64)),
             ("rejected", Json::Num(self.rejected() as f64)),
@@ -96,6 +202,23 @@ impl Metrics {
             ("queue_wait_p99", Json::Num(qw.p99())),
             ("gen_latency_p50", Json::Num(gl.p50())),
             ("gen_latency_p99", Json::Num(gl.p99())),
+            ("ttft_p50", Json::Num(tt.p50())),
+            ("ttft_p99", Json::Num(tt.p99())),
+            (
+                "tokens_in_flight",
+                Json::Num(self.tokens_in_flight() as f64),
+            ),
+            ("dispatches", Json::Num(self.dispatches() as f64)),
+            ("batch_occupancy", Json::Num(self.batch_occupancy())),
+            (
+                "budget_utilization",
+                Json::Num(self.budget_utilization()),
+            ),
+            ("virtual_secs", Json::Num(self.virtual_secs())),
+            (
+                "virtual_tokens_per_sec",
+                Json::Num(self.virtual_tokens_per_sec()),
+            ),
         ])
     }
 }
@@ -123,6 +246,25 @@ mod tests {
         assert_eq!(m.completed(), 1);
         assert_eq!(m.total_tokens(), 128);
         assert_eq!(m.queue_depth(), 1);
+    }
+
+    #[test]
+    fn scheduler_gauges_flow() {
+        let m = Metrics::new();
+        // one continuous step serving 4 seqs on a budget of 32, then one
+        // FCFS request of 10 engine steps at tree budget 8
+        m.on_dispatches(1, 4, 24, 32, 0.0225);
+        m.on_dispatches(10, 10, 60, 80, 0.3);
+        assert_eq!(m.dispatches(), 11);
+        assert!((m.batch_occupancy() - 14.0 / 11.0).abs() < 1e-9);
+        assert!((m.budget_utilization() - 84.0 / 112.0).abs() < 1e-9);
+        assert!((m.virtual_secs() - 0.3225).abs() < 1e-4);
+        m.on_first_token(0.2);
+        m.tokens_in_flight_add(12);
+        m.tokens_in_flight_sub(5);
+        assert_eq!(m.tokens_in_flight(), 7);
+        m.tokens_in_flight_sub(100); // saturates, never wraps
+        assert_eq!(m.tokens_in_flight(), 0);
     }
 
     #[test]

@@ -1,5 +1,10 @@
-//! Serving coordinator: bounded admission queue → FCFS scheduler → worker
+//! Serving coordinator: bounded admission queue → scheduler → worker
 //! threads running speculative engines → response routing + metrics.
+//!
+//! The scheduler is config-selectable (`scheduler = fcfs | continuous`):
+//! FCFS runs one request per worker to completion; continuous runs a
+//! step-level batcher per worker that multiplexes sequences into shared
+//! verification dispatches (see `sched/`).
 //!
 //! Each worker owns its own (draft, target) model pair — PJRT handles are
 //! not `Send`, so the model *factory* crosses the thread boundary and the
@@ -168,6 +173,54 @@ mod tests {
         }
         assert!(coord.metrics.rejected() >= 1);
         coord.shutdown();
+    }
+
+    fn continuous_cfg(max_active: usize, capacity: usize) -> Config {
+        let mut cfg = test_cfg(1, capacity);
+        cfg.sched.kind = crate::config::SchedKind::Continuous;
+        cfg.sched.max_active = max_active;
+        cfg.sched.idle_tick_ms = 5;
+        cfg
+    }
+
+    #[test]
+    fn continuous_serves_concurrent_requests_on_one_worker() {
+        let coord =
+            Coordinator::start(continuous_cfg(8, 32), sim_factory(0.5));
+        let rxs: Vec<_> = (0..8)
+            .map(|i| coord.try_submit(vec![1 + i, 2, 3], 12, 0.6).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.tokens.len(), 12);
+            assert!(resp.emitted_per_step >= 1.0);
+        }
+        assert_eq!(coord.metrics.completed(), 8);
+        assert_eq!(coord.metrics.total_tokens(), 8 * 12);
+        // the whole point: dispatches served more than one sequence each
+        assert!(
+            coord.metrics.batch_occupancy() > 1.0,
+            "occupancy {} not batched",
+            coord.metrics.batch_occupancy()
+        );
+        assert_eq!(coord.metrics.tokens_in_flight(), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn continuous_shutdown_drains_in_flight_sequences() {
+        let coord =
+            Coordinator::start(continuous_cfg(8, 32), sim_factory(0.5));
+        let rxs: Vec<_> = (0..6)
+            .map(|i| coord.try_submit(vec![9 + i, 8, 7], 16, 0.6).unwrap())
+            .collect();
+        // Shut down immediately: in-flight + queued sequences must still
+        // complete (the batcher drains instead of dropping).
+        coord.shutdown();
+        for rx in rxs {
+            let resp = rx.recv().expect("request dropped during shutdown");
+            assert_eq!(resp.tokens.len(), 16);
+        }
     }
 
     #[test]

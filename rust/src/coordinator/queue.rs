@@ -29,6 +29,15 @@ pub struct Response {
     pub queue_secs: f64,
     /// Seconds of engine time.
     pub gen_secs: f64,
+    /// Seconds from submission to the first emitted token (queue wait
+    /// included) — the serving-layer TTFT.
+    pub ttft_secs: f64,
+    /// Virtual hardware-regime seconds this request experienced (sum of
+    /// the step costs of every dispatch it took part in; 0 without a
+    /// regime). Under continuous batching a dispatch's cost is shared by
+    /// all co-batched sequences, so this is the per-request latency the
+    /// serving bench compares across schedulers.
+    pub virtual_secs: f64,
 }
 
 /// Sender half (held by the coordinator/server).

@@ -1,6 +1,16 @@
-//! Worker loop: pull requests FCFS from the shared queue, run the
-//! speculative engine, send responses. One engine (and model pair) per
-//! worker thread, constructed via the `ModelFactory`.
+//! Worker loop. Each worker owns one (draft, target) model pair built via
+//! the `ModelFactory` and serves the shared queue with the configured
+//! scheduler:
+//!
+//!   - `scheduler = fcfs` — pull one request at a time and run the
+//!     speculative engine to completion (the classic loop);
+//!   - `scheduler = continuous` — run a step-level batcher that multiplexes
+//!     up to `sched.max_active` sequences per target dispatch
+//!     (`sched::Batcher`).
+//!
+//! Both poll the queue with `sched.idle_tick_ms` while idle so shutdown is
+//! observed, and both drain: FCFS finishes the buffered queue before
+//! exiting, the batcher additionally finishes every in-flight sequence.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -9,9 +19,11 @@ use std::time::{Duration, Instant};
 use super::metrics::Metrics;
 use super::queue::{Request, Response};
 use super::ModelFactory;
-use crate::config::Config;
+use crate::config::{Config, SchedKind};
 use crate::engine::SpecEngine;
 use crate::log_debug;
+use crate::models::LogitModel;
+use crate::sched::Batcher;
 
 pub fn run_worker(
     wid: usize,
@@ -22,15 +34,36 @@ pub fn run_worker(
     shutdown: Arc<AtomicBool>,
 ) {
     let (draft, target) = factory();
+    match cfg.sched.kind {
+        SchedKind::Continuous => {
+            let mut batcher = Batcher::new(wid, cfg, draft, target, metrics);
+            batcher.run(&rx, &shutdown);
+        }
+        SchedKind::Fcfs => {
+            run_fcfs(wid, cfg, draft, target, rx, metrics, shutdown)
+        }
+    }
+}
+
+fn run_fcfs(
+    wid: usize,
+    cfg: Config,
+    draft: Box<dyn LogitModel>,
+    target: Box<dyn LogitModel>,
+    rx: Arc<Mutex<mpsc::Receiver<Request>>>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+) {
     let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime);
-    log_debug!("worker {wid} up (policy={})", cfg.engine.policy);
+    let idle = Duration::from_millis(cfg.sched.idle_tick_ms.max(1));
+    log_debug!("worker {wid} up (fcfs, policy={})", cfg.engine.policy);
 
     loop {
-        // Pull one request; poll with timeout so shutdown is observed even
-        // while the queue is idle.
+        // Pull one request; poll with the idle tick so shutdown is observed
+        // even while the queue is empty.
         let req = {
             let guard = rx.lock().expect("queue receiver poisoned");
-            guard.recv_timeout(Duration::from_millis(50))
+            guard.recv_timeout(idle)
         };
         match req {
             Ok(req) => {
@@ -44,7 +77,23 @@ pub fn run_worker(
                 let stats = engine.generate(&req.prompt);
                 let gen_secs = t.elapsed().as_secs_f64();
 
+                // TTFT = queue wait + the first engine step's wall time.
+                let ttft_secs = queue_secs
+                    + stats.steps.first().map(|s| s.times.total()).unwrap_or(0.0);
+                metrics.on_first_token(ttft_secs);
+                let virtual_secs = stats.total_virtual_secs();
+                let spec_tokens: u64 =
+                    stats.steps.iter().map(|s| s.tree_size as u64).sum();
+                let steps = stats.steps.len() as u64;
+                metrics.on_dispatches(
+                    steps,
+                    steps, // occupancy 1: each dispatch serves one sequence
+                    spec_tokens,
+                    steps * cfg.engine.tree_budget as u64,
+                    virtual_secs,
+                );
                 metrics.on_completed(stats.tokens.len(), gen_secs);
+
                 let resp = Response {
                     id: req.id,
                     worker: wid,
@@ -53,6 +102,8 @@ pub fn run_worker(
                     tokens: stats.tokens,
                     queue_secs,
                     gen_secs,
+                    ttft_secs,
+                    virtual_secs,
                 };
                 // Receiver may have given up; that's fine.
                 let _ = req.respond.send(resp);

@@ -21,6 +21,11 @@ use crate::util::Rng;
 
 /// A pending sampling: "draw the next child of `node` from `sampler`".
 ///
+/// KEEP IN SYNC with `sched::budget` — the continuous batcher's
+/// cross-sequence allocator replicates this heap algebra with a sequence
+/// tag, pinned bit-exact by `rust/tests/scheduler.rs`; fixes to the
+/// pop/draw/push logic must land in both places.
+///
 /// PERF (§Perf L3.1, "lazy drafting"): first-child candidates are pushed
 /// WITHOUT a sampler; the draft model scores the node only when the
 /// candidate is actually popped. Nodes that never get expanded (roughly

@@ -11,48 +11,12 @@ pub use stats::{GenerationStats, StepStats};
 
 use crate::config::{EngineConfig, LatencyRegime, PolicyKind};
 use crate::draft::{make_policy, TreePolicy};
-use crate::models::LogitModel;
+use crate::models::{LogitModel, TimedModel};
 use crate::sampling::{dist_from_logits, sample};
 use crate::tree::dfs_order;
 use crate::util::timer::Timer;
 use crate::util::Rng;
 use crate::verify::{row_map, verify_tree};
-
-/// Wraps the draft model to attribute inference time separately from the
-/// tree-construction logic around it (Fig 4's component split).
-struct TimedDraft<'a> {
-    inner: &'a mut dyn LogitModel,
-    secs: f64,
-    dispatches_before: u64,
-}
-
-impl<'a> TimedDraft<'a> {
-    fn new(inner: &'a mut dyn LogitModel) -> Self {
-        let dispatches_before = inner.call_counts().dispatches;
-        Self {
-            inner,
-            secs: 0.0,
-            dispatches_before,
-        }
-    }
-
-    fn dispatches(&self) -> u64 {
-        self.inner.call_counts().dispatches - self.dispatches_before
-    }
-}
-
-impl LogitModel for TimedDraft<'_> {
-    fn vocab(&self) -> usize {
-        self.inner.vocab()
-    }
-
-    fn next_logits(&mut self, ctx: &[u32]) -> Vec<f32> {
-        let t = Timer::start();
-        let out = self.inner.next_logits(ctx);
-        self.secs += t.elapsed_secs();
-        out
-    }
-}
 
 /// Speculative decoding engine over a (draft, target) model pair.
 pub struct SpecEngine {
@@ -129,7 +93,7 @@ impl SpecEngine {
         // --- draft tree construction (Fig 4: "tree construction" + "draft") ---
         let t_build = Timer::start();
         let (tree, draft_secs, draft_dispatches) = {
-            let mut timed = TimedDraft::new(self.draft.as_mut());
+            let mut timed = TimedModel::new(self.draft.as_mut());
             let tree = self
                 .policy
                 .build(&mut timed, ctx, &self.cfg, &mut self.rng);

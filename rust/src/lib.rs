@@ -9,7 +9,8 @@
 //!   baselines), unbiased multi-branch verification ([`verify`],
 //!   Algorithm 3), the speculative decoding engine ([`engine`]), tree
 //!   attention masks + block-sparsity reorders ([`tree`], Appendix C), and
-//!   a request router / continuous batcher ([`coordinator`], [`server`]).
+//!   a request router with a step-level continuous-batching scheduler
+//!   ([`coordinator`], [`sched`], [`server`]).
 //! - **L2** — a JAX transformer (`python/compile/model.py`), AOT-lowered to
 //!   HLO text and executed from rust via PJRT ([`runtime`], [`models::hlo`]).
 //! - **L1** — a Pallas block-sparse tree-attention kernel
@@ -29,6 +30,7 @@ pub mod engine;
 pub mod models;
 pub mod runtime;
 pub mod sampling;
+pub mod sched;
 pub mod server;
 pub mod tree;
 pub mod util;

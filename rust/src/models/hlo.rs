@@ -5,8 +5,9 @@
 //! forward over prefix + speculated tokens with a tree attention mask,
 //! returning per-node logits in a single dispatch.
 
-use anyhow::{Context, Result};
 use std::rc::Rc;
+
+use crate::util::error::{Context, Result};
 
 use super::{CallCounts, LogitModel};
 use crate::runtime::artifacts::{Artifacts, GraphKey, Role};

@@ -12,6 +12,62 @@ pub mod sim;
 
 use crate::tree::{NodeId, TokenTree};
 
+/// Wraps a model to attribute inference wall time separately from the
+/// logic around it. Both virtual-latency ledgers go through this — the
+/// engine's FCFS path (Fig-4 component split) and the continuous
+/// batcher's — so "model time billed at regime rates, logic at measured
+/// wall time" stays one definition, not two copies.
+pub struct TimedModel<'a> {
+    inner: &'a mut dyn LogitModel,
+    /// Accumulated `next_logits` wall seconds.
+    pub secs: f64,
+    dispatches_before: u64,
+}
+
+impl<'a> TimedModel<'a> {
+    pub fn new(inner: &'a mut dyn LogitModel) -> Self {
+        let dispatches_before = inner.call_counts().dispatches;
+        Self {
+            inner,
+            secs: 0.0,
+            dispatches_before,
+        }
+    }
+
+    /// Dispatches recorded on the inner model since construction.
+    pub fn dispatches(&self) -> u64 {
+        self.inner.call_counts().dispatches - self.dispatches_before
+    }
+}
+
+impl LogitModel for TimedModel<'_> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn next_logits(&mut self, ctx: &[u32]) -> Vec<f32> {
+        let t = crate::util::Timer::start();
+        let out = self.inner.next_logits(ctx);
+        self.secs += t.elapsed_secs();
+        out
+    }
+
+    fn call_counts(&self) -> CallCounts {
+        self.inner.call_counts()
+    }
+}
+
+/// One sequence's slice of a batched (multi-root) verification dispatch:
+/// its context, its speculated tree, and the verification order the rows
+/// are laid out in. `tree::forest::ForestLayout` maps a `&[ForestItem]` to
+/// row offsets and the packed attention mask for backends that execute the
+/// whole batch as one masked forward.
+pub struct ForestItem<'a> {
+    pub prefix: &'a [u32],
+    pub tree: &'a TokenTree,
+    pub order: &'a [NodeId],
+}
+
 /// Per-model call accounting, consumed by the latency regimes: the paper's
 /// cost model (§4.3) is `N·T_d + T_t` per step for greedy construction and
 /// `D·T_d + T_t` for layered construction, so we track both call units.
@@ -64,6 +120,21 @@ pub trait LogitModel {
             out.push(self.next_logits(&ctx));
         }
         out
+    }
+
+    /// Score many (prefix, tree) groups in one batched verification
+    /// dispatch — the continuous batcher's entry point. Returns, per item,
+    /// the same row layout as [`LogitModel::score_tree`] (row 0 = root).
+    ///
+    /// Default implementation scores items sequentially, which is exact for
+    /// any causal backend; batched backends override it with a single
+    /// multi-root forward over the `tree::forest` mask layout so the whole
+    /// active set costs one accelerator dispatch.
+    fn score_forest(&mut self, items: &[ForestItem<'_>]) -> Vec<Vec<Vec<f32>>> {
+        items
+            .iter()
+            .map(|it| self.score_tree(it.prefix, it.tree, it.order))
+            .collect()
     }
 
     /// Dispatch/position counters since construction (see `CallCounts`).
@@ -124,5 +195,29 @@ mod tests {
         // row for c (ctx ...2,5): successor 6
         assert_eq!(crate::util::math::argmax(&rows[3]), 6);
         assert_eq!(m.call_counts().dispatches, 4);
+    }
+
+    #[test]
+    fn default_score_forest_matches_per_item_score_tree() {
+        let mut m = Succ {
+            vocab: 8,
+            counts: CallCounts::default(),
+        };
+        let mut t1 = TokenTree::new(2, vec![]);
+        let a = t1.add_child(ROOT, 3, 0.9);
+        let o1 = vec![a];
+        let t2 = TokenTree::new(5, vec![]);
+        let o2: Vec<usize> = vec![];
+        let items = [
+            ForestItem { prefix: &[1, 2], tree: &t1, order: &o1 },
+            ForestItem { prefix: &[4, 5], tree: &t2, order: &o2 },
+        ];
+        let batched = m.score_forest(&items);
+        assert_eq!(batched.len(), 2);
+        assert_eq!(batched[0].len(), 2); // root + node a
+        assert_eq!(batched[1].len(), 1); // bare root row
+        assert_eq!(crate::util::math::argmax(&batched[0][0]), 3);
+        assert_eq!(crate::util::math::argmax(&batched[0][1]), 4);
+        assert_eq!(crate::util::math::argmax(&batched[1][0]), 6);
     }
 }

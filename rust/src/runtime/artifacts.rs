@@ -2,9 +2,10 @@
 //! `python/compile/aot.py`), exposes graph/weight paths, loads weight blobs,
 //! and verifies the build is complete before the runtime touches PJRT.
 
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+use crate::bail;
+use crate::util::error::{Context, Error, Result};
 use crate::util::json::{parse, Json};
 
 /// Which compiled graph to load.
@@ -55,7 +56,8 @@ impl Artifacts {
                 meta_path.display()
             )
         })?;
-        let meta = parse(&text).map_err(|e| anyhow::anyhow!("parsing meta.json: {e}"))?;
+        let meta = parse(&text)
+            .map_err(|e| Error::msg(format!("parsing meta.json: {e}")))?;
         Ok(Self { dir, meta })
     }
 
@@ -181,7 +183,7 @@ impl Artifacts {
         let path = self.dir.join("golden.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        parse(&text).map_err(|e| anyhow::anyhow!("parsing golden.json: {e}"))
+        parse(&text).map_err(|e| Error::msg(format!("parsing golden.json: {e}")))
     }
 }
 

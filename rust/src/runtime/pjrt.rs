@@ -1,0 +1,120 @@
+//! Real PJRT execution via the `xla` (xla-rs) crate. Compiled only with
+//! `--features pjrt`; add the `xla` dependency to Cargo.toml when enabling
+//! (kept out of the manifest so the default build resolves offline).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::artifacts::{Artifacts, GraphKey};
+use crate::ensure;
+use crate::util::error::{Context, Result};
+
+/// Shared PJRT CPU client + compiled-executable cache.
+///
+/// NOT `Send`: PJRT handles are raw pointers. Each serving worker thread
+/// builds its own runtime (the client is cheap; compilation is the cost and
+/// happens once per worker at startup).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    compiled: HashMap<GraphKey, Rc<CompiledModel>>,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) a model graph and pre-upload its weights.
+    pub fn load(&mut self, arts: &Artifacts, key: GraphKey) -> Result<Rc<CompiledModel>> {
+        if !self.compiled.contains_key(&key) {
+            let model = CompiledModel::compile(&self.client, arts, key)?;
+            self.compiled.insert(key, Rc::new(model));
+        }
+        Ok(self.compiled[&key].clone())
+    }
+}
+
+/// One compiled forward graph with resident weight buffers.
+///
+/// Signature (fixed by python/compile/model.py::make_forward_fn):
+///   (*weights, tokens i32[S], positions i32[S], mask f32[S,S])
+///     -> (logits f32[S, V],)
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight buffers, uploaded once at load time (never per call).
+    param_bufs: Vec<xla::PjRtBuffer>,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl CompiledModel {
+    fn compile(client: &xla::PjRtClient, arts: &Artifacts, key: GraphKey) -> Result<Self> {
+        let path = arts.graph_path(key)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+
+        // Upload weights once.
+        let table = arts.param_table(key.role)?;
+        let flat = arts.load_params(key.role)?;
+        let mut param_bufs = Vec::with_capacity(table.len());
+        for entry in &table {
+            let data = &flat[entry.offset..entry.offset + entry.size];
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, &entry.shape, None)
+                .with_context(|| format!("uploading weight {}", entry.name))?;
+            param_bufs.push(buf);
+        }
+        Ok(Self {
+            exe,
+            param_bufs,
+            seq_len: key.seq_len,
+            vocab: arts.vocab_size(),
+        })
+    }
+
+    /// Run the forward pass; returns row-major [seq_len * vocab] logits.
+    pub fn forward(&self, tokens: &[i32], positions: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+        let s = self.seq_len;
+        ensure!(tokens.len() == s, "tokens len {} != {s}", tokens.len());
+        ensure!(positions.len() == s, "positions len {}", positions.len());
+        ensure!(mask.len() == s * s, "mask len {}", mask.len());
+        let client = self.exe.client();
+        let tok = client
+            .buffer_from_host_buffer::<i32>(tokens, &[s], None)
+            .context("uploading tokens")?;
+        let pos = client
+            .buffer_from_host_buffer::<i32>(positions, &[s], None)
+            .context("uploading positions")?;
+        let msk = client
+            .buffer_from_host_buffer::<f32>(mask, &[s, s], None)
+            .context("uploading mask")?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&tok);
+        args.push(&pos);
+        args.push(&msk);
+        let result = self.exe.execute_b(&args).context("executing graph")?;
+        let lit = result[0][0].to_literal_sync().context("fetching result")?;
+        let out = lit.to_tuple1().context("unpacking tuple")?;
+        let logits = out.to_vec::<f32>().context("reading logits")?;
+        ensure!(
+            logits.len() == s * self.vocab,
+            "unexpected logits len {}",
+            logits.len()
+        );
+        Ok(logits)
+    }
+}

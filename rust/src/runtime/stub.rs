@@ -1,0 +1,66 @@
+//! Hermetic stand-in for the PJRT runtime (built when the `pjrt` feature
+//! is off). Same API surface as `runtime::pjrt`; every entry point that
+//! would touch an accelerator returns a descriptive error instead, so the
+//! sim-backend serving stack, benches and tests build offline with zero
+//! external crates.
+
+use std::rc::Rc;
+
+use super::artifacts::{Artifacts, GraphKey};
+use crate::bail;
+use crate::util::error::Result;
+
+const UNAVAILABLE: &str = "PJRT backend not compiled in: rebuild with \
+`--features pjrt` (requires the xla-rs crate and an XLA/PJRT CPU plugin; \
+see runtime/mod.rs). The `sim` backend needs no artifacts or PJRT.";
+
+/// Stub PJRT client/executable cache — construction always fails.
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load(
+        &mut self,
+        _arts: &Artifacts,
+        _key: GraphKey,
+    ) -> Result<Rc<CompiledModel>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Stub compiled graph; `forward` always fails.
+pub struct CompiledModel {
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl CompiledModel {
+    pub fn forward(
+        &self,
+        _tokens: &[i32],
+        _positions: &[i32],
+        _mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = PjrtRuntime::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

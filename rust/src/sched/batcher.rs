@@ -1,0 +1,466 @@
+//! Step-level continuous batcher.
+//!
+//! Each iteration of [`Batcher::run`]:
+//!   1. admits new requests from the shared queue up to `sched.max_active`;
+//!   2. asks the budget allocator for one speculated tree per sequence,
+//!      spending the GLOBAL per-dispatch token budget greedily across
+//!      sequences by estimated acceptance (`sched::budget`);
+//!   3. packs every sequence's tree (plus bare root rows for draining
+//!      sequences) into ONE batched target verification
+//!      (`models::LogitModel::score_forest`);
+//!   4. walks each sequence's accept/reject outcome, emits tokens, and
+//!      advances its state machine (`sched::sequence`).
+//!
+//! One target dispatch therefore serves the whole active set — under the
+//! paper's hardware-regime accounting that is the continuous-batching
+//! throughput win, measured by `bench --experiment serve`.
+//!
+//! Shutdown drains: the loop only exits once the queue is disconnected AND
+//! every in-flight sequence reached `Done`, so closing the coordinator
+//! never drops accepted work.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::{Config, PolicyKind};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::Request;
+use crate::draft::{make_policy, TreePolicy};
+use crate::log_debug;
+use crate::models::{ForestItem, LogitModel, TimedModel};
+use crate::sampling::dist_from_logits;
+use crate::sched::budget::{build_forest, build_forest_fair, ForestAlloc};
+use crate::sched::sequence::Sequence;
+use crate::tree::{dfs_order, NodeId, TokenTree};
+use crate::util::timer::Timer;
+use crate::util::Rng;
+use crate::verify::{row_map, verify_tree};
+
+/// What one scheduler step did — consumed by metrics and the invariant
+/// tests in `rust/tests/scheduler.rs`.
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    /// Sequences in the dispatch.
+    pub active: usize,
+    /// Global speculation budget offered this step.
+    pub global_budget: usize,
+    /// Per-sequence speculated tokens allocated (aligned with the active
+    /// set at the start of the step).
+    pub allocated: Vec<usize>,
+    /// Per-sequence tokens emitted this step (same alignment).
+    pub emitted: Vec<usize>,
+    pub draft_dispatches: u64,
+    /// Virtual regime cost of the step (one shared target dispatch).
+    pub virtual_secs: f64,
+    /// Sequences that finished (responses sent) this step.
+    pub completed: usize,
+}
+
+/// A continuous batcher bound to one worker's model pair.
+pub struct Batcher {
+    wid: usize,
+    pub cfg: Config,
+    draft: Box<dyn LogitModel>,
+    target: Box<dyn LogitModel>,
+    /// Fair-split construction for non-greedy policies.
+    policy: Box<dyn TreePolicy>,
+    metrics: Arc<Metrics>,
+    seqs: Vec<Sequence>,
+    seed_salt: u64,
+}
+
+impl Batcher {
+    pub fn new(
+        wid: usize,
+        cfg: Config,
+        draft: Box<dyn LogitModel>,
+        target: Box<dyn LogitModel>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let policy = make_policy(cfg.engine.policy);
+        let seed_salt = cfg.engine.seed ^ 0x5EED_BA7C_0000_0001;
+        Self {
+            wid,
+            cfg,
+            draft,
+            target,
+            policy,
+            metrics,
+            seqs: Vec::new(),
+            seed_salt,
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn capacity_left(&self) -> usize {
+        self.cfg.sched.max_active.max(1).saturating_sub(self.seqs.len())
+    }
+
+    /// Admit one request into the active set.
+    pub fn admit(&mut self, req: Request) {
+        let seq = Sequence::new(req, self.seed_salt);
+        self.metrics.on_started(seq.queue_secs);
+        self.seqs.push(seq);
+    }
+
+    /// The shared per-dispatch speculation budget when `n_spec` sequences
+    /// want speculation: the configured global budget (default: the
+    /// single-request tree budget), never below one token per sequence.
+    fn global_budget(&self, n_spec: usize) -> usize {
+        let base = if self.cfg.sched.global_budget > 0 {
+            self.cfg.sched.global_budget
+        } else {
+            self.cfg.engine.tree_budget
+        };
+        base.max(n_spec)
+    }
+
+    /// One scheduler iteration over the current active set. No-op when the
+    /// active set is empty.
+    pub fn step(&mut self) -> StepReport {
+        let mut report = StepReport::default();
+        let n = self.seqs.len();
+        if n == 0 {
+            return report;
+        }
+        report.active = n;
+        let metrics = self.metrics.clone();
+        let draft_before = self.draft.call_counts().dispatches;
+
+        // --- cross-request budget allocation + tree construction ---
+        let spec_idx: Vec<usize> = (0..n)
+            .filter(|&i| self.seqs[i].wants_speculation())
+            .collect();
+        let budget = if spec_idx.is_empty() {
+            0
+        } else {
+            self.global_budget(spec_idx.len())
+        };
+        report.global_budget = budget;
+
+        let t_build = Timer::start();
+        let (alloc, draft_wall_secs): (ForestAlloc, f64) = {
+            // Rngs are cloned out and written back: the allocator needs
+            // them mutably while the prefixes borrow the sequences.
+            let mut rngs: Vec<Rng> = spec_idx
+                .iter()
+                .map(|&i| self.seqs[i].rng.clone())
+                .collect();
+            let prefixes: Vec<&[u32]> = spec_idx
+                .iter()
+                .map(|&i| self.seqs[i].ctx.as_slice())
+                .collect();
+            // Split inference wall time out of construction logic, exactly
+            // like the engine's FCFS ledger — model time is billed at
+            // regime rates below, never wall time.
+            let mut timed = TimedModel::new(self.draft.as_mut());
+            let alloc = if self.cfg.engine.policy == PolicyKind::DySpec {
+                build_forest(
+                    &mut timed,
+                    &prefixes,
+                    &mut rngs,
+                    &self.cfg.engine,
+                    budget,
+                )
+            } else {
+                build_forest_fair(
+                    self.policy.as_ref(),
+                    &mut timed,
+                    &prefixes,
+                    &mut rngs,
+                    &self.cfg.engine,
+                    budget,
+                )
+            };
+            let draft_wall_secs = timed.secs;
+            drop(prefixes);
+            for (k, &i) in spec_idx.iter().enumerate() {
+                self.seqs[i].rng = rngs[k].clone();
+            }
+            (alloc, draft_wall_secs)
+        };
+        let build_secs = t_build.elapsed_secs();
+        report.draft_dispatches =
+            self.draft.call_counts().dispatches - draft_before;
+
+        // Align trees with the full active set; draining sequences get a
+        // bare root row (no speculation, still >= 1 emitted token).
+        let mut trees: Vec<TokenTree> = Vec::with_capacity(n);
+        let mut alloc_by_seq = vec![0usize; n];
+        {
+            let mut built = alloc.trees.into_iter();
+            let mut spec_pos = 0usize;
+            for (i, row) in alloc_by_seq.iter_mut().enumerate() {
+                if spec_pos < spec_idx.len() && spec_idx[spec_pos] == i {
+                    let tree = built.next().expect("allocator arity");
+                    *row = tree.size();
+                    trees.push(tree);
+                    spec_pos += 1;
+                } else {
+                    let last = *self.seqs[i].ctx.last().expect("empty ctx");
+                    trees.push(TokenTree::new(last, Vec::new()));
+                }
+            }
+        }
+        report.allocated = alloc_by_seq.clone();
+        let orders: Vec<Vec<NodeId>> =
+            trees.iter().map(dfs_order).collect();
+
+        // --- ONE batched target dispatch for the whole active set ---
+        let all_rows = {
+            let items: Vec<ForestItem<'_>> = (0..n)
+                .map(|i| ForestItem {
+                    prefix: &self.seqs[i].ctx,
+                    tree: &trees[i],
+                    order: &orders[i],
+                })
+                .collect();
+            self.target.score_forest(&items)
+        };
+
+        // --- per-sequence verification + state advance ---
+        let t_verify = Timer::start();
+        let mut finished: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let seq = &mut self.seqs[i];
+            let dists: Vec<Vec<f32>> = all_rows[i]
+                .iter()
+                .map(|r| dist_from_logits(r, seq.temperature))
+                .collect();
+            let row_of = row_map(&trees[i], &orders[i]);
+            let out = verify_tree(&trees[i], &dists, &row_of, &mut seq.rng);
+            let mut tokens = out.accepted;
+            tokens.push(out.bonus);
+            report.emitted.push(tokens.len().min(seq.remaining()));
+            let done = seq.on_step(tokens, alloc_by_seq[i]);
+            if seq.steps == 1 {
+                if let Some(t) = seq.ttft_secs {
+                    metrics.on_first_token(t);
+                }
+            }
+            if done {
+                finished.push(i);
+            }
+        }
+        let verify_secs = t_verify.elapsed_secs();
+
+        let used: usize = alloc_by_seq.iter().sum();
+
+        // Virtual regime accounting, mirroring the engine's FCFS ledger
+        // (engine/mod.rs): model inference is billed at regime rates ONLY
+        // (wall time excluded via TimedModel; target wall never billed),
+        // pure scheduling/verification logic at measured wall time. The
+        // shared target dispatch is billed in ceil(spec_tokens /
+        // verify_width) units: per-sequence root rows ride free exactly as
+        // the single root row does in the engine's one-unit step, so a
+        // single-sequence continuous step bills identically to FCFS, and
+        // packing more SPECULATED tokens than the width the regime's step
+        // time was calibrated at costs proportionally more.
+        let construct_secs = (build_secs - draft_wall_secs).max(0.0);
+        let virt = self
+            .cfg
+            .regime
+            .map(|r| {
+                let units = if r.verify_width == usize::MAX || used == 0 {
+                    1
+                } else {
+                    ((used + r.verify_width - 1) / r.verify_width.max(1)).max(1)
+                };
+                r.draft_step_secs * report.draft_dispatches as f64
+                    + r.target_step_secs * units as f64
+                    + construct_secs
+                    + verify_secs
+            })
+            .unwrap_or(0.0);
+        report.virtual_secs = virt;
+        for seq in &mut self.seqs {
+            seq.virtual_secs += virt;
+        }
+
+        let emitted_total: usize = report.emitted.iter().sum();
+        metrics.on_dispatches(1, n as u64, used as u64, budget as u64, virt);
+        metrics.tokens_in_flight_add(emitted_total as u64);
+
+        // Retire finished sequences (largest index first keeps the
+        // remaining swap_remove indices valid).
+        for &i in finished.iter().rev() {
+            let seq = self.seqs.swap_remove(i);
+            let (tx, resp) = seq.into_response(self.wid);
+            metrics.tokens_in_flight_sub(resp.tokens.len() as u64);
+            metrics.on_completed(resp.tokens.len(), resp.gen_secs);
+            report.completed += 1;
+            // Receiver may have given up; that's fine.
+            let _ = tx.send(resp);
+        }
+        report
+    }
+
+    /// Serve the shared queue until shutdown is requested AND every
+    /// in-flight sequence has drained.
+    pub fn run(
+        &mut self,
+        rx: &Mutex<mpsc::Receiver<Request>>,
+        shutdown: &AtomicBool,
+    ) {
+        let idle = Duration::from_millis(self.cfg.sched.idle_tick_ms.max(1));
+        log_debug!(
+            "worker {} batcher up (policy={}, max_active={})",
+            self.wid,
+            self.cfg.engine.policy,
+            self.cfg.sched.max_active
+        );
+        loop {
+            // Admit up to capacity without blocking the active set.
+            let mut disconnected = false;
+            while self.capacity_left() > 0 {
+                let pulled = {
+                    let guard = rx.lock().expect("queue receiver poisoned");
+                    guard.try_recv()
+                };
+                match pulled {
+                    Ok(req) => self.admit(req),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+            if self.seqs.is_empty() {
+                if disconnected {
+                    break;
+                }
+                // Idle: block for one request or a shutdown-poll tick.
+                let pulled = {
+                    let guard = rx.lock().expect("queue receiver poisoned");
+                    guard.recv_timeout(idle)
+                };
+                match pulled {
+                    Ok(req) => self.admit(req),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+                continue;
+            }
+            // In-flight sequences always progress — shutdown drains,
+            // never drops.
+            self.step();
+        }
+        log_debug!("worker {} batcher down", self.wid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::Response;
+    use crate::models::sim::{SimModel, SimSpec};
+    use std::time::Instant;
+
+    fn mk_batcher(max_active: usize, budget: usize) -> Batcher {
+        let mut cfg = Config::new();
+        cfg.engine.tree_budget = 8;
+        cfg.engine.target_temp = 0.6;
+        cfg.sched.max_active = max_active;
+        cfg.sched.global_budget = budget;
+        let (d, t) = SimModel::pair(SimSpec::new(64, 2.0, 0.8, 11));
+        Batcher::new(
+            0,
+            cfg,
+            Box::new(d),
+            Box::new(t),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    fn mk_request(
+        id: u64,
+        max_new: usize,
+    ) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                prompt: vec![id as u32 + 1, 2, 3],
+                max_new_tokens: max_new,
+                temperature: 0.6,
+                submitted_at: Instant::now(),
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn steps_multiple_sequences_to_completion() {
+        let mut b = mk_batcher(8, 16);
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                let (req, rx) = mk_request(i + 1, 12);
+                b.admit(req);
+                rx
+            })
+            .collect();
+        assert_eq!(b.active(), 4);
+        let mut guard = 0;
+        while b.active() > 0 {
+            let report = b.step();
+            assert_eq!(report.emitted.len(), report.active);
+            // every sequence in the dispatch makes progress
+            assert!(report.emitted.iter().all(|&e| e >= 1));
+            guard += 1;
+            assert!(guard <= 4 * 12, "batcher failed to converge");
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.tokens.len(), 12);
+            assert!(resp.steps >= 1);
+            assert!(resp.ttft_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_step_is_noop() {
+        let mut b = mk_batcher(4, 8);
+        let report = b.step();
+        assert_eq!(report.active, 0);
+        assert_eq!(report.completed, 0);
+    }
+
+    #[test]
+    fn drain_state_takes_no_budget() {
+        let mut b = mk_batcher(4, 16);
+        let (req, rx) = mk_request(1, 1); // one token: Drain from the start
+        b.admit(req);
+        let report = b.step();
+        assert_eq!(report.global_budget, 0);
+        assert_eq!(report.allocated, vec![0]);
+        assert_eq!(report.emitted, vec![1]);
+        assert_eq!(rx.recv().unwrap().tokens.len(), 1);
+        assert_eq!(b.active(), 0);
+    }
+
+    #[test]
+    fn metrics_see_batched_dispatches() {
+        let mut b = mk_batcher(8, 12);
+        let _rxs: Vec<_> = (0..3)
+            .map(|i| {
+                let (req, rx) = mk_request(i + 1, 6);
+                b.admit(req);
+                rx
+            })
+            .collect();
+        b.step();
+        let m = b.metrics.clone();
+        assert_eq!(m.dispatches(), 1);
+        assert!(m.batch_occupancy() >= 3.0 - 1e-9);
+    }
+}

@@ -1,0 +1,323 @@
+//! Cross-request greedy budget allocation — the scheduler's core rule.
+//!
+//! DySpec's Algorithm 1 greedily expands the single candidate sampling with
+//! the highest estimated acceptance; the exchange argument behind its
+//! optimality (paper Appendix D) never uses the fact that candidates come
+//! from one sequence, so the same rule extends verbatim across sequences:
+//! one max-heap holds candidate samplings from EVERY active sequence, and
+//! each pop spends one token of the shared per-dispatch budget on the
+//! globally best frontier node. With a single sequence this reduces exactly
+//! to `draft::dyspec::DySpecPolicy::build` (same heap algebra, same rng
+//! stream) — pinned by `rust/tests/scheduler.rs`.
+//!
+//! Fairness comes for free: every sequence's first sampling enters the heap
+//! with estimate 1.0 and ties break FIFO, so the first `n` pops hand one
+//! token to each of the `n` sequences before any sequence receives its
+//! second. With `global_budget >= n` no sequence is starved of speculation,
+//! and every sequence in the dispatch emits >= 1 token regardless (the
+//! verification bonus).
+//!
+//! Policies without per-candidate estimates (chain, SpecInfer, Sequoia,
+//! the layered threshold variant) get a deterministic near-equal split of
+//! the budget instead (`build_forest_fair`).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::EngineConfig;
+use crate::draft::TreePolicy;
+use crate::models::LogitModel;
+use crate::sampling::{dist_from_logits, SiblingSampler};
+use crate::tree::{NodeId, TokenTree, ROOT};
+use crate::util::Rng;
+
+/// A pending sampling: "draw the next child of `node` in sequence `seq`".
+///
+/// KEEP IN SYNC with `draft::dyspec` — this is deliberately the same heap
+/// algebra plus a sequence tag, and `rust/tests/scheduler.rs::
+/// single_sequence_reduces_to_dyspec_policy_tree` pins bit-exact
+/// equivalence; any fix to the pop/draw/push logic there must land here
+/// too (and vice versa) or that test starts guarding divergence.
+struct Candidate {
+    est: f64,
+    seq: usize,
+    node: NodeId,
+    /// None = lazily scored on first expansion, exactly like DySpec.
+    sampler: Option<SiblingSampler>,
+    /// Global FIFO tie-breaker (also what round-robins est-1.0 roots).
+    push_no: u64,
+}
+
+impl PartialEq for Candidate {
+    fn eq(&self, other: &Self) -> bool {
+        self.est == other.est && self.push_no == other.push_no
+    }
+}
+
+impl Eq for Candidate {}
+
+impl PartialOrd for Candidate {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Candidate {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.est
+            .partial_cmp(&other.est)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.push_no.cmp(&self.push_no))
+    }
+}
+
+/// Per-step result of one allocation round.
+pub struct ForestAlloc {
+    /// One speculated tree per input prefix (same order).
+    pub trees: Vec<TokenTree>,
+    /// Speculated tokens each sequence received (== trees[i].size()).
+    pub allocated: Vec<usize>,
+}
+
+impl ForestAlloc {
+    fn from_trees(trees: Vec<TokenTree>) -> Self {
+        let allocated = trees.iter().map(|t| t.size()).collect();
+        Self { trees, allocated }
+    }
+
+    pub fn total_allocated(&self) -> usize {
+        self.allocated.iter().sum()
+    }
+}
+
+/// Build one speculated tree per prefix under a SHARED `global_budget`,
+/// spending each token on the globally highest-estimate candidate. Each
+/// sequence's tree is additionally capped at `cfg.tree_budget` (a sequence
+/// never grows a bigger tree than the single-request engine would give it).
+pub fn build_forest(
+    draft: &mut dyn LogitModel,
+    prefixes: &[&[u32]],
+    rngs: &mut [Rng],
+    cfg: &EngineConfig,
+    global_budget: usize,
+) -> ForestAlloc {
+    assert_eq!(prefixes.len(), rngs.len(), "one rng per sequence");
+    let mut trees: Vec<TokenTree> = prefixes
+        .iter()
+        .map(|p| {
+            let root_dist =
+                dist_from_logits(&draft.next_logits(p), cfg.draft_temp);
+            TokenTree::new(*p.last().expect("empty prefix"), root_dist)
+        })
+        .collect();
+
+    let mut heap = BinaryHeap::new();
+    let mut push_no = 0u64;
+    for (i, tree) in trees.iter().enumerate() {
+        heap.push(Candidate {
+            est: 1.0,
+            seq: i,
+            node: ROOT,
+            sampler: Some(SiblingSampler::new(
+                tree.node(ROOT).draft_dist.clone(),
+            )),
+            push_no,
+        });
+        push_no += 1;
+    }
+
+    let mut spent = 0usize;
+    let mut ctx: Vec<u32> = Vec::new();
+    while spent < global_budget {
+        let Some(mut cand) = heap.pop() else { break };
+        if cand.est <= 0.0 {
+            break; // everything left is worthless, for every sequence
+        }
+        if trees[cand.seq].size() >= cfg.tree_budget {
+            continue; // this sequence's tree is full; drop the candidate
+        }
+        // Lazy scoring on first expansion (same as DySpec §Perf L3.1).
+        let sampler = match &mut cand.sampler {
+            Some(s) => s,
+            None => {
+                ctx.clear();
+                ctx.extend_from_slice(prefixes[cand.seq]);
+                ctx.extend(trees[cand.seq].path_tokens(cand.node));
+                let dist =
+                    dist_from_logits(&draft.next_logits(&ctx), cfg.draft_temp);
+                trees[cand.seq].node_mut(cand.node).draft_dist = dist.clone();
+                cand.sampler.insert(SiblingSampler::new(dist))
+            }
+        };
+        let Some((token, r_y)) = sampler.draw(&mut rngs[cand.seq]) else {
+            continue; // draft mass at this position exhausted
+        };
+        let v0 = cand.est * r_y as f64;
+        let v1 = cand.est * (1.0 - r_y as f64);
+        let child = trees[cand.seq].add_child(cand.node, token as u32, v0);
+        spent += 1;
+
+        if v1 > 0.0 && !sampler.exhausted() {
+            heap.push(Candidate {
+                est: v1,
+                seq: cand.seq,
+                node: cand.node,
+                sampler: cand.sampler,
+                push_no,
+            });
+            push_no += 1;
+        }
+        if v0 > 0.0 && trees[cand.seq].node(child).depth < cfg.max_depth {
+            heap.push(Candidate {
+                est: v0,
+                seq: cand.seq,
+                node: child,
+                sampler: None,
+                push_no,
+            });
+            push_no += 1;
+        }
+    }
+    ForestAlloc::from_trees(trees)
+}
+
+/// Deterministic near-equal budget shares: `global_budget / n` each, the
+/// remainder going to the earliest sequences.
+pub fn fair_shares(n: usize, global_budget: usize) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let base = global_budget / n;
+    let rem = global_budget % n;
+    (0..n).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Forest construction for policies without cross-sequence estimates: each
+/// sequence builds its own tree with the configured policy at its fair
+/// share of the global budget.
+pub fn build_forest_fair(
+    policy: &dyn TreePolicy,
+    draft: &mut dyn LogitModel,
+    prefixes: &[&[u32]],
+    rngs: &mut [Rng],
+    cfg: &EngineConfig,
+    global_budget: usize,
+) -> ForestAlloc {
+    assert_eq!(prefixes.len(), rngs.len(), "one rng per sequence");
+    let shares = fair_shares(prefixes.len(), global_budget);
+    let trees = prefixes
+        .iter()
+        .zip(rngs.iter_mut())
+        .zip(shares)
+        .map(|((prefix, rng), share)| {
+            if share == 0 {
+                // Bare verification row: root only, no draft dispatch.
+                return TokenTree::new(
+                    *prefix.last().expect("empty prefix"),
+                    Vec::new(),
+                );
+            }
+            let mut c = cfg.clone();
+            c.tree_budget = share.min(cfg.tree_budget);
+            policy.build(draft, prefix, &c, rng)
+        })
+        .collect();
+    ForestAlloc::from_trees(trees)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::sim::{SimModel, SimSpec};
+
+    fn sim_draft(seed: u64) -> SimModel {
+        SimModel::pair(SimSpec::new(64, 2.0, 0.8, seed)).0
+    }
+
+    fn prefixes() -> Vec<Vec<u32>> {
+        vec![vec![3, 1, 4], vec![2, 7, 1, 8], vec![9, 9, 9]]
+    }
+
+    #[test]
+    fn conserves_global_budget() {
+        let ps = prefixes();
+        let refs: Vec<&[u32]> = ps.iter().map(|p| p.as_slice()).collect();
+        let mut rngs: Vec<Rng> = (0..3).map(Rng::new).collect();
+        let cfg = EngineConfig::default();
+        let mut draft = sim_draft(5);
+        for budget in [3usize, 8, 24, 64] {
+            let alloc = build_forest(
+                &mut draft,
+                &refs,
+                &mut rngs,
+                &cfg,
+                budget,
+            );
+            assert_eq!(alloc.trees.len(), 3);
+            assert!(alloc.total_allocated() <= budget);
+            for (t, &n) in alloc.trees.iter().zip(&alloc.allocated) {
+                assert_eq!(t.size(), n);
+                t.check_invariants().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn every_sequence_gets_a_token_when_budget_covers_roots() {
+        let ps = prefixes();
+        let refs: Vec<&[u32]> = ps.iter().map(|p| p.as_slice()).collect();
+        let mut rngs: Vec<Rng> = (0..3).map(|i| Rng::new(100 + i)).collect();
+        let cfg = EngineConfig::default();
+        let mut draft = sim_draft(6);
+        let alloc = build_forest(&mut draft, &refs, &mut rngs, &cfg, 3);
+        assert!(
+            alloc.allocated.iter().all(|&n| n == 1),
+            "roots not round-robined: {:?}",
+            alloc.allocated
+        );
+    }
+
+    #[test]
+    fn per_sequence_cap_respected() {
+        let ps = prefixes();
+        let refs: Vec<&[u32]> = ps.iter().map(|p| p.as_slice()).collect();
+        let mut rngs: Vec<Rng> = (0..3).map(|i| Rng::new(7 + i)).collect();
+        let cfg = EngineConfig {
+            tree_budget: 4,
+            ..EngineConfig::default()
+        };
+        let mut draft = sim_draft(7);
+        let alloc = build_forest(&mut draft, &refs, &mut rngs, &cfg, 100);
+        for &n in &alloc.allocated {
+            assert!(n <= 4, "per-seq cap exceeded: {n}");
+        }
+    }
+
+    #[test]
+    fn fair_shares_sum_and_spread() {
+        assert_eq!(fair_shares(3, 8), vec![3, 3, 2]);
+        assert_eq!(fair_shares(4, 2), vec![1, 1, 0, 0]);
+        assert_eq!(fair_shares(0, 10), Vec::<usize>::new());
+        assert_eq!(fair_shares(2, 0), vec![0, 0]);
+    }
+
+    #[test]
+    fn fair_builder_handles_zero_shares() {
+        let policy = crate::draft::make_policy(crate::config::PolicyKind::Chain);
+        let ps = prefixes();
+        let refs: Vec<&[u32]> = ps.iter().map(|p| p.as_slice()).collect();
+        let mut rngs: Vec<Rng> = (0..3).map(|i| Rng::new(i)).collect();
+        let cfg = EngineConfig::default();
+        let mut draft = sim_draft(8);
+        let alloc = build_forest_fair(
+            policy.as_ref(),
+            &mut draft,
+            &refs,
+            &mut rngs,
+            &cfg,
+            2,
+        );
+        assert_eq!(alloc.allocated[2], 0);
+        assert!(alloc.total_allocated() <= 2);
+    }
+}

@@ -1,0 +1,27 @@
+//! Continuous-batching scheduler: step-level multi-sequence serving with a
+//! cross-request dynamic token budget.
+//!
+//! The FCFS worker loop runs one request to completion per engine, so every
+//! target dispatch carries a single request's tree and throughput collapses
+//! under concurrency. This subsystem replaces that loop with step-level
+//! multiplexing:
+//!
+//!   - [`sequence`] — the per-request state machine
+//!     (`Prefill -> Speculate -> Drain -> Done`);
+//!   - [`budget`] — the cross-request greedy budget rule: one max-heap of
+//!     candidate samplings from every active sequence, spending the shared
+//!     per-dispatch token budget on the globally highest estimated
+//!     acceptance (DySpec's Algorithm 1 lifted across sequences);
+//!   - [`batcher`] — the step loop that admits, allocates, packs one
+//!     batched verification dispatch, and distributes results.
+//!
+//! Select it with `scheduler = continuous` (see `config::SchedConfig`);
+//! DESIGN.md §Scheduler has the full design rationale.
+
+pub mod batcher;
+pub mod budget;
+pub mod sequence;
+
+pub use batcher::{Batcher, StepReport};
+pub use budget::{build_forest, build_forest_fair, fair_shares, ForestAlloc};
+pub use sequence::{SeqState, Sequence};

@@ -1,0 +1,225 @@
+//! Per-sequence state machine for the continuous batcher.
+//!
+//! A request admitted into a batcher becomes a `Sequence` and moves through
+//! `Prefill -> Speculate -> Drain -> Done`:
+//!
+//!   - **Prefill**: admitted, not yet part of any dispatch (TTFT pending).
+//!   - **Speculate**: competes for shares of the global speculation budget.
+//!   - **Drain**: exactly one token left — takes a bare verification row
+//!     (the bonus token needs no speculated tree), so its budget share
+//!     flows to sequences that can still convert budget into acceptance.
+//!   - **Done**: every token emitted; the response has been handed back.
+//!
+//! Every dispatch emits at least one token per participating sequence (the
+//! verification bonus), so a sequence in any live state makes progress on
+//! every scheduler step — the no-starvation invariant the scheduler tests
+//! pin down.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::queue::{Request, Response};
+use crate::util::Rng;
+
+/// Lifecycle of one admitted sequence (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqState {
+    Prefill,
+    Speculate,
+    Drain,
+    Done,
+}
+
+/// One in-flight generation multiplexed by a batcher.
+pub struct Sequence {
+    pub id: u64,
+    pub state: SeqState,
+    /// prompt ++ emitted tokens — the context of the next dispatch.
+    pub ctx: Vec<u32>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub emitted: Vec<u32>,
+    /// Scheduler steps this sequence took part in.
+    pub steps: usize,
+    /// Speculated-tree tokens allocated to this sequence, summed over its
+    /// steps — the budget-share metric.
+    pub budget_tokens: u64,
+    /// Per-sequence sampling stream, seeded from (scheduler seed, request
+    /// id) so streams never collide across co-batched sequences. NOTE:
+    /// the *position* in the stream still depends on batch composition —
+    /// the shared-budget allocator draws a data-dependent number of
+    /// samples per step — so, unlike FCFS, continuous mode does not
+    /// promise identical tokens for the same request under different
+    /// concurrent load (it promises the same output *distribution*; see
+    /// rust/tests/unbiasedness.rs).
+    pub rng: Rng,
+    pub submitted_at: Instant,
+    pub admitted_at: Instant,
+    pub queue_secs: f64,
+    /// Submission-to-first-token seconds, set by the first step.
+    pub ttft_secs: Option<f64>,
+    /// Virtual regime seconds across the dispatches this sequence shared.
+    pub virtual_secs: f64,
+    respond: mpsc::Sender<Response>,
+}
+
+impl Sequence {
+    pub fn new(req: Request, seed_salt: u64) -> Self {
+        let queue_secs = req.submitted_at.elapsed().as_secs_f64();
+        Self {
+            id: req.id,
+            state: SeqState::Prefill,
+            prompt_len: req.prompt.len(),
+            ctx: req.prompt,
+            max_new_tokens: req.max_new_tokens.max(1),
+            temperature: req.temperature,
+            emitted: Vec::new(),
+            steps: 0,
+            budget_tokens: 0,
+            rng: Rng::new(
+                seed_salt ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
+            submitted_at: req.submitted_at,
+            admitted_at: Instant::now(),
+            queue_secs,
+            ttft_secs: None,
+            virtual_secs: 0.0,
+            respond: req.respond,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_new_tokens - self.emitted.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == SeqState::Done
+    }
+
+    /// Eligible for speculation-budget shares this step? Draining
+    /// sequences (one token left) and finished ones are not.
+    pub fn wants_speculation(&self) -> bool {
+        matches!(self.state, SeqState::Prefill | SeqState::Speculate)
+            && self.remaining() > 1
+    }
+
+    /// Record one step's emitted tokens (overshoot truncated), charge the
+    /// allocated budget share, advance the state machine. Returns true when
+    /// the sequence just reached `Done`.
+    pub fn on_step(&mut self, mut tokens: Vec<u32>, allocated: usize) -> bool {
+        debug_assert!(!self.is_done(), "stepping a finished sequence");
+        self.steps += 1;
+        self.budget_tokens += allocated as u64;
+        tokens.truncate(self.remaining());
+        if self.ttft_secs.is_none() && !tokens.is_empty() {
+            self.ttft_secs = Some(self.submitted_at.elapsed().as_secs_f64());
+        }
+        self.ctx.extend_from_slice(&tokens);
+        self.emitted.extend_from_slice(&tokens);
+        self.state = match self.remaining() {
+            0 => SeqState::Done,
+            1 => SeqState::Drain,
+            _ => SeqState::Speculate,
+        };
+        self.is_done()
+    }
+
+    /// Consume the finished sequence into its response. Call exactly once,
+    /// after `on_step` returned true.
+    pub fn into_response(self, worker: usize) -> (mpsc::Sender<Response>, Response) {
+        debug_assert!(self.state == SeqState::Done);
+        let steps = self.steps.max(1);
+        let resp = Response {
+            id: self.id,
+            worker,
+            steps: self.steps,
+            emitted_per_step: self.emitted.len() as f64 / steps as f64,
+            tokens: self.emitted,
+            queue_secs: self.queue_secs,
+            gen_secs: self.admitted_at.elapsed().as_secs_f64(),
+            ttft_secs: self.ttft_secs.unwrap_or(0.0),
+            virtual_secs: self.virtual_secs,
+        };
+        (self.respond, resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_seq(max_new: usize) -> (Sequence, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: 7,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: max_new,
+            temperature: 0.6,
+            submitted_at: Instant::now(),
+            respond: tx,
+        };
+        (Sequence::new(req, 42), rx)
+    }
+
+    #[test]
+    fn state_machine_walk() {
+        let (mut s, rx) = mk_seq(4);
+        assert_eq!(s.state, SeqState::Prefill);
+        assert!(s.wants_speculation());
+
+        assert!(!s.on_step(vec![9, 8], 5)); // 2 of 4 emitted
+        assert_eq!(s.state, SeqState::Speculate);
+        assert!(s.ttft_secs.is_some());
+        assert_eq!(s.ctx, vec![1, 2, 3, 9, 8]);
+
+        assert!(!s.on_step(vec![7], 5)); // 3 of 4 -> one left
+        assert_eq!(s.state, SeqState::Drain);
+        assert!(!s.wants_speculation());
+
+        assert!(s.on_step(vec![6], 0)); // final token
+        assert_eq!(s.state, SeqState::Done);
+        assert_eq!(s.budget_tokens, 10);
+
+        let (tx, resp) = s.into_response(3);
+        assert_eq!(resp.tokens, vec![9, 8, 7, 6]);
+        assert_eq!(resp.worker, 3);
+        assert_eq!(resp.steps, 3);
+        assert!(resp.ttft_secs >= 0.0);
+        tx.send(resp).unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+    }
+
+    #[test]
+    fn overshoot_is_truncated() {
+        let (mut s, _rx) = mk_seq(2);
+        assert!(s.on_step(vec![4, 5, 6, 7], 8));
+        assert_eq!(s.emitted, vec![4, 5]);
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn single_token_request_drains_immediately() {
+        let (s, _rx) = mk_seq(1);
+        // remaining() == 1 from the start: never asks for tree budget.
+        assert!(!s.wants_speculation());
+        assert_eq!(s.state, SeqState::Prefill);
+    }
+
+    #[test]
+    fn rng_streams_differ_by_request_id() {
+        let (tx, _rx) = mpsc::channel();
+        let (tx2, _rx2) = mpsc::channel();
+        let mk = |id, tx| Request {
+            id,
+            prompt: vec![1],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            submitted_at: Instant::now(),
+            respond: tx,
+        };
+        let mut a = Sequence::new(mk(1, tx), 9);
+        let mut b = Sequence::new(mk(2, tx2), 9);
+        assert_ne!(a.rng.next_u64(), b.rng.next_u64());
+    }
+}

@@ -61,6 +61,8 @@ pub fn response_json(resp: &Response) -> Json {
         ("emitted_per_step", Json::Num(resp.emitted_per_step)),
         ("queue_secs", Json::Num(resp.queue_secs)),
         ("gen_secs", Json::Num(resp.gen_secs)),
+        ("ttft_secs", Json::Num(resp.ttft_secs)),
+        ("virtual_secs", Json::Num(resp.virtual_secs)),
     ])
 }
 
@@ -133,6 +135,8 @@ mod tests {
             emitted_per_step: 1.0,
             queue_secs: 0.1,
             gen_secs: 0.2,
+            ttft_secs: 0.15,
+            virtual_secs: 0.0,
         };
         let json = response_json(&resp);
         let text = json.to_string();

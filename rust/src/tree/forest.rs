@@ -1,0 +1,211 @@
+//! Multi-root ("forest") attention layout for batched verification.
+//!
+//! The continuous batcher packs every active sequence's speculated tree
+//! into ONE target dispatch. Each sequence owns a contiguous row segment
+//! (its causal prefix followed by its tree tokens); rows never attend
+//! across segments, so the packed mask is block-diagonal over sequences
+//! with the usual prefix-causal + tree-ancestor structure inside each
+//! block. The layout is what a batched backend needs to translate
+//! `models::ForestItem` groups into token/position/mask buffers.
+
+use super::arena::{NodeId, TokenTree};
+use super::mask::TreeMask;
+
+/// Row span of one sequence inside a packed forest dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ForestSegment {
+    /// First row of this sequence's prefix block.
+    pub prefix_start: usize,
+    pub prefix_len: usize,
+    /// First row of this sequence's speculated-tree block.
+    pub tree_start: usize,
+    pub tree_len: usize,
+}
+
+impl ForestSegment {
+    pub fn rows(&self) -> usize {
+        self.prefix_len + self.tree_len
+    }
+
+    /// One-past-the-last row of this segment.
+    pub fn end(&self) -> usize {
+        self.tree_start + self.tree_len
+    }
+}
+
+/// Contiguous row assignment for several (prefix, tree) groups.
+#[derive(Clone, Debug)]
+pub struct ForestLayout {
+    pub segments: Vec<ForestSegment>,
+    /// Total live rows (pad rows of a fixed-shape dispatch come after).
+    pub rows: usize,
+}
+
+impl ForestLayout {
+    /// Lay out `groups` = (prefix_len, tree_size) pairs back to back.
+    pub fn pack(groups: &[(usize, usize)]) -> Self {
+        let mut segments = Vec::with_capacity(groups.len());
+        let mut at = 0usize;
+        for &(prefix_len, tree_len) in groups {
+            segments.push(ForestSegment {
+                prefix_start: at,
+                prefix_len,
+                tree_start: at + prefix_len,
+                tree_len,
+            });
+            at += prefix_len + tree_len;
+        }
+        Self { segments, rows: at }
+    }
+
+    /// Global row of tree-local row `i` in group `g`.
+    pub fn tree_row(&self, g: usize, i: usize) -> usize {
+        let seg = &self.segments[g];
+        debug_assert!(i < seg.tree_len);
+        seg.tree_start + i
+    }
+
+    /// Build the full [s, s] f32 mask: per-segment causal prefix, tree rows
+    /// seeing their whole prefix plus tree ancestors, zero attention across
+    /// segments, pad rows (>= `rows`) attending only to themselves.
+    pub fn to_full_f32(&self, masks: &[&TreeMask], s: usize) -> Vec<f32> {
+        assert_eq!(masks.len(), self.segments.len(), "mask/segment arity");
+        assert!(self.rows <= s, "forest rows {} > seq {s}", self.rows);
+        let mut out = vec![0.0f32; s * s];
+        for (seg, mask) in self.segments.iter().zip(masks) {
+            assert_eq!(mask.n, seg.tree_len, "tree mask size mismatch");
+            for i in 0..seg.prefix_len {
+                let row = (seg.prefix_start + i) * s;
+                for j in 0..=i {
+                    out[row + seg.prefix_start + j] = 1.0;
+                }
+            }
+            for i in 0..seg.tree_len {
+                let row = (seg.tree_start + i) * s;
+                for j in 0..seg.prefix_len {
+                    out[row + seg.prefix_start + j] = 1.0;
+                }
+                for j in 0..seg.tree_len {
+                    if mask.get(i, j) {
+                        out[row + seg.tree_start + j] = 1.0;
+                    }
+                }
+            }
+        }
+        for i in self.rows..s {
+            out[i * s + i] = 1.0;
+        }
+        out
+    }
+}
+
+/// Convenience over (prefix_len, tree, order) triples: builds the per-tree
+/// masks, packs the layout, and renders the combined [s, s] mask.
+pub fn forest_mask_f32(
+    items: &[(usize, &TokenTree, &[NodeId])],
+    s: usize,
+) -> (ForestLayout, Vec<f32>) {
+    let masks: Vec<TreeMask> = items
+        .iter()
+        .map(|&(_, tree, order)| TreeMask::from_tree(tree, order))
+        .collect();
+    let groups: Vec<(usize, usize)> = items
+        .iter()
+        .map(|&(prefix_len, _, order)| (prefix_len, order.len()))
+        .collect();
+    let layout = ForestLayout::pack(&groups);
+    let refs: Vec<&TreeMask> = masks.iter().collect();
+    let full = layout.to_full_f32(&refs, s);
+    (layout, full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::arena::ROOT;
+
+    fn sample_tree() -> (TokenTree, Vec<NodeId>) {
+        let mut t = TokenTree::new(0, vec![]);
+        let a = t.add_child(ROOT, 1, 0.9);
+        let b = t.add_child(a, 2, 0.8);
+        let c = t.add_child(ROOT, 3, 0.5);
+        (t, vec![a, b, c])
+    }
+
+    #[test]
+    fn pack_assigns_contiguous_disjoint_segments() {
+        let layout = ForestLayout::pack(&[(3, 2), (4, 0), (1, 3)]);
+        assert_eq!(layout.rows, 13);
+        assert_eq!(layout.segments[0].prefix_start, 0);
+        assert_eq!(layout.segments[0].tree_start, 3);
+        assert_eq!(layout.segments[0].end(), 5);
+        assert_eq!(layout.segments[1].prefix_start, 5);
+        assert_eq!(layout.segments[1].end(), 9);
+        assert_eq!(layout.segments[2].tree_start, 10);
+        assert_eq!(layout.tree_row(2, 1), 11);
+    }
+
+    #[test]
+    fn single_group_matches_tree_mask_embedding() {
+        let (t, order) = sample_tree();
+        let m = TreeMask::from_tree(&t, &order);
+        let s = 8;
+        let want = m.to_full_f32(3, s);
+        let (layout, got) = forest_mask_f32(&[(3, &t, &order)], s);
+        assert_eq!(layout.rows, 6);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn no_attention_across_segments() {
+        let (t1, o1) = sample_tree();
+        let (t2, o2) = sample_tree();
+        let s = 16;
+        let (layout, full) =
+            forest_mask_f32(&[(2, &t1, &o1), (3, &t2, &o2)], s);
+        let boundary = layout.segments[0].end();
+        assert_eq!(boundary, 5);
+        for i in 0..layout.rows {
+            for j in 0..layout.rows {
+                let same_side = (i < boundary) == (j < boundary);
+                if !same_side {
+                    assert_eq!(
+                        full[i * s + j],
+                        0.0,
+                        "cross-segment attention at ({i},{j})"
+                    );
+                }
+            }
+        }
+        // Second segment's tree row for node b sees its own prefix + a.
+        let seg = layout.segments[1];
+        let row_b = (seg.tree_start + 1) * s;
+        assert_eq!(full[row_b + seg.prefix_start], 1.0); // own prefix
+        assert_eq!(full[row_b + seg.tree_start], 1.0); // ancestor a
+        assert_eq!(full[row_b + seg.tree_start + 1], 1.0); // self
+        assert_eq!(full[row_b + seg.tree_start + 2], 0.0); // sibling c
+    }
+
+    #[test]
+    fn pad_rows_self_attend() {
+        let (t, order) = sample_tree();
+        let s = 10;
+        let (layout, full) = forest_mask_f32(&[(2, &t, &order)], s);
+        for i in layout.rows..s {
+            assert_eq!(full[i * s + i], 1.0);
+            assert_eq!(full[i * s], 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_tree_group_is_prefix_only() {
+        let t = TokenTree::new(7, vec![]);
+        let order: Vec<NodeId> = Vec::new();
+        let (layout, full) = forest_mask_f32(&[(3, &t, &order)], 4);
+        assert_eq!(layout.rows, 3);
+        assert_eq!(layout.segments[0].tree_len, 0);
+        // plain causal block
+        assert_eq!(full[2 * 4], 1.0);
+        assert_eq!(full[2 * 4 + 3], 0.0);
+    }
+}

@@ -4,10 +4,12 @@
 
 pub mod arena;
 pub mod blocks;
+pub mod forest;
 pub mod mask;
 pub mod reorder;
 
 pub use arena::{NodeId, TokenTree, ROOT};
 pub use blocks::{block_count, block_count_with_prefix, occupancy};
+pub use forest::{forest_mask_f32, ForestLayout, ForestSegment};
 pub use mask::TreeMask;
 pub use reorder::{dfs_order, hpd_order, insertion_order};

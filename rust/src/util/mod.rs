@@ -3,6 +3,7 @@
 //! leveled logger. Everything here is deliberately boring; the substance of
 //! the reproduction lives in `tree`, `draft`, `verify` and `engine`.
 
+pub mod error;
 pub mod json;
 pub mod log;
 pub mod math;

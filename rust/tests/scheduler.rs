@@ -1,0 +1,257 @@
+//! Continuous-batching scheduler invariants (ISSUE 1 satellite):
+//!   - budget conservation: Σ per-sequence allocations <= the global
+//!     per-dispatch budget, and no sequence exceeds the single-request cap;
+//!   - no starvation: every admitted sequence emits >= 1 token on every
+//!     step it takes part in, so progress is guaranteed within one step;
+//!   - shutdown drains in-flight sequences instead of dropping them;
+//!   - the cross-request greedy allocator degenerates EXACTLY to the
+//!     single-request DySpec tree when one sequence is active;
+//!   - at temperature 0 the batched path emits the same greedy tokens as
+//!     autoregressive target-only decoding (per-sequence correctness under
+//!     batching).
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dyspec::config::{Config, EngineConfig, PolicyKind, SchedKind};
+use dyspec::coordinator::{Coordinator, Metrics, ModelFactory, Request, Response};
+use dyspec::draft::dyspec::DySpecPolicy;
+use dyspec::draft::TreePolicy;
+use dyspec::engine::SpecEngine;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+use dyspec::sched::{build_forest, Batcher};
+use dyspec::util::Rng;
+
+const VOCAB: usize = 64;
+
+fn sim_pair(seed: u64) -> (SimModel, SimModel) {
+    SimModel::pair(SimSpec::new(VOCAB, 2.0, 0.8, seed))
+}
+
+fn mk_batcher(cfg: Config) -> Batcher {
+    let (d, t) = sim_pair(17);
+    Batcher::new(0, cfg, Box::new(d), Box::new(t), Arc::new(Metrics::new()))
+}
+
+fn mk_request(
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    temperature: f32,
+) -> (Request, mpsc::Receiver<Response>) {
+    let (tx, rx) = mpsc::channel();
+    (
+        Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            temperature,
+            submitted_at: Instant::now(),
+            respond: tx,
+        },
+        rx,
+    )
+}
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::new();
+    cfg.engine.tree_budget = 12;
+    cfg.engine.target_temp = 0.6;
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.sched.max_active = 16;
+    cfg.sched.idle_tick_ms = 2;
+    cfg
+}
+
+#[test]
+fn budget_is_conserved_every_step() {
+    let mut cfg = base_cfg();
+    cfg.sched.global_budget = 20;
+    let mut b = mk_batcher(cfg);
+    let _rxs: Vec<_> = (0..6)
+        .map(|i| {
+            let (req, rx) = mk_request(i + 1, vec![i as u32 + 1, 2, 3], 24, 0.6);
+            b.admit(req);
+            rx
+        })
+        .collect();
+    while b.active() > 0 {
+        let report = b.step();
+        let total: usize = report.allocated.iter().sum();
+        assert!(
+            total <= report.global_budget,
+            "allocated {total} > global budget {}",
+            report.global_budget
+        );
+        for &a in &report.allocated {
+            assert!(a <= 12, "sequence exceeded single-request cap: {a}");
+        }
+    }
+}
+
+#[test]
+fn no_sequence_starves() {
+    // Budget smaller than the batch: the allocator must still hand every
+    // speculating sequence at least its root token, and every sequence in
+    // the dispatch must emit >= 1 token (progress within K = 1 steps).
+    let mut cfg = base_cfg();
+    cfg.sched.global_budget = 8; // 8 sequences, 8 tokens
+    let mut b = mk_batcher(cfg);
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            let (req, rx) = mk_request(i + 1, vec![40 + i as u32, 5], 16, 0.6);
+            b.admit(req);
+            rx
+        })
+        .collect();
+    let mut steps = 0;
+    while b.active() > 0 {
+        let report = b.step();
+        assert!(
+            report.emitted.iter().all(|&e| e >= 1),
+            "starved sequence in step {steps}: {:?}",
+            report.emitted
+        );
+        let total: usize = report.allocated.iter().sum();
+        assert!(total <= report.global_budget, "over budget");
+        steps += 1;
+        assert!(steps <= 16 * 8, "did not converge");
+    }
+    // progress bound: 16 tokens, >= 1 token/step -> <= 16 steps per seq
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.tokens.len(), 16);
+        assert!(resp.steps <= 16, "seq took {} steps for 16 tokens", resp.steps);
+    }
+}
+
+#[test]
+fn single_sequence_reduces_to_dyspec_policy_tree() {
+    let cfg = EngineConfig {
+        tree_budget: 24,
+        ..EngineConfig::default()
+    };
+    let prefix: Vec<u32> = vec![3, 1, 4, 1, 5];
+
+    let (mut draft_a, _) = sim_pair(42);
+    let mut rng_a = Rng::new(7);
+    let want = DySpecPolicy.build(&mut draft_a, &prefix, &cfg, &mut rng_a);
+
+    let (mut draft_b, _) = sim_pair(42);
+    let mut rngs = vec![Rng::new(7)];
+    let got = build_forest(
+        &mut draft_b,
+        &[prefix.as_slice()],
+        &mut rngs,
+        &cfg,
+        cfg.tree_budget,
+    );
+    let got = &got.trees[0];
+
+    assert_eq!(got.num_nodes(), want.num_nodes());
+    for id in want.speculated() {
+        assert_eq!(got.node(id).token, want.node(id).token, "node {id}");
+        assert_eq!(got.node(id).parent, want.node(id).parent, "node {id}");
+        assert!((got.node(id).est - want.node(id).est).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn temp0_batched_output_matches_autoregressive() {
+    // Deterministic greedy target: whatever the batch does to tree shapes,
+    // each sequence must emit exactly the target-only continuation.
+    let prompt = vec![9u32, 2, 6];
+    let max_new = 20;
+
+    let reference = {
+        let (draft, target) = sim_pair(99);
+        let cfg = EngineConfig {
+            policy: PolicyKind::Baseline,
+            max_new_tokens: max_new,
+            target_temp: 0.0,
+            seed: 1,
+            ..EngineConfig::default()
+        };
+        let mut e = SpecEngine::new(Box::new(draft), Box::new(target), cfg, None);
+        e.generate(&prompt).tokens
+    };
+
+    let mut cfg = base_cfg();
+    cfg.engine.tree_budget = 8;
+    let (d, t) = sim_pair(99);
+    let mut b = Batcher::new(
+        0,
+        cfg,
+        Box::new(d),
+        Box::new(t),
+        Arc::new(Metrics::new()),
+    );
+    let rxs: Vec<_> = (0..3)
+        .map(|i| {
+            let (req, rx) = mk_request(i + 1, prompt.clone(), max_new, 0.0);
+            b.admit(req);
+            rx
+        })
+        .collect();
+    while b.active() > 0 {
+        b.step();
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(
+            resp.tokens, reference,
+            "batched temp-0 output diverged from greedy decoding"
+        );
+    }
+}
+
+#[test]
+fn coordinator_shutdown_drains_under_continuous_scheduler() {
+    let factory: ModelFactory = Arc::new(|| {
+        let (d, t) = sim_pair(5);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    });
+    let mut cfg = base_cfg();
+    cfg.server.workers = 1;
+    cfg.server.queue_capacity = 32;
+    let coord = Coordinator::start(cfg, factory);
+    let rxs: Vec<_> = (0..10)
+        .map(|i| coord.try_submit(vec![i + 1, 2, 3], 16, 0.6).unwrap())
+        .collect();
+    // Immediate shutdown: queued + in-flight work must still complete.
+    coord.shutdown();
+    for rx in rxs {
+        let resp = rx.recv().expect("sequence dropped during shutdown");
+        assert_eq!(resp.tokens.len(), 16);
+    }
+}
+
+#[test]
+fn mixed_lengths_retire_incrementally() {
+    // Different max_new_tokens finish at different steps; the batcher must
+    // retire them individually while the rest keep going.
+    let mut b = mk_batcher(base_cfg());
+    let lens = [2usize, 6, 14];
+    let rxs: Vec<_> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| {
+            let (req, rx) = mk_request(i as u64 + 1, vec![7 + i as u32], len, 0.6);
+            b.admit(req);
+            rx
+        })
+        .collect();
+    let mut max_active_seen = 0;
+    while b.active() > 0 {
+        max_active_seen = max_active_seen.max(b.active());
+        b.step();
+    }
+    assert_eq!(max_active_seen, 3);
+    for (rx, &len) in rxs.iter().zip(&lens) {
+        assert_eq!(rx.recv().unwrap().tokens.len(), len);
+    }
+}

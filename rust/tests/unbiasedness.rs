@@ -5,9 +5,14 @@
 //! vocab, for every policy and both temperatures, and compare against a
 //! same-size baseline-vs-baseline TV (the sampling-noise floor).
 
-use dyspec::config::{EngineConfig, PolicyKind};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dyspec::config::{Config, EngineConfig, PolicyKind, SchedKind};
+use dyspec::coordinator::{Metrics, Request, Response};
 use dyspec::engine::SpecEngine;
 use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::sched::Batcher;
 
 const VOCAB: usize = 16;
 const RUNS: usize = 4000;
@@ -100,6 +105,80 @@ fn all_policies_exactly_greedy_at_temp_0() {
             assert_eq!(tokens, reference, "{policy} seed {seed} diverged at temp 0");
         }
     }
+}
+
+/// Unbiasedness must survive continuous batching: co-batched sequences
+/// share the per-dispatch budget (so each tree's SHAPE depends on the other
+/// sequences' draws), but Algorithm 3 is unbiased conditioned on any tree,
+/// so each sequence's marginal output distribution must still equal
+/// target-only decoding. Four co-batched sequences with the same prompt;
+/// empirical first-token distribution vs the baseline reference.
+#[test]
+fn continuous_batching_preserves_first_token_distribution() {
+    const BATCH: usize = 4;
+    const ROUNDS: usize = RUNS / BATCH;
+
+    let mut counts = vec![0usize; VOCAB];
+    for round in 0..ROUNDS as u64 {
+        let spec = SimSpec::new(VOCAB, 2.0, 1.0, 99); // same fixed world
+        let (draft, target) = SimModel::pair(spec);
+        let mut cfg = Config::new();
+        cfg.engine = EngineConfig {
+            policy: PolicyKind::DySpec,
+            tree_budget: 6,
+            max_new_tokens: 2, // 2 so the first token comes from a real tree
+            target_temp: 0.6,
+            draft_temp: 0.6,
+            seed: round,
+            max_depth: 4,
+            ..EngineConfig::default()
+        };
+        cfg.sched.kind = SchedKind::Continuous;
+        cfg.sched.max_active = BATCH;
+        cfg.sched.global_budget = 6 * BATCH;
+
+        let mut batcher = Batcher::new(
+            0,
+            cfg,
+            Box::new(draft),
+            Box::new(target),
+            Arc::new(Metrics::new()),
+        );
+        let rxs: Vec<mpsc::Receiver<Response>> = (0..BATCH as u64)
+            .map(|i| {
+                let (tx, rx) = mpsc::channel();
+                batcher.admit(Request {
+                    id: round * BATCH as u64 + i + 1,
+                    prompt: vec![3, 1, 4],
+                    max_new_tokens: 2,
+                    temperature: 0.6,
+                    submitted_at: Instant::now(),
+                    respond: tx,
+                });
+                rx
+            })
+            .collect();
+        while batcher.active() > 0 {
+            batcher.step();
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            counts[resp.tokens[0] as usize] += 1;
+        }
+    }
+    let n = (ROUNDS * BATCH) as f64;
+    let hist: Vec<f64> = counts.iter().map(|&c| c as f64 / n).collect();
+
+    let reference = first_token_hist(PolicyKind::Baseline, 0.6, 7777);
+    let floor = tv(
+        &reference,
+        &first_token_hist(PolicyKind::Baseline, 0.6, 1234),
+    );
+    let d = tv(&reference, &hist);
+    assert!(
+        d < (3.0 * floor).max(0.05),
+        "batched TV {d:.4} vs noise floor {floor:.4} — BIASED OUTPUT UNDER BATCHING"
+    );
 }
 
 #[test]
