@@ -1,0 +1,18 @@
+//! KV prefix-cache benchmark: cached vs uncached verification cost as the
+//! context grows (see DESIGN.md §KV cache). Shares the runner with
+//! `dyspec bench --experiment cache` and records the result as
+//! BENCH_cache.json at the repo root to seed the perf trajectory.
+//! Env: DYSPEC_BENCH_PROMPTS (prompts per cell), DYSPEC_BENCH_TOKENS.
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts {
+        prompts: std::env::var("DYSPEC_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4),
+        max_new_tokens: std::env::var("DYSPEC_BENCH_TOKENS").ok().and_then(|v| v.parse().ok()).unwrap_or(64),
+        out: Some("../BENCH_cache.json".into()),
+        ..ExpOpts::default()
+    };
+    for table in run_experiment("cache", &opts).expect("experiment") {
+        println!("{}", table.render());
+    }
+}

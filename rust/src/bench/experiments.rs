@@ -4,7 +4,9 @@
 use std::sync::Arc;
 
 use crate::bench::table::BenchTable;
-use crate::config::{Config, EngineConfig, LatencyRegime, PolicyKind, SchedKind};
+use crate::config::{
+    CacheConfig, Config, EngineConfig, LatencyRegime, PolicyKind, SchedKind,
+};
 use crate::coordinator::{Coordinator, ModelFactory};
 use crate::data::markov::Corpus;
 use crate::data::prompts::PromptSet;
@@ -83,6 +85,7 @@ pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<Vec<BenchTable>, Str
         "fig9" => vec![fig9_blockcount(opts)],
         "ablation" | "ablation_budget" => vec![ablation_budget(opts)],
         "serve" => vec![serve_concurrency(opts)],
+        "cache" | "cache_context" => vec![cache_context(opts)],
         other => return Err(format!("unknown experiment: {other}")),
     };
     if let Some(out) = &opts.out {
@@ -569,6 +572,88 @@ pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
     table
 }
 
+/// One cache-bench cell: mean billed verify positions/step, virtual
+/// latency/token, and cache hit rate for a prompt length.
+fn cache_cell(
+    prompt_len: usize,
+    enabled: bool,
+    opts: &ExpOpts,
+) -> (f64, f64, f64) {
+    let spec = SimSpec::for_dataset("c4", opts.noise, opts.seed ^ 0xDA7A);
+    let (draft, target) = SimModel::pair(spec);
+    let cfg = EngineConfig {
+        policy: PolicyKind::DySpec,
+        tree_budget: 32,
+        max_new_tokens: opts.max_new_tokens,
+        target_temp: 0.6,
+        seed: opts.seed,
+        ..EngineConfig::default()
+    };
+    let mut engine =
+        SpecEngine::new(Box::new(draft), Box::new(target), cfg, Some(LatencyRegime::pair_7b()))
+            .with_cache(&CacheConfig {
+                enabled,
+                ..CacheConfig::default()
+            });
+    let prompts =
+        PromptSet::by_name("c4", opts.prompts.max(1), prompt_len, opts.seed)
+            .expect("dataset profile");
+    let (mut billed, mut cached, mut steps, mut vsecs, mut tokens) =
+        (0u64, 0u64, 0usize, 0.0f64, 0usize);
+    for p in prompts.iter() {
+        let stats = engine.generate(p);
+        billed += stats.total_billed_positions();
+        cached += stats.total_cached_positions();
+        steps += stats.steps.len();
+        vsecs += stats.total_virtual_secs();
+        tokens += stats.tokens.len();
+    }
+    let pos_per_step = billed as f64 / steps.max(1) as f64;
+    let lat = vsecs / tokens.max(1) as f64;
+    let hit = if billed + cached == 0 {
+        0.0
+    } else {
+        cached as f64 / (billed + cached) as f64
+    };
+    (pos_per_step, lat, hit)
+}
+
+/// Cache experiment (the tentpole bench): cached vs uncached verification
+/// cost as the context grows. Uncached scoring re-bills the whole prefix
+/// every round, so billed positions/step and virtual latency/token climb
+/// with context length; with the KV prefix cache both stay proportional to
+/// the speculated tree. `--out BENCH_cache.json` records the trajectory.
+pub fn cache_context(opts: &ExpOpts) -> BenchTable {
+    let mut table = BenchTable::new(
+        "Cache: verify cost vs context length, KV prefix cache off vs on (c4, dyspec, budget 32, 7b regime)",
+        &[
+            "prompt_len",
+            "uncached_pos_per_step",
+            "cached_pos_per_step",
+            "pos_reduction",
+            "uncached_lat_per_tok",
+            "cached_lat_per_tok",
+            "lat_speedup",
+            "hit_rate",
+        ],
+    );
+    for prompt_len in [64usize, 256, 512, 1024] {
+        let (cold_pos, cold_lat, _) = cache_cell(prompt_len, false, opts);
+        let (warm_pos, warm_lat, hit) = cache_cell(prompt_len, true, opts);
+        table.row(vec![
+            format!("{prompt_len}"),
+            format!("{cold_pos:.1}"),
+            format!("{warm_pos:.1}"),
+            format!("{:.2}x", cold_pos / warm_pos.max(1e-9)),
+            format!("{cold_lat:.5}"),
+            format!("{warm_lat:.5}"),
+            format!("{:.2}x", cold_lat / warm_lat.max(1e-12)),
+            format!("{hit:.3}"),
+        ]);
+    }
+    table
+}
+
 /// Ablation (DESIGN.md §5 footnote): accepted tokens/step and 7B-regime
 /// latency as the speculative budget grows, dynamic (DySpec) vs the best
 /// fixed-shape baseline (Sequoia) — the paper's §1 motivation that fixed
@@ -699,6 +784,33 @@ mod tests {
             "continuous {} <= fcfs {} tokens/vsec at 16 clients",
             tput(cont16),
             tput(fcfs16)
+        );
+    }
+
+    /// The tentpole acceptance shape: cached verify cost must undercut
+    /// uncached at every context length, with a gap that widens as the
+    /// context grows (per-round cost proportional to the tree, not the
+    /// prefix).
+    #[test]
+    fn cache_experiment_flattens_context_scaling() {
+        let t = &run_experiment("cache", &quick()).unwrap()[0];
+        assert_eq!(t.rows.len(), 4);
+        let num = |cell: &str| -> f64 { cell.parse().unwrap() };
+        let ratio = |row: &Vec<String>| -> f64 {
+            row[3].trim_end_matches('x').parse().unwrap()
+        };
+        for row in &t.rows {
+            assert!(
+                num(&row[2]) < num(&row[1]),
+                "cached {} not below uncached {}",
+                row[2],
+                row[1]
+            );
+            assert!(num(&row[7]) > 0.0, "zero hit rate");
+        }
+        assert!(
+            ratio(t.rows.last().unwrap()) > ratio(&t.rows[0]),
+            "position reduction did not grow with context"
         );
     }
 

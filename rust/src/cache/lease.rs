@@ -1,0 +1,300 @@
+//! Copy-on-write block lease for one speculated tree during one
+//! verification dispatch.
+//!
+//! Tree tokens occupy KV positions after the sequence prefix; in the
+//! dispatch layout (`tree::forest`) they form their own row segment, so the
+//! lease starts them on a fresh block boundary. Along any root path the
+//! tokens are packed contiguously into blocks; branching follows the
+//! attention mask (`tree/mask.rs`): a node shares every *ancestor* block of
+//! its path — exactly the keys its mask row attends to — and never a
+//! sibling's. Concretely:
+//!
+//!   - the first child of a node with a partially-filled tail block appends
+//!     in place (the tail block is *shared*: refcount bumped);
+//!   - later siblings copy-on-write: they allocate a fresh block standing
+//!     for a copy of the shared tail prefix (counted in
+//!     `CacheStats::cow_copies`) and append there;
+//!   - a child of a node whose tail is full starts a fresh block.
+//!
+//! Leases are transient: after verification the accepted path is re-packed
+//! into the sequence's resident chain by `CacheManager::commit` (billed as
+//! cache writes) and every lease reference is released — rejected branches
+//! must drive their blocks' refcounts back to zero, which the allocator
+//! property tests pin.
+//!
+//! Lease allocation never evicts resident prefixes (speculative blocks are
+//! transient; residency has priority). When the pool is exhausted a node is
+//! simply left untracked and its children restart chains when space allows.
+
+use super::pool::{BlockId, KvPool};
+use crate::tree::{NodeId, TokenTree, ROOT};
+
+#[derive(Clone, Debug, Default)]
+struct LeaseNode {
+    /// Block holding this node's token (None = untracked: pool exhausted).
+    tail: Option<BlockId>,
+    /// Tokens in `tail` after this node's token (1..=block_tokens).
+    fill: usize,
+    /// References this node must release (its tail, shared or owned).
+    owned: Vec<BlockId>,
+    /// Whether a first child already extended this node's tail in place.
+    tail_extended: bool,
+    /// Chain tracking is live at this node (ROOT starts true; breaks when
+    /// the pool runs out mid-branch).
+    valid: bool,
+}
+
+/// Per-dispatch block assignment for a speculated tree.
+#[derive(Debug, Default)]
+pub struct TreeLease {
+    nodes: Vec<LeaseNode>,
+    block_tokens: usize,
+}
+
+impl TreeLease {
+    /// Empty lease (cache disabled): tracks nothing, releases nothing.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Assign blocks to every speculated node of `tree` (arena order —
+    /// parents precede children by construction).
+    pub fn build(pool: &mut KvPool, tree: &TokenTree) -> Self {
+        let b = pool.block_tokens();
+        let mut nodes = vec![LeaseNode::default(); tree.num_nodes()];
+        nodes[ROOT].valid = true; // empty chain at a fresh block boundary
+        for id in 1..tree.num_nodes() {
+            let parent = tree.node(id).parent.expect("non-root has a parent");
+            let (p_tail, p_fill, p_valid, p_extended) = {
+                let p = &nodes[parent];
+                (p.tail, p.fill, p.valid, p.tail_extended)
+            };
+            if !p_valid {
+                continue; // chain broken upstream; leave untracked
+            }
+            let entry = match p_tail {
+                Some(t) if p_fill < b => {
+                    if !p_extended {
+                        // First child: append into the shared tail.
+                        pool.retain(t);
+                        nodes[parent].tail_extended = true;
+                        LeaseNode {
+                            tail: Some(t),
+                            fill: p_fill + 1,
+                            owned: vec![t],
+                            tail_extended: false,
+                            valid: true,
+                        }
+                    } else if let Some(nb) = pool.try_alloc() {
+                        // Later sibling: copy-on-write fork of the tail.
+                        pool.stats.cow_copies += 1;
+                        LeaseNode {
+                            tail: Some(nb),
+                            fill: p_fill + 1,
+                            owned: vec![nb],
+                            tail_extended: false,
+                            valid: true,
+                        }
+                    } else {
+                        LeaseNode::default()
+                    }
+                }
+                // Tail full (or ROOT boundary): start a fresh block.
+                _ => {
+                    if let Some(nb) = pool.try_alloc() {
+                        LeaseNode {
+                            tail: Some(nb),
+                            fill: 1,
+                            owned: vec![nb],
+                            tail_extended: false,
+                            valid: true,
+                        }
+                    } else {
+                        LeaseNode::default()
+                    }
+                }
+            };
+            nodes[id] = entry;
+        }
+        Self {
+            nodes,
+            block_tokens: b,
+        }
+    }
+
+    /// Block holding `id`'s token, if tracked.
+    pub fn node_tail(&self, id: NodeId) -> Option<BlockId> {
+        self.nodes.get(id).and_then(|n| n.tail)
+    }
+
+    /// References held on behalf of `id`.
+    pub fn owned(&self, id: NodeId) -> &[BlockId] {
+        self.nodes.get(id).map(|n| n.owned.as_slice()).unwrap_or(&[])
+    }
+
+    /// Distinct blocks along the root path to `id` (the tree-local part of
+    /// the chain its attention row may read).
+    pub fn chain(&self, tree: &TokenTree, id: NodeId) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        let mut cur = Some(id);
+        while let Some(n) = cur {
+            if n == ROOT {
+                break;
+            }
+            if let Some(t) = self.node_tail(n) {
+                if out.last() != Some(&t) && !out.contains(&t) {
+                    out.push(t);
+                }
+            }
+            cur = tree.node(n).parent;
+        }
+        out.reverse();
+        out
+    }
+
+    /// Total lease references still held.
+    pub fn refs_held(&self) -> usize {
+        self.nodes.iter().map(|n| n.owned.len()).sum()
+    }
+
+    /// Rollback: release every node NOT on the accepted root path. The
+    /// accepted path (and ROOT) keeps its references until [`end`].
+    pub fn release_rejected(
+        &mut self,
+        pool: &mut KvPool,
+        _tree: &TokenTree,
+        accepted: &[NodeId],
+    ) {
+        if self.nodes.is_empty() {
+            return; // empty lease (cache disabled): nothing to roll back
+        }
+        let mut keep = vec![false; self.nodes.len()];
+        keep[ROOT] = true;
+        for &id in accepted {
+            keep[id] = true;
+        }
+        for (id, node) in self.nodes.iter_mut().enumerate() {
+            if !keep[id] {
+                for blk in node.owned.drain(..) {
+                    pool.release(blk);
+                }
+            }
+        }
+    }
+
+    /// Release every remaining reference; the lease is spent afterwards.
+    pub fn end(&mut self, pool: &mut KvPool) {
+        for node in &mut self.nodes {
+            for blk in node.owned.drain(..) {
+                pool.release(blk);
+            }
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// root -> a -> b ; root -> c (sibling of a); a -> d (sibling of b).
+    fn sample_tree() -> (TokenTree, NodeId, NodeId, NodeId, NodeId) {
+        let mut t = TokenTree::new(0, vec![]);
+        let a = t.add_child(ROOT, 1, 0.9);
+        let b = t.add_child(a, 2, 0.8);
+        let c = t.add_child(ROOT, 3, 0.5);
+        let d = t.add_child(a, 4, 0.4);
+        (t, a, b, c, d)
+    }
+
+    #[test]
+    fn paths_share_ancestor_blocks_siblings_fork() {
+        let mut pool = KvPool::new(4, 64);
+        let (tree, a, b, c, d) = sample_tree();
+        let mut lease = TreeLease::build(&mut pool, &tree);
+
+        // a starts a fresh block; b (first child) appends in place.
+        let ta = lease.node_tail(a).unwrap();
+        let tb = lease.node_tail(b).unwrap();
+        assert_eq!(ta, tb, "first child shares the parent tail");
+        assert_eq!(pool.refcount(ta), 2);
+
+        // c is a later child of ROOT: ROOT has no tail, so fresh block —
+        // disjoint from a's branch.
+        let tc = lease.node_tail(c).unwrap();
+        assert_ne!(tc, ta);
+
+        // d is a's SECOND child: copy-on-write fork, not sharing b's block.
+        let td = lease.node_tail(d).unwrap();
+        assert_ne!(td, tb);
+        assert_eq!(pool.stats.cow_copies, 1);
+
+        // chain(b) extends chain(a); chains of unrelated nodes disjoint.
+        let chain_a = lease.chain(&tree, a);
+        let chain_b = lease.chain(&tree, b);
+        assert!(chain_b.starts_with(&chain_a));
+        let chain_c = lease.chain(&tree, c);
+        assert!(chain_a.iter().all(|x| !chain_c.contains(x)));
+
+        lease.end(&mut pool);
+        assert_eq!(pool.used_blocks(), 0, "lease leaked blocks");
+    }
+
+    #[test]
+    fn rollback_of_rejected_branches_zeroes_refcounts() {
+        let mut pool = KvPool::new(4, 64);
+        let (tree, a, b, c, d) = sample_tree();
+        let mut lease = TreeLease::build(&mut pool, &tree);
+        let shared = lease.node_tail(a).unwrap();
+        let tc = lease.node_tail(c).unwrap();
+        let td = lease.node_tail(d).unwrap();
+
+        // Accept the path root->a->b; reject c and d.
+        lease.release_rejected(&mut pool, &tree, &[a, b]);
+        assert_eq!(pool.refcount(tc), 0, "rejected c still referenced");
+        assert_eq!(pool.refcount(td), 0, "rejected d still referenced");
+        // The accepted path's shared tail keeps both its references.
+        assert_eq!(pool.refcount(shared), 2);
+
+        lease.end(&mut pool);
+        assert_eq!(pool.used_blocks(), 0);
+        assert_eq!(pool.stats.allocated, pool.stats.freed);
+    }
+
+    #[test]
+    fn deep_chain_packs_blocks_contiguously() {
+        let mut pool = KvPool::new(2, 64);
+        let mut tree = TokenTree::new(0, vec![]);
+        let mut p = ROOT;
+        let mut path = Vec::new();
+        for i in 0..5 {
+            p = tree.add_child(p, i, 0.5);
+            path.push(p);
+        }
+        let mut lease = TreeLease::build(&mut pool, &tree);
+        // 5 tokens at 2/block: blocks used along the chain = 3, shared
+        // in-place (no COW on a pure chain).
+        assert_eq!(lease.chain(&tree, *path.last().unwrap()).len(), 3);
+        assert_eq!(pool.stats.cow_copies, 0);
+        lease.end(&mut pool);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn exhausted_pool_degrades_to_untracked() {
+        let mut pool = KvPool::new(1, 2);
+        let mut tree = TokenTree::new(0, vec![]);
+        let a = tree.add_child(ROOT, 1, 0.9);
+        let b = tree.add_child(ROOT, 2, 0.5);
+        let c = tree.add_child(b, 3, 0.4);
+        let mut lease = TreeLease::build(&mut pool, &tree);
+        assert!(lease.node_tail(a).is_some());
+        assert!(lease.node_tail(b).is_some());
+        assert!(lease.node_tail(c).is_none(), "third block must not exist");
+        lease.end(&mut pool);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+}

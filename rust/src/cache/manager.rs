@@ -1,0 +1,308 @@
+//! Per-worker cache manager: one [`KvPool`] shared by every sequence the
+//! worker multiplexes, a per-sequence resident-prefix chain retained across
+//! speculation rounds, and LRU eviction under the global block budget.
+//!
+//! Residency protocol per speculation round:
+//!   1. [`begin_round`] — returns how many prefix positions are resident
+//!      (the dispatch bills only the rest);
+//!   2. [`lease_tree`] — transient COW block assignment for the speculated
+//!      branches (see [`super::lease`]);
+//!   3. after verification, [`commit`] — extends residency to
+//!      `prefix_len + accepted` (everything the dispatch scored: the miss
+//!      region plus the accepted path; the bonus token has not been a model
+//!      *input* yet, so it is not resident), allocating blocks and evicting
+//!      colder sequences when the budget is tight;
+//!   4. on retirement, [`drop_seq`] — releases the chain (leak-freedom is
+//!      pinned by the scheduler tests).
+//!
+//! Eviction releases only the victim's own references; a block whose
+//! refcount is still held elsewhere (e.g. by an in-flight lease) survives
+//! until that reference is dropped, so eviction can never free a block a
+//! live sequence still reads.
+
+use std::collections::HashMap;
+
+use super::lease::TreeLease;
+use super::pool::{CacheStats, KvPool};
+use crate::config::CacheConfig;
+use crate::tree::TokenTree;
+
+#[derive(Debug, Default)]
+struct SeqKv {
+    blocks: Vec<usize>,
+    /// Prefix positions resident (<= blocks.len() * block_tokens).
+    resident: usize,
+    last_used: u64,
+}
+
+/// Worker-scoped KV cache state (see module docs).
+#[derive(Debug)]
+pub struct CacheManager {
+    pool: KvPool,
+    enabled: bool,
+    seqs: HashMap<u64, SeqKv>,
+    clock: u64,
+}
+
+impl CacheManager {
+    pub fn new(cfg: &CacheConfig) -> Self {
+        Self {
+            pool: KvPool::new(cfg.block_tokens, cfg.max_blocks),
+            enabled: cfg.enabled,
+            seqs: HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.pool.block_tokens()
+    }
+
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.pool.stats
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.pool.used_blocks()
+    }
+
+    /// Resident prefix positions for `id` (0 when disabled or unknown).
+    pub fn resident(&self, id: u64) -> usize {
+        self.seqs.get(&id).map(|e| e.resident).unwrap_or(0)
+    }
+
+    /// Start a round for `id`: touches the LRU clock and reports residency.
+    pub fn begin_round(&mut self, id: u64) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.seqs.entry(id).or_default();
+        e.last_used = clock;
+        e.resident
+    }
+
+    /// Record a dispatch's prefix hit/miss split (metrics feed).
+    pub fn record_lookup(&mut self, hit_tokens: u64, miss_tokens: u64) {
+        self.pool.stats.hit_tokens += hit_tokens;
+        self.pool.stats.miss_tokens += miss_tokens;
+    }
+
+    /// Transient COW lease for this round's speculated tree.
+    pub fn lease_tree(&mut self, tree: &TokenTree) -> TreeLease {
+        if !self.enabled {
+            return TreeLease::empty();
+        }
+        TreeLease::build(&mut self.pool, tree)
+    }
+
+    /// Rollback rejected branches, then release the whole lease (the
+    /// accepted path is re-packed by [`commit`], billed as cache writes).
+    pub fn end_lease(
+        &mut self,
+        mut lease: TreeLease,
+        tree: &TokenTree,
+        accepted: &[crate::tree::NodeId],
+    ) {
+        lease.release_rejected(&mut self.pool, tree, accepted);
+        lease.end(&mut self.pool);
+    }
+
+    /// Extend `id`'s residency to `prefix_len + accepted` positions,
+    /// allocating blocks (evicting colder sequences if needed). Under an
+    /// exhausted budget residency only grows as far as blocks allow.
+    ///
+    /// `cached_len` is the resident snapshot the round's dispatch was
+    /// billed against: the dispatch wrote KV only for
+    /// `[cached_len, prefix_len)` plus the accepted path. If this sequence
+    /// was evicted mid-round (its resident mark dropped below that
+    /// snapshot), the written region no longer attaches to a full prefix,
+    /// so residency must NOT grow — the sequence re-scores from scratch
+    /// next round (pinned by `mid_round_eviction_blocks_resurrection`).
+    pub fn commit(
+        &mut self,
+        id: u64,
+        cached_len: usize,
+        prefix_len: usize,
+        accepted: usize,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let cur = self.seqs.get(&id).map(|e| e.resident).unwrap_or(0);
+        if cur < cached_len.min(prefix_len) {
+            if let Some(e) = self.seqs.get_mut(&id) {
+                e.last_used = clock;
+            }
+            return;
+        }
+        let b = self.pool.block_tokens();
+        let target = prefix_len + accepted;
+        let need = target.div_ceil(b);
+        loop {
+            let have = self.seqs.entry(id).or_default().blocks.len();
+            if have >= need {
+                break;
+            }
+            if let Some(blk) = self.pool.try_alloc() {
+                self.seqs.entry(id).or_default().blocks.push(blk);
+            } else if !self.evict_lru(id) {
+                break;
+            }
+        }
+        let e = self.seqs.entry(id).or_default();
+        e.resident = target.min(e.blocks.len() * b);
+        e.last_used = clock;
+    }
+
+    /// Release everything `id` holds (sequence retired or reset).
+    pub fn drop_seq(&mut self, id: u64) {
+        if let Some(e) = self.seqs.remove(&id) {
+            for blk in e.blocks {
+                self.pool.release(blk);
+            }
+        }
+    }
+
+    /// Evict the least-recently-used sequence other than `protect`.
+    /// Returns false when there is no evictable sequence left.
+    pub fn evict_lru(&mut self, protect: u64) -> bool {
+        let victim = self
+            .seqs
+            .iter()
+            .filter(|(k, v)| **k != protect && !v.blocks.is_empty())
+            .min_by_key(|(_, v)| v.last_used)
+            .map(|(k, _)| *k);
+        let Some(vid) = victim else {
+            return false;
+        };
+        let blocks = {
+            let e = self.seqs.get_mut(&vid).expect("victim exists");
+            e.resident = 0;
+            std::mem::take(&mut e.blocks)
+        };
+        for blk in blocks {
+            self.pool.release(blk);
+        }
+        self.pool.stats.evictions += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(blocks: usize) -> CacheConfig {
+        CacheConfig {
+            enabled: true,
+            block_tokens: 4,
+            max_blocks: blocks,
+        }
+    }
+
+    #[test]
+    fn residency_grows_with_commits_and_drops_clean() {
+        let mut m = CacheManager::new(&cfg(64));
+        assert_eq!(m.begin_round(1), 0);
+        m.commit(1, 0, 10, 3); // 13 tokens -> 4 blocks
+        assert_eq!(m.resident(1), 13);
+        assert_eq!(m.used_blocks(), 4);
+        // next round: prefix grew to 14 (accepted 3 + bonus), 13 resident
+        assert_eq!(m.begin_round(1), 13);
+        m.commit(1, 13, 14, 2); // 16 tokens -> 4 blocks, no new alloc
+        assert_eq!(m.resident(1), 16);
+        assert_eq!(m.used_blocks(), 4);
+        m.drop_seq(1);
+        assert_eq!(m.used_blocks(), 0, "retired sequence leaked blocks");
+    }
+
+    #[test]
+    fn disabled_manager_is_inert() {
+        let mut m = CacheManager::new(&CacheConfig {
+            enabled: false,
+            block_tokens: 4,
+            max_blocks: 8,
+        });
+        assert_eq!(m.begin_round(1), 0);
+        m.commit(1, 0, 100, 10);
+        assert_eq!(m.resident(1), 0);
+        assert_eq!(m.used_blocks(), 0);
+    }
+
+    #[test]
+    fn budget_pressure_evicts_lru_sequence() {
+        let mut m = CacheManager::new(&cfg(4)); // 16 tokens total
+        m.begin_round(1);
+        m.commit(1, 0, 8, 0); // 2 blocks
+        m.begin_round(2);
+        m.commit(2, 0, 8, 0); // 2 blocks; pool full
+        assert_eq!(m.used_blocks(), 4);
+        // Seq 3 needs space: seq 1 is LRU and must be evicted.
+        m.begin_round(3);
+        m.commit(3, 0, 8, 0);
+        assert_eq!(m.resident(3), 8);
+        assert_eq!(m.resident(1), 0, "LRU sequence not evicted");
+        assert_eq!(m.resident(2), 8, "warmer sequence wrongly evicted");
+        assert_eq!(m.stats().evictions, 1);
+        assert_eq!(m.used_blocks(), 4, "budget exceeded");
+    }
+
+    #[test]
+    fn mid_round_eviction_blocks_resurrection() {
+        let mut m = CacheManager::new(&cfg(64));
+        m.begin_round(1);
+        m.commit(1, 0, 8, 0);
+        let snap = m.begin_round(1);
+        assert_eq!(snap, 8);
+        // Another sequence's pressure evicts seq 1 mid-round…
+        assert!(m.evict_lru(2));
+        // …so committing against the stale snapshot must NOT mark the
+        // never-rewritten region resident again.
+        m.commit(1, snap, 9, 3);
+        assert_eq!(m.resident(1), 0, "residency resurrected after eviction");
+        // The next round re-scores from scratch and residency grows again.
+        assert_eq!(m.begin_round(1), 0);
+        m.commit(1, 0, 9, 3);
+        assert_eq!(m.resident(1), 12);
+        m.drop_seq(1);
+        assert_eq!(m.used_blocks(), 0);
+    }
+
+    #[test]
+    fn eviction_cannot_free_leased_blocks() {
+        use crate::tree::{TokenTree, ROOT};
+        let mut m = CacheManager::new(&cfg(3));
+        m.begin_round(1);
+        m.commit(1, 0, 4, 0); // seq 1 holds 1 block
+        // A tree lease for seq 2 takes the remaining blocks.
+        let mut tree = TokenTree::new(0, vec![]);
+        let a = tree.add_child(ROOT, 1, 0.9);
+        let _b = tree.add_child(ROOT, 2, 0.5); // sibling: separate chain
+        let lease = m.lease_tree(&tree);
+        let leased = lease.node_tail(a).unwrap();
+        assert_eq!(m.used_blocks(), 3);
+        // Committing a huge prefix for seq 3 evicts seq 1 but can never
+        // free the leased blocks: refcounts protect them.
+        m.begin_round(3);
+        m.commit(3, 0, 12, 0);
+        assert!(m.pool().refcount(leased) > 0, "leased block freed");
+        assert_eq!(m.resident(1), 0);
+        // Seq 3 got only what eviction could free (1 block = 4 tokens).
+        assert_eq!(m.resident(3), 4);
+        m.end_lease(lease, &tree, &[]);
+        m.drop_seq(3);
+        assert_eq!(m.used_blocks(), 0);
+    }
+}

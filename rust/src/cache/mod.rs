@@ -1,0 +1,113 @@
+//! Tree-aware KV prefix cache (DESIGN.md §KV cache).
+//!
+//! DySpec's per-round verification cost must scale with the *speculated
+//! tree*, not the full context: Sequoia-style systems get there by keeping
+//! the accepted prefix resident in the target's KV cache across rounds.
+//! This module is that subsystem, backend-independent:
+//!
+//!   - [`pool`] — refcounted paged block allocator under a global budget;
+//!   - [`manager`] — per-worker residency: accepted-prefix chains retained
+//!     across speculation rounds, LRU eviction, per-sequence drop;
+//!   - [`lease`] — transient copy-on-write block assignment for one
+//!     speculated tree (branches share ancestor blocks exactly where the
+//!     `tree::mask` attention mask lets them attend);
+//!   - [`verify_bill`] — the cost-model split of one dispatch into
+//!     computed vs cached positions and fetched vs written blocks, which
+//!     the virtual ledgers price with the `LatencyRegime` cache terms.
+//!
+//! The sim backend produces bit-identical logits with the cache on or off
+//! (pinned by `rust/tests/cache_equivalence.rs`); what the cache changes is
+//! the *billing* — per-round cost proportional to speculated tokens — and
+//! the block-level bookkeeping that a real PJRT KV wiring will inherit
+//! (currently stubbed; see ROADMAP).
+
+pub mod lease;
+pub mod manager;
+pub mod pool;
+
+pub use lease::TreeLease;
+pub use manager::CacheManager;
+pub use pool::{BlockId, CacheStats, KvPool};
+
+/// Per-dispatch verify-cost split for one sequence's slice.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VerifyBill {
+    /// Positions actually computed: the non-resident prefix plus every
+    /// speculated tree row.
+    pub billed_positions: usize,
+    /// Prefix positions served from the resident KV cache.
+    pub cached_positions: usize,
+    /// Resident blocks fetched to serve the cached prefix.
+    pub fetched_blocks: usize,
+    /// Blocks (re)written by this dispatch — every computed position
+    /// materializes KV, cached or not, so uncached re-scoring rewrites the
+    /// full context's blocks while cached scoring writes only new ones.
+    pub written_blocks: usize,
+}
+
+/// Split one verification dispatch for a sequence with `prefix_len` context
+/// positions (of which `cached_len` are resident) and `rows` speculated
+/// tree rows, at `block_tokens` positions per block.
+///
+/// With the built-in regimes (`cache_fetch_secs <= target_pos_secs *
+/// block_tokens` and `cache_fetch_secs <= cache_write_secs`) the priced
+/// bill is monotone in `cached_len`: enabling the cache never costs more
+/// on any dispatch, and bills strictly fewer positions whenever anything
+/// is resident — the acceptance criterion `rust/tests/cache_equivalence.rs`
+/// pins.
+pub fn verify_bill(
+    prefix_len: usize,
+    cached_len: usize,
+    rows: usize,
+    block_tokens: usize,
+) -> VerifyBill {
+    let b = block_tokens.max(1);
+    let cached = cached_len.min(prefix_len);
+    let miss = prefix_len - cached;
+    VerifyBill {
+        billed_positions: miss + rows,
+        cached_positions: cached,
+        fetched_blocks: cached / b,
+        written_blocks: (miss + rows).div_ceil(b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncached_bills_everything() {
+        let bill = verify_bill(100, 0, 12, 16);
+        assert_eq!(bill.billed_positions, 112);
+        assert_eq!(bill.cached_positions, 0);
+        assert_eq!(bill.fetched_blocks, 0);
+        assert_eq!(bill.written_blocks, 7);
+    }
+
+    #[test]
+    fn cached_bills_only_miss_and_rows() {
+        let bill = verify_bill(100, 99, 12, 16);
+        assert_eq!(bill.billed_positions, 13);
+        assert_eq!(bill.cached_positions, 99);
+        assert_eq!(bill.fetched_blocks, 6);
+        assert_eq!(bill.written_blocks, 1);
+    }
+
+    #[test]
+    fn cached_len_clamps_to_prefix() {
+        let bill = verify_bill(10, 50, 0, 4);
+        assert_eq!(bill.cached_positions, 10);
+        assert_eq!(bill.billed_positions, 0);
+        assert_eq!(bill.written_blocks, 0);
+    }
+
+    #[test]
+    fn billed_positions_strictly_decrease_with_residency() {
+        for cached in 1..=64usize {
+            let warm = verify_bill(64, cached, 8, 16);
+            let cold = verify_bill(64, 0, 8, 16);
+            assert!(warm.billed_positions < cold.billed_positions);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Refcounted paged KV block pool.
+//!
+//! Blocks are fixed-size slabs of `block_tokens` KV positions; the pool
+//! hands out block *ids* (slot indices) under a hard global budget
+//! (`max_blocks`). Ownership is reference-counted: a sequence's resident
+//! prefix holds one reference per block, and a speculation-round tree lease
+//! adds references wherever branches share an ancestor's tail block
+//! (copy-on-write forks allocate instead). A block returns to the free list
+//! only when its refcount hits zero — eviction can therefore never free a
+//! block that a live lease or sequence still references.
+
+/// Identifier of one KV block (a slot index into the pool).
+pub type BlockId = usize;
+
+/// Pool-wide bookkeeping counters (monotone except where noted).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Blocks handed out by `try_alloc`.
+    pub allocated: u64,
+    /// Blocks whose refcount hit zero and returned to the free list.
+    pub freed: u64,
+    /// Copy-on-write forks (sibling branch copied a partially-filled
+    /// ancestor tail block instead of sharing it).
+    pub cow_copies: u64,
+    /// Sequences whose resident prefix was evicted under budget pressure.
+    pub evictions: u64,
+    /// Prefix positions served from cache across all dispatches.
+    pub hit_tokens: u64,
+    /// Prefix positions re-scored because they were not resident.
+    pub miss_tokens: u64,
+}
+
+/// Fixed-capacity refcounted block allocator.
+#[derive(Debug)]
+pub struct KvPool {
+    block_tokens: usize,
+    max_blocks: usize,
+    /// Refcount per slot; 0 = free (slot is then on the free list or
+    /// beyond the high-water mark).
+    refs: Vec<u32>,
+    free: Vec<BlockId>,
+    in_use: usize,
+    pub stats: CacheStats,
+}
+
+impl KvPool {
+    pub fn new(block_tokens: usize, max_blocks: usize) -> Self {
+        Self {
+            block_tokens: block_tokens.max(1),
+            max_blocks: max_blocks.max(1),
+            refs: Vec::new(),
+            free: Vec::new(),
+            in_use: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_blocks
+    }
+
+    /// Blocks with refcount > 0.
+    pub fn used_blocks(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.max_blocks - self.in_use
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.refs.get(id).copied().unwrap_or(0)
+    }
+
+    /// Allocate one block with refcount 1, or None at the global budget.
+    pub fn try_alloc(&mut self) -> Option<BlockId> {
+        let id = if let Some(id) = self.free.pop() {
+            id
+        } else if self.refs.len() < self.max_blocks {
+            self.refs.push(0);
+            self.refs.len() - 1
+        } else {
+            return None;
+        };
+        debug_assert_eq!(self.refs[id], 0, "allocated block had live refs");
+        self.refs[id] = 1;
+        self.in_use += 1;
+        self.stats.allocated += 1;
+        Some(id)
+    }
+
+    /// Add one reference to a live block (branch sharing).
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refs[id] > 0, "retain of a free block {id}");
+        self.refs[id] += 1;
+    }
+
+    /// Drop one reference; the block is freed when the count reaches zero.
+    pub fn release(&mut self, id: BlockId) {
+        assert!(self.refs[id] > 0, "release of a free block {id}");
+        self.refs[id] -= 1;
+        if self.refs[id] == 0 {
+            self.free.push(id);
+            self.in_use -= 1;
+            self.stats.freed += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_until_budget_then_none() {
+        let mut p = KvPool::new(16, 3);
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        let c = p.try_alloc().unwrap();
+        assert_eq!(p.used_blocks(), 3);
+        assert!(p.try_alloc().is_none());
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 1);
+        let d = p.try_alloc().unwrap();
+        assert_eq!(d, b, "freed slot is reused");
+    }
+
+    #[test]
+    fn refcounts_share_and_free_at_zero() {
+        let mut p = KvPool::new(8, 4);
+        let a = p.try_alloc().unwrap();
+        p.retain(a);
+        p.retain(a);
+        assert_eq!(p.refcount(a), 3);
+        p.release(a);
+        p.release(a);
+        assert_eq!(p.used_blocks(), 1, "still referenced");
+        p.release(a);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.stats.allocated, 1);
+        assert_eq!(p.stats.freed, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn releasing_free_block_panics() {
+        let mut p = KvPool::new(8, 2);
+        let a = p.try_alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+}

@@ -84,7 +84,7 @@ USAGE:
 COMMANDS:
   generate     run one generation (policy=dyspec|sequoia|specinfer|chain|baseline)
   bench        run a paper experiment (--experiment table1|table2|table3|table4|
-               table5|fig2|fig4|fig5|fig9|serve)
+               table5|fig2|fig4|fig5|fig9|serve|cache)
   serve        start the TCP serving coordinator (--addr host:port,
                scheduler=fcfs|continuous)
   client       send a prompt to a running server (--addr host:port --dataset c4)
@@ -95,7 +95,8 @@ CONFIG KEYS (key=value, see config/mod.rs):
   policy, tree_budget, threshold, max_depth, temp, draft_temp,
   max_new_tokens, seed, backend (sim|hlo|hlo-pallas), regime (7b|13b|70b),
   dataset (cnn|c4|owt), artifacts, prompt_len, num_prompts, addr, workers,
-  scheduler (fcfs|continuous), global_budget, max_active, idle_tick_ms
+  scheduler (fcfs|continuous), global_budget, max_active, idle_tick_ms,
+  cache (on|off), cache_block, cache_blocks
 
 EXAMPLES:
   dyspec generate policy=dyspec backend=hlo dataset=cnn temp=0

@@ -125,6 +125,30 @@ impl Default for SchedConfig {
     }
 }
 
+/// KV prefix-cache knobs (`cache/`, DESIGN.md §KV cache). The block budget
+/// is per worker: each worker's `CacheManager` owns its own pool.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Retain accepted prefixes across speculation rounds (default on;
+    /// `cache=off` re-scores every dispatch from position zero).
+    pub enabled: bool,
+    /// KV positions per block (paged-allocator granularity).
+    pub block_tokens: usize,
+    /// Global per-worker block budget; LRU sequences are evicted when a
+    /// commit cannot allocate within it.
+    pub max_blocks: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            block_tokens: 16,
+            max_blocks: 4096,
+        }
+    }
+}
+
 /// Which model backend drives draft/target scoring.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelBackend {
@@ -173,6 +197,18 @@ pub struct LatencyRegime {
     /// the calibrated width is not free. `usize::MAX` for the offload
     /// regime, whose step is weight-streaming-bound (flat per dispatch).
     pub verify_width: usize,
+    /// Marginal seconds per COMPUTED position in a verification dispatch
+    /// (the context-length term the KV cache removes: uncached scoring
+    /// bills the whole prefix here, cached scoring only the non-resident
+    /// part plus the tree rows — `cache::verify_bill`).
+    pub target_pos_secs: f64,
+    /// Seconds per KV block (re)written by a dispatch.
+    pub cache_write_secs: f64,
+    /// Seconds per resident KV block fetched by a dispatch. Kept below
+    /// both `cache_write_secs` and `target_pos_secs * block_tokens` so a
+    /// cached dispatch is never priced above the same dispatch uncached
+    /// (pinned by `regime_cache_terms_keep_cached_cheaper`).
+    pub cache_fetch_secs: f64,
 }
 
 impl LatencyRegime {
@@ -185,6 +221,9 @@ impl LatencyRegime {
             draft_step_secs: 0.00025,
             target_step_secs: 0.0225,
             verify_width: 64,
+            target_pos_secs: 2.0e-5,
+            cache_write_secs: 4.0e-6,
+            cache_fetch_secs: 1.0e-6,
         }
     }
 
@@ -195,6 +234,9 @@ impl LatencyRegime {
             draft_step_secs: 0.00025,
             target_step_secs: 0.0303,
             verify_width: 64,
+            target_pos_secs: 2.6e-5,
+            cache_write_secs: 5.0e-6,
+            cache_fetch_secs: 1.2e-6,
         }
     }
 
@@ -207,6 +249,11 @@ impl LatencyRegime {
             draft_step_secs: 0.0025,
             target_step_secs: 5.0,
             verify_width: usize::MAX,
+            // Weight streaming dominates the offload step; marginal
+            // per-position compute and cache traffic are second-order.
+            target_pos_secs: 5.0e-5,
+            cache_write_secs: 8.0e-6,
+            cache_fetch_secs: 2.0e-6,
         }
     }
 
@@ -289,6 +336,7 @@ pub struct Config {
     pub engine: EngineConfig,
     pub server: ServerConfig,
     pub sched: SchedConfig,
+    pub cache: CacheConfig,
     pub backend: ModelBackend,
     pub regime: Option<LatencyRegime>,
     pub dataset: String,
@@ -315,6 +363,7 @@ impl Config {
             engine: EngineConfig::default(),
             server: ServerConfig::default(),
             sched: SchedConfig::default(),
+            cache: CacheConfig::default(),
             backend: ModelBackend::Sim,
             regime: None,
             dataset: "c4".into(),
@@ -413,6 +462,19 @@ impl Config {
                 Ok(v) => self.sched.idle_tick_ms = v,
                 Err(_) => return bad("idle_tick_ms"),
             },
+            "cache" => match value {
+                "on" | "true" | "1" => self.cache.enabled = true,
+                "off" | "false" | "0" => self.cache.enabled = false,
+                _ => return bad("cache"),
+            },
+            "cache_block" | "cache_block_tokens" => match value.parse() {
+                Ok(v) if v > 0 => self.cache.block_tokens = v,
+                _ => return bad("cache_block"),
+            },
+            "cache_blocks" | "cache_max_blocks" => match value.parse() {
+                Ok(v) if v > 0 => self.cache.max_blocks = v,
+                _ => return bad("cache_blocks"),
+            },
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -492,6 +554,15 @@ impl Config {
             "idle_tick_ms".into(),
             self.sched.idle_tick_ms.to_string(),
         );
+        m.insert(
+            "cache".into(),
+            if self.cache.enabled { "on" } else { "off" }.into(),
+        );
+        m.insert(
+            "cache_block".into(),
+            self.cache.block_tokens.to_string(),
+        );
+        m.insert("cache_blocks".into(), self.cache.max_blocks.to_string());
         m
     }
 }
@@ -557,6 +628,47 @@ mod tests {
         assert_eq!(t4.engine.tree_budget, 768);
         assert_eq!(t4.engine.policy, PolicyKind::DySpecThreshold);
         assert!(Config::preset("table9").is_err());
+    }
+
+    #[test]
+    fn cache_keys_round_trip() {
+        let mut cfg = Config::new();
+        assert!(cfg.cache.enabled);
+        cfg.set("cache", "off").unwrap();
+        assert!(!cfg.cache.enabled);
+        cfg.set("cache", "on").unwrap();
+        cfg.set("cache_block", "8").unwrap();
+        cfg.set("cache_blocks", "128").unwrap();
+        assert_eq!(cfg.cache.block_tokens, 8);
+        assert_eq!(cfg.cache.max_blocks, 128);
+        assert!(cfg.set("cache", "maybe").is_err());
+        assert!(cfg.set("cache_block", "0").is_err());
+        assert!(cfg.set("cache_blocks", "zero").is_err());
+    }
+
+    /// The invariant `cache::verify_bill` prices against: fetching a
+    /// resident block must be cheaper than re-computing it (and than
+    /// re-writing it), in every built-in regime at the default block size.
+    #[test]
+    fn regime_cache_terms_keep_cached_cheaper() {
+        let block = CacheConfig::default().block_tokens as f64;
+        for r in [
+            LatencyRegime::pair_7b(),
+            LatencyRegime::pair_13b(),
+            LatencyRegime::pair_70b_offload(),
+        ] {
+            assert!(r.target_pos_secs > 0.0, "{}", r.name);
+            assert!(
+                r.cache_fetch_secs <= r.cache_write_secs,
+                "{}: fetch > write",
+                r.name
+            );
+            assert!(
+                r.cache_fetch_secs <= r.target_pos_secs * block,
+                "{}: fetching a block dearer than recomputing it",
+                r.name
+            );
+        }
     }
 
     #[test]

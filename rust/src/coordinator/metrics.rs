@@ -31,6 +31,12 @@ pub struct Metrics {
     budget_total: AtomicU64,
     /// Virtual hardware-regime seconds consumed, in µs (atomic f64 stand-in).
     virtual_micros: AtomicU64,
+    /// KV-cache accounting: prefix positions served from residency vs
+    /// verification positions actually computed, and the current
+    /// resident-block gauge (DESIGN.md §KV cache).
+    cache_hit_positions: AtomicU64,
+    cache_billed_positions: AtomicU64,
+    cache_resident_blocks: AtomicU64,
 }
 
 impl Metrics {
@@ -51,6 +57,9 @@ impl Metrics {
             budget_used: AtomicU64::new(0),
             budget_total: AtomicU64::new(0),
             virtual_micros: AtomicU64::new(0),
+            cache_hit_positions: AtomicU64::new(0),
+            cache_billed_positions: AtomicU64::new(0),
+            cache_resident_blocks: AtomicU64::new(0),
         }
     }
 
@@ -98,6 +107,35 @@ impl Metrics {
         self.budget_total.fetch_add(budget, Ordering::Relaxed);
         self.virtual_micros
             .fetch_add((virtual_secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Record one dispatch round's KV-cache outcome: `hit` prefix
+    /// positions served from residency, `billed` positions computed, and
+    /// the worker's current resident-block count (gauge; with several
+    /// workers the last writer wins, which is fine for a dashboard gauge).
+    pub fn on_cache(&self, hit: u64, billed: u64, resident_blocks: u64) {
+        self.cache_hit_positions.fetch_add(hit, Ordering::Relaxed);
+        self.cache_billed_positions
+            .fetch_add(billed, Ordering::Relaxed);
+        self.cache_resident_blocks
+            .store(resident_blocks, Ordering::Relaxed);
+    }
+
+    /// Fraction of prefix-or-computed verification positions served from
+    /// the KV cache (0 when nothing was recorded).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hit = self.cache_hit_positions.load(Ordering::Relaxed) as f64;
+        let billed =
+            self.cache_billed_positions.load(Ordering::Relaxed) as f64;
+        if hit + billed <= 0.0 {
+            0.0
+        } else {
+            hit / (hit + billed)
+        }
+    }
+
+    pub fn cache_resident_blocks(&self) -> u64 {
+        self.cache_resident_blocks.load(Ordering::Relaxed)
     }
 
     /// Adjust the tokens-in-flight gauge as steps emit (`+`) and requests
@@ -219,6 +257,24 @@ impl Metrics {
                 "virtual_tokens_per_sec",
                 Json::Num(self.virtual_tokens_per_sec()),
             ),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate())),
+            (
+                "cache_hit_positions",
+                Json::Num(
+                    self.cache_hit_positions.load(Ordering::Relaxed) as f64,
+                ),
+            ),
+            (
+                "cache_billed_positions",
+                Json::Num(
+                    self.cache_billed_positions.load(Ordering::Relaxed)
+                        as f64,
+                ),
+            ),
+            (
+                "cache_resident_blocks",
+                Json::Num(self.cache_resident_blocks() as f64),
+            ),
         ])
     }
 }
@@ -260,6 +316,10 @@ mod tests {
         assert!((m.budget_utilization() - 84.0 / 112.0).abs() < 1e-9);
         assert!((m.virtual_secs() - 0.3225).abs() < 1e-4);
         m.on_first_token(0.2);
+        m.on_cache(90, 30, 12);
+        m.on_cache(30, 10, 7);
+        assert!((m.cache_hit_rate() - 120.0 / 160.0).abs() < 1e-9);
+        assert_eq!(m.cache_resident_blocks(), 7);
         m.tokens_in_flight_add(12);
         m.tokens_in_flight_sub(5);
         assert_eq!(m.tokens_in_flight(), 7);

@@ -38,6 +38,9 @@ pub struct Response {
     /// all co-batched sequences, so this is the per-request latency the
     /// serving bench compares across schedulers.
     pub virtual_secs: f64,
+    /// Prefix positions this request served from the KV cache across its
+    /// dispatches (its share of the worker's hit-rate metric).
+    pub cache_hits: u64,
 }
 
 /// Sender half (held by the coordinator/server).

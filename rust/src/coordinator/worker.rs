@@ -54,7 +54,8 @@ fn run_fcfs(
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
 ) {
-    let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime);
+    let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime)
+        .with_cache(&cfg.cache);
     let idle = Duration::from_millis(cfg.sched.idle_tick_ms.max(1));
     log_debug!("worker {wid} up (fcfs, policy={})", cfg.engine.policy);
 
@@ -92,6 +93,11 @@ fn run_fcfs(
                     steps * cfg.engine.tree_budget as u64,
                     virtual_secs,
                 );
+                metrics.on_cache(
+                    stats.total_cached_positions(),
+                    stats.total_billed_positions(),
+                    engine.cache().used_blocks() as u64,
+                );
                 metrics.on_completed(stats.tokens.len(), gen_secs);
 
                 let resp = Response {
@@ -99,6 +105,7 @@ fn run_fcfs(
                     worker: wid,
                     steps: stats.steps.len(),
                     emitted_per_step: stats.mean_emitted_per_step(),
+                    cache_hits: stats.total_cached_positions(),
                     tokens: stats.tokens,
                     queue_secs,
                     gen_secs,

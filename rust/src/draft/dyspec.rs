@@ -100,17 +100,17 @@ impl TreePolicy for DySpecPolicy {
                 break; // everything left is worthless
             }
             // Lazily score the node on first expansion (§Perf L3.1): this
-            // is where the O(#expanded · T_d) draft cost is paid.
-            let sampler = match &mut cand.sampler {
-                Some(s) => s,
-                None => {
-                    ctx.truncate(prefix.len());
-                    ctx.extend(tree.path_tokens(cand.node));
-                    let dist = super::draft_dist(draft, &ctx, cfg.draft_temp);
-                    tree.node_mut(cand.node).draft_dist = dist.clone();
-                    cand.sampler.insert(SiblingSampler::new(dist))
-                }
-            };
+            // is where the O(#expanded · T_d) draft cost is paid. (Written
+            // as is_none/as_mut rather than a match returning from both
+            // arms — the conditional-borrow match form trips NLL.)
+            if cand.sampler.is_none() {
+                ctx.truncate(prefix.len());
+                ctx.extend(tree.path_tokens(cand.node));
+                let dist = super::draft_dist(draft, &ctx, cfg.draft_temp);
+                tree.node_mut(cand.node).draft_dist = dist.clone();
+                cand.sampler = Some(SiblingSampler::new(dist));
+            }
+            let sampler = cand.sampler.as_mut().expect("sampler just installed");
             // Line 6-7: draw y ~ R; R[y] is the residual prob of this draw.
             let Some((token, r_y)) = sampler.draw(rng) else {
                 continue; // draft mass at this position exhausted

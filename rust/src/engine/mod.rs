@@ -9,7 +9,8 @@ pub mod stats;
 
 pub use stats::{GenerationStats, StepStats};
 
-use crate::config::{EngineConfig, LatencyRegime, PolicyKind};
+use crate::cache::{verify_bill, CacheManager};
+use crate::config::{CacheConfig, EngineConfig, LatencyRegime, PolicyKind};
 use crate::draft::{make_policy, TreePolicy};
 use crate::models::{LogitModel, TimedModel};
 use crate::sampling::{dist_from_logits, sample};
@@ -17,6 +18,10 @@ use crate::tree::dfs_order;
 use crate::util::timer::Timer;
 use crate::util::Rng;
 use crate::verify::{row_map, verify_tree};
+
+/// The engine serves one generation at a time; its cache manager tracks
+/// that single sequence under a fixed id.
+const ENGINE_SEQ: u64 = 0;
 
 /// Speculative decoding engine over a (draft, target) model pair.
 pub struct SpecEngine {
@@ -26,6 +31,9 @@ pub struct SpecEngine {
     pub cfg: EngineConfig,
     pub regime: Option<LatencyRegime>,
     rng: Rng,
+    /// KV prefix residency across this generation's speculation rounds
+    /// (reset at every `generate`; default-enabled, see `CacheConfig`).
+    cache: CacheManager,
 }
 
 impl SpecEngine {
@@ -44,12 +52,27 @@ impl SpecEngine {
             cfg,
             regime,
             rng,
+            cache: CacheManager::new(&CacheConfig::default()),
         }
+    }
+
+    /// Replace the KV-cache configuration (builder style; `enabled: false`
+    /// restores the re-score-from-zero behaviour).
+    pub fn with_cache(mut self, cache: &CacheConfig) -> Self {
+        self.cache = CacheManager::new(cache);
+        self
+    }
+
+    pub fn cache(&self) -> &CacheManager {
+        &self.cache
     }
 
     /// Generate up to `cfg.max_new_tokens` tokens after `prompt`.
     pub fn generate(&mut self, prompt: &[u32]) -> GenerationStats {
         assert!(!prompt.is_empty(), "empty prompt");
+        // Fresh cache session per generation: nothing of a previous
+        // request's prefix may be considered resident.
+        self.cache.drop_seq(ENGINE_SEQ);
         let mut ctx = prompt.to_vec();
         let mut stats = GenerationStats::new(prompt.len());
 
@@ -62,12 +85,20 @@ impl SpecEngine {
             let remaining = self.cfg.max_new_tokens - stats.tokens.len();
             stats.push_step(step, &mut ctx, remaining);
         }
+        // The request is complete: release its residency now rather than
+        // holding the blocks while the worker sits idle (the resident-block
+        // gauge must return to zero between requests).
+        self.cache.drop_seq(ENGINE_SEQ);
         stats
     }
 
-    /// One plain autoregressive step: target forward, sample, emit.
+    /// One plain autoregressive step: target forward, sample, emit. The
+    /// KV cache applies here too: with residency the forward bills only
+    /// the newly appended position instead of the whole context.
     fn autoregressive_step(&mut self, ctx: &[u32]) -> StepOutput {
         let mut step = StepStats::default();
+        let prefix_len = ctx.len();
+        let cached_len = self.cache.begin_round(ENGINE_SEQ).min(prefix_len);
         let t = Timer::start();
         let logits = self.target.next_logits(ctx);
         step.times.add("target_infer", t.elapsed_secs());
@@ -77,8 +108,25 @@ impl SpecEngine {
         step.times.add("sample", t.elapsed_secs());
         step.emitted = 1;
         step.target_dispatches = 1;
+        let bill = verify_bill(
+            prefix_len,
+            cached_len,
+            0,
+            self.cache.block_tokens(),
+        );
+        self.cache.record_lookup(
+            bill.cached_positions as u64,
+            (prefix_len - bill.cached_positions) as u64,
+        );
+        self.cache.commit(ENGINE_SEQ, cached_len, prefix_len, 0);
+        step.billed_positions = bill.billed_positions;
+        step.cached_positions = bill.cached_positions;
         step.virtual_secs = self.regime.map(|r| {
-            r.target_step_secs + step.times.get("sample")
+            r.target_step_secs
+                + r.target_pos_secs * bill.billed_positions as f64
+                + r.cache_fetch_secs * bill.fetched_blocks as f64
+                + r.cache_write_secs * bill.written_blocks as f64
+                + step.times.get("sample")
         });
         StepOutput {
             tokens: vec![token],
@@ -89,6 +137,8 @@ impl SpecEngine {
     /// One speculative step (the paper's full pipeline).
     fn speculative_step(&mut self, ctx: &[u32]) -> StepOutput {
         let mut step = StepStats::default();
+        let prefix_len = ctx.len();
+        let cached_len = self.cache.begin_round(ENGINE_SEQ).min(prefix_len);
 
         // --- draft tree construction (Fig 4: "tree construction" + "draft") ---
         let t_build = Timer::start();
@@ -113,9 +163,13 @@ impl SpecEngine {
         let row_of = row_map(&tree, &order);
         step.times.add("mask", t.elapsed_secs());
 
-        // --- parallel target verification pass ---
+        // --- parallel target verification pass (incremental: only the
+        // non-resident prefix + tree rows are computed/billed) ---
+        let lease = self.cache.lease_tree(&tree);
         let t = Timer::start();
-        let rows = self.target.score_tree(ctx, &tree, &order);
+        let rows = self
+            .target
+            .score_tree_incremental(ctx, cached_len, &tree, &order);
         step.times.add("target_infer", t.elapsed_secs());
         step.target_dispatches = 1;
 
@@ -135,12 +189,39 @@ impl SpecEngine {
         step.emitted = outcome.emitted;
         step.accepted_speculated = outcome.accepted.len();
 
+        // Cache round end: rejected branches roll back (refcounts to
+        // zero), the accepted path + the scored miss region become the new
+        // resident prefix (billed below as cache writes).
+        self.cache.end_lease(lease, &tree, &outcome.accepted_nodes);
+        self.cache.commit(
+            ENGINE_SEQ,
+            cached_len,
+            prefix_len,
+            outcome.accepted.len(),
+        );
+        let bill = verify_bill(
+            prefix_len,
+            cached_len,
+            order.len(),
+            self.cache.block_tokens(),
+        );
+        self.cache.record_lookup(
+            bill.cached_positions as u64,
+            (prefix_len - bill.cached_positions) as u64,
+        );
+        step.billed_positions = bill.billed_positions;
+        step.cached_positions = bill.cached_positions;
+
         // Virtual hardware-regime latency (paper Eq. 3): the draft/target
-        // dispatches are billed at the regime's step times; the pure-logic
-        // components are billed at measured wall time.
+        // dispatches are billed at the regime's step times, the computed
+        // positions and cache traffic at the regime's marginal rates, and
+        // the pure-logic components at measured wall time.
         step.virtual_secs = self.regime.map(|r| {
             r.draft_step_secs * draft_dispatches as f64
                 + r.target_step_secs
+                + r.target_pos_secs * bill.billed_positions as f64
+                + r.cache_fetch_secs * bill.fetched_blocks as f64
+                + r.cache_write_secs * bill.written_blocks as f64
                 + step.times.get("tree_construct")
                 + step.times.get("mask")
                 + step.times.get("sample")
@@ -273,6 +354,45 @@ mod tests {
         let draft_total: u64 = out.steps.iter().map(|s| s.draft_dispatches).sum();
         assert!(v >= regime.target_step_secs * out.steps.len() as f64
             + regime.draft_step_secs * draft_total as f64 * 0.99);
+    }
+
+    /// The tentpole property at engine level: with residency, every round
+    /// past the first bills only the fresh positions (bonus token + tree),
+    /// never the whole context — and outputs are unchanged.
+    #[test]
+    fn cache_residency_shrinks_billed_positions() {
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 9);
+        let out = e.generate(&prompt);
+        assert!(out.steps.len() >= 2, "need multiple rounds");
+        let first = &out.steps[0];
+        assert_eq!(first.cached_positions, 0);
+        assert_eq!(
+            first.billed_positions,
+            prompt.len() + first.tree_size,
+            "cold round must bill the full prefix + tree"
+        );
+        for s in &out.steps[1..] {
+            assert!(s.cached_positions > 0, "no residency after round 1");
+        }
+
+        let mut uncached = engine(PolicyKind::DySpec, 0.8, 0.6, 9).with_cache(
+            &crate::config::CacheConfig {
+                enabled: false,
+                ..crate::config::CacheConfig::default()
+            },
+        );
+        let out2 = uncached.generate(&prompt);
+        assert_eq!(out.tokens, out2.tokens, "cache changed the output");
+        assert_eq!(out.steps.len(), out2.steps.len());
+        for (warm, cold) in out.steps.iter().zip(&out2.steps).skip(1) {
+            assert!(
+                warm.billed_positions < cold.billed_positions,
+                "warm round billed {} >= cold {}",
+                warm.billed_positions,
+                cold.billed_positions
+            );
+        }
     }
 
     #[test]

@@ -15,6 +15,11 @@ pub struct StepStats {
     pub emitted: usize,
     pub draft_dispatches: u64,
     pub target_dispatches: u64,
+    /// Verification positions actually computed this step (non-resident
+    /// prefix + tree rows; the `cache::verify_bill` split).
+    pub billed_positions: usize,
+    /// Prefix positions served from the resident KV cache this step.
+    pub cached_positions: usize,
     /// Measured wall time per component (Fig 4 buckets).
     pub times: ComponentTimes,
     /// Virtual step latency under the configured hardware regime.
@@ -111,6 +116,34 @@ impl GenerationStats {
 
     pub fn total_draft_dispatches(&self) -> u64 {
         self.steps.iter().map(|s| s.draft_dispatches).sum()
+    }
+
+    pub fn total_billed_positions(&self) -> u64 {
+        self.steps.iter().map(|s| s.billed_positions as u64).sum()
+    }
+
+    pub fn total_cached_positions(&self) -> u64 {
+        self.steps.iter().map(|s| s.cached_positions as u64).sum()
+    }
+
+    /// Mean computed verification positions per step — the context-scaling
+    /// cost the KV cache flattens (`bench --experiment cache`).
+    pub fn billed_positions_per_step(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.total_billed_positions() as f64 / self.steps.len() as f64
+    }
+
+    /// Fraction of prefix-or-computed positions served from cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hit = self.total_cached_positions() as f64;
+        let total = hit + self.total_billed_positions() as f64;
+        if total <= 0.0 {
+            0.0
+        } else {
+            hit / total
+        }
     }
 }
 

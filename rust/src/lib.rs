@@ -21,6 +21,7 @@
 //! for reproduction results.
 
 pub mod bench;
+pub mod cache;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

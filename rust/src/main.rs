@@ -91,7 +91,8 @@ fn cmd_generate(cli: &Cli) -> Result<(), String> {
     let prompts = PromptSet::by_name(&cfg.dataset, 1, cfg.prompt_len, cfg.engine.seed + 100)
         .ok_or("bad dataset")?;
     let (draft, target) = build_models(&cfg)?;
-    let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime);
+    let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime)
+        .with_cache(&cfg.cache);
 
     let t = std::time::Instant::now();
     let stats = engine.generate(prompts.get(0));
@@ -119,6 +120,12 @@ fn cmd_generate(cli: &Cli) -> Result<(), String> {
             stats.virtual_latency_per_token()
         );
     }
+    println!(
+        "kv cache: {} | hit rate {:.1}% | {:.1} billed positions/step",
+        if cfg.cache.enabled { "on" } else { "off" },
+        stats.cache_hit_rate() * 100.0,
+        stats.billed_positions_per_step(),
+    );
     println!("component breakdown:");
     for (label, secs, frac) in stats.aggregate_times().breakdown() {
         println!("  {label:<16} {secs:>9.4}s  {:.1}%", frac * 100.0);

@@ -142,6 +142,25 @@ impl LogitModel for HloModel {
         rows
     }
 
+    /// Incremental verification, PJRT side: the compiled graphs have no KV
+    /// input/output buffers yet, so the real cache reuse is STUBBED — this
+    /// re-runs the full tree-masked forward (bit-identical by
+    /// construction). Because nothing is actually served from a resident
+    /// prefix, no `cached_positions` are credited (the `CallCounts`
+    /// contract keeps cached positions disjoint from computed ones).
+    /// Wiring paged KV buffers through `python/compile/aot.py` and the
+    /// PJRT runtime is an open ROADMAP item.
+    fn score_tree_incremental(
+        &mut self,
+        prefix: &[u32],
+        cached_len: usize,
+        tree: &TokenTree,
+        order: &[NodeId],
+    ) -> Vec<Vec<f32>> {
+        let _ = cached_len;
+        self.score_tree(prefix, tree, order)
+    }
+
     fn call_counts(&self) -> CallCounts {
         self.counts
     }

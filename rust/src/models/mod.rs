@@ -64,6 +64,9 @@ impl LogitModel for TimedModel<'_> {
 /// whole batch as one masked forward.
 pub struct ForestItem<'a> {
     pub prefix: &'a [u32],
+    /// Leading prefix positions already resident in the backend's KV cache
+    /// (0 = score from scratch). See [`LogitModel::score_tree_incremental`].
+    pub cached_len: usize,
     pub tree: &'a TokenTree,
     pub order: &'a [NodeId],
 }
@@ -78,12 +81,20 @@ pub struct CallCounts {
     pub dispatches: u64,
     /// Total positions scored across all dispatches.
     pub positions: u64,
+    /// Positions served from a resident KV prefix instead of being
+    /// recomputed (incremental scoring; excluded from `positions`).
+    pub cached_positions: u64,
 }
 
 impl CallCounts {
     pub fn add_dispatch(&mut self, positions: u64) {
         self.dispatches += 1;
         self.positions += positions;
+    }
+
+    pub fn add_dispatch_cached(&mut self, positions: u64, cached: u64) {
+        self.add_dispatch(positions);
+        self.cached_positions += cached;
     }
 }
 
@@ -122,9 +133,31 @@ pub trait LogitModel {
         out
     }
 
+    /// Session-scoped incremental verification: like
+    /// [`LogitModel::score_tree`], but the caller promises the first
+    /// `cached_len` prefix positions are resident in the backend's KV cache
+    /// (tracked by `cache::CacheManager`), so a cache-aware backend scores
+    /// only the non-resident prefix plus the tree rows. MUST return
+    /// bit-identical rows to `score_tree` on the same inputs — pinned by
+    /// `rust/tests/cache_equivalence.rs`.
+    ///
+    /// Default implementation ignores the hint and rescores from scratch
+    /// (exact for any backend; the ledger then sees no cached positions).
+    fn score_tree_incremental(
+        &mut self,
+        prefix: &[u32],
+        cached_len: usize,
+        tree: &TokenTree,
+        order: &[NodeId],
+    ) -> Vec<Vec<f32>> {
+        let _ = cached_len;
+        self.score_tree(prefix, tree, order)
+    }
+
     /// Score many (prefix, tree) groups in one batched verification
     /// dispatch — the continuous batcher's entry point. Returns, per item,
     /// the same row layout as [`LogitModel::score_tree`] (row 0 = root).
+    /// Each item carries its own resident-prefix mark (`cached_len`).
     ///
     /// Default implementation scores items sequentially, which is exact for
     /// any causal backend; batched backends override it with a single
@@ -133,7 +166,14 @@ pub trait LogitModel {
     fn score_forest(&mut self, items: &[ForestItem<'_>]) -> Vec<Vec<Vec<f32>>> {
         items
             .iter()
-            .map(|it| self.score_tree(it.prefix, it.tree, it.order))
+            .map(|it| {
+                self.score_tree_incremental(
+                    it.prefix,
+                    it.cached_len,
+                    it.tree,
+                    it.order,
+                )
+            })
             .collect()
     }
 
@@ -209,8 +249,8 @@ mod tests {
         let t2 = TokenTree::new(5, vec![]);
         let o2: Vec<usize> = vec![];
         let items = [
-            ForestItem { prefix: &[1, 2], tree: &t1, order: &o1 },
-            ForestItem { prefix: &[4, 5], tree: &t2, order: &o2 },
+            ForestItem { prefix: &[1, 2], cached_len: 0, tree: &t1, order: &o1 },
+            ForestItem { prefix: &[4, 5], cached_len: 1, tree: &t2, order: &o2 },
         ];
         let batched = m.score_forest(&items);
         assert_eq!(batched.len(), 2);
@@ -219,5 +259,24 @@ mod tests {
         assert_eq!(crate::util::math::argmax(&batched[0][0]), 3);
         assert_eq!(crate::util::math::argmax(&batched[0][1]), 4);
         assert_eq!(crate::util::math::argmax(&batched[1][0]), 6);
+    }
+
+    /// The default incremental path must ignore the hint and stay
+    /// bit-identical to from-scratch scoring for any backend.
+    #[test]
+    fn default_incremental_matches_score_tree() {
+        let mut m = Succ {
+            vocab: 8,
+            counts: CallCounts::default(),
+        };
+        let mut t = TokenTree::new(2, vec![]);
+        let a = t.add_child(ROOT, 3, 0.9);
+        let b = t.add_child(a, 4, 0.8);
+        let order = vec![a, b];
+        let want = m.score_tree(&[1, 2], &t, &order);
+        for cached in [0usize, 1, 2] {
+            let got = m.score_tree_incremental(&[1, 2], cached, &t, &order);
+            assert_eq!(got, want, "cached_len {cached}");
+        }
     }
 }

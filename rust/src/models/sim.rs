@@ -13,6 +13,7 @@
 //! rationale; EXPERIMENTS.md §Calibration the fitted constants.
 
 use super::{CallCounts, LogitModel};
+use crate::tree::{NodeId, TokenTree};
 use crate::util::rng::splitmix64;
 use crate::util::Rng;
 
@@ -185,6 +186,38 @@ impl LogitModel for SimModel {
             Role::Target => self.spec.target_logits(ctx),
             Role::Draft => self.spec.draft_logits(ctx),
         }
+    }
+
+    /// Incremental verification: the sim is a pure function of (spec,
+    /// context), so KV residency cannot change its logits — rows are
+    /// computed exactly as the default `score_tree` walk would, and only
+    /// the dispatch accounting reflects the resident prefix. This is the
+    /// identity `rust/tests/cache_equivalence.rs` pins.
+    fn score_tree_incremental(
+        &mut self,
+        prefix: &[u32],
+        cached_len: usize,
+        tree: &TokenTree,
+        order: &[NodeId],
+    ) -> Vec<Vec<f32>> {
+        let cached = cached_len.min(prefix.len()) as u64;
+        let total = (prefix.len() + order.len()) as u64;
+        self.counts.add_dispatch_cached(total - cached, cached);
+        let mut out = Vec::with_capacity(order.len() + 1);
+        out.push(match self.role {
+            Role::Target => self.spec.target_logits(prefix),
+            Role::Draft => self.spec.draft_logits(prefix),
+        });
+        let mut ctx = prefix.to_vec();
+        for &id in order {
+            ctx.truncate(prefix.len());
+            ctx.extend(tree.path_tokens(id));
+            out.push(match self.role {
+                Role::Target => self.spec.target_logits(&ctx),
+                Role::Draft => self.spec.draft_logits(&ctx),
+            });
+        }
+        out
     }
 
     fn call_counts(&self) -> CallCounts {

@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
+use crate::cache::{verify_bill, CacheManager, TreeLease};
 use crate::config::{Config, PolicyKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::Request;
@@ -51,6 +52,11 @@ pub struct StepReport {
     /// Per-sequence tokens emitted this step (same alignment).
     pub emitted: Vec<usize>,
     pub draft_dispatches: u64,
+    /// Verification positions computed across the dispatch (non-resident
+    /// prefixes + every tree row; `cache::verify_bill`).
+    pub billed_positions: usize,
+    /// Prefix positions served from the KV cache across the dispatch.
+    pub cached_positions: usize,
     /// Virtual regime cost of the step (one shared target dispatch).
     pub virtual_secs: f64,
     /// Sequences that finished (responses sent) this step.
@@ -68,6 +74,9 @@ pub struct Batcher {
     metrics: Arc<Metrics>,
     seqs: Vec<Sequence>,
     seed_salt: u64,
+    /// KV residency across rounds for every multiplexed sequence, under
+    /// this worker's global block budget (`cfg.cache`).
+    cache: CacheManager,
 }
 
 impl Batcher {
@@ -80,6 +89,7 @@ impl Batcher {
     ) -> Self {
         let policy = make_policy(cfg.engine.policy);
         let seed_salt = cfg.engine.seed ^ 0x5EED_BA7C_0000_0001;
+        let cache = CacheManager::new(&cfg.cache);
         Self {
             wid,
             cfg,
@@ -89,11 +99,17 @@ impl Batcher {
             metrics,
             seqs: Vec::new(),
             seed_salt,
+            cache,
         }
     }
 
     pub fn active(&self) -> usize {
         self.seqs.len()
+    }
+
+    /// This worker's KV cache state (tests and metrics).
+    pub fn cache(&self) -> &CacheManager {
+        &self.cache
     }
 
     fn capacity_left(&self) -> usize {
@@ -210,11 +226,24 @@ impl Batcher {
         let orders: Vec<Vec<NodeId>> =
             trees.iter().map(dfs_order).collect();
 
+        // --- KV residency: resident prefix marks + transient COW leases
+        // for the speculated branches (DESIGN.md §KV cache) ---
+        let cached_lens: Vec<usize> = (0..n)
+            .map(|i| {
+                self.cache
+                    .begin_round(self.seqs[i].id)
+                    .min(self.seqs[i].ctx.len())
+            })
+            .collect();
+        let mut leases: Vec<TreeLease> =
+            trees.iter().map(|t| self.cache.lease_tree(t)).collect();
+
         // --- ONE batched target dispatch for the whole active set ---
         let all_rows = {
             let items: Vec<ForestItem<'_>> = (0..n)
                 .map(|i| ForestItem {
                     prefix: &self.seqs[i].ctx,
+                    cached_len: cached_lens[i],
                     tree: &trees[i],
                     order: &orders[i],
                 })
@@ -225,14 +254,49 @@ impl Batcher {
         // --- per-sequence verification + state advance ---
         let t_verify = Timer::start();
         let mut finished: Vec<usize> = Vec::new();
+        let block_tokens = self.cache.block_tokens();
+        let mut billed_total = 0usize;
+        let mut cached_total = 0usize;
+        let mut fetched_total = 0usize;
+        let mut written_total = 0usize;
         for i in 0..n {
             let seq = &mut self.seqs[i];
+            let seq_id = seq.id;
+            let prefix_len = seq.ctx.len();
             let dists: Vec<Vec<f32>> = all_rows[i]
                 .iter()
                 .map(|r| dist_from_logits(r, seq.temperature))
                 .collect();
             let row_of = row_map(&trees[i], &orders[i]);
             let out = verify_tree(&trees[i], &dists, &row_of, &mut seq.rng);
+
+            // Rollback rejected branches, retain miss region + accepted
+            // path as the new resident prefix, price the dispatch slice.
+            let lease = std::mem::take(&mut leases[i]);
+            self.cache.end_lease(lease, &trees[i], &out.accepted_nodes);
+            self.cache.commit(
+                seq_id,
+                cached_lens[i],
+                prefix_len,
+                out.accepted.len(),
+            );
+            let bill = verify_bill(
+                prefix_len,
+                cached_lens[i],
+                orders[i].len(),
+                block_tokens,
+            );
+            self.cache.record_lookup(
+                bill.cached_positions as u64,
+                (prefix_len - bill.cached_positions) as u64,
+            );
+            billed_total += bill.billed_positions;
+            cached_total += bill.cached_positions;
+            fetched_total += bill.fetched_blocks;
+            written_total += bill.written_blocks;
+
+            let seq = &mut self.seqs[i];
+            seq.cache_hits += bill.cached_positions as u64;
             let mut tokens = out.accepted;
             tokens.push(out.bonus);
             report.emitted.push(tokens.len().min(seq.remaining()));
@@ -247,6 +311,8 @@ impl Batcher {
             }
         }
         let verify_secs = t_verify.elapsed_secs();
+        report.billed_positions = billed_total;
+        report.cached_positions = cached_total;
 
         let used: usize = alloc_by_seq.iter().sum();
 
@@ -272,6 +338,9 @@ impl Batcher {
                 };
                 r.draft_step_secs * report.draft_dispatches as f64
                     + r.target_step_secs * units as f64
+                    + r.target_pos_secs * billed_total as f64
+                    + r.cache_fetch_secs * fetched_total as f64
+                    + r.cache_write_secs * written_total as f64
                     + construct_secs
                     + verify_secs
             })
@@ -284,11 +353,19 @@ impl Batcher {
         let emitted_total: usize = report.emitted.iter().sum();
         metrics.on_dispatches(1, n as u64, used as u64, budget as u64, virt);
         metrics.tokens_in_flight_add(emitted_total as u64);
+        metrics.on_cache(
+            cached_total as u64,
+            billed_total as u64,
+            self.cache.used_blocks() as u64,
+        );
 
         // Retire finished sequences (largest index first keeps the
         // remaining swap_remove indices valid).
         for &i in finished.iter().rev() {
             let seq = self.seqs.swap_remove(i);
+            // Residency dies with the sequence (leak-freedom is pinned by
+            // rust/tests/scheduler.rs).
+            self.cache.drop_seq(seq.id);
             let (tx, resp) = seq.into_response(self.wid);
             metrics.tokens_in_flight_sub(resp.tokens.len() as u64);
             metrics.on_completed(resp.tokens.len(), resp.gen_secs);
@@ -446,6 +523,66 @@ mod tests {
         assert_eq!(report.emitted, vec![1]);
         assert_eq!(rx.recv().unwrap().tokens.len(), 1);
         assert_eq!(b.active(), 0);
+    }
+
+    #[test]
+    fn cache_residency_kicks_in_after_first_step_and_drains_clean() {
+        let mut b = mk_batcher(8, 16);
+        let rxs: Vec<_> = (0..3)
+            .map(|i| {
+                let (req, rx) = mk_request(i + 1, 10);
+                b.admit(req);
+                rx
+            })
+            .collect();
+        let first = b.step();
+        assert_eq!(first.cached_positions, 0, "cold start cannot hit");
+        assert!(first.billed_positions > 0);
+        assert!(b.cache().used_blocks() > 0, "no residency committed");
+        while b.active() > 0 {
+            let rep = b.step();
+            assert!(
+                rep.cached_positions > 0,
+                "warm step served nothing from cache"
+            );
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.tokens.len(), 10);
+            assert!(
+                resp.cache_hits > 0,
+                "multi-step request reported no cache hits"
+            );
+        }
+        assert_eq!(
+            b.cache().used_blocks(),
+            0,
+            "retired sequences leaked blocks"
+        );
+    }
+
+    #[test]
+    fn cache_off_bills_everything() {
+        let mut cfg = Config::new();
+        cfg.engine.tree_budget = 8;
+        cfg.sched.max_active = 4;
+        cfg.sched.global_budget = 8;
+        cfg.cache.enabled = false;
+        let (d, t) = SimModel::pair(SimSpec::new(64, 2.0, 0.8, 11));
+        let mut b = Batcher::new(
+            0,
+            cfg,
+            Box::new(d),
+            Box::new(t),
+            Arc::new(Metrics::new()),
+        );
+        let (req, _rx) = mk_request(1, 6);
+        b.admit(req);
+        while b.active() > 0 {
+            let rep = b.step();
+            assert_eq!(rep.cached_positions, 0);
+            assert_eq!(b.cache().used_blocks(), 0);
+        }
     }
 
     #[test]

@@ -136,19 +136,18 @@ pub fn build_forest(
         if trees[cand.seq].size() >= cfg.tree_budget {
             continue; // this sequence's tree is full; drop the candidate
         }
-        // Lazy scoring on first expansion (same as DySpec §Perf L3.1).
-        let sampler = match &mut cand.sampler {
-            Some(s) => s,
-            None => {
-                ctx.clear();
-                ctx.extend_from_slice(prefixes[cand.seq]);
-                ctx.extend(trees[cand.seq].path_tokens(cand.node));
-                let dist =
-                    dist_from_logits(&draft.next_logits(&ctx), cfg.draft_temp);
-                trees[cand.seq].node_mut(cand.node).draft_dist = dist.clone();
-                cand.sampler.insert(SiblingSampler::new(dist))
-            }
-        };
+        // Lazy scoring on first expansion (same as DySpec §Perf L3.1; same
+        // is_none/as_mut shape — the match form trips NLL).
+        if cand.sampler.is_none() {
+            ctx.clear();
+            ctx.extend_from_slice(prefixes[cand.seq]);
+            ctx.extend(trees[cand.seq].path_tokens(cand.node));
+            let dist =
+                dist_from_logits(&draft.next_logits(&ctx), cfg.draft_temp);
+            trees[cand.seq].node_mut(cand.node).draft_dist = dist.clone();
+            cand.sampler = Some(SiblingSampler::new(dist));
+        }
+        let sampler = cand.sampler.as_mut().expect("sampler just installed");
         let Some((token, r_y)) = sampler.draw(&mut rngs[cand.seq]) else {
             continue; // draft mass at this position exhausted
         };

@@ -45,6 +45,11 @@ pub struct Sequence {
     /// Speculated-tree tokens allocated to this sequence, summed over its
     /// steps — the budget-share metric.
     pub budget_tokens: u64,
+    /// Prefix positions this sequence served from the KV cache, summed
+    /// over its dispatches (the per-sequence half of the worker's
+    /// hit-rate metric; residency itself lives in `cache::CacheManager`,
+    /// keyed by `id`).
+    pub cache_hits: u64,
     /// Per-sequence sampling stream, seeded from (scheduler seed, request
     /// id) so streams never collide across co-batched sequences. NOTE:
     /// the *position* in the stream still depends on batch composition —
@@ -77,6 +82,7 @@ impl Sequence {
             emitted: Vec::new(),
             steps: 0,
             budget_tokens: 0,
+            cache_hits: 0,
             rng: Rng::new(
                 seed_salt ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
             ),
@@ -140,6 +146,7 @@ impl Sequence {
             gen_secs: self.admitted_at.elapsed().as_secs_f64(),
             ttft_secs: self.ttft_secs.unwrap_or(0.0),
             virtual_secs: self.virtual_secs,
+            cache_hits: self.cache_hits,
         };
         (self.respond, resp)
     }

@@ -63,6 +63,7 @@ pub fn response_json(resp: &Response) -> Json {
         ("gen_secs", Json::Num(resp.gen_secs)),
         ("ttft_secs", Json::Num(resp.ttft_secs)),
         ("virtual_secs", Json::Num(resp.virtual_secs)),
+        ("cache_hits", Json::Num(resp.cache_hits as f64)),
     ])
 }
 
@@ -137,11 +138,13 @@ mod tests {
             gen_secs: 0.2,
             ttft_secs: 0.15,
             virtual_secs: 0.0,
+            cache_hits: 5,
         };
         let json = response_json(&resp);
         let text = json.to_string();
         let back = parse(&text).unwrap();
         assert_eq!(back.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(back.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(back.get("cache_hits").unwrap().as_usize(), Some(5));
     }
 }

@@ -1,0 +1,247 @@
+//! Differential wall for the KV prefix cache (ISSUE 2 tentpole):
+//!
+//!   1. model level — cached incremental scoring is BIT-IDENTICAL to
+//!      from-scratch `score_tree` / `score_forest` for any resident mark;
+//!   2. engine level — multi-round generation with the cache on vs off
+//!      emits identical token streams for all four drafters, and every
+//!      dispatch past a sequence's first round bills strictly fewer
+//!      verify positions than uncached scoring would;
+//!   3. batcher level — same identity under forest batching, and it
+//!      survives evictions forcing re-scoring under a tiny block budget.
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dyspec::config::{CacheConfig, Config, EngineConfig, PolicyKind, SchedKind};
+use dyspec::coordinator::{Metrics, Request, Response};
+use dyspec::draft::make_policy;
+use dyspec::engine::SpecEngine;
+use dyspec::models::sim::{Role, SimModel, SimSpec};
+use dyspec::models::{ForestItem, LogitModel};
+use dyspec::sched::Batcher;
+use dyspec::tree::dfs_order;
+use dyspec::util::Rng;
+
+const POLICIES: [PolicyKind; 4] = [
+    PolicyKind::DySpec,
+    PolicyKind::Sequoia,
+    PolicyKind::SpecInfer,
+    PolicyKind::Chain,
+];
+
+fn sim_pair(seed: u64) -> (SimModel, SimModel) {
+    SimModel::pair(SimSpec::new(64, 2.0, 1.0, seed))
+}
+
+/// 1a. `score_tree_incremental` must return bit-identical rows to
+/// `score_tree` for every drafter's tree shape, both roles, and any
+/// resident mark — including marks past the prefix (clamped).
+#[test]
+fn incremental_rows_bit_identical_to_from_scratch() {
+    let prefix: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+    for policy_kind in POLICIES {
+        let policy = make_policy(policy_kind);
+        let cfg = EngineConfig {
+            tree_budget: 12,
+            ..EngineConfig::default()
+        };
+        let (mut draft, _) = sim_pair(42);
+        let mut rng = Rng::new(7);
+        let tree = policy.build(&mut draft, &prefix, &cfg, &mut rng);
+        let order = dfs_order(&tree);
+        for role in [Role::Draft, Role::Target] {
+            let spec = SimSpec::new(64, 2.0, 1.0, 42);
+            let mut scratch = SimModel::new(spec, role);
+            let mut incremental = SimModel::new(spec, role);
+            let want = scratch.score_tree(&prefix, &tree, &order);
+            for cached in [0usize, 1, prefix.len() - 1, prefix.len(), 99] {
+                let got = incremental
+                    .score_tree_incremental(&prefix, cached, &tree, &order);
+                assert_eq!(
+                    got, want,
+                    "{policy_kind}: rows diverge at cached_len {cached}"
+                );
+            }
+        }
+    }
+}
+
+/// 1b. Forest batching with per-item resident marks must equal per-item
+/// from-scratch scoring.
+#[test]
+fn forest_with_resident_marks_bit_identical() {
+    let prefixes: Vec<Vec<u32>> = vec![vec![3, 1, 4], vec![2, 7, 1, 8, 2], vec![9, 9]];
+    let cfg = EngineConfig {
+        tree_budget: 8,
+        ..EngineConfig::default()
+    };
+    let policy = make_policy(PolicyKind::DySpec);
+    let mut trees = Vec::new();
+    for (i, p) in prefixes.iter().enumerate() {
+        let (mut draft, _) = sim_pair(5);
+        let mut rng = Rng::new(i as u64);
+        trees.push(policy.build(&mut draft, p, &cfg, &mut rng));
+    }
+    let orders: Vec<Vec<usize>> = trees.iter().map(dfs_order).collect();
+
+    let (_, mut scratch) = sim_pair(31);
+    let want: Vec<Vec<Vec<f32>>> = (0..3)
+        .map(|i| scratch.score_tree(&prefixes[i], &trees[i], &orders[i]))
+        .collect();
+
+    let (_, mut batched) = sim_pair(31);
+    let items: Vec<ForestItem<'_>> = (0..3)
+        .map(|i| ForestItem {
+            prefix: &prefixes[i],
+            cached_len: [0usize, 2, 99][i],
+            tree: &trees[i],
+            order: &orders[i],
+        })
+        .collect();
+    let got = batched.score_forest(&items);
+    assert_eq!(got, want, "forest rows diverge under resident marks");
+}
+
+fn engine_run(
+    policy: PolicyKind,
+    cache: &CacheConfig,
+    seed: u64,
+) -> dyspec::engine::GenerationStats {
+    let (draft, target) = sim_pair(99);
+    let cfg = EngineConfig {
+        policy,
+        tree_budget: 10,
+        max_new_tokens: 32,
+        target_temp: 0.6,
+        draft_temp: 0.6,
+        seed,
+        ..EngineConfig::default()
+    };
+    let mut e = SpecEngine::new(Box::new(draft), Box::new(target), cfg, None)
+        .with_cache(cache);
+    e.generate(&[3, 1, 4, 1, 5])
+}
+
+/// 2. Multi-round generation: identical streams cache on vs off for all
+/// four drafters, and the ISSUE acceptance criterion — every dispatch
+/// past the first bills strictly fewer positions than uncached.
+#[test]
+fn engine_streams_identical_and_warm_rounds_bill_strictly_less() {
+    let on = CacheConfig::default();
+    let off = CacheConfig {
+        enabled: false,
+        ..CacheConfig::default()
+    };
+    for policy in POLICIES {
+        for seed in 0..3u64 {
+            let warm = engine_run(policy, &on, seed);
+            let cold = engine_run(policy, &off, seed);
+            assert_eq!(
+                warm.tokens, cold.tokens,
+                "{policy} seed {seed}: cache changed the stream"
+            );
+            assert_eq!(warm.steps.len(), cold.steps.len());
+            assert!(warm.steps.len() >= 2, "{policy}: need multiple rounds");
+            assert_eq!(warm.steps[0].cached_positions, 0);
+            for (k, (w, c)) in
+                warm.steps.iter().zip(&cold.steps).enumerate().skip(1)
+            {
+                assert!(
+                    w.billed_positions < c.billed_positions,
+                    "{policy} seed {seed} step {k}: warm {} !< cold {}",
+                    w.billed_positions,
+                    c.billed_positions
+                );
+                assert!(w.cached_positions > 0);
+                assert_eq!(c.cached_positions, 0);
+            }
+        }
+    }
+}
+
+fn batcher_tokens(
+    policy: PolicyKind,
+    cache: CacheConfig,
+    n_seqs: u64,
+) -> (Vec<Vec<u32>>, u64) {
+    let mut cfg = Config::new();
+    cfg.engine.policy = policy;
+    cfg.engine.tree_budget = 8;
+    cfg.engine.seed = 5;
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.sched.max_active = 16;
+    cfg.sched.global_budget = 8 * n_seqs as usize;
+    cfg.cache = cache;
+    let (d, t) = sim_pair(17);
+    let mut b = Batcher::new(
+        0,
+        cfg,
+        Box::new(d),
+        Box::new(t),
+        Arc::new(Metrics::new()),
+    );
+    let rxs: Vec<mpsc::Receiver<Response>> = (0..n_seqs)
+        .map(|i| {
+            let (tx, rx) = mpsc::channel();
+            b.admit(Request {
+                id: i + 1,
+                prompt: vec![10 + i as u32, 2, 3],
+                max_new_tokens: 20,
+                temperature: 0.6,
+                submitted_at: Instant::now(),
+                respond: tx,
+            });
+            rx
+        })
+        .collect();
+    while b.active() > 0 {
+        b.step();
+    }
+    let evictions = b.cache().stats().evictions;
+    assert_eq!(b.cache().used_blocks(), 0, "blocks leaked after Done");
+    (
+        rxs.iter().map(|rx| rx.recv().unwrap().tokens).collect(),
+        evictions,
+    )
+}
+
+/// 3a. Forest batching: identical streams cache on vs off for every
+/// drafter (greedy cross-request allocator AND the fair-split path).
+#[test]
+fn batched_streams_identical_cache_on_vs_off() {
+    for policy in POLICIES {
+        let (warm, _) = batcher_tokens(policy, CacheConfig::default(), 3);
+        let (cold, _) = batcher_tokens(
+            policy,
+            CacheConfig {
+                enabled: false,
+                ..CacheConfig::default()
+            },
+            3,
+        );
+        assert_eq!(warm, cold, "{policy}: cache changed batched streams");
+    }
+}
+
+/// 3b. A tiny block budget forces evictions mid-run (residency drops to
+/// zero, sequences re-score from scratch) — streams must still be
+/// identical, and the run must actually have evicted.
+#[test]
+fn eviction_forced_rescoring_keeps_streams_identical() {
+    let tiny = CacheConfig {
+        enabled: true,
+        block_tokens: 4,
+        max_blocks: 3, // far below 4 sequences' residency needs
+    };
+    let (warm, evictions) = batcher_tokens(PolicyKind::DySpec, tiny, 4);
+    assert!(evictions > 0, "budget never forced an eviction");
+    let (cold, _) = batcher_tokens(
+        PolicyKind::DySpec,
+        CacheConfig {
+            enabled: false,
+            ..CacheConfig::default()
+        },
+        4,
+    );
+    assert_eq!(warm, cold, "eviction-forced re-scoring changed streams");
+}

@@ -13,7 +13,8 @@
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use dyspec::config::{Config, EngineConfig, PolicyKind, SchedKind};
+use dyspec::cache::CacheManager;
+use dyspec::config::{CacheConfig, Config, EngineConfig, PolicyKind, SchedKind};
 use dyspec::coordinator::{Coordinator, Metrics, ModelFactory, Request, Response};
 use dyspec::draft::dyspec::DySpecPolicy;
 use dyspec::draft::TreePolicy;
@@ -228,6 +229,113 @@ fn coordinator_shutdown_drains_under_continuous_scheduler() {
         let resp = rx.recv().expect("sequence dropped during shutdown");
         assert_eq!(resp.tokens.len(), 16);
     }
+}
+
+/// KV allocator invariant (ISSUE 2 satellite): across a full serve cycle
+/// no block leaks once every sequence has walked Drain -> Done, and the
+/// pool never exceeds its global budget mid-flight.
+#[test]
+fn cache_blocks_never_leak_after_drain_done() {
+    let mut cfg = base_cfg();
+    cfg.cache = CacheConfig {
+        enabled: true,
+        block_tokens: 4,
+        max_blocks: 32,
+    };
+    let mut b = mk_batcher(cfg);
+    let lens = [1usize, 5, 12, 20];
+    let rxs: Vec<_> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| {
+            let (req, rx) =
+                mk_request(i as u64 + 1, vec![50 + i as u32, 1, 2], len, 0.6);
+            b.admit(req);
+            rx
+        })
+        .collect();
+    while b.active() > 0 {
+        b.step();
+        assert!(
+            b.cache().used_blocks() <= b.cache().pool().capacity(),
+            "block budget exceeded"
+        );
+    }
+    for (rx, &len) in rxs.iter().zip(&lens) {
+        assert_eq!(rx.recv().unwrap().tokens.len(), len);
+    }
+    assert_eq!(b.cache().used_blocks(), 0, "Drain->Done leaked blocks");
+    let stats = b.cache().stats();
+    assert_eq!(stats.allocated, stats.freed, "alloc/free imbalance");
+    // The record_lookup feed saw both cold prefixes and warm hits.
+    assert!(stats.miss_tokens > 0, "no cold positions recorded");
+    assert!(stats.hit_tokens > 0, "no resident positions recorded");
+}
+
+/// Refcounts on REAL DySpec trees: leasing a built tree, rolling back the
+/// rejected branches, and ending the round returns the pool exactly to
+/// its pre-round state — and eviction pressure can never free a block the
+/// in-flight lease still references.
+#[test]
+fn tree_rollback_and_eviction_respect_refcounts_on_real_trees() {
+    let cfg = EngineConfig {
+        tree_budget: 24,
+        ..EngineConfig::default()
+    };
+    let mut manager = CacheManager::new(&CacheConfig {
+        enabled: true,
+        block_tokens: 2,
+        max_blocks: 64,
+    });
+    // A warm co-resident sequence that eviction may legally reclaim.
+    manager.begin_round(7);
+    manager.commit(7, 0, 10, 0);
+    let baseline = manager.used_blocks();
+
+    for seed in 0..10u64 {
+        let (mut draft, _) = SimModel::pair(SimSpec::new(64, 2.0, 0.8, seed));
+        let mut rng = Rng::new(seed);
+        let prefix = vec![3, 1, 4, 1, 5];
+        let tree = DySpecPolicy.build(&mut draft, &prefix, &cfg, &mut rng);
+        let lease = manager.lease_tree(&tree);
+        // Every tracked node's blocks are live while the lease is.
+        let tracked: Vec<usize> =
+            (1..tree.num_nodes()).filter_map(|id| lease.node_tail(id)).collect();
+        for &blk in &tracked {
+            assert!(manager.pool().refcount(blk) > 0);
+        }
+        // Budget pressure mid-lease: evicting the warm sequence must not
+        // free any leased block.
+        if seed == 0 {
+            assert!(manager.evict_lru(0));
+            for &blk in &tracked {
+                assert!(
+                    manager.pool().refcount(blk) > 0,
+                    "eviction freed a leased block"
+                );
+            }
+        }
+        // Accept the heaviest first-layer path arbitrarily: first child
+        // chain; everything else is a rejected branch.
+        let mut accepted = Vec::new();
+        let mut cur = dyspec::tree::ROOT;
+        while let Some(&child) = tree.node(cur).children.first() {
+            accepted.push(child);
+            cur = child;
+        }
+        manager.end_lease(lease, &tree, &accepted);
+        // Seed 0 evicted the only resident sequence mid-lease, so from
+        // then on every round must return the pool to empty; before that
+        // eviction the baseline was the warm sequence's blocks.
+        assert_eq!(
+            manager.used_blocks(),
+            0,
+            "seed {seed}: lease did not return the pool to baseline"
+        );
+    }
+    assert!(baseline > 0, "warm sequence held no blocks");
+    let stats = manager.stats();
+    assert_eq!(stats.allocated, stats.freed, "alloc/free imbalance");
 }
 
 #[test]

@@ -8,7 +8,9 @@
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use dyspec::config::{Config, EngineConfig, PolicyKind, SchedKind};
+use dyspec::config::{
+    CacheConfig, Config, EngineConfig, LatencyRegime, PolicyKind, SchedKind,
+};
 use dyspec::coordinator::{Metrics, Request, Response};
 use dyspec::engine::SpecEngine;
 use dyspec::models::sim::{SimModel, SimSpec};
@@ -179,6 +181,141 @@ fn continuous_batching_preserves_first_token_distribution() {
         d < (3.0 * floor).max(0.05),
         "batched TV {d:.4} vs noise floor {floor:.4} — BIASED OUTPUT UNDER BATCHING"
     );
+}
+
+/// ISSUE 2 satellite: multi-round end-to-end generation with the KV cache
+/// on vs off produces IDENTICAL token streams, and the regime-priced
+/// verify ledger with the cache enabled is <= the uncached ledger on every
+/// dispatch (strictly cheaper once anything is resident). The priced cost
+/// is reconstructed deterministically from the per-step bill — wall-time
+/// components are excluded so the comparison cannot flake.
+#[test]
+fn cache_on_off_identical_streams_and_cheaper_ledger() {
+    let regime = LatencyRegime::pair_7b();
+    let block = CacheConfig::default().block_tokens;
+    // Priced verify cost of one dispatch from its deterministic bill:
+    // computed positions + written blocks + fetched resident blocks.
+    let priced = |billed: usize, cached: usize| -> f64 {
+        regime.target_pos_secs * billed as f64
+            + regime.cache_write_secs * billed.div_ceil(block) as f64
+            + regime.cache_fetch_secs * (cached / block) as f64
+    };
+    let run = |enabled: bool, policy: PolicyKind| {
+        let spec = SimSpec::new(VOCAB, 2.0, 1.0, 99);
+        let (draft, target) = SimModel::pair(spec);
+        let cfg = EngineConfig {
+            policy,
+            tree_budget: 8,
+            max_new_tokens: 32,
+            target_temp: 0.6,
+            seed: 13,
+            ..EngineConfig::default()
+        };
+        let mut e =
+            SpecEngine::new(Box::new(draft), Box::new(target), cfg, None)
+                .with_cache(&CacheConfig {
+                    enabled,
+                    ..CacheConfig::default()
+                });
+        e.generate(&[3, 1, 4])
+    };
+    for policy in [
+        PolicyKind::DySpec,
+        PolicyKind::Sequoia,
+        PolicyKind::SpecInfer,
+        PolicyKind::Chain,
+        PolicyKind::Baseline,
+    ] {
+        let warm = run(true, policy);
+        let cold = run(false, policy);
+        assert_eq!(
+            warm.tokens, cold.tokens,
+            "{policy}: cache changed the emitted stream"
+        );
+        assert_eq!(warm.steps.len(), cold.steps.len());
+        for (k, (w, c)) in
+            warm.steps.iter().zip(&cold.steps).enumerate()
+        {
+            let warm_cost = priced(w.billed_positions, w.cached_positions);
+            let cold_cost = priced(c.billed_positions, c.cached_positions);
+            assert!(
+                warm_cost <= cold_cost + 1e-12,
+                "{policy} dispatch {k}: cached ledger {warm_cost} above \
+                 uncached {cold_cost}"
+            );
+            if k > 0 {
+                assert!(
+                    warm_cost < cold_cost,
+                    "{policy} dispatch {k}: warm round not strictly cheaper"
+                );
+            }
+        }
+    }
+}
+
+/// Same satellite under forest batching: identical streams, and every
+/// shared dispatch bills no more positions with the cache than without
+/// (strictly fewer once sequences are past their first round).
+#[test]
+fn batched_cache_on_off_identical_streams_and_billed_positions_dominate() {
+    let run = |enabled: bool| -> (Vec<Vec<u32>>, Vec<(usize, usize)>) {
+        let spec = SimSpec::new(VOCAB, 2.0, 1.0, 99);
+        let (draft, target) = SimModel::pair(spec);
+        let mut cfg = Config::new();
+        cfg.engine.tree_budget = 8;
+        cfg.engine.seed = 21;
+        cfg.sched.kind = SchedKind::Continuous;
+        cfg.sched.max_active = 4;
+        cfg.sched.global_budget = 24;
+        cfg.cache.enabled = enabled;
+        let mut b = Batcher::new(
+            0,
+            cfg,
+            Box::new(draft),
+            Box::new(target),
+            Arc::new(Metrics::new()),
+        );
+        let rxs: Vec<mpsc::Receiver<Response>> = (0..3u64)
+            .map(|i| {
+                let (tx, rx) = mpsc::channel();
+                b.admit(Request {
+                    id: i + 1,
+                    prompt: vec![3, 1, 4],
+                    max_new_tokens: 16,
+                    temperature: 0.6,
+                    submitted_at: Instant::now(),
+                    respond: tx,
+                });
+                rx
+            })
+            .collect();
+        let mut bills = Vec::new();
+        while b.active() > 0 {
+            let rep = b.step();
+            bills.push((rep.billed_positions, rep.cached_positions));
+        }
+        (
+            rxs.iter().map(|rx| rx.recv().unwrap().tokens).collect(),
+            bills,
+        )
+    };
+    let (warm_tokens, warm_bills) = run(true);
+    let (cold_tokens, cold_bills) = run(false);
+    assert_eq!(warm_tokens, cold_tokens, "cache changed batched streams");
+    assert_eq!(warm_bills.len(), cold_bills.len());
+    for (k, ((wb, wc), (cb, cc))) in
+        warm_bills.iter().zip(&cold_bills).enumerate()
+    {
+        assert_eq!(*cc, 0, "uncached run reported hits");
+        assert!(
+            wb <= cb,
+            "dispatch {k}: cache billed {wb} > uncached {cb}"
+        );
+        if k > 0 {
+            assert!(wb < cb, "dispatch {k}: warm not strictly cheaper");
+            assert!(*wc > 0, "dispatch {k}: no resident positions");
+        }
+    }
 }
 
 #[test]
