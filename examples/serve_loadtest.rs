@@ -1,7 +1,9 @@
 //! Serving load test: starts the coordinator + TCP server in-process,
-//! replays a Poisson request trace through real client connections, and
-//! reports throughput, latency percentiles and backpressure counts — the
-//! end-to-end driver for the serving layer (DESIGN.md deliverable (b)).
+//! replays a Poisson request trace through real client connections using
+//! protocol-v1 streaming, and reports throughput, latency percentiles
+//! (TTFT is the CLIENT-OBSERVED first chunk arrival) and backpressure
+//! counts — the end-to-end driver for the serving layer (DESIGN.md
+//! deliverable (b) and §Serving API v1).
 //!
 //!   cargo run --release --example serve_loadtest -- \
 //!       [requests] [rate_rps] [workers] [scheduler]
@@ -16,7 +18,7 @@
 use std::sync::Arc;
 
 use dyspec::config::{Config, SchedKind};
-use dyspec::coordinator::{Coordinator, ModelFactory};
+use dyspec::coordinator::{Coordinator, GenParams, ModelFactory};
 use dyspec::data::prompts::PromptSet;
 use dyspec::data::trace::RequestTrace;
 use dyspec::models::sim::{SimModel, SimSpec};
@@ -46,7 +48,7 @@ fn main() {
         let (d, t) = SimModel::pair(spec);
         (Box::new(d) as Box<dyn LogitModel>, Box::new(t) as Box<dyn LogitModel>)
     });
-    let coord = Coordinator::start(cfg.clone(), factory);
+    let coord = Arc::new(Coordinator::start(cfg.clone(), factory));
     let server = Server::bind(&cfg.server.addr, coord).expect("bind");
     let addr = server.local_addr().unwrap().to_string();
     let server_thread = std::thread::spawn(move || {
@@ -75,13 +77,18 @@ fn main() {
             }
             let sent = std::time::Instant::now();
             let mut client = Client::connect(&addr).ok()?;
-            let reply = client
-                .generate_detailed(&prompt, ev.max_new_tokens, ev.temperature)
+            let params =
+                GenParams::simple(ev.max_new_tokens, ev.temperature);
+            let mut first = None;
+            let (tokens, _done) = client
+                .generate_stream(1, &prompt, &params, |_| {
+                    if first.is_none() {
+                        first = Some(sent.elapsed().as_secs_f64());
+                    }
+                })
                 .ok()?;
             let e2e = sent.elapsed().as_secs_f64();
-            let tokens = reply.get("tokens")?.as_arr()?.len();
-            let ttft = reply.get("ttft_secs").and_then(|v| v.as_f64()).unwrap_or(0.0);
-            Some((e2e, ttft, tokens))
+            Some((e2e, first.unwrap_or(e2e), tokens.len()))
         }));
     }
 

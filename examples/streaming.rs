@@ -1,0 +1,124 @@
+//! Streaming quickstart for serving API v1 (DESIGN.md §Serving API v1):
+//! starts an in-process server (sim backend, continuous scheduler), then
+//! over ONE connection
+//!
+//!   1. streams a request chunk-by-chunk as speculation rounds land,
+//!   2. multiplexes a second request between the first one's frames,
+//!   3. cancels a long-running request mid-stream and shows the
+//!      finish="cancelled" done frame.
+//!
+//!   cargo run --release --example streaming
+
+use std::sync::Arc;
+
+use dyspec::config::{Config, SchedKind};
+use dyspec::coordinator::{Coordinator, GenParams, ModelFactory};
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+use dyspec::server::{Client, Server};
+
+fn main() {
+    let mut cfg = Config::new();
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.engine.tree_budget = 16;
+
+    let factory: ModelFactory = Arc::new(|| {
+        let spec = SimSpec::for_dataset("c4", 1.2, 77);
+        let (d, t) = SimModel::pair(spec);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    });
+    let coord = Arc::new(Coordinator::start(cfg.clone(), factory));
+    let server = Server::bind(&cfg.server.addr, coord).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    let mut client = Client::connect(&addr).expect("connect");
+
+    // 1. One streamed generation, chunks printed as rounds land.
+    println!("--- streamed request (req 1) ---");
+    let params = GenParams {
+        seed: Some(7),
+        ..GenParams::simple(48, 0.6)
+    };
+    let (tokens, done) = client
+        .generate_stream(1, &[3, 1, 4, 1, 5], &params, |frame| {
+            println!(
+                "  chunk round={} tokens={:?}",
+                frame.body.get("round").and_then(|v| v.as_usize()).unwrap_or(0),
+                frame.tokens()
+            );
+        })
+        .expect("stream");
+    println!(
+        "  done: {} tokens, finish={}\n",
+        tokens.len(),
+        done.finish().map(|f| f.name()).unwrap_or("?")
+    );
+
+    // 2. Two requests multiplexed on this one connection.
+    println!("--- multiplexed requests (req 2 + 3) ---");
+    client
+        .submit(2, &[9, 2, 6], &GenParams::simple(24, 0.6), true)
+        .unwrap();
+    client
+        .submit(3, &[5, 3, 5], &GenParams::simple(24, 0.6), true)
+        .unwrap();
+    let mut done_count = 0;
+    while done_count < 2 {
+        let frame = client.read_frame().expect("frame");
+        match frame.event.as_str() {
+            "chunk" => println!(
+                "  req {} chunk: {} tokens",
+                frame.req_id.unwrap(),
+                frame.tokens().len()
+            ),
+            "done" => {
+                println!("  req {} done", frame.req_id.unwrap());
+                done_count += 1;
+            }
+            other => panic!("unexpected event {other}"),
+        }
+    }
+
+    // 3. Cancel a long request after its second chunk.
+    println!("\n--- cancellation (req 4) ---");
+    client
+        .submit(4, &[1, 2, 3], &GenParams::simple(100_000, 0.6), true)
+        .unwrap();
+    let mut chunks = 0;
+    loop {
+        let frame = client.read_frame().expect("frame");
+        match frame.event.as_str() {
+            "chunk" => {
+                chunks += 1;
+                if chunks == 2 {
+                    println!("  cancelling after chunk 2...");
+                    client.cancel(4).unwrap();
+                }
+            }
+            "done" => {
+                println!(
+                    "  done: finish={} after {} tokens (of 100000 asked)",
+                    frame.finish().map(|f| f.name()).unwrap_or("?"),
+                    frame
+                        .body
+                        .get("tokens_total")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(0)
+                );
+                break;
+            }
+            other => panic!("unexpected event {other}"),
+        }
+    }
+
+    client.shutdown().expect("shutdown");
+    server_thread.join().unwrap();
+    println!("\nstreaming example OK");
+}

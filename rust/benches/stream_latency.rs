@@ -1,0 +1,19 @@
+//! Streaming-latency benchmark: client-observed TTFT + inter-chunk gaps,
+//! protocol-v1 streaming vs one-shot replies, at 1/4/16 closed-loop
+//! clients over real TCP (see DESIGN.md §Serving API v1). Shares the
+//! runner with `dyspec bench --experiment stream` and records the result
+//! as BENCH_stream.json at the repo root to seed the perf trajectory.
+//! Env: DYSPEC_BENCH_PROMPTS (requests per client), DYSPEC_BENCH_TOKENS.
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts {
+        prompts: std::env::var("DYSPEC_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4),
+        max_new_tokens: std::env::var("DYSPEC_BENCH_TOKENS").ok().and_then(|v| v.parse().ok()).unwrap_or(64),
+        out: Some("../BENCH_stream.json".into()),
+        ..ExpOpts::default()
+    };
+    for table in run_experiment("stream", &opts).expect("experiment") {
+        println!("{}", table.render());
+    }
+}

@@ -7,7 +7,8 @@ use crate::bench::table::BenchTable;
 use crate::config::{
     CacheConfig, Config, EngineConfig, LatencyRegime, PolicyKind, SchedKind,
 };
-use crate::coordinator::{Coordinator, ModelFactory};
+use crate::coordinator::{Coordinator, GenParams, ModelFactory};
+use crate::server::{Client, Server};
 use crate::data::markov::Corpus;
 use crate::data::prompts::PromptSet;
 use crate::engine::stats::RunAggregate;
@@ -86,6 +87,7 @@ pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<Vec<BenchTable>, Str
         "ablation" | "ablation_budget" => vec![ablation_budget(opts)],
         "serve" => vec![serve_concurrency(opts)],
         "cache" | "cache_context" => vec![cache_context(opts)],
+        "stream" | "stream_latency" => vec![stream_latency(opts)],
         other => return Err(format!("unknown experiment: {other}")),
     };
     if let Some(out) = &opts.out {
@@ -522,9 +524,7 @@ fn serve_cell(
     let wall = t0.elapsed_secs();
     let vsecs = coord.metrics.virtual_secs();
     let occupancy = coord.metrics.batch_occupancy();
-    if let Ok(c) = Arc::try_unwrap(coord) {
-        c.shutdown();
-    }
+    shutdown_coordinator(coord);
     (tokens, wall, vsecs, occupancy, lat_v, ttft)
 }
 
@@ -566,6 +566,170 @@ pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
                 format!("{:.4}", lat_v.p99()),
                 format!("{:.4}", ttft.p50()),
                 format!("{:.2}", occupancy),
+            ]);
+        }
+    }
+    table
+}
+
+/// Shut the coordinator down once the last Arc clone outside this call
+/// dies. Detached server connection threads hold clones for a few ms
+/// after `Server::run` returns, so a bare `Arc::try_unwrap` would
+/// silently skip the shutdown and leak an idle-polling worker thread
+/// into the next bench cell.
+fn shutdown_coordinator(mut coord: Arc<Coordinator>) {
+    for _ in 0..2000 {
+        match Arc::try_unwrap(coord) {
+            Ok(c) => {
+                c.shutdown();
+                return;
+            }
+            Err(shared) => {
+                coord = shared;
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+    }
+    crate::log_warn!("bench coordinator still shared after 4s; leaking workers");
+}
+
+/// One streaming cell: closed-loop clients over REAL sockets against a
+/// continuous-batching server, measuring client-observed latencies.
+/// Returns (tokens, ttft histogram, inter-chunk-gap histogram, e2e
+/// histogram). `stream=false` drives the same protocol-v1 envelope with
+/// one-shot replies, so its "TTFT" is the full-reply arrival — the
+/// baseline the streaming surface beats.
+fn stream_cell(
+    clients: usize,
+    per_client: usize,
+    stream: bool,
+    opts: &ExpOpts,
+) -> (usize, Histogram, Histogram, Histogram) {
+    let mut cfg = Config::new();
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.sched.max_active = 16;
+    cfg.sched.idle_tick_ms = 2;
+    cfg.server.workers = 1;
+    cfg.server.queue_capacity = 1024;
+    cfg.engine.tree_budget = 8;
+    cfg.engine.seed = opts.seed;
+    cfg.regime = Some(LatencyRegime::pair_7b());
+
+    let noise = opts.noise;
+    let seed = opts.seed;
+    let factory: ModelFactory = Arc::new(move || {
+        let spec = SimSpec::for_dataset("c4", noise, seed ^ 0xDA7A);
+        let (d, t) = SimModel::pair(spec);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    });
+    let coord = Arc::new(Coordinator::start(cfg, factory));
+    let server =
+        Server::bind("127.0.0.1:0", coord.clone()).expect("bind stream bench");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    let prompts = PromptSet::by_name("c4", clients * per_client, 64, opts.seed)
+        .expect("dataset profile");
+
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let mine: Vec<Vec<u32>> = (0..per_client)
+                .map(|k| prompts.get(c * per_client + k).to_vec())
+                .collect();
+            let max_new = opts.max_new_tokens;
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut out = Vec::new();
+                for (k, p) in mine.iter().enumerate() {
+                    let params = GenParams::simple(max_new, 0.6);
+                    let t0 = Timer::start();
+                    let mut arrivals: Vec<f64> = Vec::new();
+                    let result = if stream {
+                        client.generate_stream(k as u64 + 1, p, &params, |_| {
+                            arrivals.push(t0.elapsed_secs());
+                        })
+                    } else {
+                        client.generate_oneshot(k as u64 + 1, p, &params).map(
+                            |(tokens, done)| {
+                                arrivals.push(t0.elapsed_secs());
+                                (tokens, done)
+                            },
+                        )
+                    };
+                    let e2e = t0.elapsed_secs();
+                    if let Ok((tokens, _done)) = result {
+                        out.push((arrivals, e2e, tokens.len()));
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+
+    let mut ttft = Histogram::new();
+    let mut gap = Histogram::new();
+    let mut e2e_hist = Histogram::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        for (arrivals, e2e, n) in h.join().expect("client thread") {
+            if let Some(&first) = arrivals.first() {
+                ttft.record(first);
+            }
+            for w in arrivals.windows(2) {
+                gap.record(w[1] - w[0]);
+            }
+            e2e_hist.record(e2e);
+            tokens += n;
+        }
+    }
+    let mut shut = Client::connect(&addr).expect("shutdown conn");
+    shut.shutdown().expect("shutdown");
+    server_thread.join().expect("server thread");
+    shutdown_coordinator(coord);
+    (tokens, ttft, gap, e2e_hist)
+}
+
+/// Streaming benchmark (ISSUE 3 deliverable): client-observed TTFT and
+/// inter-chunk latency, streaming vs one-shot, at 1/4/16 closed-loop
+/// clients over real TCP. Streaming's first token leaves the server at the
+/// first accepted round, so its TTFT undercuts the one-shot reply arrival
+/// by roughly the round count. `--out BENCH_stream.json` records the
+/// trajectory.
+pub fn stream_latency(opts: &ExpOpts) -> BenchTable {
+    let mut table = BenchTable::new(
+        "Stream: client-observed TTFT + inter-chunk latency, streaming vs one-shot (continuous, sim, 1 worker)",
+        &[
+            "mode",
+            "clients",
+            "requests",
+            "tokens",
+            "ttft_p50_s",
+            "ttft_p99_s",
+            "gap_p50_s",
+            "gap_p99_s",
+            "e2e_p50_s",
+        ],
+    );
+    let per_client = opts.prompts.max(1);
+    for stream in [false, true] {
+        for clients in [1usize, 4, 16] {
+            let (tokens, mut ttft, mut gap, mut e2e) =
+                stream_cell(clients, per_client, stream, opts);
+            table.row(vec![
+                if stream { "stream" } else { "oneshot" }.into(),
+                format!("{clients}"),
+                format!("{}", clients * per_client),
+                format!("{tokens}"),
+                format!("{:.5}", ttft.p50()),
+                format!("{:.5}", ttft.p99()),
+                format!("{:.5}", gap.p50()),
+                format!("{:.5}", gap.p99()),
+                format!("{:.5}", e2e.p50()),
             ]);
         }
     }
@@ -785,6 +949,35 @@ mod tests {
             tput(cont16),
             tput(fcfs16)
         );
+    }
+
+    /// The streaming acceptance shape: the first token reaches the client
+    /// strictly before the one-shot reply would, because it leaves the
+    /// server at the first accepted round rather than the last.
+    #[test]
+    fn stream_ttft_beats_oneshot_reply_arrival() {
+        let opts = ExpOpts {
+            prompts: 3,
+            max_new_tokens: 48,
+            ..ExpOpts::default()
+        };
+        let t = &run_experiment("stream", &opts).unwrap()[0];
+        assert_eq!(t.rows.len(), 6); // 2 modes x 3 concurrency levels
+        let num = |cell: &str| -> f64 { cell.parse().unwrap() };
+        let oneshot1 = &t.rows[0];
+        let stream1 = &t.rows[3];
+        assert_eq!((oneshot1[0].as_str(), oneshot1[1].as_str()), ("oneshot", "1"));
+        assert_eq!((stream1[0].as_str(), stream1[1].as_str()), ("stream", "1"));
+        // both modes served the full workload
+        assert_eq!(oneshot1[3], stream1[3]);
+        assert!(
+            num(&stream1[4]) < num(&oneshot1[4]),
+            "streaming ttft {} not below one-shot {}",
+            stream1[4],
+            oneshot1[4]
+        );
+        // streamed rows actually measured inter-chunk gaps
+        assert!(num(&stream1[6]) >= 0.0);
     }
 
     /// The tentpole acceptance shape: cached verify cost must undercut

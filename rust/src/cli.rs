@@ -84,16 +84,22 @@ USAGE:
 COMMANDS:
   generate     run one generation (policy=dyspec|sequoia|specinfer|chain|baseline)
   bench        run a paper experiment (--experiment table1|table2|table3|table4|
-               table5|fig2|fig4|fig5|fig9|serve|cache)
+               table5|fig2|fig4|fig5|fig9|serve|cache|stream)
   serve        start the TCP serving coordinator (--addr host:port,
-               scheduler=fcfs|continuous)
+               scheduler=fcfs|continuous); wire protocol v1, see
+               DESIGN.md §Serving API v1
   client       send a prompt to a running server (--addr host:port --dataset c4)
+               --stream prints protocol-v1 chunk frames as rounds land;
+               --cancel-after N cancels mid-stream and checks the
+               finish=cancelled done frame; --drafter / --token_budget /
+               --req_id set the per-request envelope fields
   selfcheck    verify artifacts + PJRT wiring against golden.json
   help         show this text
 
 CONFIG KEYS (key=value, see config/mod.rs):
   policy, tree_budget, threshold, max_depth, temp, draft_temp,
-  max_new_tokens, seed, backend (sim|hlo|hlo-pallas), regime (7b|13b|70b),
+  max_new_tokens, seed, stop_tokens (comma-separated),
+  backend (sim|hlo|hlo-pallas), regime (7b|13b|70b),
   dataset (cnn|c4|owt), artifacts, prompt_len, num_prompts, addr, workers,
   scheduler (fcfs|continuous), global_budget, max_active, idle_tick_ms,
   cache (on|off), cache_block, cache_blocks
@@ -101,8 +107,10 @@ CONFIG KEYS (key=value, see config/mod.rs):
 EXAMPLES:
   dyspec generate policy=dyspec backend=hlo dataset=cnn temp=0
   dyspec bench --experiment table1 --out results/table1.json
-  dyspec bench --experiment serve --out BENCH_serve.json
+  dyspec bench --experiment stream --out BENCH_stream.json
   dyspec serve --addr 127.0.0.1:7341 backend=sim scheduler=continuous
+  dyspec client --addr 127.0.0.1:7341 --stream max_new_tokens=64
+  dyspec client --addr 127.0.0.1:7341 --stream --cancel-after 2
 ";
 
 #[cfg(test)]

@@ -290,6 +290,10 @@ pub struct EngineConfig {
     /// Sequoia positional acceptance estimate used by its DP.
     pub sequoia_accept_rate: f64,
     pub seed: u64,
+    /// Default stop tokens: emitting any of them finishes the generation
+    /// (reason `stop`, the token included). Protocol-v1 requests override
+    /// this per request.
+    pub stop_tokens: Vec<u32>,
 }
 
 impl Default for EngineConfig {
@@ -305,6 +309,7 @@ impl Default for EngineConfig {
             specinfer_widths: vec![4, 2, 2, 1, 1, 1],
             sequoia_accept_rate: 0.75,
             seed: 0,
+            stop_tokens: Vec::new(),
         }
     }
 }
@@ -410,6 +415,16 @@ impl Config {
                 Ok(v) => self.engine.seed = v,
                 Err(_) => return bad("seed"),
             },
+            "stop_tokens" => {
+                let mut toks = Vec::new();
+                for part in value.split(',').filter(|p| !p.trim().is_empty()) {
+                    match part.trim().parse() {
+                        Ok(v) => toks.push(v),
+                        Err(_) => return bad("stop_tokens"),
+                    }
+                }
+                self.engine.stop_tokens = toks;
+            }
             "backend" => match ModelBackend::parse(value) {
                 Some(b) => self.backend = b,
                 None => return bad("backend"),
@@ -538,6 +553,15 @@ impl Config {
             self.engine.max_new_tokens.to_string(),
         );
         m.insert("seed".into(), self.engine.seed.to_string());
+        m.insert(
+            "stop_tokens".into(),
+            self.engine
+                .stop_tokens
+                .iter()
+                .map(|t| t.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        );
         m.insert("backend".into(), self.backend.name().into());
         if let Some(r) = &self.regime {
             m.insert("regime".into(), r.name.into());
@@ -628,6 +652,19 @@ mod tests {
         assert_eq!(t4.engine.tree_budget, 768);
         assert_eq!(t4.engine.policy, PolicyKind::DySpecThreshold);
         assert!(Config::preset("table9").is_err());
+    }
+
+    #[test]
+    fn stop_tokens_key_round_trips() {
+        let mut cfg = Config::new();
+        cfg.set("stop_tokens", "5, 9,12").unwrap();
+        assert_eq!(cfg.engine.stop_tokens, vec![5, 9, 12]);
+        cfg.set("stop_tokens", "").unwrap();
+        assert!(cfg.engine.stop_tokens.is_empty());
+        assert!(cfg.set("stop_tokens", "a,b").is_err());
+        cfg.set("stop_tokens", "3").unwrap();
+        let map = cfg.to_map();
+        assert_eq!(map.get("stop_tokens").unwrap(), "3");
     }
 
     #[test]

@@ -16,6 +16,12 @@ pub struct Metrics {
     rejected: AtomicU64,
     started: AtomicU64,
     completed: AtomicU64,
+    /// Requests finished early by cancellation (client command or
+    /// disconnect) — not counted in `completed`.
+    cancelled: AtomicU64,
+    /// Chunk events streamed across all requests (one per speculation
+    /// round per request).
+    chunks: AtomicU64,
     tokens: AtomicU64,
     queue_wait: Mutex<Histogram>,
     gen_latency: Mutex<Histogram>,
@@ -47,6 +53,8 @@ impl Metrics {
             rejected: AtomicU64::new(0),
             started: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            chunks: AtomicU64::new(0),
             tokens: AtomicU64::new(0),
             queue_wait: Mutex::new(Histogram::new()),
             gen_latency: Mutex::new(Histogram::new()),
@@ -87,6 +95,24 @@ impl Metrics {
         self.ttft.lock().unwrap().record(secs);
     }
 
+    /// Record a request retired by cancellation.
+    pub fn on_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one streamed chunk event.
+    pub fn on_chunk(&self) {
+        self.chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    pub fn chunks(&self) -> u64 {
+        self.chunks.load(Ordering::Relaxed)
+    }
+
     /// Record `dispatches` target dispatches that together served
     /// `seq_steps` sequence-steps, allocated `used` of `budget` speculated
     /// tokens, and cost `virtual_secs` regime seconds. The continuous
@@ -117,6 +143,14 @@ impl Metrics {
         self.cache_hit_positions.fetch_add(hit, Ordering::Relaxed);
         self.cache_billed_positions
             .fetch_add(billed, Ordering::Relaxed);
+        self.cache_resident_blocks
+            .store(resident_blocks, Ordering::Relaxed);
+    }
+
+    /// Refresh the resident-block gauge alone (sequence retirement frees
+    /// blocks outside any dispatch, and the leak checks in
+    /// rust/tests/protocol_v1.rs read the gauge over the stats surface).
+    pub fn on_resident_blocks(&self, resident_blocks: u64) {
         self.cache_resident_blocks
             .store(resident_blocks, Ordering::Relaxed);
     }
@@ -233,6 +267,8 @@ impl Metrics {
             ("admitted", Json::Num(self.admitted() as f64)),
             ("rejected", Json::Num(self.rejected() as f64)),
             ("completed", Json::Num(self.completed() as f64)),
+            ("cancelled", Json::Num(self.cancelled() as f64)),
+            ("chunks", Json::Num(self.chunks() as f64)),
             ("queue_depth", Json::Num(self.queue_depth() as f64)),
             ("total_tokens", Json::Num(self.total_tokens() as f64)),
             ("tokens_per_sec", Json::Num(self.tokens_per_sec())),
@@ -302,6 +338,14 @@ mod tests {
         assert_eq!(m.completed(), 1);
         assert_eq!(m.total_tokens(), 128);
         assert_eq!(m.queue_depth(), 1);
+        m.on_cancelled();
+        m.on_chunk();
+        m.on_chunk();
+        assert_eq!(m.cancelled(), 1);
+        assert_eq!(m.chunks(), 2);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("cancelled").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("chunks").unwrap().as_usize(), Some(2));
     }
 
     #[test]

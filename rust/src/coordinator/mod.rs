@@ -1,26 +1,37 @@
 //! Serving coordinator: bounded admission queue → scheduler → worker
-//! threads running speculative engines → response routing + metrics.
+//! threads running speculative engines → per-request event routing +
+//! metrics.
 //!
 //! The scheduler is config-selectable (`scheduler = fcfs | continuous`):
 //! FCFS runs one request per worker to completion; continuous runs a
 //! step-level batcher per worker that multiplexes sequences into shared
 //! verification dispatches (see `sched/`).
 //!
+//! Requests stream: [`Coordinator::try_submit`] returns a
+//! [`RequestHandle`] whose channel yields one [`GenEvent::Chunk`] per
+//! speculation round and a final [`GenEvent::Done`]; the handle's
+//! [`CancelToken`] cancels the request at round granularity (slot and KV
+//! residency released immediately). [`Coordinator::generate`] is the
+//! blocking convenience that drains the stream.
+//!
 //! Each worker owns its own (draft, target) model pair — PJRT handles are
 //! not `Send`, so the model *factory* crosses the thread boundary and the
 //! models are constructed inside the worker (vLLM-router-style process
 //! topology, scaled to threads). Backpressure: `try_submit` fails fast when
-//! the queue is full, and the TCP server surfaces that as an error line.
+//! the queue is full, and the TCP server surfaces that as an error frame.
 
 pub mod metrics;
 pub mod queue;
 pub mod worker;
 
 pub use metrics::Metrics;
-pub use queue::{Request, RequestQueue, Response};
+pub use queue::{
+    CancelToken, FinishReason, GenEvent, GenParams, Request, RequestHandle,
+    RequestQueue, Response, RoundStats,
+};
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::config::Config;
@@ -70,26 +81,25 @@ impl Coordinator {
         }
     }
 
-    /// Submit a request; the response arrives on the returned channel.
+    /// Submit a request; events arrive on the returned handle's channel.
     /// Fails fast (backpressure) when the admission queue is full.
     pub fn try_submit(
         &self,
         prompt: Vec<u32>,
-        max_new_tokens: usize,
-        temperature: f32,
-    ) -> Result<mpsc::Receiver<Response>, String> {
-        self.queue.try_submit(prompt, max_new_tokens, temperature)
+        params: GenParams,
+    ) -> Result<RequestHandle, String> {
+        self.queue.try_submit(prompt, params)
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Blocking convenience: submit and wait for the final response.
     pub fn generate(
         &self,
         prompt: Vec<u32>,
         max_new_tokens: usize,
         temperature: f32,
     ) -> Result<Response, String> {
-        let rx = self.try_submit(prompt, max_new_tokens, temperature)?;
-        rx.recv().map_err(|_| "worker dropped request".to_string())
+        self.try_submit(prompt, GenParams::simple(max_new_tokens, temperature))?
+            .wait()
     }
 
     /// Drain and stop all workers.
@@ -132,22 +142,71 @@ mod tests {
         let resp = coord.generate(vec![1, 2, 3], 16, 0.6).unwrap();
         assert_eq!(resp.tokens.len(), 16);
         assert!(resp.emitted_per_step >= 1.0);
+        assert_eq!(resp.finish, FinishReason::Length);
         assert_eq!(coord.metrics.completed(), 1);
+        assert!(coord.metrics.chunks() >= 1);
         coord.shutdown();
     }
 
     #[test]
     fn serves_concurrent_requests_across_workers() {
         let coord = Coordinator::start(test_cfg(3, 32), sim_factory(0.5));
-        let rxs: Vec<_> = (0..9)
-            .map(|i| coord.try_submit(vec![1 + i, 2, 3], 12, 0.6).unwrap())
+        let handles: Vec<_> = (0..9)
+            .map(|i| {
+                coord
+                    .try_submit(vec![1 + i, 2, 3], GenParams::simple(12, 0.6))
+                    .unwrap()
+            })
             .collect();
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
+        for h in handles {
+            let resp = h.wait().unwrap();
             assert_eq!(resp.tokens.len(), 12);
         }
         assert_eq!(coord.metrics.completed(), 9);
         assert_eq!(coord.metrics.total_tokens(), 9 * 12);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn streamed_chunks_concatenate_to_response_tokens() {
+        let coord = Coordinator::start(test_cfg(1, 8), sim_factory(0.5));
+        let h = coord
+            .try_submit(vec![5, 6, 7], GenParams::simple(16, 0.6))
+            .unwrap();
+        let mut streamed = Vec::new();
+        let resp = loop {
+            match h.events.recv().unwrap() {
+                GenEvent::Chunk { tokens, stats } => {
+                    assert!(stats.round >= 1);
+                    streamed.extend_from_slice(&tokens);
+                }
+                GenEvent::Done(resp) => break *resp,
+            }
+        };
+        assert_eq!(streamed, resp.tokens, "chunk concat != final tokens");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn cancellation_finishes_early_with_partial_output() {
+        let coord = Coordinator::start(test_cfg(1, 8), sim_factory(0.5));
+        let h = coord
+            .try_submit(vec![1, 2, 3], GenParams::simple(4096, 0.6))
+            .unwrap();
+        // Cancel after the first chunk arrives.
+        let resp = loop {
+            match h.events.recv().unwrap() {
+                GenEvent::Chunk { .. } => h.cancel.cancel(),
+                GenEvent::Done(resp) => break *resp,
+            }
+        };
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(
+            resp.tokens.len() < 4096,
+            "cancelled request ran to completion"
+        );
+        assert_eq!(coord.metrics.cancelled(), 1);
+        assert_eq!(coord.metrics.completed(), 0);
         coord.shutdown();
     }
 
@@ -159,8 +218,8 @@ mod tests {
         let mut rejected = false;
         let mut pending = Vec::new();
         for i in 0..64 {
-            match coord.try_submit(vec![i, 2, 3], 64, 0.6) {
-                Ok(rx) => pending.push(rx),
+            match coord.try_submit(vec![i, 2, 3], GenParams::simple(64, 0.6)) {
+                Ok(h) => pending.push(h),
                 Err(_) => {
                     rejected = true;
                     break;
@@ -168,8 +227,8 @@ mod tests {
             }
         }
         assert!(rejected, "queue of capacity 2 never pushed back");
-        for rx in pending {
-            let _ = rx.recv();
+        for h in pending {
+            let _ = h.wait();
         }
         assert!(coord.metrics.rejected() >= 1);
         coord.shutdown();
@@ -187,11 +246,15 @@ mod tests {
     fn continuous_serves_concurrent_requests_on_one_worker() {
         let coord =
             Coordinator::start(continuous_cfg(8, 32), sim_factory(0.5));
-        let rxs: Vec<_> = (0..8)
-            .map(|i| coord.try_submit(vec![1 + i, 2, 3], 12, 0.6).unwrap())
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                coord
+                    .try_submit(vec![1 + i, 2, 3], GenParams::simple(12, 0.6))
+                    .unwrap()
+            })
             .collect();
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
+        for h in handles {
+            let resp = h.wait().unwrap();
             assert_eq!(resp.tokens.len(), 12);
             assert!(resp.emitted_per_step >= 1.0);
         }
@@ -211,14 +274,18 @@ mod tests {
     fn continuous_shutdown_drains_in_flight_sequences() {
         let coord =
             Coordinator::start(continuous_cfg(8, 32), sim_factory(0.5));
-        let rxs: Vec<_> = (0..6)
-            .map(|i| coord.try_submit(vec![9 + i, 8, 7], 16, 0.6).unwrap())
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                coord
+                    .try_submit(vec![9 + i, 8, 7], GenParams::simple(16, 0.6))
+                    .unwrap()
+            })
             .collect();
         // Shut down immediately: in-flight + queued sequences must still
         // complete (the batcher drains instead of dropping).
         coord.shutdown();
-        for rx in rxs {
-            let resp = rx.recv().expect("request dropped during shutdown");
+        for h in handles {
+            let resp = h.wait().expect("request dropped during shutdown");
             assert_eq!(resp.tokens.len(), 16);
         }
     }
@@ -230,6 +297,27 @@ mod tests {
         let b = coord.generate(vec![5, 6, 7], 10, 0.0).unwrap();
         // temp 0 + same sim spec: identical greedy continuations
         assert_eq!(a.tokens, b.tokens);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn per_request_seed_pins_sampled_streams() {
+        let coord = Coordinator::start(test_cfg(1, 8), sim_factory(0.5));
+        let params = GenParams {
+            seed: Some(1234),
+            ..GenParams::simple(12, 0.6)
+        };
+        let a = coord
+            .try_submit(vec![4, 5], params.clone())
+            .unwrap()
+            .wait()
+            .unwrap();
+        let b = coord
+            .try_submit(vec![4, 5], params)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(a.tokens, b.tokens, "seeded requests diverged at temp 0.6");
         coord.shutdown();
     }
 }

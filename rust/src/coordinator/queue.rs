@@ -1,4 +1,11 @@
 //! Bounded admission queue with fail-fast backpressure.
+//!
+//! Since the streaming redesign (DESIGN.md §Serving API v1) a request no
+//! longer carries a one-shot response sender: it carries an *event* sender
+//! ([`GenEvent`] per speculation round, then `Done`) and a shared
+//! [`CancelToken`]. Submitting returns a [`RequestHandle`] owning the
+//! receiving half and the token — dropping the handle does NOT cancel the
+//! request (the server cancels explicitly on client disconnect).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -6,41 +13,43 @@ use std::time::Instant;
 
 use super::metrics::Metrics;
 
+pub use crate::engine::events::{
+    CancelToken, FinishReason, GenEvent, GenParams, Response, RoundStats,
+};
+
 /// One admitted generation request.
 pub struct Request {
+    /// Server-side id (unique per coordinator; protocol-v1 clients use
+    /// their own `req_id` namespace per connection, mapped by the server).
     pub id: u64,
     pub prompt: Vec<u32>,
-    pub max_new_tokens: usize,
-    pub temperature: f32,
+    pub params: GenParams,
     pub submitted_at: Instant,
-    pub respond: mpsc::Sender<Response>,
+    /// Cooperative cancellation: checked by workers between rounds.
+    pub cancel: CancelToken,
+    /// Per-request event stream: chunks, then exactly one `Done`.
+    pub events: mpsc::Sender<GenEvent>,
 }
 
-/// Completed generation.
-#[derive(Clone, Debug)]
-pub struct Response {
+/// Submitter's half of an admitted request.
+pub struct RequestHandle {
     pub id: u64,
-    pub worker: usize,
-    pub tokens: Vec<u32>,
-    /// Engine steps taken (target-model dispatches).
-    pub steps: usize,
-    pub emitted_per_step: f64,
-    /// Seconds spent queued before a worker picked the request up.
-    pub queue_secs: f64,
-    /// Seconds of engine time.
-    pub gen_secs: f64,
-    /// Seconds from submission to the first emitted token (queue wait
-    /// included) — the serving-layer TTFT.
-    pub ttft_secs: f64,
-    /// Virtual hardware-regime seconds this request experienced (sum of
-    /// the step costs of every dispatch it took part in; 0 without a
-    /// regime). Under continuous batching a dispatch's cost is shared by
-    /// all co-batched sequences, so this is the per-request latency the
-    /// serving bench compares across schedulers.
-    pub virtual_secs: f64,
-    /// Prefix positions this request served from the KV cache across its
-    /// dispatches (its share of the worker's hit-rate metric).
-    pub cache_hits: u64,
+    pub events: mpsc::Receiver<GenEvent>,
+    pub cancel: CancelToken,
+}
+
+impl RequestHandle {
+    /// Drain the stream to completion and return the final response
+    /// (the legacy blocking call, now a fold over events).
+    pub fn wait(self) -> Result<Response, String> {
+        loop {
+            match self.events.recv() {
+                Ok(GenEvent::Done(resp)) => return Ok(*resp),
+                Ok(GenEvent::Chunk { .. }) => continue,
+                Err(_) => return Err("worker dropped request".into()),
+            }
+        }
+    }
 }
 
 /// Sender half (held by the coordinator/server).
@@ -68,27 +77,34 @@ impl RequestQueue {
     pub fn try_submit(
         &self,
         prompt: Vec<u32>,
-        max_new_tokens: usize,
-        temperature: f32,
-    ) -> Result<mpsc::Receiver<Response>, String> {
+        params: GenParams,
+    ) -> Result<RequestHandle, String> {
         if prompt.is_empty() {
             return Err("empty prompt".into());
         }
-        let (respond, rx) = mpsc::channel();
+        if params.max_new_tokens == 0 {
+            return Err("max_new_tokens must be >= 1".into());
+        }
+        let (events, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let cancel = CancelToken::new();
         let req = Request {
             id,
             prompt,
-            max_new_tokens,
-            temperature,
+            params,
             submitted_at: Instant::now(),
-            respond,
+            cancel: cancel.clone(),
+            events,
         };
         let tx = self.tx.as_ref().ok_or("queue closed")?;
         match tx.try_send(req) {
             Ok(()) => {
                 self.metrics.on_admitted();
-                Ok(rx)
+                Ok(RequestHandle {
+                    id,
+                    events: rx,
+                    cancel,
+                })
             }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.on_rejected();
@@ -109,18 +125,19 @@ mod tests {
     use super::*;
 
     #[test]
-    fn rejects_empty_prompt() {
+    fn rejects_empty_prompt_and_zero_length() {
         let metrics = Arc::new(Metrics::new());
         let (q, _rx) = RequestQueue::new(4, metrics);
-        assert!(q.try_submit(vec![], 8, 0.0).is_err());
+        assert!(q.try_submit(vec![], GenParams::simple(8, 0.0)).is_err());
+        assert!(q.try_submit(vec![1], GenParams::simple(0, 0.0)).is_err());
     }
 
     #[test]
     fn ids_are_unique_and_increasing() {
         let metrics = Arc::new(Metrics::new());
         let (q, rx) = RequestQueue::new(4, metrics);
-        q.try_submit(vec![1], 8, 0.0).unwrap();
-        q.try_submit(vec![2], 8, 0.0).unwrap();
+        q.try_submit(vec![1], GenParams::simple(8, 0.0)).unwrap();
+        q.try_submit(vec![2], GenParams::simple(8, 0.0)).unwrap();
         let a = rx.recv().unwrap();
         let b = rx.recv().unwrap();
         assert!(b.id > a.id);
@@ -130,8 +147,8 @@ mod tests {
     fn full_queue_rejects_and_counts() {
         let metrics = Arc::new(Metrics::new());
         let (q, _rx) = RequestQueue::new(1, metrics.clone());
-        q.try_submit(vec![1], 8, 0.0).unwrap();
-        assert!(q.try_submit(vec![2], 8, 0.0).is_err());
+        q.try_submit(vec![1], GenParams::simple(8, 0.0)).unwrap();
+        assert!(q.try_submit(vec![2], GenParams::simple(8, 0.0)).is_err());
         assert_eq!(metrics.rejected(), 1);
         assert_eq!(metrics.admitted(), 1);
     }
@@ -141,7 +158,17 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let (mut q, rx) = RequestQueue::new(1, metrics);
         q.close();
-        assert!(q.try_submit(vec![1], 8, 0.0).is_err());
+        assert!(q.try_submit(vec![1], GenParams::simple(8, 0.0)).is_err());
         assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_with_the_worker_side() {
+        let metrics = Arc::new(Metrics::new());
+        let (q, rx) = RequestQueue::new(1, metrics);
+        let handle = q.try_submit(vec![1], GenParams::simple(8, 0.0)).unwrap();
+        handle.cancel.cancel();
+        let req = rx.recv().unwrap();
+        assert!(req.cancel.is_cancelled());
     }
 }

@@ -8,6 +8,13 @@
 //!     up to `sched.max_active` sequences per target dispatch
 //!     (`sched::Batcher`).
 //!
+//! Both stream: every speculation round's accepted chunk is pushed through
+//! the request's event channel as it lands (`GenEvent::Chunk`), and the
+//! final `GenEvent::Done` carries the aggregate `Response`. Both honor the
+//! request's `CancelToken` at round granularity — a cancelled request is
+//! finished early with `FinishReason::Cancelled`, its partial output
+//! attached, and its scheduler slot + KV residency released immediately.
+//!
 //! Both poll the queue with `sched.idle_tick_ms` while idle so shutdown is
 //! observed, and both drain: FCFS finishes the buffered queue before
 //! exiting, the batcher additionally finishes every in-flight sequence.
@@ -17,10 +24,10 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
-use super::queue::{Request, Response};
+use super::queue::Request;
 use super::ModelFactory;
 use crate::config::{Config, SchedKind};
-use crate::engine::SpecEngine;
+use crate::engine::{FinishReason, GenEvent, Response, SpecEngine};
 use crate::log_debug;
 use crate::models::LogitModel;
 use crate::sched::Batcher;
@@ -67,54 +74,7 @@ fn run_fcfs(
             guard.recv_timeout(idle)
         };
         match req {
-            Ok(req) => {
-                let queue_secs = req.submitted_at.elapsed().as_secs_f64();
-                metrics.on_started(queue_secs);
-
-                engine.cfg.target_temp = req.temperature;
-                engine.cfg.max_new_tokens = req.max_new_tokens;
-
-                let t = Instant::now();
-                let stats = engine.generate(&req.prompt);
-                let gen_secs = t.elapsed().as_secs_f64();
-
-                // TTFT = queue wait + the first engine step's wall time.
-                let ttft_secs = queue_secs
-                    + stats.steps.first().map(|s| s.times.total()).unwrap_or(0.0);
-                metrics.on_first_token(ttft_secs);
-                let virtual_secs = stats.total_virtual_secs();
-                let spec_tokens: u64 =
-                    stats.steps.iter().map(|s| s.tree_size as u64).sum();
-                let steps = stats.steps.len() as u64;
-                metrics.on_dispatches(
-                    steps,
-                    steps, // occupancy 1: each dispatch serves one sequence
-                    spec_tokens,
-                    steps * cfg.engine.tree_budget as u64,
-                    virtual_secs,
-                );
-                metrics.on_cache(
-                    stats.total_cached_positions(),
-                    stats.total_billed_positions(),
-                    engine.cache().used_blocks() as u64,
-                );
-                metrics.on_completed(stats.tokens.len(), gen_secs);
-
-                let resp = Response {
-                    id: req.id,
-                    worker: wid,
-                    steps: stats.steps.len(),
-                    emitted_per_step: stats.mean_emitted_per_step(),
-                    cache_hits: stats.total_cached_positions(),
-                    tokens: stats.tokens,
-                    queue_secs,
-                    gen_secs,
-                    ttft_secs,
-                    virtual_secs,
-                };
-                // Receiver may have given up; that's fine.
-                let _ = req.respond.send(resp);
-            }
+            Ok(req) => serve_one(wid, &cfg, &mut engine, req, &metrics),
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if shutdown.load(Ordering::SeqCst) {
                     break;
@@ -124,4 +84,113 @@ fn run_fcfs(
         }
     }
     log_debug!("worker {wid} down");
+}
+
+/// Run one request to completion (or cancellation) on the FCFS engine,
+/// streaming chunk events as rounds land.
+fn serve_one(
+    wid: usize,
+    cfg: &Config,
+    engine: &mut SpecEngine,
+    req: Request,
+    metrics: &Arc<Metrics>,
+) {
+    let queue_secs = req.submitted_at.elapsed().as_secs_f64();
+
+    // Cancelled while still queued: release the slot without spinning up
+    // the engine, but still close the stream with a `Done`.
+    if req.cancel.is_cancelled() {
+        metrics.on_started(queue_secs); // it did leave the queue
+        metrics.on_cancelled();
+        let _ = req.events.send(GenEvent::Done(Box::new(Response {
+            id: req.id,
+            worker: wid,
+            tokens: Vec::new(),
+            steps: 0,
+            emitted_per_step: 0.0,
+            queue_secs,
+            gen_secs: 0.0,
+            ttft_secs: 0.0,
+            virtual_secs: 0.0,
+            cache_hits: 0,
+            finish: FinishReason::Cancelled,
+        })));
+        return;
+    }
+    metrics.on_started(queue_secs);
+
+    // Per-request parameters over the worker's base engine config.
+    engine.cfg.target_temp = req.params.temperature;
+    engine.cfg.max_new_tokens = req.params.max_new_tokens;
+    engine.cfg.stop_tokens = if req.params.stop_tokens.is_empty() {
+        cfg.engine.stop_tokens.clone()
+    } else {
+        req.params.stop_tokens.clone()
+    };
+    engine.cfg.tree_budget = match req.params.token_budget {
+        Some(cap) if cap > 0 => cfg.engine.tree_budget.min(cap),
+        _ => cfg.engine.tree_budget,
+    };
+    engine.set_policy(req.params.drafter.unwrap_or(cfg.engine.policy));
+    if let Some(seed) = req.params.seed {
+        engine.reseed(seed);
+    }
+
+    let t = Instant::now();
+    let mut ttft_secs = 0.0f64;
+    let mut chunks = 0u64;
+    let (stats, finish) = {
+        let events = &req.events;
+        let metrics_ref = metrics.as_ref();
+        engine.generate_streamed(&req.prompt, Some(&req.cancel), |ev| {
+            if chunks == 0 {
+                // TTFT = queue wait + wall time to the first emitted chunk
+                // (the token actually leaves the server here).
+                ttft_secs = queue_secs + t.elapsed().as_secs_f64();
+                metrics_ref.on_first_token(ttft_secs);
+            }
+            chunks += 1;
+            metrics_ref.on_chunk();
+            // Receiver may have given up; generation still completes (the
+            // cancel path is explicit, not inferred from a closed channel).
+            let _ = events.send(ev);
+        })
+    };
+    let gen_secs = t.elapsed().as_secs_f64();
+
+    let virtual_secs = stats.total_virtual_secs();
+    let spec_tokens: u64 = stats.steps.iter().map(|s| s.tree_size as u64).sum();
+    let steps = stats.steps.len() as u64;
+    metrics.on_dispatches(
+        steps,
+        steps, // occupancy 1: each dispatch serves one sequence
+        spec_tokens,
+        steps * engine.cfg.tree_budget as u64,
+        virtual_secs,
+    );
+    metrics.on_cache(
+        stats.total_cached_positions(),
+        stats.total_billed_positions(),
+        engine.cache().used_blocks() as u64,
+    );
+    match finish {
+        FinishReason::Cancelled => metrics.on_cancelled(),
+        _ => metrics.on_completed(stats.tokens.len(), gen_secs),
+    }
+
+    let resp = Response {
+        id: req.id,
+        worker: wid,
+        steps: stats.steps.len(),
+        emitted_per_step: stats.mean_emitted_per_step(),
+        cache_hits: stats.total_cached_positions(),
+        tokens: stats.tokens,
+        queue_secs,
+        gen_secs,
+        ttft_secs,
+        virtual_secs,
+        finish,
+    };
+    // Receiver may have given up; that's fine.
+    let _ = req.events.send(GenEvent::Done(Box::new(resp)));
 }

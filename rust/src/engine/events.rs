@@ -1,0 +1,251 @@
+//! Incremental generation events — the one event vocabulary every layer of
+//! the serving stack speaks (DESIGN.md §Serving API v1).
+//!
+//! A generation no longer produces a single value at the end: each
+//! speculation round pushes its accepted chunk as a [`GenEvent::Chunk`]
+//! through a per-request channel, and the final [`GenEvent::Done`] carries
+//! the aggregate [`Response`]. The FCFS engine path and the continuous
+//! batcher feed the SAME event type, so the coordinator and the TCP server
+//! route frames without knowing which scheduler produced them.
+//!
+//! Cancellation travels the other way: a [`CancelToken`] is shared between
+//! the submitter (server connection) and the executor (engine round loop /
+//! batcher step loop); flipping it makes the executor finish the request
+//! early with [`FinishReason::Cancelled`], releasing its scheduler slot and
+//! KV residency immediately.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::config::PolicyKind;
+
+/// Why a generation stopped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Emitted `max_new_tokens`.
+    #[default]
+    Length,
+    /// Emitted one of the request's `stop_tokens` (included in the output).
+    Stop,
+    /// Cancelled by the client (or by its connection dropping).
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Length => "length",
+            Self::Stop => "stop",
+            Self::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "length" => Self::Length,
+            "stop" => Self::Stop,
+            "cancelled" => Self::Cancelled,
+            _ => return None,
+        })
+    }
+}
+
+/// Per-request generation parameters, carried by the protocol-v1 envelope
+/// and honored by both schedulers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    /// Deterministic sampling stream for this request. `None` falls back to
+    /// a server-chosen stream (FCFS: the worker engine's running rng;
+    /// continuous: a stream derived from the server-side request id).
+    pub seed: Option<u64>,
+    /// Generation finishes (reason `stop`) when any of these is emitted;
+    /// the stop token itself is included in the output.
+    pub stop_tokens: Vec<u32>,
+    /// Per-request draft-tree policy override (FCFS swaps the engine
+    /// policy; the continuous batcher caps honor it via the fair split).
+    pub drafter: Option<PolicyKind>,
+    /// Per-request speculation-budget cap: this request's tree never
+    /// exceeds `min(engine.tree_budget, token_budget)` speculated tokens
+    /// per round.
+    pub token_budget: Option<usize>,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        Self {
+            max_new_tokens: 128,
+            temperature: 0.6,
+            seed: None,
+            stop_tokens: Vec::new(),
+            drafter: None,
+            token_budget: None,
+        }
+    }
+}
+
+impl GenParams {
+    /// The legacy wire surface: just a length and a temperature.
+    pub fn simple(max_new_tokens: usize, temperature: f32) -> Self {
+        Self {
+            max_new_tokens,
+            temperature,
+            ..Self::default()
+        }
+    }
+}
+
+/// Shared cancellation flag (submitter side: [`CancelToken::cancel`];
+/// executor side: [`CancelToken::is_cancelled`] between rounds).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Statistics for one speculation round, attached to its chunk.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundStats {
+    /// 1-based round index within the request.
+    pub round: usize,
+    /// Speculated tree size this round (0 for a bare verification row).
+    pub tree_size: usize,
+    /// Speculated tokens accepted by verification (excludes the bonus).
+    pub accepted: usize,
+    /// Verification positions computed for this request this round.
+    pub billed_positions: usize,
+    /// Prefix positions served from the KV cache this round.
+    pub cached_positions: usize,
+    /// Virtual regime seconds of the round's dispatch (continuous: the
+    /// shared dispatch cost; 0 without a regime).
+    pub virtual_secs: f64,
+}
+
+/// Completed generation (the aggregate the serving layers route; was the
+/// one-shot reply before streaming — kept as the `done` frame's payload).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub worker: usize,
+    pub tokens: Vec<u32>,
+    /// Engine steps taken (target-model dispatches).
+    pub steps: usize,
+    pub emitted_per_step: f64,
+    /// Seconds spent queued before a worker picked the request up.
+    pub queue_secs: f64,
+    /// Seconds of engine time.
+    pub gen_secs: f64,
+    /// Seconds from submission to the first emitted chunk (queue wait
+    /// included) — the serving-layer TTFT, now pinned to actual emission.
+    pub ttft_secs: f64,
+    /// Virtual hardware-regime seconds this request experienced (sum of
+    /// the step costs of every dispatch it took part in; 0 without a
+    /// regime). Under continuous batching a dispatch's cost is shared by
+    /// all co-batched sequences, so this is the per-request latency the
+    /// serving bench compares across schedulers.
+    pub virtual_secs: f64,
+    /// Prefix positions this request served from the KV cache across its
+    /// dispatches (its share of the worker's hit-rate metric).
+    pub cache_hits: u64,
+    /// Why the generation stopped.
+    pub finish: FinishReason,
+}
+
+/// One event on a request's stream: zero or more `Chunk`s, then exactly
+/// one `Done` (also on cancellation, with `finish = Cancelled` and the
+/// tokens emitted so far).
+#[derive(Clone, Debug)]
+pub enum GenEvent {
+    Chunk { tokens: Vec<u32>, stats: RoundStats },
+    Done(Box<Response>),
+}
+
+/// Shared chunk-truncation rule for one round's emitted tokens — the ONE
+/// definition both the FCFS engine and the continuous batcher apply, so
+/// identical requests finish identically on either scheduler: stop-token
+/// truncation first (the stop token itself is kept), then the
+/// `remaining`-tokens length cap. Returns true when the surviving chunk
+/// ends in a stop token — i.e. the generation finishes with
+/// [`FinishReason::Stop`] (a stop token cut back off by the length cap
+/// does not count).
+pub fn truncate_chunk(
+    tokens: &mut Vec<u32>,
+    stop_tokens: &[u32],
+    remaining: usize,
+) -> bool {
+    if let Some(hit) = tokens.iter().position(|t| stop_tokens.contains(t)) {
+        tokens.truncate(hit + 1);
+    }
+    tokens.truncate(remaining);
+    tokens
+        .last()
+        .map(|t| stop_tokens.contains(t))
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_flips_once_for_all_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!c.is_cancelled());
+        t.cancel();
+        assert!(c.is_cancelled());
+    }
+
+    #[test]
+    fn finish_reason_round_trips() {
+        for f in [
+            FinishReason::Length,
+            FinishReason::Stop,
+            FinishReason::Cancelled,
+        ] {
+            assert_eq!(FinishReason::parse(f.name()), Some(f));
+        }
+        assert_eq!(FinishReason::parse("eof"), None);
+    }
+
+    #[test]
+    fn truncate_chunk_orders_stop_before_length_cap() {
+        // Stop token kept, tail dropped.
+        let mut t = vec![1, 2, 9, 4];
+        assert!(truncate_chunk(&mut t, &[9], 10));
+        assert_eq!(t, vec![1, 2, 9]);
+        // Length cap cuts the stop token back off: not a Stop finish.
+        let mut t = vec![1, 2, 9, 4];
+        assert!(!truncate_chunk(&mut t, &[9], 2));
+        assert_eq!(t, vec![1, 2]);
+        // No stop tokens configured.
+        let mut t = vec![1, 2, 3];
+        assert!(!truncate_chunk(&mut t, &[], 2));
+        assert_eq!(t, vec![1, 2]);
+        // Stop exactly at the cap boundary survives.
+        let mut t = vec![1, 9, 3];
+        assert!(truncate_chunk(&mut t, &[9], 2));
+        assert_eq!(t, vec![1, 9]);
+    }
+
+    #[test]
+    fn params_default_matches_legacy_wire_defaults() {
+        let p = GenParams::default();
+        assert_eq!(p.max_new_tokens, 128);
+        assert!((p.temperature - 0.6).abs() < 1e-6);
+        assert!(p.stop_tokens.is_empty());
+        assert_eq!(GenParams::simple(16, 0.1).max_new_tokens, 16);
+    }
+}

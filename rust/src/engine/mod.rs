@@ -5,8 +5,13 @@
 //! hardware-regime latency ledger that maps our CPU testbed onto the
 //! paper's A100 setups (DESIGN.md §3).
 
+pub mod events;
 pub mod stats;
 
+pub use events::{
+    truncate_chunk, CancelToken, FinishReason, GenEvent, GenParams, Response,
+    RoundStats,
+};
 pub use stats::{GenerationStats, StepStats};
 
 use crate::cache::{verify_bill, CacheManager};
@@ -67,29 +72,92 @@ impl SpecEngine {
         &self.cache
     }
 
+    /// Re-seed the engine's sampling stream (per-request determinism: a
+    /// protocol-v1 request carrying `seed` gets the same stream no matter
+    /// which worker picks it up or what ran before it).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed ^ 0x0DD5_9EC0_0000_0001);
+    }
+
+    /// Swap the draft-tree policy (per-request `drafter` override).
+    pub fn set_policy(&mut self, kind: PolicyKind) {
+        if self.cfg.policy != kind {
+            self.cfg.policy = kind;
+            self.policy = make_policy(kind);
+        }
+    }
+
     /// Generate up to `cfg.max_new_tokens` tokens after `prompt`.
     pub fn generate(&mut self, prompt: &[u32]) -> GenerationStats {
+        self.generate_streamed(prompt, None, |_| {}).0
+    }
+
+    /// Incremental generation: every speculation round pushes its accepted
+    /// chunk through `sink` as a [`GenEvent::Chunk`] (the engine never
+    /// emits `Done` — the serving layer does, with the aggregate
+    /// [`Response`]). Between rounds the optional `cancel` token is
+    /// checked; a cancelled generation returns the tokens emitted so far
+    /// with [`FinishReason::Cancelled`]. A token in `cfg.stop_tokens`
+    /// truncates the chunk after (and including) it and finishes with
+    /// [`FinishReason::Stop`].
+    pub fn generate_streamed<F: FnMut(GenEvent)>(
+        &mut self,
+        prompt: &[u32],
+        cancel: Option<&CancelToken>,
+        mut sink: F,
+    ) -> (GenerationStats, FinishReason) {
         assert!(!prompt.is_empty(), "empty prompt");
         // Fresh cache session per generation: nothing of a previous
         // request's prefix may be considered resident.
         self.cache.drop_seq(ENGINE_SEQ);
         let mut ctx = prompt.to_vec();
         let mut stats = GenerationStats::new(prompt.len());
+        let mut finish = FinishReason::Length;
 
         while stats.tokens.len() < self.cfg.max_new_tokens {
-            let step = if self.cfg.policy == PolicyKind::Baseline {
+            if cancel.map(CancelToken::is_cancelled).unwrap_or(false) {
+                finish = FinishReason::Cancelled;
+                break;
+            }
+            let mut step = if self.cfg.policy == PolicyKind::Baseline {
                 self.autoregressive_step(&mut ctx)
             } else {
                 self.speculative_step(&mut ctx)
             };
             let remaining = self.cfg.max_new_tokens - stats.tokens.len();
+            let stopped = truncate_chunk(
+                &mut step.tokens,
+                &self.cfg.stop_tokens,
+                remaining,
+            );
+            step.step.emitted = step.tokens.len();
+            let before = stats.tokens.len();
             stats.push_step(step, &mut ctx, remaining);
+            let chunk = stats.tokens[before..].to_vec();
+            if stopped {
+                finish = FinishReason::Stop;
+            }
+            let last = stats.steps.last().expect("step just pushed");
+            sink(GenEvent::Chunk {
+                stats: RoundStats {
+                    round: stats.steps.len(),
+                    tree_size: last.tree_size,
+                    accepted: last.accepted_speculated,
+                    billed_positions: last.billed_positions,
+                    cached_positions: last.cached_positions,
+                    virtual_secs: last.virtual_secs.unwrap_or(0.0),
+                },
+                tokens: chunk,
+            });
+            if stopped {
+                break;
+            }
         }
-        // The request is complete: release its residency now rather than
-        // holding the blocks while the worker sits idle (the resident-block
-        // gauge must return to zero between requests).
+        // The request is complete (or cancelled): release its residency now
+        // rather than holding the blocks while the worker sits idle (the
+        // resident-block gauge must return to zero between requests).
         self.cache.drop_seq(ENGINE_SEQ);
-        stats
+        (stats, finish)
     }
 
     /// One plain autoregressive step: target forward, sample, emit. The
@@ -393,6 +461,102 @@ mod tests {
                 cold.billed_positions
             );
         }
+    }
+
+    /// The streaming tentpole at engine level: concatenated chunk events
+    /// are bit-identical to the one-shot token array for the same seed,
+    /// and the final round stats agree with the aggregate.
+    #[test]
+    fn streamed_chunks_concatenate_to_one_shot_tokens() {
+        let oneshot = engine(PolicyKind::DySpec, 0.8, 0.6, 12)
+            .generate(&[4, 5, 6])
+            .tokens;
+        let mut chunks: Vec<u32> = Vec::new();
+        let mut rounds = 0usize;
+        let (stats, finish) = engine(PolicyKind::DySpec, 0.8, 0.6, 12)
+            .generate_streamed(&[4, 5, 6], None, |ev| {
+                if let GenEvent::Chunk { tokens, stats } = ev {
+                    rounds += 1;
+                    assert_eq!(stats.round, rounds);
+                    assert!(!tokens.is_empty(), "empty chunk");
+                    chunks.extend_from_slice(&tokens);
+                }
+            });
+        assert_eq!(chunks, oneshot, "streamed chunks diverged from one-shot");
+        assert_eq!(chunks, stats.tokens);
+        assert_eq!(rounds, stats.steps.len());
+        assert_eq!(finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn cancel_between_rounds_returns_partial_output() {
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 3);
+        let cancel = CancelToken::new();
+        let handle = cancel.clone();
+        let mut seen = 0usize;
+        let (stats, finish) =
+            e.generate_streamed(&[1, 2, 3], Some(&cancel), |_| {
+                seen += 1;
+                if seen == 2 {
+                    handle.cancel();
+                }
+            });
+        assert_eq!(finish, FinishReason::Cancelled);
+        assert_eq!(stats.steps.len(), 2, "cancel not honored next round");
+        assert!(stats.tokens.len() < 40);
+        // Residency released on the cancel path too.
+        assert_eq!(e.cache().used_blocks(), 0);
+    }
+
+    #[test]
+    fn pre_cancelled_generation_emits_nothing() {
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 3);
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let (stats, finish) =
+            e.generate_streamed(&[1, 2, 3], Some(&cancel), |_| {});
+        assert_eq!(finish, FinishReason::Cancelled);
+        assert!(stats.tokens.is_empty());
+        assert!(stats.steps.is_empty());
+    }
+
+    #[test]
+    fn stop_token_truncates_chunk_and_finishes() {
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 1);
+        // Find out what the stream emits, then re-run stopping at the
+        // third token.
+        let tokens = e.generate(&[7, 8]).tokens;
+        let stop = tokens[2];
+        let first_hit = tokens.iter().position(|&t| t == stop).unwrap();
+        let mut e2 = engine(PolicyKind::DySpec, 0.8, 0.6, 1);
+        e2.cfg.stop_tokens = vec![stop];
+        let (stats, finish) = e2.generate_streamed(&[7, 8], None, |_| {});
+        assert_eq!(finish, FinishReason::Stop);
+        assert_eq!(stats.tokens.last(), Some(&stop));
+        assert_eq!(stats.tokens.len(), first_hit + 1);
+        assert_eq!(&stats.tokens[..], &tokens[..first_hit + 1]);
+    }
+
+    #[test]
+    fn reseed_makes_requests_deterministic_on_a_warm_engine() {
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 5);
+        e.reseed(77);
+        let a = e.generate(&[3, 1, 4]).tokens;
+        // Engine rng has advanced; an unseeded rerun would diverge.
+        e.reseed(77);
+        let b = e.generate(&[3, 1, 4]).tokens;
+        assert_eq!(a, b, "reseed did not pin the sampling stream");
+    }
+
+    #[test]
+    fn set_policy_switches_step_kind() {
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 2);
+        e.set_policy(PolicyKind::Baseline);
+        let out = e.generate(&[5, 6]);
+        assert_eq!(out.steps.len(), out.tokens.len(), "not autoregressive");
+        e.set_policy(PolicyKind::DySpec);
+        let out = e.generate(&[5, 6]);
+        assert!(out.mean_emitted_per_step() >= 1.0);
     }
 
     #[test]

@@ -55,7 +55,17 @@ fn config_from(cli: &Cli) -> Result<Config, String> {
     for (k, v) in &cli.options {
         if matches!(
             k.as_str(),
-            "experiment" | "out" | "preset" | "runs" | "prompts" | "noise"
+            "experiment"
+                | "out"
+                | "preset"
+                | "runs"
+                | "prompts"
+                | "noise"
+                // client-subcommand options, not config keys
+                | "cancel-after"
+                | "drafter"
+                | "token_budget"
+                | "req_id"
         ) {
             continue; // harness-level options, not config keys
         }
@@ -156,7 +166,7 @@ fn cmd_serve(cli: &Cli) -> Result<(), String> {
         let cfg = cfg.clone();
         Arc::new(move || build_models(&cfg).expect("worker model construction"))
     };
-    let coord = Coordinator::start(cfg.clone(), factory);
+    let coord = Arc::new(Coordinator::start(cfg.clone(), factory));
     let server = Server::bind(&cfg.server.addr, coord).map_err(|e| e.to_string())?;
     println!("dyspec serving on {} (backend={}, policy={}, workers={})",
         server.local_addr().map_err(|e| e.to_string())?,
@@ -182,6 +192,13 @@ fn cmd_client(cli: &Cli) -> Result<(), String> {
     }
     let prompts = PromptSet::by_name(&cfg.dataset, 1, cfg.prompt_len, cfg.engine.seed + 100)
         .ok_or("bad dataset")?;
+    let cancel_after: Option<usize> = match cli.opt("cancel-after") {
+        Some(v) => Some(v.parse().map_err(|_| "bad --cancel-after")?),
+        None => None,
+    };
+    if cli.has_flag("stream") || cancel_after.is_some() {
+        return cmd_client_stream(cli, &cfg, &mut client, prompts.get(0), cancel_after);
+    }
     let reply = client.generate_detailed(
         prompts.get(0),
         cfg.engine.max_new_tokens,
@@ -189,6 +206,73 @@ fn cmd_client(cli: &Cli) -> Result<(), String> {
     )?;
     println!("{}", reply.to_string());
     Ok(())
+}
+
+/// Protocol-v1 streaming drive: print every frame as it lands; with
+/// `--cancel-after N`, send a cancel after the Nth chunk and require the
+/// stream to end with `finish:"cancelled"` (the CI conformance check).
+fn cmd_client_stream(
+    cli: &Cli,
+    cfg: &Config,
+    client: &mut Client,
+    prompt: &[u32],
+    cancel_after: Option<usize>,
+) -> Result<(), String> {
+    let req_id: u64 = cli.opt_parse("req_id", 1u64)?;
+    let params = dyspec::coordinator::GenParams {
+        max_new_tokens: cfg.engine.max_new_tokens,
+        temperature: cfg.engine.target_temp,
+        seed: cli.opt("seed").map(|_| cfg.engine.seed),
+        stop_tokens: cfg.engine.stop_tokens.clone(),
+        drafter: match cli.opt("drafter") {
+            Some(name) => Some(
+                dyspec::config::PolicyKind::parse(name)
+                    .ok_or_else(|| format!("bad --drafter: {name}"))?,
+            ),
+            None => None,
+        },
+        token_budget: match cli.opt("token_budget") {
+            Some(v) => Some(v.parse().map_err(|_| "bad --token_budget")?),
+            None => None,
+        },
+    };
+    client.submit(req_id, prompt, &params, true)?;
+    let mut chunks = 0usize;
+    loop {
+        let frame = client.read_frame()?;
+        println!("{}", frame.body.to_string());
+        if frame.req_id != Some(req_id) {
+            return Err(format!("frame for unexpected req {:?}", frame.req_id));
+        }
+        match frame.event.as_str() {
+            "chunk" => {
+                chunks += 1;
+                if cancel_after == Some(chunks) {
+                    client.cancel(req_id)?;
+                }
+            }
+            "done" => {
+                let finish = frame.finish().map(|f| f.name()).unwrap_or("?");
+                eprintln!("stream done: {chunks} chunks, finish={finish}");
+                if cancel_after.is_some() && finish != "cancelled" {
+                    return Err(format!(
+                        "expected finish=cancelled after cancel, got {finish}"
+                    ));
+                }
+                if cancel_after.is_none() && finish == "cancelled" {
+                    return Err("stream cancelled unexpectedly".into());
+                }
+                return Ok(());
+            }
+            "error" => {
+                return Err(frame
+                    .error()
+                    .unwrap_or("unknown server error")
+                    .to_string())
+            }
+            other => return Err(format!("unexpected event: {other}")),
+        }
+    }
 }
 
 /// Verify artifacts + the PJRT wiring: load the target model and compare a

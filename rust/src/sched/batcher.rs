@@ -1,32 +1,42 @@
 //! Step-level continuous batcher.
 //!
 //! Each iteration of [`Batcher::run`]:
-//!   1. admits new requests from the shared queue up to `sched.max_active`;
-//!   2. asks the budget allocator for one speculated tree per sequence,
+//!   1. retires cancelled sequences (slot + KV residency released before
+//!      any further work is spent on them);
+//!   2. admits new requests from the shared queue up to `sched.max_active`;
+//!   3. asks the budget allocator for one speculated tree per sequence,
 //!      spending the GLOBAL per-dispatch token budget greedily across
-//!      sequences by estimated acceptance (`sched::budget`);
-//!   3. packs every sequence's tree (plus bare root rows for draining
+//!      sequences by estimated acceptance (`sched::budget`), each sequence
+//!      further capped by its request's own `token_budget`;
+//!   4. packs every sequence's tree (plus bare root rows for draining
 //!      sequences) into ONE batched target verification
 //!      (`models::LogitModel::score_forest`);
-//!   4. walks each sequence's accept/reject outcome, emits tokens, and
+//!   5. walks each sequence's accept/reject outcome, streams the accepted
+//!      chunk through the request's event channel (`GenEvent::Chunk`), and
 //!      advances its state machine (`sched::sequence`).
 //!
 //! One target dispatch therefore serves the whole active set — under the
 //! paper's hardware-regime accounting that is the continuous-batching
 //! throughput win, measured by `bench --experiment serve`.
 //!
+//! Per-request `drafter` overrides are honored when the step's speculating
+//! set agrees on one policy (a homogeneous batch); a mixed batch falls
+//! back to the worker's configured policy — the cross-request greedy
+//! allocator is policy-global by construction (DESIGN.md §Serving API v1).
+//!
 //! Shutdown drains: the loop only exits once the queue is disconnected AND
 //! every in-flight sequence reached `Done`, so closing the coordinator
-//! never drops accepted work.
+//! never drops accepted work. Cancellation is the one exception — a
+//! cancelled sequence finishes immediately with its partial output.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
-use crate::cache::{verify_bill, CacheManager, TreeLease};
+use crate::cache::{verify_bill, CacheManager, TreeLease, VerifyBill};
 use crate::config::{Config, PolicyKind};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::queue::Request;
+use crate::coordinator::queue::{FinishReason, GenEvent, Request, RoundStats};
 use crate::draft::{make_policy, TreePolicy};
 use crate::log_debug;
 use crate::models::{ForestItem, LogitModel, TimedModel};
@@ -61,6 +71,8 @@ pub struct StepReport {
     pub virtual_secs: f64,
     /// Sequences that finished (responses sent) this step.
     pub completed: usize,
+    /// Sequences retired by cancellation before this step's dispatch.
+    pub cancelled: usize,
 }
 
 /// A continuous batcher bound to one worker's model pair.
@@ -69,8 +81,11 @@ pub struct Batcher {
     pub cfg: Config,
     draft: Box<dyn LogitModel>,
     target: Box<dyn LogitModel>,
-    /// Fair-split construction for non-greedy policies.
-    policy: Box<dyn TreePolicy>,
+    /// Fair-split construction policy, cached for the step loop and
+    /// rebuilt only when the effective kind changes (per-request drafter
+    /// overrides on homogeneous batches).
+    fair_policy: Box<dyn TreePolicy>,
+    fair_policy_kind: PolicyKind,
     metrics: Arc<Metrics>,
     seqs: Vec<Sequence>,
     seed_salt: u64,
@@ -87,15 +102,16 @@ impl Batcher {
         target: Box<dyn LogitModel>,
         metrics: Arc<Metrics>,
     ) -> Self {
-        let policy = make_policy(cfg.engine.policy);
         let seed_salt = cfg.engine.seed ^ 0x5EED_BA7C_0000_0001;
         let cache = CacheManager::new(&cfg.cache);
+        let fair_policy_kind = cfg.engine.policy;
         Self {
             wid,
             cfg,
             draft,
             target,
-            policy,
+            fair_policy: make_policy(fair_policy_kind),
+            fair_policy_kind,
             metrics,
             seqs: Vec::new(),
             seed_salt,
@@ -116,11 +132,52 @@ impl Batcher {
         self.cfg.sched.max_active.max(1).saturating_sub(self.seqs.len())
     }
 
-    /// Admit one request into the active set.
+    /// Admit one request into the active set (a request cancelled while
+    /// queued is retired immediately without taking a slot).
     pub fn admit(&mut self, req: Request) {
         let seq = Sequence::new(req, self.seed_salt);
         self.metrics.on_started(seq.queue_secs);
+        if seq.is_cancelled() {
+            self.retire(seq, true);
+            return;
+        }
         self.seqs.push(seq);
+    }
+
+    /// Send the sequence's final `Done` event and release everything it
+    /// holds. `cancelled` selects the metrics bucket.
+    fn retire(&mut self, mut seq: Sequence, cancelled: bool) {
+        if cancelled {
+            seq.finish = FinishReason::Cancelled;
+        }
+        // Residency dies with the sequence (leak-freedom is pinned by
+        // rust/tests/scheduler.rs and rust/tests/protocol_v1.rs).
+        self.cache.drop_seq(seq.id);
+        self.metrics
+            .on_resident_blocks(self.cache.used_blocks() as u64);
+        let (tx, resp) = seq.into_response(self.wid);
+        self.metrics.tokens_in_flight_sub(resp.tokens.len() as u64);
+        if cancelled {
+            self.metrics.on_cancelled();
+        } else {
+            self.metrics.on_completed(resp.tokens.len(), resp.gen_secs);
+        }
+        // Receiver may have given up; that's fine.
+        let _ = tx.send(GenEvent::Done(Box::new(resp)));
+    }
+
+    /// Retire every cancelled sequence now, before budget or model time is
+    /// spent on it. Returns how many were retired.
+    fn sweep_cancelled(&mut self) -> usize {
+        let cancelled: Vec<usize> = (0..self.seqs.len())
+            .filter(|&i| self.seqs[i].is_cancelled())
+            .collect();
+        // Largest index first keeps the remaining swap_remove indices valid.
+        for &i in cancelled.iter().rev() {
+            let seq = self.seqs.swap_remove(i);
+            self.retire(seq, true);
+        }
+        cancelled.len()
     }
 
     /// The shared per-dispatch speculation budget when `n_spec` sequences
@@ -135,10 +192,31 @@ impl Batcher {
         base.max(n_spec)
     }
 
+    /// The draft policy this step runs: the per-request override when the
+    /// speculating set is homogeneous, the worker default otherwise.
+    fn step_policy(&self, spec_idx: &[usize]) -> PolicyKind {
+        let mut kinds = spec_idx.iter().map(|&i| {
+            self.seqs[i]
+                .drafter
+                .unwrap_or(self.cfg.engine.policy)
+        });
+        let Some(first) = kinds.next() else {
+            return self.cfg.engine.policy;
+        };
+        if kinds.all(|k| k == first) {
+            first
+        } else {
+            self.cfg.engine.policy
+        }
+    }
+
     /// One scheduler iteration over the current active set. No-op when the
     /// active set is empty.
     pub fn step(&mut self) -> StepReport {
-        let mut report = StepReport::default();
+        let mut report = StepReport {
+            cancelled: self.sweep_cancelled(),
+            ..StepReport::default()
+        };
         let n = self.seqs.len();
         if n == 0 {
             return report;
@@ -157,6 +235,11 @@ impl Batcher {
             self.global_budget(spec_idx.len())
         };
         report.global_budget = budget;
+        let policy_kind = self.step_policy(&spec_idx);
+        if policy_kind != self.fair_policy_kind {
+            self.fair_policy = make_policy(policy_kind);
+            self.fair_policy_kind = policy_kind;
+        }
 
         let t_build = Timer::start();
         let (alloc, draft_wall_secs): (ForestAlloc, f64) = {
@@ -170,26 +253,32 @@ impl Batcher {
                 .iter()
                 .map(|&i| self.seqs[i].ctx.as_slice())
                 .collect();
+            let caps: Vec<usize> = spec_idx
+                .iter()
+                .map(|&i| self.seqs[i].tree_cap(self.cfg.engine.tree_budget))
+                .collect();
             // Split inference wall time out of construction logic, exactly
             // like the engine's FCFS ledger — model time is billed at
             // regime rates below, never wall time.
             let mut timed = TimedModel::new(self.draft.as_mut());
-            let alloc = if self.cfg.engine.policy == PolicyKind::DySpec {
+            let alloc = if policy_kind == PolicyKind::DySpec {
                 build_forest(
                     &mut timed,
                     &prefixes,
                     &mut rngs,
                     &self.cfg.engine,
                     budget,
+                    &caps,
                 )
             } else {
                 build_forest_fair(
-                    self.policy.as_ref(),
+                    self.fair_policy.as_ref(),
                     &mut timed,
                     &prefixes,
                     &mut rngs,
                     &self.cfg.engine,
                     budget,
+                    &caps,
                 )
             };
             let draft_wall_secs = timed.secs;
@@ -251,10 +340,13 @@ impl Batcher {
             self.target.score_forest(&items)
         };
 
-        // --- per-sequence verification + state advance ---
+        // --- phase A: per-sequence verification + cache round end ---
+        // (chunk emission waits for phase B so every chunk's RoundStats
+        // can carry the step's shared virtual cost)
         let t_verify = Timer::start();
-        let mut finished: Vec<usize> = Vec::new();
         let block_tokens = self.cache.block_tokens();
+        let mut outcomes: Vec<(Vec<u32>, usize, VerifyBill)> =
+            Vec::with_capacity(n);
         let mut billed_total = 0usize;
         let mut cached_total = 0usize;
         let mut fetched_total = 0usize;
@@ -295,20 +387,10 @@ impl Batcher {
             fetched_total += bill.fetched_blocks;
             written_total += bill.written_blocks;
 
-            let seq = &mut self.seqs[i];
-            seq.cache_hits += bill.cached_positions as u64;
+            let accepted = out.accepted.len();
             let mut tokens = out.accepted;
             tokens.push(out.bonus);
-            report.emitted.push(tokens.len().min(seq.remaining()));
-            let done = seq.on_step(tokens, alloc_by_seq[i]);
-            if seq.steps == 1 {
-                if let Some(t) = seq.ttft_secs {
-                    metrics.on_first_token(t);
-                }
-            }
-            if done {
-                finished.push(i);
-            }
+            outcomes.push((tokens, accepted, bill));
         }
         let verify_secs = t_verify.elapsed_secs();
         report.billed_positions = billed_total;
@@ -346,8 +428,35 @@ impl Batcher {
             })
             .unwrap_or(0.0);
         report.virtual_secs = virt;
-        for seq in &mut self.seqs {
+
+        // --- phase B: stream chunks + advance state machines ---
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, (tokens, accepted, bill)) in
+            outcomes.into_iter().enumerate()
+        {
+            let seq = &mut self.seqs[i];
+            seq.cache_hits += bill.cached_positions as u64;
             seq.virtual_secs += virt;
+            let stats = RoundStats {
+                round: 0, // set by on_step to the sequence's step count
+                tree_size: alloc_by_seq[i],
+                accepted,
+                billed_positions: bill.billed_positions,
+                cached_positions: bill.cached_positions,
+                virtual_secs: virt,
+            };
+            let before = seq.emitted.len();
+            let done = seq.on_step(tokens, alloc_by_seq[i], stats);
+            report.emitted.push(seq.emitted.len() - before);
+            metrics.on_chunk();
+            if seq.steps == 1 {
+                if let Some(t) = seq.ttft_secs {
+                    metrics.on_first_token(t);
+                }
+            }
+            if done {
+                finished.push(i);
+            }
         }
 
         let emitted_total: usize = report.emitted.iter().sum();
@@ -363,15 +472,8 @@ impl Batcher {
         // remaining swap_remove indices valid).
         for &i in finished.iter().rev() {
             let seq = self.seqs.swap_remove(i);
-            // Residency dies with the sequence (leak-freedom is pinned by
-            // rust/tests/scheduler.rs).
-            self.cache.drop_seq(seq.id);
-            let (tx, resp) = seq.into_response(self.wid);
-            metrics.tokens_in_flight_sub(resp.tokens.len() as u64);
-            metrics.on_completed(resp.tokens.len(), resp.gen_secs);
+            self.retire(seq, false);
             report.completed += 1;
-            // Receiver may have given up; that's fine.
-            let _ = tx.send(resp);
         }
         report
     }
@@ -428,7 +530,7 @@ impl Batcher {
                 continue;
             }
             // In-flight sequences always progress — shutdown drains,
-            // never drops.
+            // never drops (cancellation is the explicit early exit).
             self.step();
         }
         log_debug!("worker {} batcher down", self.wid);
@@ -438,7 +540,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::queue::Response;
+    use crate::coordinator::queue::{CancelToken, GenParams, RequestHandle};
     use crate::models::sim::{SimModel, SimSpec};
     use std::time::Instant;
 
@@ -458,32 +560,41 @@ mod tests {
         )
     }
 
-    fn mk_request(
+    fn mk_request_with(
         id: u64,
-        max_new: usize,
-    ) -> (Request, mpsc::Receiver<Response>) {
+        params: GenParams,
+    ) -> (Request, RequestHandle) {
         let (tx, rx) = mpsc::channel();
+        let cancel = CancelToken::new();
         (
             Request {
                 id,
                 prompt: vec![id as u32 + 1, 2, 3],
-                max_new_tokens: max_new,
-                temperature: 0.6,
+                params,
                 submitted_at: Instant::now(),
-                respond: tx,
+                cancel: cancel.clone(),
+                events: tx,
             },
-            rx,
+            RequestHandle {
+                id,
+                events: rx,
+                cancel,
+            },
         )
+    }
+
+    fn mk_request(id: u64, max_new: usize) -> (Request, RequestHandle) {
+        mk_request_with(id, GenParams::simple(max_new, 0.6))
     }
 
     #[test]
     fn steps_multiple_sequences_to_completion() {
         let mut b = mk_batcher(8, 16);
-        let rxs: Vec<_> = (0..4)
+        let handles: Vec<_> = (0..4)
             .map(|i| {
-                let (req, rx) = mk_request(i + 1, 12);
+                let (req, h) = mk_request(i + 1, 12);
                 b.admit(req);
-                rx
+                h
             })
             .collect();
         assert_eq!(b.active(), 4);
@@ -496,8 +607,8 @@ mod tests {
             guard += 1;
             assert!(guard <= 4 * 12, "batcher failed to converge");
         }
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
+        for h in handles {
+            let resp = h.wait().unwrap();
             assert_eq!(resp.tokens.len(), 12);
             assert!(resp.steps >= 1);
             assert!(resp.ttft_secs >= 0.0);
@@ -515,24 +626,116 @@ mod tests {
     #[test]
     fn drain_state_takes_no_budget() {
         let mut b = mk_batcher(4, 16);
-        let (req, rx) = mk_request(1, 1); // one token: Drain from the start
+        let (req, h) = mk_request(1, 1); // one token: Drain from the start
         b.admit(req);
         let report = b.step();
         assert_eq!(report.global_budget, 0);
         assert_eq!(report.allocated, vec![0]);
         assert_eq!(report.emitted, vec![1]);
-        assert_eq!(rx.recv().unwrap().tokens.len(), 1);
+        assert_eq!(h.wait().unwrap().tokens.len(), 1);
         assert_eq!(b.active(), 0);
+    }
+
+    #[test]
+    fn cancelled_sequence_is_retired_before_the_dispatch() {
+        let mut b = mk_batcher(4, 16);
+        let (req1, h1) = mk_request(1, 64);
+        let (req2, h2) = mk_request(2, 8);
+        b.admit(req1);
+        b.admit(req2);
+        b.step();
+        assert!(b.cache().used_blocks() > 0);
+        h1.cancel.cancel();
+        let report = b.step();
+        assert_eq!(report.cancelled, 1);
+        assert_eq!(report.active, 1, "cancelled seq still dispatched");
+        let resp = h1.wait().unwrap();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(resp.tokens.len() < 64);
+        while b.active() > 0 {
+            b.step();
+        }
+        assert_eq!(h2.wait().unwrap().tokens.len(), 8);
+        assert_eq!(b.cache().used_blocks(), 0, "cancel leaked blocks");
+    }
+
+    #[test]
+    fn pre_cancelled_request_never_takes_a_slot() {
+        let mut b = mk_batcher(4, 16);
+        let (req, h) = mk_request(1, 16);
+        h.cancel.cancel();
+        b.admit(req);
+        assert_eq!(b.active(), 0);
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(resp.tokens.is_empty());
+    }
+
+    #[test]
+    fn per_request_token_budget_caps_allocation() {
+        let mut b = mk_batcher(4, 32);
+        let (req, _h) = mk_request_with(
+            1,
+            GenParams {
+                token_budget: Some(2),
+                ..GenParams::simple(24, 0.6)
+            },
+        );
+        b.admit(req);
+        while b.active() > 0 {
+            let report = b.step();
+            assert!(
+                report.allocated.iter().all(|&a| a <= 2),
+                "token_budget cap exceeded: {:?}",
+                report.allocated
+            );
+        }
+    }
+
+    #[test]
+    fn stop_token_retires_sequence_early() {
+        let mut b = mk_batcher(4, 16);
+        // First run uncapped to learn the stream, then stop at its 3rd token.
+        let (req, h) = mk_request_with(
+            1,
+            GenParams {
+                seed: Some(5),
+                ..GenParams::simple(24, 0.6)
+            },
+        );
+        b.admit(req);
+        while b.active() > 0 {
+            b.step();
+        }
+        let tokens = h.wait().unwrap().tokens;
+        let stop = tokens[2];
+        let first_hit = tokens.iter().position(|&t| t == stop).unwrap();
+
+        let (req, h) = mk_request_with(
+            2,
+            GenParams {
+                seed: Some(5),
+                stop_tokens: vec![stop],
+                ..GenParams::simple(24, 0.6)
+            },
+        );
+        b.admit(req);
+        while b.active() > 0 {
+            b.step();
+        }
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.finish, FinishReason::Stop);
+        assert_eq!(resp.tokens, tokens[..first_hit + 1].to_vec());
     }
 
     #[test]
     fn cache_residency_kicks_in_after_first_step_and_drains_clean() {
         let mut b = mk_batcher(8, 16);
-        let rxs: Vec<_> = (0..3)
+        let handles: Vec<_> = (0..3)
             .map(|i| {
-                let (req, rx) = mk_request(i + 1, 10);
+                let (req, h) = mk_request(i + 1, 10);
                 b.admit(req);
-                rx
+                h
             })
             .collect();
         let first = b.step();
@@ -546,8 +749,8 @@ mod tests {
                 "warm step served nothing from cache"
             );
         }
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
+        for h in handles {
+            let resp = h.wait().unwrap();
             assert_eq!(resp.tokens.len(), 10);
             assert!(
                 resp.cache_hits > 0,
@@ -576,7 +779,7 @@ mod tests {
             Box::new(t),
             Arc::new(Metrics::new()),
         );
-        let (req, _rx) = mk_request(1, 6);
+        let (req, _h) = mk_request(1, 6);
         b.admit(req);
         while b.active() > 0 {
             let rep = b.step();
@@ -586,18 +789,19 @@ mod tests {
     }
 
     #[test]
-    fn metrics_see_batched_dispatches() {
+    fn metrics_see_batched_dispatches_and_chunks() {
         let mut b = mk_batcher(8, 12);
-        let _rxs: Vec<_> = (0..3)
+        let _handles: Vec<_> = (0..3)
             .map(|i| {
-                let (req, rx) = mk_request(i + 1, 6);
+                let (req, h) = mk_request(i + 1, 6);
                 b.admit(req);
-                rx
+                h
             })
             .collect();
         b.step();
         let m = b.metrics.clone();
         assert_eq!(m.dispatches(), 1);
         assert!(m.batch_occupancy() >= 3.0 - 1e-9);
+        assert_eq!(m.chunks(), 3, "one chunk per sequence per step");
     }
 }

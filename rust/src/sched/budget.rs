@@ -92,16 +92,20 @@ impl ForestAlloc {
 
 /// Build one speculated tree per prefix under a SHARED `global_budget`,
 /// spending each token on the globally highest-estimate candidate. Each
-/// sequence's tree is additionally capped at `cfg.tree_budget` (a sequence
-/// never grows a bigger tree than the single-request engine would give it).
+/// sequence's tree is additionally capped at `caps[i]` — normally
+/// `cfg.tree_budget`, clamped further by the request's own `token_budget`
+/// (a sequence never grows a bigger tree than the single-request engine
+/// would give it, nor than its client asked to pay for).
 pub fn build_forest(
     draft: &mut dyn LogitModel,
     prefixes: &[&[u32]],
     rngs: &mut [Rng],
     cfg: &EngineConfig,
     global_budget: usize,
+    caps: &[usize],
 ) -> ForestAlloc {
     assert_eq!(prefixes.len(), rngs.len(), "one rng per sequence");
+    assert_eq!(prefixes.len(), caps.len(), "one cap per sequence");
     let mut trees: Vec<TokenTree> = prefixes
         .iter()
         .map(|p| {
@@ -133,7 +137,7 @@ pub fn build_forest(
         if cand.est <= 0.0 {
             break; // everything left is worthless, for every sequence
         }
-        if trees[cand.seq].size() >= cfg.tree_budget {
+        if trees[cand.seq].size() >= caps[cand.seq] {
             continue; // this sequence's tree is full; drop the candidate
         }
         // Lazy scoring on first expansion (same as DySpec §Perf L3.1; same
@@ -201,14 +205,17 @@ pub fn build_forest_fair(
     rngs: &mut [Rng],
     cfg: &EngineConfig,
     global_budget: usize,
+    caps: &[usize],
 ) -> ForestAlloc {
     assert_eq!(prefixes.len(), rngs.len(), "one rng per sequence");
+    assert_eq!(prefixes.len(), caps.len(), "one cap per sequence");
     let shares = fair_shares(prefixes.len(), global_budget);
     let trees = prefixes
         .iter()
         .zip(rngs.iter_mut())
-        .zip(shares)
-        .map(|((prefix, rng), share)| {
+        .zip(shares.into_iter().zip(caps))
+        .map(|((prefix, rng), (share, &cap))| {
+            let share = share.min(cap);
             if share == 0 {
                 // Bare verification row: root only, no draft dispatch.
                 return TokenTree::new(
@@ -217,7 +224,7 @@ pub fn build_forest_fair(
                 );
             }
             let mut c = cfg.clone();
-            c.tree_budget = share.min(cfg.tree_budget);
+            c.tree_budget = share;
             policy.build(draft, prefix, &c, rng)
         })
         .collect();
@@ -251,6 +258,7 @@ mod tests {
                 &mut rngs,
                 &cfg,
                 budget,
+                &[cfg.tree_budget; 3],
             );
             assert_eq!(alloc.trees.len(), 3);
             assert!(alloc.total_allocated() <= budget);
@@ -268,7 +276,14 @@ mod tests {
         let mut rngs: Vec<Rng> = (0..3).map(|i| Rng::new(100 + i)).collect();
         let cfg = EngineConfig::default();
         let mut draft = sim_draft(6);
-        let alloc = build_forest(&mut draft, &refs, &mut rngs, &cfg, 3);
+        let alloc = build_forest(
+            &mut draft,
+            &refs,
+            &mut rngs,
+            &cfg,
+            3,
+            &[cfg.tree_budget; 3],
+        );
         assert!(
             alloc.allocated.iter().all(|&n| n == 1),
             "roots not round-robined: {:?}",
@@ -286,10 +301,34 @@ mod tests {
             ..EngineConfig::default()
         };
         let mut draft = sim_draft(7);
-        let alloc = build_forest(&mut draft, &refs, &mut rngs, &cfg, 100);
+        let alloc = build_forest(
+            &mut draft,
+            &refs,
+            &mut rngs,
+            &cfg,
+            100,
+            &[cfg.tree_budget; 3],
+        );
         for &n in &alloc.allocated {
             assert!(n <= 4, "per-seq cap exceeded: {n}");
         }
+    }
+
+    #[test]
+    fn per_request_token_budget_caps_one_sequence() {
+        let ps = prefixes();
+        let refs: Vec<&[u32]> = ps.iter().map(|p| p.as_slice()).collect();
+        let mut rngs: Vec<Rng> = (0..3).map(|i| Rng::new(11 + i)).collect();
+        let cfg = EngineConfig {
+            tree_budget: 16,
+            ..EngineConfig::default()
+        };
+        let mut draft = sim_draft(9);
+        // Middle sequence carries a tight per-request cap.
+        let alloc =
+            build_forest(&mut draft, &refs, &mut rngs, &cfg, 48, &[16, 2, 16]);
+        assert!(alloc.allocated[1] <= 2, "request cap exceeded");
+        assert!(alloc.total_allocated() <= 48);
     }
 
     #[test]
@@ -315,6 +354,7 @@ mod tests {
             &mut rngs,
             &cfg,
             2,
+            &[cfg.tree_budget; 3],
         );
         assert_eq!(alloc.allocated[2], 0);
         assert!(alloc.total_allocated() <= 2);

@@ -8,17 +8,21 @@
 //!   - **Drain**: exactly one token left — takes a bare verification row
 //!     (the bonus token needs no speculated tree), so its budget share
 //!     flows to sequences that can still convert budget into acceptance.
-//!   - **Done**: every token emitted; the response has been handed back.
+//!   - **Done**: every token emitted (or a stop token / cancellation cut
+//!     the generation short); the `Done` event has been handed back.
 //!
 //! Every dispatch emits at least one token per participating sequence (the
 //! verification bonus), so a sequence in any live state makes progress on
 //! every scheduler step — the no-starvation invariant the scheduler tests
-//! pin down.
+//! pin down. Each step's accepted chunk is streamed through the request's
+//! event channel as the step lands (`GenEvent::Chunk`).
 
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::coordinator::queue::{Request, Response};
+use crate::coordinator::queue::{
+    CancelToken, FinishReason, GenEvent, Request, Response, RoundStats,
+};
 use crate::util::Rng;
 
 /// Lifecycle of one admitted sequence (see module docs).
@@ -39,6 +43,13 @@ pub struct Sequence {
     pub prompt_len: usize,
     pub max_new_tokens: usize,
     pub temperature: f32,
+    /// Emitting any of these finishes the sequence (reason `stop`).
+    pub stop_tokens: Vec<u32>,
+    /// Per-request speculation cap (protocol-v1 `token_budget`).
+    pub token_budget: Option<usize>,
+    /// Per-request draft-policy override (honored when the step's
+    /// speculating set is homogeneous; see `batcher::Batcher::step_policy`).
+    pub drafter: Option<crate::config::PolicyKind>,
     pub emitted: Vec<u32>,
     /// Scheduler steps this sequence took part in.
     pub steps: usize,
@@ -50,13 +61,15 @@ pub struct Sequence {
     /// hit-rate metric; residency itself lives in `cache::CacheManager`,
     /// keyed by `id`).
     pub cache_hits: u64,
-    /// Per-sequence sampling stream, seeded from (scheduler seed, request
-    /// id) so streams never collide across co-batched sequences. NOTE:
-    /// the *position* in the stream still depends on batch composition —
-    /// the shared-budget allocator draws a data-dependent number of
-    /// samples per step — so, unlike FCFS, continuous mode does not
-    /// promise identical tokens for the same request under different
-    /// concurrent load (it promises the same output *distribution*; see
+    /// Per-sequence sampling stream. With an explicit request `seed` the
+    /// stream is derived from it alone (same seed -> same stream on any
+    /// worker); otherwise it is seeded from (scheduler seed, request id)
+    /// so streams never collide across co-batched sequences. NOTE: the
+    /// *position* in the stream still depends on batch composition — the
+    /// shared-budget allocator draws a data-dependent number of samples
+    /// per step — so, unlike FCFS, continuous mode does not promise
+    /// identical tokens for the same request under different concurrent
+    /// load (it promises the same output *distribution*; see
     /// rust/tests/unbiasedness.rs).
     pub rng: Rng,
     pub submitted_at: Instant,
@@ -66,32 +79,45 @@ pub struct Sequence {
     pub ttft_secs: Option<f64>,
     /// Virtual regime seconds across the dispatches this sequence shared.
     pub virtual_secs: f64,
-    respond: mpsc::Sender<Response>,
+    /// Why the sequence reached `Done` (valid once it did).
+    pub finish: FinishReason,
+    /// Cooperative cancellation, shared with the submitter.
+    pub cancel: CancelToken,
+    events: mpsc::Sender<GenEvent>,
 }
 
 impl Sequence {
     pub fn new(req: Request, seed_salt: u64) -> Self {
         let queue_secs = req.submitted_at.elapsed().as_secs_f64();
+        let rng = match req.params.seed {
+            Some(s) => Rng::new(seed_salt ^ s.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            None => Rng::new(
+                seed_salt ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
+        };
         Self {
             id: req.id,
             state: SeqState::Prefill,
             prompt_len: req.prompt.len(),
             ctx: req.prompt,
-            max_new_tokens: req.max_new_tokens.max(1),
-            temperature: req.temperature,
+            max_new_tokens: req.params.max_new_tokens.max(1),
+            temperature: req.params.temperature,
+            stop_tokens: req.params.stop_tokens,
+            token_budget: req.params.token_budget,
+            drafter: req.params.drafter,
             emitted: Vec::new(),
             steps: 0,
             budget_tokens: 0,
             cache_hits: 0,
-            rng: Rng::new(
-                seed_salt ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-            ),
+            rng,
             submitted_at: req.submitted_at,
             admitted_at: Instant::now(),
             queue_secs,
             ttft_secs: None,
             virtual_secs: 0.0,
-            respond: req.respond,
+            finish: FinishReason::Length,
+            cancel: req.cancel,
+            events: req.events,
         }
     }
 
@@ -103,6 +129,19 @@ impl Sequence {
         self.state == SeqState::Done
     }
 
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// This sequence's per-round speculation cap: the engine tree budget,
+    /// further clamped by the request's own `token_budget`.
+    pub fn tree_cap(&self, engine_budget: usize) -> usize {
+        match self.token_budget {
+            Some(cap) if cap > 0 => engine_budget.min(cap),
+            _ => engine_budget,
+        }
+    }
+
     /// Eligible for speculation-budget shares this step? Draining
     /// sequences (one token left) and finished ones are not.
     pub fn wants_speculation(&self) -> bool {
@@ -110,31 +149,59 @@ impl Sequence {
             && self.remaining() > 1
     }
 
-    /// Record one step's emitted tokens (overshoot truncated), charge the
-    /// allocated budget share, advance the state machine. Returns true when
-    /// the sequence just reached `Done`.
-    pub fn on_step(&mut self, mut tokens: Vec<u32>, allocated: usize) -> bool {
+    /// Record one step's emitted tokens (overshoot truncated, stop tokens
+    /// honored), stream the chunk event, charge the allocated budget
+    /// share, advance the state machine. Returns true when the sequence
+    /// just reached `Done`.
+    pub fn on_step(
+        &mut self,
+        mut tokens: Vec<u32>,
+        allocated: usize,
+        mut stats: RoundStats,
+    ) -> bool {
         debug_assert!(!self.is_done(), "stepping a finished sequence");
         self.steps += 1;
         self.budget_tokens += allocated as u64;
-        tokens.truncate(self.remaining());
+        // Same chunk rule as the FCFS engine, one definition
+        // (`engine::events::truncate_chunk`): stop-token truncation before
+        // the length cap, Stop only if the stop token survived it.
+        let stopped = crate::engine::truncate_chunk(
+            &mut tokens,
+            &self.stop_tokens,
+            self.remaining(),
+        );
         if self.ttft_secs.is_none() && !tokens.is_empty() {
             self.ttft_secs = Some(self.submitted_at.elapsed().as_secs_f64());
         }
         self.ctx.extend_from_slice(&tokens);
         self.emitted.extend_from_slice(&tokens);
-        self.state = match self.remaining() {
-            0 => SeqState::Done,
-            1 => SeqState::Drain,
-            _ => SeqState::Speculate,
+        stats.round = self.steps;
+        // Receiver may have given up; cancellation is explicit, never
+        // inferred from a closed channel.
+        let _ = self.events.send(GenEvent::Chunk {
+            tokens,
+            stats,
+        });
+        self.state = if stopped {
+            self.finish = FinishReason::Stop;
+            SeqState::Done
+        } else {
+            match self.remaining() {
+                0 => SeqState::Done,
+                1 => SeqState::Drain,
+                _ => SeqState::Speculate,
+            }
         };
         self.is_done()
     }
 
-    /// Consume the finished sequence into its response. Call exactly once,
-    /// after `on_step` returned true.
-    pub fn into_response(self, worker: usize) -> (mpsc::Sender<Response>, Response) {
-        debug_assert!(self.state == SeqState::Done);
+    /// Consume the finished sequence into its response + event sender.
+    /// Call exactly once, after `on_step` returned true or the batcher
+    /// retired the sequence on cancellation (set `finish` first).
+    pub fn into_response(
+        self,
+        worker: usize,
+    ) -> (mpsc::Sender<GenEvent>, Response) {
         let steps = self.steps.max(1);
         let resp = Response {
             id: self.id,
@@ -147,26 +214,50 @@ impl Sequence {
             ttft_secs: self.ttft_secs.unwrap_or(0.0),
             virtual_secs: self.virtual_secs,
             cache_hits: self.cache_hits,
+            finish: self.finish,
         };
-        (self.respond, resp)
+        (self.events, resp)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::queue::GenParams;
 
-    fn mk_seq(max_new: usize) -> (Sequence, mpsc::Receiver<Response>) {
+    fn mk_req(
+        id: u64,
+        prompt: Vec<u32>,
+        params: GenParams,
+    ) -> (Request, mpsc::Receiver<GenEvent>) {
         let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id: 7,
-            prompt: vec![1, 2, 3],
-            max_new_tokens: max_new,
-            temperature: 0.6,
-            submitted_at: Instant::now(),
-            respond: tx,
-        };
+        (
+            Request {
+                id,
+                prompt,
+                params,
+                submitted_at: Instant::now(),
+                cancel: CancelToken::new(),
+                events: tx,
+            },
+            rx,
+        )
+    }
+
+    fn mk_seq(max_new: usize) -> (Sequence, mpsc::Receiver<GenEvent>) {
+        let (req, rx) =
+            mk_req(7, vec![1, 2, 3], GenParams::simple(max_new, 0.6));
         (Sequence::new(req, 42), rx)
+    }
+
+    fn drain_chunks(rx: &mpsc::Receiver<GenEvent>) -> Vec<u32> {
+        let mut out = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            if let GenEvent::Chunk { tokens, .. } = ev {
+                out.extend_from_slice(&tokens);
+            }
+        }
+        out
     }
 
     #[test]
@@ -175,34 +266,57 @@ mod tests {
         assert_eq!(s.state, SeqState::Prefill);
         assert!(s.wants_speculation());
 
-        assert!(!s.on_step(vec![9, 8], 5)); // 2 of 4 emitted
+        assert!(!s.on_step(vec![9, 8], 5, RoundStats::default())); // 2 of 4
         assert_eq!(s.state, SeqState::Speculate);
         assert!(s.ttft_secs.is_some());
         assert_eq!(s.ctx, vec![1, 2, 3, 9, 8]);
 
-        assert!(!s.on_step(vec![7], 5)); // 3 of 4 -> one left
+        assert!(!s.on_step(vec![7], 5, RoundStats::default())); // one left
         assert_eq!(s.state, SeqState::Drain);
         assert!(!s.wants_speculation());
 
-        assert!(s.on_step(vec![6], 0)); // final token
+        assert!(s.on_step(vec![6], 0, RoundStats::default())); // final token
         assert_eq!(s.state, SeqState::Done);
         assert_eq!(s.budget_tokens, 10);
+        assert_eq!(drain_chunks(&rx), vec![9, 8, 7, 6]);
 
         let (tx, resp) = s.into_response(3);
         assert_eq!(resp.tokens, vec![9, 8, 7, 6]);
         assert_eq!(resp.worker, 3);
         assert_eq!(resp.steps, 3);
+        assert_eq!(resp.finish, FinishReason::Length);
         assert!(resp.ttft_secs >= 0.0);
-        tx.send(resp).unwrap();
-        assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+        tx.send(GenEvent::Done(Box::new(resp))).unwrap();
+        match rx.recv().unwrap() {
+            GenEvent::Done(resp) => assert_eq!(resp.tokens.len(), 4),
+            _ => panic!("expected done"),
+        }
     }
 
     #[test]
     fn overshoot_is_truncated() {
-        let (mut s, _rx) = mk_seq(2);
-        assert!(s.on_step(vec![4, 5, 6, 7], 8));
+        let (mut s, rx) = mk_seq(2);
+        assert!(s.on_step(vec![4, 5, 6, 7], 8, RoundStats::default()));
         assert_eq!(s.emitted, vec![4, 5]);
         assert_eq!(s.remaining(), 0);
+        assert_eq!(drain_chunks(&rx), vec![4, 5]);
+    }
+
+    #[test]
+    fn stop_token_finishes_mid_chunk() {
+        let (req, rx) = mk_req(
+            1,
+            vec![1],
+            GenParams {
+                stop_tokens: vec![50],
+                ..GenParams::simple(16, 0.6)
+            },
+        );
+        let mut s = Sequence::new(req, 9);
+        assert!(s.on_step(vec![4, 50, 6], 3, RoundStats::default()));
+        assert_eq!(s.finish, FinishReason::Stop);
+        assert_eq!(s.emitted, vec![4, 50]);
+        assert_eq!(drain_chunks(&rx), vec![4, 50]);
     }
 
     #[test]
@@ -214,19 +328,41 @@ mod tests {
     }
 
     #[test]
-    fn rng_streams_differ_by_request_id() {
-        let (tx, _rx) = mpsc::channel();
-        let (tx2, _rx2) = mpsc::channel();
-        let mk = |id, tx| Request {
-            id,
-            prompt: vec![1],
-            max_new_tokens: 4,
-            temperature: 0.0,
-            submitted_at: Instant::now(),
-            respond: tx,
+    fn tree_cap_respects_request_budget() {
+        let (req, _rx) = mk_req(
+            1,
+            vec![1],
+            GenParams {
+                token_budget: Some(4),
+                ..GenParams::simple(16, 0.6)
+            },
+        );
+        let s = Sequence::new(req, 9);
+        assert_eq!(s.tree_cap(12), 4);
+        assert_eq!(s.tree_cap(2), 2);
+        let (s2, _rx2) = mk_seq(4);
+        assert_eq!(s2.tree_cap(12), 12);
+    }
+
+    #[test]
+    fn rng_streams_differ_by_request_id_but_pin_to_explicit_seed() {
+        let mk = |id, seed| {
+            let (req, _rx) = mk_req(
+                id,
+                vec![1],
+                GenParams {
+                    seed,
+                    ..GenParams::simple(4, 0.0)
+                },
+            );
+            Sequence::new(req, 9)
         };
-        let mut a = Sequence::new(mk(1, tx), 9);
-        let mut b = Sequence::new(mk(2, tx2), 9);
+        let mut a = mk(1, None);
+        let mut b = mk(2, None);
         assert_ne!(a.rng.next_u64(), b.rng.next_u64());
+        // Explicit seed: stream independent of the server-assigned id.
+        let mut c = mk(3, Some(42));
+        let mut d = mk(4, Some(42));
+        assert_eq!(c.rng.next_u64(), d.rng.next_u64());
     }
 }

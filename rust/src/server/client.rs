@@ -1,9 +1,15 @@
 //! Blocking client for the line-JSON protocol — used by the examples, the
-//! load-test driver and the `dyspec client` subcommand.
+//! load-test driver and the `dyspec client` subcommand. Speaks both the
+//! legacy one-shot surface and protocol v1 (enveloped, streamed,
+//! cancellable); see `server/protocol.rs` for the frame grammar.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
+use super::protocol::{
+    self, cancel_envelope, generate_envelope, parse_frame, Frame,
+};
+use crate::coordinator::GenParams;
 use crate::util::json::{parse, Json};
 
 pub struct Client {
@@ -21,18 +27,45 @@ impl Client {
         })
     }
 
-    /// Send one raw line, read one JSON reply.
-    pub fn send_raw(&mut self, line: &str) -> Result<Json, String> {
+    /// Send one raw line (no reply expected yet).
+    pub fn send_line(&mut self, line: &str) -> Result<(), String> {
         self.writer
             .write_all(line.as_bytes())
             .and_then(|_| self.writer.write_all(b"\n"))
             .and_then(|_| self.writer.flush())
-            .map_err(|e| e.to_string())?;
+            .map_err(|e| e.to_string())
+    }
+
+    /// Read one reply line as JSON.
+    pub fn read_json(&mut self) -> Result<Json, String> {
         let mut reply = String::new();
-        self.reader
+        let n = self
+            .reader
             .read_line(&mut reply)
             .map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("server closed the connection".into());
+        }
         parse(reply.trim()).map_err(|e| format!("bad reply: {e}"))
+    }
+
+    /// Read one reply line as a protocol-v1 [`Frame`].
+    pub fn read_frame(&mut self) -> Result<Frame, String> {
+        let mut reply = String::new();
+        let n = self
+            .reader
+            .read_line(&mut reply)
+            .map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("server closed the connection".into());
+        }
+        parse_frame(&reply)
+    }
+
+    /// Send one raw line, read one JSON reply.
+    pub fn send_raw(&mut self, line: &str) -> Result<Json, String> {
+        self.send_line(line)?;
+        self.read_json()
     }
 
     fn send(&mut self, msg: Json) -> Result<Json, String> {
@@ -43,22 +76,94 @@ impl Client {
         Ok(reply)
     }
 
-    /// Generate tokens for a prompt.
+    /// Submit a protocol-v1 generate envelope without waiting for frames
+    /// (multiplexing: interleave with other submits, then read frames).
+    pub fn submit(
+        &mut self,
+        req_id: u64,
+        prompt: &[u32],
+        params: &GenParams,
+        stream: bool,
+    ) -> Result<(), String> {
+        self.send_line(&generate_envelope(req_id, prompt, params, stream).to_string())
+    }
+
+    /// Cancel an in-flight request (the stream's `done` frame, with
+    /// `finish:"cancelled"`, is the acknowledgement).
+    pub fn cancel(&mut self, req_id: u64) -> Result<(), String> {
+        self.send_line(&cancel_envelope(req_id).to_string())
+    }
+
+    /// Streamed generation: submits with `stream:true`, invokes `on_chunk`
+    /// per chunk frame, returns (concatenated tokens, done frame).
+    /// Frames for other `req_id`s are an error here — use [`Client::submit`]
+    /// + [`Client::read_frame`] directly for multiplexed flows.
+    pub fn generate_stream<F: FnMut(&Frame)>(
+        &mut self,
+        req_id: u64,
+        prompt: &[u32],
+        params: &GenParams,
+        mut on_chunk: F,
+    ) -> Result<(Vec<u32>, Frame), String> {
+        self.submit(req_id, prompt, params, true)?;
+        let mut tokens = Vec::new();
+        loop {
+            let frame = self.read_frame()?;
+            if frame.req_id != Some(req_id) {
+                return Err(format!(
+                    "unexpected frame for req {:?}",
+                    frame.req_id
+                ));
+            }
+            match frame.event.as_str() {
+                "chunk" => {
+                    tokens.extend(frame.tokens());
+                    on_chunk(&frame);
+                }
+                "done" => return Ok((tokens, frame)),
+                "error" => {
+                    return Err(frame
+                        .error()
+                        .unwrap_or("unknown server error")
+                        .to_string())
+                }
+                other => return Err(format!("unexpected event: {other}")),
+            }
+        }
+    }
+
+    /// Enveloped one-shot generation (v1, `stream:false`): single `done`
+    /// frame carrying the full token array.
+    pub fn generate_oneshot(
+        &mut self,
+        req_id: u64,
+        prompt: &[u32],
+        params: &GenParams,
+    ) -> Result<(Vec<u32>, Frame), String> {
+        self.submit(req_id, prompt, params, false)?;
+        let frame = self.read_frame()?;
+        if frame.req_id != Some(req_id) {
+            return Err(format!("unexpected frame for req {:?}", frame.req_id));
+        }
+        match frame.event.as_str() {
+            "done" => Ok((frame.tokens(), frame)),
+            "error" => Err(frame
+                .error()
+                .unwrap_or("unknown server error")
+                .to_string()),
+            other => Err(format!("unexpected event: {other}")),
+        }
+    }
+
+    /// Generate tokens for a prompt (legacy un-enveloped surface).
     pub fn generate(
         &mut self,
         prompt: &[u32],
         max_new_tokens: usize,
         temperature: f32,
     ) -> Result<Vec<u32>, String> {
-        let msg = Json::obj(vec![
-            (
-                "prompt",
-                Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
-            ),
-            ("max_new_tokens", Json::Num(max_new_tokens as f64)),
-            ("temperature", Json::Num(temperature as f64)),
-        ]);
-        let reply = self.send(msg)?;
+        let reply =
+            self.generate_detailed(prompt, max_new_tokens, temperature)?;
         reply
             .get("tokens")
             .and_then(Json::as_arr)
@@ -72,7 +177,7 @@ impl Client {
             .collect()
     }
 
-    /// Full generation reply (includes timing fields).
+    /// Full legacy generation reply (includes timing fields).
     pub fn generate_detailed(
         &mut self,
         prompt: &[u32],
@@ -99,3 +204,6 @@ impl Client {
         Ok(())
     }
 }
+
+// Re-exported for callers that only import the client module.
+pub use protocol::PROTOCOL_VERSION;

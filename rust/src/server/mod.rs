@@ -1,30 +1,49 @@
 //! TCP serving frontend + blocking client.
 //!
-//! Line-delimited JSON protocol (one request / one response per line):
+//! Line-delimited JSON, protocol v1 (DESIGN.md §Serving API v1): one
+//! connection multiplexes many in-flight requests. Envelopes in,
+//! `req_id`-tagged frames out:
 //!
-//!   -> {"prompt":[1,2,3],"max_new_tokens":128,"temperature":0.6}
-//!   <- {"id":1,"tokens":[...],"steps":12,"emitted_per_step":4.2,
-//!       "queue_secs":0.001,"gen_secs":0.8}
+//!   -> {"v":1,"req_id":7,"prompt":[1,2,3],"stream":true,
+//!       "max_new_tokens":64,"temperature":0.6,"seed":42}
+//!   <- {"v":1,"req_id":7,"event":"chunk","tokens":[...],"round":1,...}
+//!   <- {"v":1,"req_id":7,"event":"chunk","tokens":[...],"round":2,...}
+//!   -> {"v":1,"req_id":8,"prompt":[9],"stream":false}      (interleaved)
+//!   -> {"cmd":"cancel","req_id":7}
+//!   <- {"v":1,"req_id":7,"event":"done","finish":"cancelled",...}
+//!   <- {"v":1,"req_id":8,"event":"done","finish":"length","tokens":[...]}
 //!   -> {"cmd":"stats"}
-//!   <- {"admitted":...,"completed":...,...}
+//!   <- {"admitted":...,"completed":...,"cancelled":...,...}
 //!   -> {"cmd":"shutdown"}        (stops the accept loop)
 //!
-//! Errors come back as {"error":"..."} — including "queue full"
-//! backpressure rejections.
+//! A request that cannot start (bad envelope, queue-full backpressure)
+//! gets {"v":1,"req_id":..,"event":"error","error":"..."}; un-enveloped
+//! parse errors get the legacy {"error":"..."} line. Legacy un-enveloped
+//! generates ({"prompt":[...]} with no req_id) are served blocking with
+//! the one-shot reply object, exactly as before protocol v1.
+//!
+//! Disconnect handling: when the client side goes away (reader EOF or a
+//! failed frame write), every in-flight request of that connection is
+//! cancelled — its scheduler slot and KV residency are released within
+//! one speculation round, and nothing panics on writes to the dead
+//! socket (the writer thread simply drains and exits).
 
 pub mod client;
 pub mod protocol;
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{CancelToken, Coordinator, GenEvent, GenParams};
+use crate::util::json::{parse as parse_json, Json};
 use crate::{log_info, log_warn};
 
 pub use client::Client;
-pub use protocol::{ClientMessage, ServerReply};
+pub use protocol::{ClientMessage, Frame, ServerReply, PROTOCOL_VERSION};
 
 /// Serve `coordinator` on `addr` until a shutdown command arrives.
 /// Returns the bound local address once listening (port 0 supported).
@@ -35,11 +54,11 @@ pub struct Server {
 }
 
 impl Server {
-    pub fn bind(addr: &str, coordinator: Coordinator) -> std::io::Result<Self> {
+    pub fn bind(addr: &str, coordinator: Arc<Coordinator>) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         Ok(Self {
             listener,
-            coordinator: Arc::new(coordinator),
+            coordinator,
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -48,8 +67,10 @@ impl Server {
         self.listener.local_addr()
     }
 
-    /// Accept loop: one thread per connection (connections are few and
-    /// long-lived in this workload; the worker pool bounds real concurrency).
+    /// Accept loop: one reader thread per connection plus one writer
+    /// thread serializing the connection's interleaved frames
+    /// (connections are few and long-lived in this workload; the worker
+    /// pool bounds real concurrency).
     pub fn run(&self) -> std::io::Result<()> {
         log_info!("serving on {}", self.local_addr()?);
         for stream in self.listener.incoming() {
@@ -73,48 +94,245 @@ impl Server {
     }
 }
 
+/// In-flight requests of one connection: client req_id → cancel token.
+type Inflight = Arc<Mutex<HashMap<u64, CancelToken>>>;
+
+/// Is the peer of `probe` gone? Non-destructive (peek, never reads), used
+/// while a legacy blocking generate is in flight and nothing else is
+/// reading the socket. Requires a read timeout on `probe` to not block.
+fn peer_gone(probe: &TcpStream) -> bool {
+    let mut buf = [0u8; 1];
+    match probe.peek(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => !matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ),
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
-    coord: &Coordinator,
+    coord: &Arc<Coordinator>,
     stop: &AtomicBool,
 ) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
+    let local = stream.local_addr()?;
+    // Second handle on the socket for EOF detection during legacy
+    // blocking waits (peek only — never consumes bytes the reader owns).
+    let probe = stream.try_clone()?;
+
+    // Single writer serializes frames from the reader (command replies)
+    // and from per-request forwarder threads (chunk/done frames). A write
+    // failure means the client is gone: the writer drains quietly and the
+    // reader's EOF takes care of cancellation.
+    let (frame_tx, frame_rx) = mpsc::channel::<String>();
+    let mut write_half = stream.try_clone()?;
+    let writer = std::thread::spawn(move || {
+        for line in frame_rx {
+            if write_half
+                .write_all(line.as_bytes())
+                .and_then(|_| write_half.write_all(b"\n"))
+                .and_then(|_| write_half.flush())
+                .is_err()
+            {
+                break; // client gone; drain remaining frames unsent
+            }
+        }
+    });
+
+    let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+    let send = |json: protocol::ServerReply| {
+        let _ = frame_tx.send(json.to_string());
+    };
+
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(line) => line,
+            Err(_) => break, // client gone mid-line
+        };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match protocol::parse_client_message(&line) {
+        match protocol::parse_client_message(&line) {
             Ok(ClientMessage::Generate {
+                req_id: Some(req_id),
                 prompt,
-                max_new_tokens,
-                temperature,
-            }) => match coord.generate(prompt, max_new_tokens, temperature) {
-                Ok(resp) => protocol::response_json(&resp),
-                Err(e) => protocol::error_json(&e),
-            },
-            Ok(ClientMessage::Stats) => coord.metrics.snapshot(),
+                params,
+                stream,
+            }) => spawn_request(
+                coord, &inflight, &frame_tx, req_id, prompt, params, stream,
+            ),
+            Ok(ClientMessage::Generate {
+                req_id: None,
+                prompt,
+                params,
+                ..
+            }) => {
+                // Legacy one-shot: blocking, so replies stay in submission
+                // order even for pipelined v0 clients — but the wait polls
+                // the socket for EOF (peek, non-destructive) so a client
+                // that vanished mid-generate cancels its request instead
+                // of running it to completion.
+                match coord.try_submit(prompt, params) {
+                    Err(e) => send(protocol::error_json(&e)),
+                    Ok(handle) => {
+                        let _ = probe
+                            .set_read_timeout(Some(Duration::from_millis(10)));
+                        let resp = loop {
+                            match handle
+                                .events
+                                .recv_timeout(Duration::from_millis(50))
+                            {
+                                Ok(GenEvent::Done(resp)) => break Some(resp),
+                                Ok(GenEvent::Chunk { .. }) => {}
+                                Err(mpsc::RecvTimeoutError::Timeout) => {
+                                    // Keep looping after cancel: the
+                                    // Done(cancelled) arrives within one
+                                    // round and tears down cleanly.
+                                    if peer_gone(&probe) {
+                                        handle.cancel.cancel();
+                                    }
+                                }
+                                Err(
+                                    mpsc::RecvTimeoutError::Disconnected,
+                                ) => break None,
+                            }
+                        };
+                        let _ = probe.set_read_timeout(None);
+                        match resp {
+                            Some(resp) => {
+                                send(protocol::response_json(&resp))
+                            }
+                            None => send(protocol::error_json(
+                                "worker dropped request",
+                            )),
+                        }
+                    }
+                }
+            }
+            Ok(ClientMessage::Cancel { req_id }) => {
+                // Fire-and-forget and idempotent: the request's own `done`
+                // frame (finish:"cancelled") is the acknowledgement, and a
+                // cancel racing the request's natural completion is normal
+                // — an unknown/finished id is a silent no-op, because a
+                // second terminal frame would violate the exactly-one-
+                // done|error stream contract.
+                if let Some(token) = inflight.lock().unwrap().get(&req_id) {
+                    token.cancel();
+                }
+            }
+            Ok(ClientMessage::Stats) => send(coord.metrics.snapshot()),
             Ok(ClientMessage::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
+                send(protocol::ok_json());
                 // Poke the accept loop awake.
-                if let Ok(addr) = writer.local_addr() {
-                    let _ = TcpStream::connect(addr);
-                }
-                protocol::ok_json()
+                let _ = TcpStream::connect(local);
             }
-            Err(e) => protocol::error_json(&e),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+            Err(e) => {
+                // Attribute the failure to the envelope's req_id whenever
+                // one is recoverable so the submitter's stream still gets
+                // its terminal frame (a healthy concurrent stream must
+                // never see an un-attributed error); otherwise fall back
+                // to the legacy error object.
+                let req_id = parse_json(&line).ok().and_then(|doc| {
+                    doc.get("req_id")
+                        .and_then(Json::as_f64)
+                        .map(|v| v as u64)
+                });
+                match req_id {
+                    Some(req_id) => send(protocol::error_frame(req_id, &e)),
+                    None => send(protocol::error_json(&e)),
+                }
+            }
+        }
         if stop.load(Ordering::SeqCst) {
             break;
         }
     }
+
+    // Reader is done (disconnect or shutdown): cancel every request this
+    // connection still has in flight so slots and KV residency free up.
+    let orphaned: Vec<CancelToken> =
+        inflight.lock().unwrap().values().cloned().collect();
+    for token in orphaned {
+        token.cancel();
+    }
+    drop(frame_tx);
+    let _ = writer.join();
     log_info!("peer {peer} disconnected");
     Ok(())
+}
+
+/// Submit one enveloped request and spawn its event forwarder.
+fn spawn_request(
+    coord: &Arc<Coordinator>,
+    inflight: &Inflight,
+    frame_tx: &mpsc::Sender<String>,
+    req_id: u64,
+    prompt: Vec<u32>,
+    params: GenParams,
+    stream: bool,
+) {
+    {
+        let mut map = inflight.lock().unwrap();
+        if map.contains_key(&req_id) {
+            let _ = frame_tx.send(
+                protocol::error_frame(req_id, "req_id already in flight")
+                    .to_string(),
+            );
+            return;
+        }
+        let handle = match coord.try_submit(prompt, params) {
+            Ok(handle) => handle,
+            Err(e) => {
+                let _ = frame_tx
+                    .send(protocol::error_frame(req_id, &e).to_string());
+                return;
+            }
+        };
+        map.insert(req_id, handle.cancel.clone());
+        let frame_tx = frame_tx.clone();
+        let inflight = inflight.clone();
+        std::thread::spawn(move || {
+            loop {
+                match handle.events.recv() {
+                    Ok(GenEvent::Chunk { tokens, stats }) => {
+                        if stream {
+                            let _ = frame_tx.send(
+                                protocol::chunk_frame(req_id, &tokens, &stats)
+                                    .to_string(),
+                            );
+                        }
+                    }
+                    Ok(GenEvent::Done(resp)) => {
+                        // Free the id BEFORE the terminal frame goes out:
+                        // a client may legitimately reuse its req_id the
+                        // moment it reads `done`, and the duplicate check
+                        // must not race that.
+                        inflight.lock().unwrap().remove(&req_id);
+                        let _ = frame_tx.send(
+                            protocol::done_frame(req_id, &resp, !stream)
+                                .to_string(),
+                        );
+                        break;
+                    }
+                    Err(_) => {
+                        // Worker dropped the request (coordinator torn
+                        // down before it ran): terminal error frame.
+                        inflight.lock().unwrap().remove(&req_id);
+                        let _ = frame_tx.send(
+                            protocol::error_frame(req_id, "worker dropped request")
+                                .to_string(),
+                        );
+                        break;
+                    }
+                }
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -137,7 +355,7 @@ mod tests {
         let mut cfg = Config::new();
         cfg.server.workers = 2;
         cfg.engine.tree_budget = 8;
-        let coord = Coordinator::start(cfg, factory);
+        let coord = Arc::new(Coordinator::start(cfg, factory));
         let server = Server::bind("127.0.0.1:0", coord).unwrap();
         let addr = server.local_addr().unwrap();
         let handle = std::thread::spawn(move || {
@@ -156,6 +374,23 @@ mod tests {
         let stats = client.stats().unwrap();
         assert_eq!(stats.get("completed").unwrap().as_usize(), Some(1));
 
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn streamed_generate_over_tcp() {
+        let (addr, handle) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let mut chunks = 0usize;
+        let (tokens, done) = client
+            .generate_stream(7, &[1, 2, 3], &GenParams::simple(12, 0.6), |_| {
+                chunks += 1;
+            })
+            .unwrap();
+        assert_eq!(tokens.len(), 12);
+        assert!(chunks >= 1);
+        assert_eq!(done.finish().unwrap().name(), "length");
         client.shutdown().unwrap();
         handle.join().unwrap();
     }

@@ -1,15 +1,53 @@
-//! Wire protocol: JSON line encoding/decoding for client/server messages.
+//! Wire protocol v1: JSON-line envelopes and multiplexed reply frames
+//! (DESIGN.md §Serving API v1).
+//!
+//! Requests (one JSON object per line):
+//!
+//!   {"v":1,"req_id":7,"prompt":[1,2,3],"stream":true,
+//!    "max_new_tokens":64,"temperature":0.6,"seed":42,
+//!    "stop_tokens":[0],"drafter":"dyspec","token_budget":32}
+//!   {"cmd":"cancel","req_id":7}
+//!   {"cmd":"stats"} | {"cmd":"shutdown"}
+//!
+//! `req_id` is client-assigned and scoped to the connection; one
+//! connection can hold many in-flight requests, their reply frames
+//! interleaved. Unknown fields are ignored (forward compatibility).
+//!
+//! Reply frames (one JSON object per line, each carrying the `req_id`):
+//!
+//!   {"v":1,"req_id":7,"event":"chunk","tokens":[..],"round":1,...}
+//!   {"v":1,"req_id":7,"event":"done","finish":"length",...}
+//!   {"v":1,"req_id":7,"event":"error","error":"..."}
+//!
+//! Every request stream ends with exactly one `done` (or `error` when it
+//! never started); a cancelled request's `done` has `finish:"cancelled"`.
+//!
+//! Legacy compatibility: a bare `{"prompt":[..],...}` line (no `req_id`,
+//! no `v`) is served exactly as before — one blocking one-shot reply
+//! object with the full `tokens` array and no `event` wrapper.
 
-use crate::coordinator::Response;
+use crate::config::PolicyKind;
+use crate::coordinator::{FinishReason, GenParams, Response, RoundStats};
 use crate::util::json::{parse, Json};
+
+/// Protocol version spoken by this server.
+pub const PROTOCOL_VERSION: u64 = 1;
 
 /// Messages a client may send.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientMessage {
     Generate {
+        /// Client-assigned id (connection-scoped). `None` only on the
+        /// legacy un-enveloped form.
+        req_id: Option<u64>,
         prompt: Vec<u32>,
-        max_new_tokens: usize,
-        temperature: f32,
+        params: GenParams,
+        /// Stream chunk frames as rounds land (v1 envelopes only; the
+        /// legacy form always gets a single one-shot reply).
+        stream: bool,
+    },
+    Cancel {
+        req_id: u64,
     },
     Stats,
     Shutdown,
@@ -18,45 +56,181 @@ pub enum ClientMessage {
 /// Replies (already JSON-shaped; kept as an alias for readability).
 pub type ServerReply = Json;
 
+fn parse_prompt(doc: &Json) -> Result<Vec<u32>, String> {
+    doc.get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or("missing prompt")?
+        .iter()
+        .map(|t| {
+            t.as_usize()
+                .map(|v| v as u32)
+                .ok_or_else(|| "non-numeric token".to_string())
+        })
+        .collect()
+}
+
+fn parse_u32_list(doc: &Json, key: &str) -> Result<Vec<u32>, String> {
+    match doc.get(key) {
+        None => Ok(Vec::new()),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| format!("{key} must be an array"))?
+            .iter()
+            .map(|t| {
+                t.as_usize()
+                    .map(|v| v as u32)
+                    .ok_or_else(|| format!("non-numeric {key} entry"))
+            })
+            .collect(),
+    }
+}
+
+/// Parse the per-request parameter fields. v1 envelopes (`strict`) reject
+/// wrong-typed fields; the legacy shim keeps v0's behavior bit-for-bit —
+/// optional fields it cannot read fall back to their defaults silently.
+fn parse_params(doc: &Json, strict: bool) -> Result<GenParams, String> {
+    let mut p = GenParams::default();
+    match doc.get("max_new_tokens").map(Json::as_usize) {
+        Some(Some(v)) => p.max_new_tokens = v,
+        Some(None) if strict => {
+            return Err("max_new_tokens must be a number".into())
+        }
+        _ => {}
+    }
+    match doc.get("temperature").map(Json::as_f64) {
+        Some(Some(v)) => p.temperature = v as f32,
+        Some(None) if strict => {
+            return Err("temperature must be a number".into())
+        }
+        _ => {}
+    }
+    match doc.get("seed").map(Json::as_f64) {
+        Some(Some(v)) => p.seed = Some(v as u64),
+        Some(None) if strict => return Err("seed must be a number".into()),
+        _ => {}
+    }
+    match parse_u32_list(doc, "stop_tokens") {
+        Ok(toks) => p.stop_tokens = toks,
+        Err(e) if strict => return Err(e),
+        Err(_) => {}
+    }
+    match doc.get("drafter").map(Json::as_str) {
+        Some(Some(name)) => match PolicyKind::parse(name) {
+            Some(kind) => p.drafter = Some(kind),
+            None if strict => return Err(format!("unknown drafter: {name}")),
+            None => {}
+        },
+        Some(None) if strict => return Err("drafter must be a string".into()),
+        _ => {}
+    }
+    match doc.get("token_budget").map(Json::as_usize) {
+        Some(Some(cap)) if cap > 0 => p.token_budget = Some(cap),
+        Some(_) if strict => {
+            return Err("token_budget must be a number >= 1".into())
+        }
+        _ => {}
+    }
+    Ok(p)
+}
+
 pub fn parse_client_message(line: &str) -> Result<ClientMessage, String> {
     let doc = parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if let Some(v) = doc.get("v") {
+        let v = v.as_usize().ok_or("v must be a number")? as u64;
+        if v != PROTOCOL_VERSION {
+            return Err(format!("unsupported protocol version: {v}"));
+        }
+    }
     if let Some(cmd) = doc.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "stats" => Ok(ClientMessage::Stats),
             "shutdown" => Ok(ClientMessage::Shutdown),
+            "cancel" => {
+                let req_id = doc
+                    .get("req_id")
+                    .and_then(Json::as_f64)
+                    .ok_or("cancel requires req_id")?;
+                Ok(ClientMessage::Cancel {
+                    req_id: req_id as u64,
+                })
+            }
+            "generate" => parse_generate(&doc, true),
             other => Err(format!("unknown cmd: {other}")),
         };
     }
-    let prompt = doc
-        .get("prompt")
-        .and_then(Json::as_arr)
-        .ok_or("missing prompt")?
-        .iter()
-        .map(|t| t.as_usize().map(|v| v as u32).ok_or("non-numeric token"))
-        .collect::<Result<Vec<u32>, _>>()?;
-    let max_new_tokens = doc
-        .get("max_new_tokens")
-        .and_then(Json::as_usize)
-        .unwrap_or(128);
-    let temperature = doc
-        .get("temperature")
-        .and_then(Json::as_f64)
-        .unwrap_or(0.6) as f32;
+    // Envelope detection without "cmd": a v1 generate carries "req_id" or
+    // "v"; a bare prompt object is the legacy one-shot form.
+    let enveloped = doc.get("req_id").is_some() || doc.get("v").is_some();
+    parse_generate(&doc, enveloped)
+}
+
+fn parse_generate(doc: &Json, enveloped: bool) -> Result<ClientMessage, String> {
+    let prompt = parse_prompt(doc)?;
+    let params = parse_params(doc, enveloped)?;
+    let req_id = match doc.get("req_id") {
+        Some(v) => Some(v.as_f64().ok_or("req_id must be a number")? as u64),
+        None => None,
+    };
+    if enveloped && req_id.is_none() {
+        return Err("generate envelope requires req_id".into());
+    }
+    let stream = doc
+        .get("stream")
+        .map(|v| matches!(v, Json::Bool(true)))
+        .unwrap_or(false);
+    if stream && !enveloped {
+        return Err("streaming requires a v1 envelope with req_id".into());
+    }
     Ok(ClientMessage::Generate {
+        req_id,
         prompt,
-        max_new_tokens,
-        temperature,
+        params,
+        stream,
     })
 }
 
-pub fn response_json(resp: &Response) -> Json {
-    Json::obj(vec![
+/// Shared fields of every v1 frame.
+fn frame(req_id: u64, event: &str, mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("req_id", Json::Num(req_id as f64)),
+        ("event", Json::Str(event.to_string())),
+    ];
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+/// One accepted chunk (streamed per speculation round).
+pub fn chunk_frame(req_id: u64, tokens: &[u32], stats: &RoundStats) -> Json {
+    frame(
+        req_id,
+        "chunk",
+        vec![
+            (
+                "tokens",
+                Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("round", Json::Num(stats.round as f64)),
+            ("tree_size", Json::Num(stats.tree_size as f64)),
+            ("accepted", Json::Num(stats.accepted as f64)),
+            (
+                "billed_positions",
+                Json::Num(stats.billed_positions as f64),
+            ),
+            (
+                "cached_positions",
+                Json::Num(stats.cached_positions as f64),
+            ),
+            ("virtual_secs", Json::Num(stats.virtual_secs)),
+        ],
+    )
+}
+
+/// Aggregate response fields shared by the legacy reply and the done frame.
+fn response_fields(resp: &Response, include_tokens: bool) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
         ("id", Json::Num(resp.id as f64)),
         ("worker", Json::Num(resp.worker as f64)),
-        (
-            "tokens",
-            Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
-        ),
         ("steps", Json::Num(resp.steps as f64)),
         ("emitted_per_step", Json::Num(resp.emitted_per_step)),
         ("queue_secs", Json::Num(resp.queue_secs)),
@@ -64,7 +238,39 @@ pub fn response_json(resp: &Response) -> Json {
         ("ttft_secs", Json::Num(resp.ttft_secs)),
         ("virtual_secs", Json::Num(resp.virtual_secs)),
         ("cache_hits", Json::Num(resp.cache_hits as f64)),
-    ])
+        ("finish", Json::Str(resp.finish.name().to_string())),
+        ("tokens_total", Json::Num(resp.tokens.len() as f64)),
+    ];
+    if include_tokens {
+        fields.push((
+            "tokens",
+            Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ));
+    }
+    fields
+}
+
+/// Final frame of a request stream. `include_tokens` repeats the full
+/// token array (used for non-streamed enveloped requests, where the done
+/// frame IS the reply); streamed requests already received every token in
+/// chunk frames and only get the count.
+pub fn done_frame(req_id: u64, resp: &Response, include_tokens: bool) -> Json {
+    frame(req_id, "done", response_fields(resp, include_tokens))
+}
+
+/// Terminal error frame for a request that cannot make progress (never
+/// started, unknown req_id, worker dropped...).
+pub fn error_frame(req_id: u64, msg: &str) -> Json {
+    frame(
+        req_id,
+        "error",
+        vec![("error", Json::Str(msg.to_string()))],
+    )
+}
+
+/// Legacy one-shot reply (no envelope, full token array).
+pub fn response_json(resp: &Response) -> Json {
+    Json::obj(response_fields(resp, true))
 }
 
 pub fn error_json(msg: &str) -> Json {
@@ -75,40 +281,287 @@ pub fn ok_json() -> Json {
     Json::obj(vec![("ok", Json::Bool(true))])
 }
 
+/// Client-side view of one reply frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    /// `None` for un-multiplexed replies (legacy reply, stats snapshot).
+    pub req_id: Option<u64>,
+    /// "chunk" | "done" | "error"; empty for un-multiplexed replies.
+    pub event: String,
+    pub body: Json,
+}
+
+impl Frame {
+    pub fn tokens(&self) -> Vec<u32> {
+        self.body
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|t| t.as_usize().map(|v| v as u32))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn finish(&self) -> Option<FinishReason> {
+        self.body
+            .get("finish")
+            .and_then(Json::as_str)
+            .and_then(FinishReason::parse)
+    }
+
+    pub fn error(&self) -> Option<&str> {
+        self.body.get("error").and_then(Json::as_str)
+    }
+}
+
+/// Parse one reply line into a [`Frame`].
+pub fn parse_frame(line: &str) -> Result<Frame, String> {
+    let body = parse(line.trim()).map_err(|e| format!("bad frame: {e}"))?;
+    let req_id = body
+        .get("req_id")
+        .and_then(Json::as_f64)
+        .map(|v| v as u64);
+    let event = body
+        .get("event")
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string();
+    Ok(Frame {
+        req_id,
+        event,
+        body,
+    })
+}
+
+/// Build a v1 generate envelope (client side).
+pub fn generate_envelope(
+    req_id: u64,
+    prompt: &[u32],
+    params: &GenParams,
+    stream: bool,
+) -> Json {
+    let mut fields = vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("cmd", Json::Str("generate".into())),
+        ("req_id", Json::Num(req_id as f64)),
+        (
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ),
+        (
+            "max_new_tokens",
+            Json::Num(params.max_new_tokens as f64),
+        ),
+        ("temperature", Json::Num(params.temperature as f64)),
+        ("stream", Json::Bool(stream)),
+    ];
+    if let Some(seed) = params.seed {
+        fields.push(("seed", Json::Num(seed as f64)));
+    }
+    if !params.stop_tokens.is_empty() {
+        fields.push((
+            "stop_tokens",
+            Json::Arr(
+                params
+                    .stop_tokens
+                    .iter()
+                    .map(|&t| Json::Num(t as f64))
+                    .collect(),
+            ),
+        ));
+    }
+    if let Some(d) = params.drafter {
+        fields.push(("drafter", Json::Str(d.name().into())));
+    }
+    if let Some(cap) = params.token_budget {
+        fields.push(("token_budget", Json::Num(cap as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Build a cancel message (client side).
+pub fn cancel_envelope(req_id: u64) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::Str("cancel".into())),
+        ("req_id", Json::Num(req_id as f64)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn parse_generate() {
+    fn parse_legacy_generate() {
         let msg = parse_client_message(
             r#"{"prompt":[1,2,3],"max_new_tokens":16,"temperature":0.5}"#,
         )
         .unwrap();
-        assert_eq!(
-            msg,
-            ClientMessage::Generate {
-                prompt: vec![1, 2, 3],
-                max_new_tokens: 16,
-                temperature: 0.5
-            }
-        );
-    }
-
-    #[test]
-    fn parse_defaults() {
-        let msg = parse_client_message(r#"{"prompt":[7]}"#).unwrap();
         match msg {
             ClientMessage::Generate {
-                max_new_tokens,
-                temperature,
-                ..
+                req_id,
+                prompt,
+                params,
+                stream,
             } => {
-                assert_eq!(max_new_tokens, 128);
-                assert!((temperature - 0.6).abs() < 1e-6);
+                assert_eq!(req_id, None);
+                assert_eq!(prompt, vec![1, 2, 3]);
+                assert_eq!(params.max_new_tokens, 16);
+                assert!((params.temperature - 0.5).abs() < 1e-6);
+                assert!(!stream);
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn parse_legacy_defaults() {
+        let msg = parse_client_message(r#"{"prompt":[7]}"#).unwrap();
+        match msg {
+            ClientMessage::Generate { params, .. } => {
+                assert_eq!(params.max_new_tokens, 128);
+                assert!((params.temperature - 0.6).abs() < 1e-6);
+                assert!(params.seed.is_none());
+                assert!(params.stop_tokens.is_empty());
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn parse_v1_envelope_all_params() {
+        let msg = parse_client_message(
+            r#"{"v":1,"cmd":"generate","req_id":9,"prompt":[4,5],
+                "max_new_tokens":32,"temperature":0.7,"seed":42,
+                "stop_tokens":[0,2],"drafter":"chain","token_budget":8,
+                "stream":true}"#,
+        )
+        .unwrap();
+        match msg {
+            ClientMessage::Generate {
+                req_id,
+                prompt,
+                params,
+                stream,
+            } => {
+                assert_eq!(req_id, Some(9));
+                assert_eq!(prompt, vec![4, 5]);
+                assert_eq!(params.max_new_tokens, 32);
+                assert_eq!(params.seed, Some(42));
+                assert_eq!(params.stop_tokens, vec![0, 2]);
+                assert_eq!(params.drafter, Some(PolicyKind::Chain));
+                assert_eq!(params.token_budget, Some(8));
+                assert!(stream);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn envelope_builder_round_trips_through_parser() {
+        let params = GenParams {
+            seed: Some(7),
+            stop_tokens: vec![3],
+            drafter: Some(PolicyKind::DySpec),
+            token_budget: Some(16),
+            ..GenParams::simple(24, 0.9)
+        };
+        let line = generate_envelope(5, &[1, 2], &params, true).to_string();
+        match parse_client_message(&line).unwrap() {
+            ClientMessage::Generate {
+                req_id,
+                prompt,
+                params: got,
+                stream,
+            } => {
+                assert_eq!(req_id, Some(5));
+                assert_eq!(prompt, vec![1, 2]);
+                assert_eq!(got, params);
+                assert!(stream);
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert_eq!(
+            parse_client_message(&cancel_envelope(5).to_string()).unwrap(),
+            ClientMessage::Cancel { req_id: 5 }
+        );
+    }
+
+    /// The shim contract: wrong-typed OPTIONAL fields that v0 silently
+    /// defaulted must keep defaulting on un-enveloped requests, while the
+    /// same input inside a v1 envelope is rejected.
+    #[test]
+    fn legacy_is_lenient_where_v0_was_v1_is_strict() {
+        let legacy = parse_client_message(
+            r#"{"prompt":[1],"temperature":"warm","max_new_tokens":null}"#,
+        )
+        .unwrap();
+        match legacy {
+            ClientMessage::Generate { params, .. } => {
+                assert_eq!(params.max_new_tokens, 128);
+                assert!((params.temperature - 0.6).abs() < 1e-6);
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(parse_client_message(
+            r#"{"v":1,"req_id":1,"prompt":[1],"temperature":"warm"}"#
+        )
+        .is_err());
+        assert!(parse_client_message(
+            r#"{"v":1,"req_id":1,"prompt":[1],"max_new_tokens":null}"#
+        )
+        .is_err());
+        // Unknown v1-only fields on a legacy line are ignored even when
+        // malformed (v0 never read them).
+        assert!(parse_client_message(
+            r#"{"prompt":[1],"drafter":"warp","token_budget":0}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn unknown_fields_are_tolerated() {
+        let msg = parse_client_message(
+            r#"{"v":1,"req_id":1,"prompt":[1],"future_knob":{"a":[1,2]},
+                "another":"ignored"}"#,
+        )
+        .unwrap();
+        assert!(matches!(msg, ClientMessage::Generate { .. }));
+    }
+
+    #[test]
+    fn malformed_and_partial_envelopes_error() {
+        // Truncated JSON (a partial frame off the wire).
+        assert!(parse_client_message(r#"{"v":1,"req_id":1,"pro"#).is_err());
+        // Envelope without req_id.
+        assert!(parse_client_message(r#"{"v":1,"prompt":[1]}"#).is_err());
+        // Streaming without an envelope.
+        assert!(
+            parse_client_message(r#"{"prompt":[1],"stream":true}"#).is_err()
+        );
+        // Wrong types.
+        assert!(parse_client_message(r#"{"prompt":"abc"}"#).is_err());
+        assert!(parse_client_message(r#"{"prompt":[1,"x"]}"#).is_err());
+        assert!(parse_client_message(
+            r#"{"v":1,"req_id":1,"prompt":[1],"stop_tokens":3}"#
+        )
+        .is_err());
+        assert!(parse_client_message(
+            r#"{"v":1,"req_id":1,"prompt":[1],"drafter":"warp"}"#
+        )
+        .is_err());
+        assert!(parse_client_message(
+            r#"{"v":1,"req_id":1,"prompt":[1],"token_budget":0}"#
+        )
+        .is_err());
+        // Future protocol version.
+        assert!(
+            parse_client_message(r#"{"v":2,"req_id":1,"prompt":[1]}"#).is_err()
+        );
+        // Cancel without req_id.
+        assert!(parse_client_message(r#"{"cmd":"cancel"}"#).is_err());
     }
 
     #[test]
@@ -121,14 +574,17 @@ mod tests {
             parse_client_message(r#"{"cmd":"shutdown"}"#).unwrap(),
             ClientMessage::Shutdown
         );
+        assert_eq!(
+            parse_client_message(r#"{"cmd":"cancel","req_id":3}"#).unwrap(),
+            ClientMessage::Cancel { req_id: 3 }
+        );
         assert!(parse_client_message(r#"{"cmd":"dance"}"#).is_err());
         assert!(parse_client_message("{}").is_err());
         assert!(parse_client_message("garbage").is_err());
     }
 
-    #[test]
-    fn response_round_trip() {
-        let resp = Response {
+    fn test_response() -> Response {
+        Response {
             id: 3,
             worker: 1,
             tokens: vec![4, 5],
@@ -139,12 +595,56 @@ mod tests {
             ttft_secs: 0.15,
             virtual_secs: 0.0,
             cache_hits: 5,
-        };
-        let json = response_json(&resp);
+            finish: FinishReason::Length,
+        }
+    }
+
+    #[test]
+    fn legacy_response_round_trip() {
+        let json = response_json(&test_response());
         let text = json.to_string();
         let back = parse(&text).unwrap();
         assert_eq!(back.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(back.get("tokens").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(back.get("cache_hits").unwrap().as_usize(), Some(5));
+        assert_eq!(back.get("finish").unwrap().as_str(), Some("length"));
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let stats = RoundStats {
+            round: 2,
+            tree_size: 8,
+            accepted: 3,
+            billed_positions: 11,
+            cached_positions: 6,
+            virtual_secs: 0.01,
+        };
+        let line = chunk_frame(7, &[9, 8], &stats).to_string();
+        let f = parse_frame(&line).unwrap();
+        assert_eq!(f.req_id, Some(7));
+        assert_eq!(f.event, "chunk");
+        assert_eq!(f.tokens(), vec![9, 8]);
+        assert_eq!(f.body.get("round").unwrap().as_usize(), Some(2));
+
+        let mut resp = test_response();
+        resp.finish = FinishReason::Cancelled;
+        let line = done_frame(7, &resp, false).to_string();
+        let f = parse_frame(&line).unwrap();
+        assert_eq!(f.event, "done");
+        assert_eq!(f.finish(), Some(FinishReason::Cancelled));
+        assert!(f.tokens().is_empty(), "streamed done repeats tokens");
+        assert_eq!(
+            f.body.get("tokens_total").unwrap().as_usize(),
+            Some(2)
+        );
+        let line = done_frame(7, &resp, true).to_string();
+        assert_eq!(parse_frame(&line).unwrap().tokens(), vec![4, 5]);
+
+        let line = error_frame(4, "queue full").to_string();
+        let f = parse_frame(&line).unwrap();
+        assert_eq!(f.event, "error");
+        assert_eq!(f.req_id, Some(4));
+        assert_eq!(f.error(), Some("queue full"));
     }
 }

@@ -13,7 +13,9 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use dyspec::config::{CacheConfig, Config, EngineConfig, PolicyKind, SchedKind};
-use dyspec::coordinator::{Metrics, Request, Response};
+use dyspec::coordinator::{
+    CancelToken, GenEvent, GenParams, Metrics, Request,
+};
 use dyspec::draft::make_policy;
 use dyspec::engine::SpecEngine;
 use dyspec::models::sim::{Role, SimModel, SimSpec};
@@ -180,16 +182,16 @@ fn batcher_tokens(
         Box::new(t),
         Arc::new(Metrics::new()),
     );
-    let rxs: Vec<mpsc::Receiver<Response>> = (0..n_seqs)
+    let rxs: Vec<mpsc::Receiver<GenEvent>> = (0..n_seqs)
         .map(|i| {
             let (tx, rx) = mpsc::channel();
             b.admit(Request {
                 id: i + 1,
                 prompt: vec![10 + i as u32, 2, 3],
-                max_new_tokens: 20,
-                temperature: 0.6,
+                params: GenParams::simple(20, 0.6),
                 submitted_at: Instant::now(),
-                respond: tx,
+                cancel: CancelToken::new(),
+                events: tx,
             });
             rx
         })
@@ -199,10 +201,13 @@ fn batcher_tokens(
     }
     let evictions = b.cache().stats().evictions;
     assert_eq!(b.cache().used_blocks(), 0, "blocks leaked after Done");
-    (
-        rxs.iter().map(|rx| rx.recv().unwrap().tokens).collect(),
-        evictions,
-    )
+    let wait_tokens = |rx: &mpsc::Receiver<GenEvent>| loop {
+        match rx.recv().expect("request dropped") {
+            GenEvent::Done(resp) => return resp.tokens,
+            GenEvent::Chunk { .. } => continue,
+        }
+    };
+    (rxs.iter().map(wait_tokens).collect(), evictions)
 }
 
 /// 3a. Forest batching: identical streams cache on vs off for every

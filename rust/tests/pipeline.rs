@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use dyspec::config::{Config, EngineConfig, LatencyRegime, PolicyKind};
-use dyspec::coordinator::{Coordinator, ModelFactory};
+use dyspec::coordinator::{Coordinator, GenParams, ModelFactory};
 use dyspec::engine::SpecEngine;
 use dyspec::models::sim::{SimModel, SimSpec};
 use dyspec::models::LogitModel;
@@ -97,10 +97,14 @@ fn coordinator_sustains_concurrent_load() {
     cfg.engine.tree_budget = 16;
     let coord = Coordinator::start(cfg, factory);
     let rxs: Vec<_> = (0..32)
-        .map(|i| coord.try_submit(vec![i, 1, 2], 32, 0.6).unwrap())
+        .map(|i| {
+            coord
+                .try_submit(vec![i, 1, 2], GenParams::simple(32, 0.6))
+                .unwrap()
+        })
         .collect();
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
+    for h in rxs {
+        let resp = h.wait().unwrap();
         assert_eq!(resp.tokens.len(), 32);
     }
     assert_eq!(coord.metrics.completed(), 32);

@@ -1,0 +1,415 @@
+//! Serving API v1 end-to-end (ISSUE 3): streaming equivalence over real
+//! TCP, multiplexed connections, cancellation leak-freedom, and the
+//! legacy-compat shim. The wire-grammar unit tests live in
+//! `server/protocol.rs`; this file drives real sockets.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dyspec::config::{CacheConfig, Config, SchedKind};
+use dyspec::coordinator::{Coordinator, GenParams, ModelFactory};
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+use dyspec::server::{Client, Server};
+use dyspec::util::json::Json;
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|| {
+        let spec = SimSpec::new(64, 2.0, 0.8, 9);
+        let (d, t) = SimModel::pair(spec);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    })
+}
+
+fn start_server(
+    kind: SchedKind,
+    cache: bool,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let mut cfg = Config::new();
+    cfg.server.workers = 1;
+    cfg.engine.tree_budget = 8;
+    cfg.sched.kind = kind;
+    cfg.sched.max_active = 8;
+    cfg.sched.idle_tick_ms = 2;
+    cfg.cache = CacheConfig {
+        enabled: cache,
+        block_tokens: 4,
+        max_blocks: 256,
+    };
+    let coord = Arc::new(Coordinator::start(cfg, sim_factory()));
+    let server = Server::bind("127.0.0.1:0", coord).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    (addr, handle)
+}
+
+fn shutdown(addr: &std::net::SocketAddr, handle: std::thread::JoinHandle<()>) {
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// Poll the stats surface until `pred` holds (the serving layer retires
+/// asynchronously) or the deadline passes.
+fn poll_stats<F: Fn(&Json) -> bool>(
+    addr: &std::net::SocketAddr,
+    pred: F,
+) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let snap = c.stats().unwrap();
+        if pred(&snap) {
+            return snap;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "stats never converged: {}",
+            snap.to_string()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn stat(snap: &Json, key: &str) -> u64 {
+    snap.get(key).and_then(Json::as_usize).unwrap_or(0) as u64
+}
+
+/// The acceptance criterion: for a fixed seed, the concatenation of
+/// `chunk` events is bit-identical to the one-shot `tokens` array — on
+/// both schedulers, with the KV cache on and off.
+#[test]
+fn streamed_chunks_equal_one_shot_tokens_on_both_schedulers() {
+    for kind in [SchedKind::Fcfs, SchedKind::Continuous] {
+        for cache in [true, false] {
+            let (addr, handle) = start_server(kind, cache);
+            let mut client = Client::connect(&addr.to_string()).unwrap();
+            let params = GenParams {
+                seed: Some(4242),
+                ..GenParams::simple(24, 0.6)
+            };
+            let mut chunk_frames = 0usize;
+            let (streamed, done) = client
+                .generate_stream(1, &[3, 1, 4], &params, |_| {
+                    chunk_frames += 1;
+                })
+                .unwrap();
+            assert_eq!(streamed.len(), 24, "{kind} cache={cache}");
+            assert!(chunk_frames > 1, "single-chunk stream proves nothing");
+            assert!(
+                done.tokens().is_empty(),
+                "streamed done frame repeats tokens"
+            );
+            assert_eq!(
+                done.body.get("tokens_total").unwrap().as_usize(),
+                Some(24)
+            );
+
+            let (oneshot, _) = client
+                .generate_oneshot(2, &[3, 1, 4], &params)
+                .unwrap();
+            assert_eq!(
+                streamed, oneshot,
+                "{kind} cache={cache}: streamed != one-shot"
+            );
+            shutdown(&addr, handle);
+        }
+    }
+}
+
+/// One connection, many in-flight requests: frames interleave and every
+/// request completes independently.
+#[test]
+fn one_connection_multiplexes_interleaved_streams() {
+    let (addr, handle) = start_server(SchedKind::Continuous, true);
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    const N: u64 = 4;
+    for req_id in 1..=N {
+        client
+            .submit(
+                req_id,
+                &[req_id as u32, 2, 3],
+                &GenParams::simple(16, 0.6),
+                true,
+            )
+            .unwrap();
+    }
+    let mut tokens = vec![Vec::new(); N as usize + 1];
+    let mut done = 0;
+    while done < N {
+        let frame = client.read_frame().unwrap();
+        let rid = frame.req_id.expect("frame without req_id") as usize;
+        assert!(rid >= 1 && rid <= N as usize, "unknown req_id {rid}");
+        match frame.event.as_str() {
+            "chunk" => tokens[rid].extend(frame.tokens()),
+            "done" => done += 1,
+            other => panic!("unexpected event {other}"),
+        }
+    }
+    for rid in 1..=N as usize {
+        assert_eq!(tokens[rid].len(), 16, "req {rid} incomplete");
+    }
+    shutdown(&addr, handle);
+}
+
+/// Mid-stream cancel: the stream ends with finish="cancelled" carrying
+/// only the chunks already emitted, and the scheduler slot + cache
+/// residency are released (gauges return to zero while the server idles).
+#[test]
+fn cancel_mid_stream_releases_slots_and_cache_blocks() {
+    let (addr, handle) = start_server(SchedKind::Continuous, true);
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    client
+        .submit(7, &[1, 2, 3], &GenParams::simple(100_000, 0.6), true)
+        .unwrap();
+    let mut streamed = 0usize;
+    let mut cancelled_at = 0usize;
+    loop {
+        let frame = client.read_frame().unwrap();
+        match frame.event.as_str() {
+            "chunk" => {
+                streamed += frame.tokens().len();
+                if cancelled_at == 0 {
+                    client.cancel(7).unwrap();
+                    cancelled_at = streamed;
+                }
+            }
+            "done" => {
+                assert_eq!(
+                    frame.finish().map(|f| f.name()),
+                    Some("cancelled")
+                );
+                assert_eq!(
+                    frame.body.get("tokens_total").unwrap().as_usize(),
+                    Some(streamed),
+                    "done total != streamed chunks"
+                );
+                assert!(
+                    streamed < 100_000,
+                    "cancelled stream ran to completion"
+                );
+                break;
+            }
+            other => panic!("unexpected event {other}"),
+        }
+    }
+    // Leak-freedom over the stats surface: the cancelled request frees its
+    // slot (tokens_in_flight gauge) and its KV residency (block gauge).
+    let snap = poll_stats(&addr, |s| {
+        stat(s, "cancelled") == 1
+            && stat(s, "tokens_in_flight") == 0
+            && stat(s, "cache_resident_blocks") == 0
+    });
+    assert_eq!(stat(&snap, "completed"), 0);
+    // The slot is genuinely reusable: a fresh request completes.
+    let mut client2 = Client::connect(&addr.to_string()).unwrap();
+    let (tokens, _) = client2
+        .generate_oneshot(1, &[5, 6], &GenParams::simple(8, 0.6))
+        .unwrap();
+    assert_eq!(tokens.len(), 8);
+    shutdown(&addr, handle);
+}
+
+/// A client dropping mid-generate must cancel its in-flight work — the
+/// fix for the disconnect satellite: no request runs to completion for a
+/// peer that is gone, and the connection thread must not panic.
+#[test]
+fn disconnect_mid_stream_cancels_in_flight_requests() {
+    let (addr, handle) = start_server(SchedKind::Continuous, true);
+    {
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client
+            .submit(1, &[9, 8, 7], &GenParams::simple(100_000, 0.6), true)
+            .unwrap();
+        // Wait for generation to actually start...
+        let frame = client.read_frame().unwrap();
+        assert_eq!(frame.event, "chunk");
+        // ...then vanish without a cancel.
+        drop(client);
+    }
+    let snap = poll_stats(&addr, |s| {
+        stat(s, "cancelled") == 1
+            && stat(s, "tokens_in_flight") == 0
+            && stat(s, "cache_resident_blocks") == 0
+    });
+    assert_eq!(stat(&snap, "completed"), 0);
+    // The server is still healthy for new connections.
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    let (tokens, _) = client
+        .generate_oneshot(1, &[5, 6], &GenParams::simple(8, 0.6))
+        .unwrap();
+    assert_eq!(tokens.len(), 8);
+    shutdown(&addr, handle);
+}
+
+/// The disconnect fix covers the LEGACY blocking path too: a v0 client
+/// vanishing mid-generate must not leave its request running to
+/// completion on the worker.
+#[test]
+fn disconnect_mid_legacy_generate_cancels_the_request() {
+    let (addr, handle) = start_server(SchedKind::Fcfs, true);
+    {
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client
+            .send_line(r#"{"prompt":[1,2,3],"max_new_tokens":1000000}"#)
+            .unwrap();
+        // Give the worker a moment to start, then vanish.
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let snap = poll_stats(&addr, |s| stat(s, "cancelled") == 1);
+    assert_eq!(stat(&snap, "completed"), 0);
+    // The worker slot is free again.
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    let (tokens, _) = client
+        .generate_oneshot(1, &[5, 6], &GenParams::simple(8, 0.6))
+        .unwrap();
+    assert_eq!(tokens.len(), 8);
+    shutdown(&addr, handle);
+}
+
+/// Cancelling while the request still sits in the admission queue (FCFS,
+/// one worker busy) never runs the generation at all.
+#[test]
+fn cancel_while_queued_skips_generation() {
+    let (addr, handle) = start_server(SchedKind::Fcfs, true);
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    // Occupy the single worker, then queue a second request and cancel it.
+    client
+        .submit(1, &[1, 2], &GenParams::simple(600, 0.6), true)
+        .unwrap();
+    client
+        .submit(2, &[3, 4], &GenParams::simple(600, 0.6), false)
+        .unwrap();
+    client.cancel(2).unwrap();
+    client.cancel(1).unwrap();
+    let mut finishes = Vec::new();
+    let mut cancelled_tokens = None;
+    while finishes.len() < 2 {
+        let frame = client.read_frame().unwrap();
+        if frame.event == "done" {
+            if frame.req_id == Some(2) {
+                cancelled_tokens =
+                    frame.body.get("tokens_total").and_then(Json::as_usize);
+            }
+            finishes.push(frame.finish().map(|f| f.name()).unwrap());
+        }
+    }
+    assert!(finishes.iter().all(|&f| f == "cancelled"));
+    assert_eq!(cancelled_tokens, Some(0), "queued cancel still generated");
+    shutdown(&addr, handle);
+}
+
+/// Protocol errors over the wire: unknown cancel ids are silently
+/// ignored (idempotent fire-and-forget), bad envelopes get terminal
+/// error frames, legacy garbage still gets the legacy error object —
+/// and none of them poison the connection.
+#[test]
+fn error_frames_and_legacy_shim_coexist() {
+    let (addr, handle) = start_server(SchedKind::Fcfs, true);
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+
+    // Unknown cancel target: no reply at all — the very next frame on
+    // the connection is the stats snapshot, not a stray error.
+    client.cancel(99).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.get("admitted").is_some());
+    assert!(stats.get("req_id").is_none());
+
+    // Enveloped request with an empty prompt: error frame with the id.
+    client
+        .send_line(r#"{"v":1,"req_id":5,"prompt":[]}"#)
+        .unwrap();
+    let frame = client.read_frame().unwrap();
+    assert_eq!((frame.req_id, frame.event.as_str()), (Some(5), "error"));
+
+    // Wrong-typed field in a v1 envelope: the parse fails, but the error
+    // frame still carries the envelope's req_id so that request's stream
+    // gets its terminal frame.
+    client
+        .send_line(r#"{"v":1,"req_id":6,"prompt":[1],"temperature":"warm"}"#)
+        .unwrap();
+    let frame = client.read_frame().unwrap();
+    assert_eq!((frame.req_id, frame.event.as_str()), (Some(6), "error"));
+
+    // Legacy parse error: un-multiplexed error object.
+    let reply = client.send_raw("not json at all").unwrap();
+    assert!(reply.get("error").is_some());
+    assert!(reply.get("req_id").is_none());
+
+    // Duplicate in-flight req_id is rejected without killing the first
+    // (the first cannot finish on its own: effectively unbounded).
+    client
+        .submit(8, &[1, 2], &GenParams::simple(1_000_000, 0.6), true)
+        .unwrap();
+    client
+        .submit(8, &[1, 2], &GenParams::simple(4, 0.6), false)
+        .unwrap();
+    let mut saw_dup_error = false;
+    let mut saw_done = false;
+    while !(saw_dup_error && saw_done) {
+        let frame = client.read_frame().unwrap();
+        match frame.event.as_str() {
+            "error" => {
+                assert_eq!(frame.req_id, Some(8));
+                if !saw_dup_error {
+                    saw_dup_error = true;
+                    // Now put the original out of its misery.
+                    client.cancel(8).unwrap();
+                }
+            }
+            "done" => {
+                assert_eq!(frame.req_id, Some(8));
+                saw_done = true;
+            }
+            _ => {}
+        }
+    }
+
+    // The connection still serves the legacy one-shot after all of that.
+    let tokens = client.generate(&[1, 2, 3], 6, 0.6).unwrap();
+    assert_eq!(tokens.len(), 6);
+    shutdown(&addr, handle);
+}
+
+/// Per-request params travel the wire: stop_tokens end the stream with
+/// finish="stop", token_budget caps the speculated trees, drafter
+/// switches the policy (FCFS honors it per request).
+#[test]
+fn per_request_params_apply_over_the_wire() {
+    let (addr, handle) = start_server(SchedKind::Fcfs, true);
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+
+    // Learn the seeded stream, then stop at its third token.
+    let params = GenParams {
+        seed: Some(77),
+        ..GenParams::simple(16, 0.6)
+    };
+    let (tokens, _) = client.generate_oneshot(1, &[4, 5], &params).unwrap();
+    let stop = tokens[2];
+    let first_hit = tokens.iter().position(|&t| t == stop).unwrap();
+    let stop_params = GenParams {
+        stop_tokens: vec![stop],
+        ..params.clone()
+    };
+    let (stopped, done) =
+        client.generate_oneshot(2, &[4, 5], &stop_params).unwrap();
+    assert_eq!(done.finish().map(|f| f.name()), Some("stop"));
+    assert_eq!(stopped, tokens[..first_hit + 1].to_vec());
+
+    // token_budget=1 degrades toward chain-width trees: the request still
+    // completes exactly.
+    let capped = GenParams {
+        token_budget: Some(1),
+        drafter: Some(dyspec::config::PolicyKind::Chain),
+        ..params.clone()
+    };
+    let (tokens, done) = client.generate_oneshot(3, &[4, 5], &capped).unwrap();
+    assert_eq!(tokens.len(), 16);
+    assert_eq!(done.finish().map(|f| f.name()), Some("length"));
+    shutdown(&addr, handle);
+}

@@ -15,7 +15,10 @@ use std::time::Instant;
 
 use dyspec::cache::CacheManager;
 use dyspec::config::{CacheConfig, Config, EngineConfig, PolicyKind, SchedKind};
-use dyspec::coordinator::{Coordinator, Metrics, ModelFactory, Request, Response};
+use dyspec::coordinator::{
+    CancelToken, Coordinator, GenParams, Metrics, ModelFactory, Request,
+    RequestHandle,
+};
 use dyspec::draft::dyspec::DySpecPolicy;
 use dyspec::draft::TreePolicy;
 use dyspec::engine::SpecEngine;
@@ -40,18 +43,23 @@ fn mk_request(
     prompt: Vec<u32>,
     max_new: usize,
     temperature: f32,
-) -> (Request, mpsc::Receiver<Response>) {
+) -> (Request, RequestHandle) {
     let (tx, rx) = mpsc::channel();
+    let cancel = CancelToken::new();
     (
         Request {
             id,
             prompt,
-            max_new_tokens: max_new,
-            temperature,
+            params: GenParams::simple(max_new, temperature),
             submitted_at: Instant::now(),
-            respond: tx,
+            cancel: cancel.clone(),
+            events: tx,
         },
-        rx,
+        RequestHandle {
+            id,
+            events: rx,
+            cancel,
+        },
     )
 }
 
@@ -120,8 +128,8 @@ fn no_sequence_starves() {
         assert!(steps <= 16 * 8, "did not converge");
     }
     // progress bound: 16 tokens, >= 1 token/step -> <= 16 steps per seq
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
+    for h in rxs {
+        let resp = h.wait().unwrap();
         assert_eq!(resp.tokens.len(), 16);
         assert!(resp.steps <= 16, "seq took {} steps for 16 tokens", resp.steps);
     }
@@ -147,6 +155,7 @@ fn single_sequence_reduces_to_dyspec_policy_tree() {
         &mut rngs,
         &cfg,
         cfg.tree_budget,
+        &[cfg.tree_budget],
     );
     let got = &got.trees[0];
 
@@ -198,8 +207,8 @@ fn temp0_batched_output_matches_autoregressive() {
     while b.active() > 0 {
         b.step();
     }
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
+    for h in rxs {
+        let resp = h.wait().unwrap();
         assert_eq!(
             resp.tokens, reference,
             "batched temp-0 output diverged from greedy decoding"
@@ -221,12 +230,16 @@ fn coordinator_shutdown_drains_under_continuous_scheduler() {
     cfg.server.queue_capacity = 32;
     let coord = Coordinator::start(cfg, factory);
     let rxs: Vec<_> = (0..10)
-        .map(|i| coord.try_submit(vec![i + 1, 2, 3], 16, 0.6).unwrap())
+        .map(|i| {
+            coord
+                .try_submit(vec![i + 1, 2, 3], GenParams::simple(16, 0.6))
+                .unwrap()
+        })
         .collect();
     // Immediate shutdown: queued + in-flight work must still complete.
     coord.shutdown();
-    for rx in rxs {
-        let resp = rx.recv().expect("sequence dropped during shutdown");
+    for h in rxs {
+        let resp = h.wait().expect("sequence dropped during shutdown");
         assert_eq!(resp.tokens.len(), 16);
     }
 }
@@ -261,8 +274,8 @@ fn cache_blocks_never_leak_after_drain_done() {
             "block budget exceeded"
         );
     }
-    for (rx, &len) in rxs.iter().zip(&lens) {
-        assert_eq!(rx.recv().unwrap().tokens.len(), len);
+    for (h, &len) in rxs.into_iter().zip(&lens) {
+        assert_eq!(h.wait().unwrap().tokens.len(), len);
     }
     assert_eq!(b.cache().used_blocks(), 0, "Drain->Done leaked blocks");
     let stats = b.cache().stats();
@@ -359,7 +372,7 @@ fn mixed_lengths_retire_incrementally() {
         b.step();
     }
     assert_eq!(max_active_seen, 3);
-    for (rx, &len) in rxs.iter().zip(&lens) {
-        assert_eq!(rx.recv().unwrap().tokens.len(), len);
+    for (h, &len) in rxs.into_iter().zip(&lens) {
+        assert_eq!(h.wait().unwrap().tokens.len(), len);
     }
 }

@@ -11,10 +11,22 @@ use std::time::Instant;
 use dyspec::config::{
     CacheConfig, Config, EngineConfig, LatencyRegime, PolicyKind, SchedKind,
 };
-use dyspec::coordinator::{Metrics, Request, Response};
+use dyspec::coordinator::{
+    CancelToken, GenEvent, GenParams, Metrics, Request,
+};
 use dyspec::engine::SpecEngine;
 use dyspec::models::sim::{SimModel, SimSpec};
 use dyspec::sched::Batcher;
+
+/// Drain a request's event stream to its final response tokens.
+fn wait_tokens(rx: &mpsc::Receiver<GenEvent>) -> Vec<u32> {
+    loop {
+        match rx.recv().expect("request dropped") {
+            GenEvent::Done(resp) => return resp.tokens,
+            GenEvent::Chunk { .. } => continue,
+        }
+    }
+}
 
 const VOCAB: usize = 16;
 const RUNS: usize = 4000;
@@ -146,16 +158,16 @@ fn continuous_batching_preserves_first_token_distribution() {
             Box::new(target),
             Arc::new(Metrics::new()),
         );
-        let rxs: Vec<mpsc::Receiver<Response>> = (0..BATCH as u64)
+        let rxs: Vec<mpsc::Receiver<GenEvent>> = (0..BATCH as u64)
             .map(|i| {
                 let (tx, rx) = mpsc::channel();
                 batcher.admit(Request {
                     id: round * BATCH as u64 + i + 1,
                     prompt: vec![3, 1, 4],
-                    max_new_tokens: 2,
-                    temperature: 0.6,
+                    params: GenParams::simple(2, 0.6),
                     submitted_at: Instant::now(),
-                    respond: tx,
+                    cancel: CancelToken::new(),
+                    events: tx,
                 });
                 rx
             })
@@ -164,8 +176,7 @@ fn continuous_batching_preserves_first_token_distribution() {
             batcher.step();
         }
         for rx in rxs {
-            let resp = rx.recv().unwrap();
-            counts[resp.tokens[0] as usize] += 1;
+            counts[wait_tokens(&rx)[0] as usize] += 1;
         }
     }
     let n = (ROUNDS * BATCH) as f64;
@@ -275,16 +286,16 @@ fn batched_cache_on_off_identical_streams_and_billed_positions_dominate() {
             Box::new(target),
             Arc::new(Metrics::new()),
         );
-        let rxs: Vec<mpsc::Receiver<Response>> = (0..3u64)
+        let rxs: Vec<mpsc::Receiver<GenEvent>> = (0..3u64)
             .map(|i| {
                 let (tx, rx) = mpsc::channel();
                 b.admit(Request {
                     id: i + 1,
                     prompt: vec![3, 1, 4],
-                    max_new_tokens: 16,
-                    temperature: 0.6,
+                    params: GenParams::simple(16, 0.6),
                     submitted_at: Instant::now(),
-                    respond: tx,
+                    cancel: CancelToken::new(),
+                    events: tx,
                 });
                 rx
             })
@@ -294,10 +305,7 @@ fn batched_cache_on_off_identical_streams_and_billed_positions_dominate() {
             let rep = b.step();
             bills.push((rep.billed_positions, rep.cached_positions));
         }
-        (
-            rxs.iter().map(|rx| rx.recv().unwrap().tokens).collect(),
-            bills,
-        )
+        (rxs.iter().map(wait_tokens).collect(), bills)
     };
     let (warm_tokens, warm_bills) = run(true);
     let (cold_tokens, cold_bills) = run(false);
