@@ -3,17 +3,28 @@
 //! protocol-v1 streaming, and reports throughput, latency percentiles
 //! (TTFT is the CLIENT-OBSERVED first chunk arrival) and backpressure
 //! counts — the end-to-end driver for the serving layer (DESIGN.md
-//! deliverable (b) and §Serving API v1).
+//! deliverable (b), §Serving API v1 and §Transport).
 //!
 //!   cargo run --release --example serve_loadtest -- \
-//!       [requests] [rate_rps] [workers] [scheduler]
+//!       [requests] [rate_rps] [workers] [scheduler] \
+//!       [--reactor-threads N] [--max-conns N] [--outbox N] \
+//!       [--cancel-every N]
 //!
 //! `scheduler` is `fcfs` (default) or `continuous` — the latter runs the
 //! step-level batcher (`sched/`), so one worker multiplexes many
-//! connections into shared verification dispatches. Compare:
+//! connections into shared verification dispatches. The transport flags
+//! exercise the reactor: every connection is served by a fixed pool of
+//! `--reactor-threads` event loops (server threads stay O(pool) however
+//! many connections arrive), `--max-conns` bounds admission, `--outbox`
+//! bounds per-connection buffering. `--cancel-every N` cancels every Nth
+//! request after its first chunk and checks the stream terminates with
+//! finish="cancelled" — the streamed + cancelled mix the CI reactor
+//! smoke step drives at 64 connections. Compare:
 //!
 //!   cargo run --release --example serve_loadtest -- 48 40 1 fcfs
 //!   cargo run --release --example serve_loadtest -- 48 40 1 continuous
+//!   cargo run --release --example serve_loadtest -- \
+//!       64 400 2 continuous --reactor-threads 4 --cancel-every 4
 
 use std::sync::Arc;
 
@@ -24,21 +35,65 @@ use dyspec::data::trace::RequestTrace;
 use dyspec::models::sim::{SimModel, SimSpec};
 use dyspec::models::LogitModel;
 use dyspec::server::{Client, Server};
+use dyspec::util::json::Json;
 use dyspec::util::Histogram;
 
+/// Positional args + `--key value` flags, hand-rolled so positionals
+/// keep their historical order regardless of flag placement.
+fn parse_args() -> (Vec<String>, std::collections::BTreeMap<String, String>) {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            let value = it.next().unwrap_or_else(|| {
+                eprintln!("missing value for --{name}");
+                std::process::exit(2);
+            });
+            flags.insert(name.to_string(), value);
+        } else {
+            positional.push(arg);
+        }
+    }
+    (positional, flags)
+}
+
+fn flag<T: std::str::FromStr>(
+    flags: &std::collections::BTreeMap<String, String>,
+    name: &str,
+    default: T,
+) -> T {
+    match flags.get(name) {
+        None => default,
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!("bad value for --{name}: {v}");
+            std::process::exit(2);
+        }),
+    }
+}
+
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(48);
-    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40.0);
-    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
-    let scheduler = args
+    let (positional, flags) = parse_args();
+    let n_requests: usize =
+        positional.first().and_then(|s| s.parse().ok()).unwrap_or(48);
+    let rate: f64 = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(40.0);
+    let workers: usize = positional.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let scheduler = positional
         .get(3)
         .and_then(|s| SchedKind::parse(s))
         .unwrap_or(SchedKind::Fcfs);
+    let reactor_threads: usize = flag(&flags, "reactor-threads", 2);
+    let max_conns: usize = flag(&flags, "max-conns", 1024);
+    let outbox_frames: usize = flag(&flags, "outbox", 1024);
+    // Every Nth request is cancelled after its first chunk (0 = never).
+    let cancel_every: usize = flag(&flags, "cancel-every", 0);
 
     let mut cfg = Config::new();
     cfg.server.workers = workers;
     cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.reactor_threads = reactor_threads;
+    cfg.server.max_conns = max_conns;
+    cfg.server.outbox_frames = outbox_frames;
     cfg.engine.tree_budget = 24;
     cfg.sched.kind = scheduler;
     cfg.sched.max_active = 16;
@@ -58,18 +113,21 @@ fn main() {
     let prompts = PromptSet::by_name("c4", 8, 64, 5).unwrap();
     let trace = RequestTrace::poisson(n_requests, rate, prompts.len(), 64, 0.6, 9);
     println!(
-        "replaying {} requests at {:.0} rps over {} workers ({} scheduler) -> {addr}",
+        "replaying {} requests at {:.0} rps over {} workers ({} scheduler, {} reactor threads, cancel-every={})  -> {addr}",
         trace.len(),
         rate,
         workers,
-        scheduler.name()
+        scheduler.name(),
+        reactor_threads,
+        cancel_every,
     );
 
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
-    for ev in trace.events.clone() {
+    for (idx, ev) in trace.events.clone().into_iter().enumerate() {
         let addr = addr.clone();
         let prompt: Vec<u32> = prompts.get(ev.prompt_idx).to_vec();
+        let cancel_this = cancel_every > 0 && (idx + 1) % cancel_every == 0;
         handles.push(std::thread::spawn(move || {
             let wait = ev.at_secs - t0.elapsed().as_secs_f64();
             if wait > 0.0 {
@@ -77,8 +135,48 @@ fn main() {
             }
             let sent = std::time::Instant::now();
             let mut client = Client::connect(&addr).ok()?;
-            let params =
-                GenParams::simple(ev.max_new_tokens, ev.temperature);
+            let params = GenParams::simple(ev.max_new_tokens, ev.temperature);
+            if cancel_this {
+                // Streamed + cancelled: first chunk, cancel, then require
+                // the terminal frame to carry finish="cancelled". The
+                // request is effectively unbounded so the cancel cannot
+                // lose a race against natural completion (which would
+                // read as a spurious failure).
+                let params =
+                    GenParams::simple(1_000_000, ev.temperature);
+                client.submit(1, &prompt, &params, true).ok()?;
+                let mut tokens = 0usize;
+                let mut cancelled = false;
+                let mut first = None;
+                loop {
+                    let frame = client.read_frame().ok()?;
+                    match frame.event.as_str() {
+                        "chunk" => {
+                            if first.is_none() {
+                                first = Some(sent.elapsed().as_secs_f64());
+                            }
+                            tokens += frame.tokens().len();
+                            if !cancelled {
+                                client.cancel(1).ok()?;
+                                cancelled = true;
+                            }
+                        }
+                        "done" => {
+                            let finish =
+                                frame.finish().map(|f| f.name()).unwrap_or("?");
+                            if finish != "cancelled" {
+                                eprintln!(
+                                    "request {idx}: expected cancelled, got {finish}"
+                                );
+                                return None;
+                            }
+                            let e2e = sent.elapsed().as_secs_f64();
+                            return Some((e2e, first.unwrap_or(e2e), tokens));
+                        }
+                        _ => return None,
+                    }
+                }
+            }
             let mut first = None;
             let (tokens, _done) = client
                 .generate_stream(1, &prompt, &params, |_| {
@@ -118,7 +216,23 @@ fn main() {
     );
 
     let mut client = Client::connect(&addr).expect("stats conn");
-    println!("server metrics: {}", client.stats().unwrap().to_string());
+    let stats = client.stats().unwrap();
+    println!("server metrics: {}", stats.to_string());
+    let gauge = |key: &str| {
+        stats.get(key).and_then(Json::as_f64).unwrap_or(-1.0)
+    };
+    println!(
+        "transport: {} event-loop threads, {} open conns, {} outbox frames, {} backpressure closes, {} rejected",
+        gauge("transport_threads"),
+        gauge("open_conns"),
+        gauge("outbox_frames"),
+        gauge("backpressure_closed"),
+        gauge("conns_rejected"),
+    );
     client.shutdown().expect("shutdown");
     server_thread.join().unwrap();
+    if failures > 0 {
+        eprintln!("{failures} requests failed");
+        std::process::exit(1);
+    }
 }

@@ -528,15 +528,125 @@ fn serve_cell(
     (tokens, wall, vsecs, occupancy, lat_v, ttft)
 }
 
+/// One reactor cell: `conns` concurrent client connections over REAL
+/// sockets against a continuous-batching server on a fixed
+/// `reactor_threads`-loop transport — the high-connection regime the
+/// thread-per-connection transport could not enter without spawning
+/// O(conns) server threads. Each connection streams `per_client`
+/// requests back to back. Returns (tokens, wall_secs, virtual_secs,
+/// occupancy, per-request virtual-latency histogram, client-observed
+/// TTFT histogram, server transport-thread gauge).
+#[allow(clippy::type_complexity)]
+fn reactor_cell(
+    conns: usize,
+    per_client: usize,
+    reactor_threads: usize,
+    opts: &ExpOpts,
+) -> (usize, f64, f64, f64, Histogram, Histogram, u64) {
+    let mut cfg = Config::new();
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.sched.max_active = 32;
+    cfg.sched.idle_tick_ms = 2;
+    cfg.server.workers = 1;
+    cfg.server.queue_capacity = 4096;
+    cfg.server.reactor_threads = reactor_threads;
+    cfg.server.max_conns = conns + 8; // head-room for the stats client
+    cfg.engine.tree_budget = 24;
+    cfg.engine.seed = opts.seed;
+    cfg.regime = Some(LatencyRegime::pair_7b());
+
+    let noise = opts.noise;
+    let seed = opts.seed;
+    let factory: ModelFactory = Arc::new(move || {
+        let spec = SimSpec::for_dataset("c4", noise, seed ^ 0xDA7A);
+        let (d, t) = SimModel::pair(spec);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    });
+    let coord = Arc::new(Coordinator::start(cfg, factory));
+    let server =
+        Server::bind("127.0.0.1:0", coord.clone()).expect("bind reactor bench");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    let prompts = PromptSet::by_name("c4", conns * per_client, 64, opts.seed)
+        .expect("dataset profile");
+
+    let t0 = Timer::start();
+    let handles: Vec<_> = (0..conns)
+        .map(|c| {
+            let addr = addr.clone();
+            let mine: Vec<Vec<u32>> = (0..per_client)
+                .map(|k| prompts.get(c * per_client + k).to_vec())
+                .collect();
+            let max_new = opts.max_new_tokens;
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut out = Vec::new();
+                for (k, p) in mine.iter().enumerate() {
+                    let params = GenParams::simple(max_new, 0.6);
+                    let sent = Timer::start();
+                    let mut first = None;
+                    if let Ok((tokens, done)) = client
+                        .generate_stream(k as u64 + 1, p, &params, |_| {
+                            if first.is_none() {
+                                first = Some(sent.elapsed_secs());
+                            }
+                        })
+                    {
+                        let vsecs = done
+                            .body
+                            .get("virtual_secs")
+                            .and_then(crate::util::json::Json::as_f64)
+                            .unwrap_or(0.0);
+                        out.push((
+                            vsecs,
+                            first.unwrap_or_else(|| sent.elapsed_secs()),
+                            tokens.len(),
+                        ));
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+
+    let mut lat_v = Histogram::new();
+    let mut ttft = Histogram::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        for (v, t, n) in h.join().expect("client thread") {
+            lat_v.record(v);
+            ttft.record(t);
+            tokens += n;
+        }
+    }
+    let wall = t0.elapsed_secs();
+    let vsecs = coord.metrics.virtual_secs();
+    let occupancy = coord.metrics.batch_occupancy();
+    let transport_threads = coord.metrics.transport_threads();
+    let mut shut = Client::connect(&addr).expect("shutdown conn");
+    shut.shutdown().expect("shutdown");
+    server_thread.join().expect("server thread");
+    shutdown_coordinator(coord);
+    (tokens, wall, vsecs, occupancy, lat_v, ttft, transport_threads)
+}
+
 /// Serving benchmark (ROADMAP "heavy traffic" deliverable): throughput and
 /// latency vs concurrency, fcfs vs continuous, on the sim model pair with
 /// 7b-regime virtual accounting. Throughput is tokens per VIRTUAL second —
 /// the regime-correct metric: continuous batching packs every active
 /// sequence into one target dispatch, so it strictly beats FCFS once
-/// clients > 1. `--out BENCH_serve.json` records the trajectory.
+/// clients > 1. The trailing `continuous+reactor` rows drive REAL sockets
+/// at 64/256 concurrent connections over a 4-loop reactor transport
+/// (srv_threads stays 4, not O(conns)). `--out BENCH_serve.json` records
+/// the trajectory.
 pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
     let mut table = BenchTable::new(
-        "Serve: throughput/latency vs concurrency, fcfs vs continuous (sim, 7b regime, 1 worker)",
+        "Serve: throughput/latency vs concurrency, fcfs vs continuous (sim, 7b regime, 1 worker); reactor rows over real sockets",
         &[
             "scheduler",
             "clients",
@@ -548,6 +658,7 @@ pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
             "lat_p99_vsec",
             "ttft_p50_s",
             "occupancy",
+            "srv_threads",
         ],
     );
     let per_client = opts.prompts.max(1);
@@ -566,8 +677,27 @@ pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
                 format!("{:.4}", lat_v.p99()),
                 format!("{:.4}", ttft.p50()),
                 format!("{:.2}", occupancy),
+                "-".into(), // in-process cells: no transport
             ]);
         }
+    }
+    const REACTOR_THREADS: usize = 4;
+    for conns in [64usize, 256] {
+        let (tokens, wall, vsecs, occupancy, mut lat_v, mut ttft, threads) =
+            reactor_cell(conns, per_client, REACTOR_THREADS, opts);
+        table.row(vec![
+            "continuous+reactor".into(),
+            format!("{conns}"),
+            format!("{}", conns * per_client),
+            format!("{tokens}"),
+            format!("{:.1}", tokens as f64 / vsecs.max(1e-9)),
+            format!("{:.1}", tokens as f64 / wall.max(1e-9)),
+            format!("{:.4}", lat_v.p50()),
+            format!("{:.4}", lat_v.p99()),
+            format!("{:.4}", ttft.p50()),
+            format!("{:.2}", occupancy),
+            format!("{threads}"),
+        ]);
     }
     table
 }
@@ -932,7 +1062,8 @@ mod tests {
             ..ExpOpts::default()
         };
         let t = &run_experiment("serve", &opts).unwrap()[0];
-        assert_eq!(t.rows.len(), 6); // 2 schedulers x 3 concurrency levels
+        // 2 schedulers x 3 in-process concurrency levels + 2 reactor rows
+        assert_eq!(t.rows.len(), 8);
         let tput = |row: &Vec<String>| -> f64 { row[4].parse().unwrap() };
         let fcfs16 = &t.rows[2];
         let cont16 = &t.rows[5];
@@ -949,6 +1080,16 @@ mod tests {
             tput(cont16),
             tput(fcfs16)
         );
+        // The reactor rows: every request of the 64- and 256-connection
+        // socket workloads completed, served by a 4-thread transport.
+        for (row, conns) in [(&t.rows[6], 64usize), (&t.rows[7], 256)] {
+            assert_eq!(row[0], "continuous+reactor");
+            assert_eq!(row[1], format!("{conns}"));
+            let requests: usize = row[2].parse().unwrap();
+            let tokens: usize = row[3].parse().unwrap();
+            assert_eq!(tokens, requests * opts.max_new_tokens);
+            assert_eq!(row[10], "4", "transport not O(pool): {}", row[10]);
+        }
     }
 
     /// The streaming acceptance shape: the first token reaches the client

@@ -86,13 +86,18 @@ COMMANDS:
   bench        run a paper experiment (--experiment table1|table2|table3|table4|
                table5|fig2|fig4|fig5|fig9|serve|cache|stream)
   serve        start the TCP serving coordinator (--addr host:port,
-               scheduler=fcfs|continuous); wire protocol v1, see
-               DESIGN.md §Serving API v1
+               scheduler=fcfs|continuous); wire protocol v1 over the
+               reactor transport (reactor_threads=N event loops serve
+               every connection — see DESIGN.md §Serving API v1 and
+               §Transport; max_conns / outbox_frames bound admission
+               and per-connection buffering)
   client       send a prompt to a running server (--addr host:port --dataset c4)
                --stream prints protocol-v1 chunk frames as rounds land;
                --cancel-after N cancels mid-stream and checks the
                finish=cancelled done frame; --drafter / --token_budget /
-               --req_id set the per-request envelope fields
+               --req_id set the per-request envelope fields;
+               --conns N opens N concurrent streaming connections (one
+               request each) to exercise the reactor pool
   selfcheck    verify artifacts + PJRT wiring against golden.json
   help         show this text
 
@@ -102,15 +107,18 @@ CONFIG KEYS (key=value, see config/mod.rs):
   backend (sim|hlo|hlo-pallas), regime (7b|13b|70b),
   dataset (cnn|c4|owt), artifacts, prompt_len, num_prompts, addr, workers,
   scheduler (fcfs|continuous), global_budget, max_active, idle_tick_ms,
-  cache (on|off), cache_block, cache_blocks
+  cache (on|off), cache_block, cache_blocks,
+  reactor_threads, max_conns, outbox_frames
 
 EXAMPLES:
   dyspec generate policy=dyspec backend=hlo dataset=cnn temp=0
   dyspec bench --experiment table1 --out results/table1.json
   dyspec bench --experiment stream --out BENCH_stream.json
-  dyspec serve --addr 127.0.0.1:7341 backend=sim scheduler=continuous
+  dyspec serve --addr 127.0.0.1:7341 backend=sim scheduler=continuous \\
+      reactor_threads=4 max_conns=256
   dyspec client --addr 127.0.0.1:7341 --stream max_new_tokens=64
   dyspec client --addr 127.0.0.1:7341 --stream --cancel-after 2
+  dyspec client --addr 127.0.0.1:7341 --conns 64 max_new_tokens=16
 ";
 
 #[cfg(test)]

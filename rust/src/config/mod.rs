@@ -322,6 +322,19 @@ pub struct ServerConfig {
     pub queue_capacity: usize,
     /// Max batched requests admitted per scheduling round.
     pub max_batch: usize,
+    /// Event-loop threads in the reactor transport (DESIGN.md
+    /// §Transport). Connections are multiplexed over this fixed pool —
+    /// server thread count is O(reactor_threads + workers), never
+    /// O(connections).
+    pub reactor_threads: usize,
+    /// Admission control: connections beyond this are refused at accept
+    /// with `{"error":"server at capacity"}`.
+    pub max_conns: usize,
+    /// Per-connection outbox ceiling, in frames. A client that stops
+    /// draining its socket until this many frames pile up is treated as
+    /// gone (connection closed, in-flight requests cancelled) instead of
+    /// buffered without bound.
+    pub outbox_frames: usize,
 }
 
 impl Default for ServerConfig {
@@ -331,6 +344,9 @@ impl Default for ServerConfig {
             workers: 2,
             queue_capacity: 256,
             max_batch: 8,
+            reactor_threads: 2,
+            max_conns: 1024,
+            outbox_frames: 1024,
         }
     }
 }
@@ -461,6 +477,18 @@ impl Config {
                 Ok(v) => self.server.max_batch = v,
                 Err(_) => return bad("max_batch"),
             },
+            "reactor_threads" => match value.parse() {
+                Ok(v) if v >= 1 => self.server.reactor_threads = v,
+                _ => return bad("reactor_threads"),
+            },
+            "max_conns" => match value.parse() {
+                Ok(v) if v >= 1 => self.server.max_conns = v,
+                _ => return bad("max_conns"),
+            },
+            "outbox_frames" => match value.parse() {
+                Ok(v) if v >= 1 => self.server.outbox_frames = v,
+                _ => return bad("outbox_frames"),
+            },
             "scheduler" => match SchedKind::parse(value) {
                 Some(k) => self.sched.kind = k,
                 None => return bad("scheduler"),
@@ -587,6 +615,15 @@ impl Config {
             self.cache.block_tokens.to_string(),
         );
         m.insert("cache_blocks".into(), self.cache.max_blocks.to_string());
+        m.insert(
+            "reactor_threads".into(),
+            self.server.reactor_threads.to_string(),
+        );
+        m.insert("max_conns".into(), self.server.max_conns.to_string());
+        m.insert(
+            "outbox_frames".into(),
+            self.server.outbox_frames.to_string(),
+        );
         m
     }
 }
@@ -665,6 +702,30 @@ mod tests {
         cfg.set("stop_tokens", "3").unwrap();
         let map = cfg.to_map();
         assert_eq!(map.get("stop_tokens").unwrap(), "3");
+    }
+
+    #[test]
+    fn transport_keys_round_trip_and_validate() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.server.reactor_threads, 2);
+        assert_eq!(cfg.server.max_conns, 1024);
+        assert_eq!(cfg.server.outbox_frames, 1024);
+        cfg.set("reactor_threads", "4").unwrap();
+        cfg.set("max_conns", "64").unwrap();
+        cfg.set("outbox_frames", "256").unwrap();
+        assert_eq!(cfg.server.reactor_threads, 4);
+        assert_eq!(cfg.server.max_conns, 64);
+        assert_eq!(cfg.server.outbox_frames, 256);
+        // Zero or garbage never passes validation (a zero-thread reactor
+        // or zero-slot outbox cannot serve anything).
+        assert!(cfg.set("reactor_threads", "0").is_err());
+        assert!(cfg.set("max_conns", "0").is_err());
+        assert!(cfg.set("outbox_frames", "0").is_err());
+        assert!(cfg.set("reactor_threads", "many").is_err());
+        let map = cfg.to_map();
+        assert_eq!(map.get("reactor_threads").unwrap(), "4");
+        assert_eq!(map.get("max_conns").unwrap(), "64");
+        assert_eq!(map.get("outbox_frames").unwrap(), "256");
     }
 
     #[test]

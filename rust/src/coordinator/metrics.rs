@@ -43,6 +43,17 @@ pub struct Metrics {
     cache_hit_positions: AtomicU64,
     cache_billed_positions: AtomicU64,
     cache_resident_blocks: AtomicU64,
+    /// Reactor transport (DESIGN.md §Transport): open-connection gauge,
+    /// connections refused by `max_conns` admission control, frames
+    /// currently queued across all connection outboxes, connections
+    /// closed because a client stopped draining (outbox overflow), and
+    /// the fixed event-loop pool size — the "threads are O(pool), not
+    /// O(connections)" invariant, readable over the stats surface.
+    open_conns: AtomicU64,
+    conns_rejected: AtomicU64,
+    outbox_frames: AtomicU64,
+    backpressure_closed: AtomicU64,
+    transport_threads: AtomicU64,
 }
 
 impl Metrics {
@@ -68,7 +79,69 @@ impl Metrics {
             cache_hit_positions: AtomicU64::new(0),
             cache_billed_positions: AtomicU64::new(0),
             cache_resident_blocks: AtomicU64::new(0),
+            open_conns: AtomicU64::new(0),
+            conns_rejected: AtomicU64::new(0),
+            outbox_frames: AtomicU64::new(0),
+            backpressure_closed: AtomicU64::new(0),
+            transport_threads: AtomicU64::new(0),
         }
+    }
+
+    /// Transport gauges/counters (reactor, `server/`).
+    pub fn on_conn_open(&self) {
+        self.open_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_conn_closed(&self) {
+        let _ = self.open_conns.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |cur| Some(cur.saturating_sub(1)),
+        );
+    }
+
+    pub fn on_conn_rejected(&self) {
+        self.conns_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn outbox_inc(&self) {
+        self.outbox_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn outbox_dec(&self, n: u64) {
+        let _ = self.outbox_frames.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |cur| Some(cur.saturating_sub(n)),
+        );
+    }
+
+    pub fn on_backpressure_closed(&self) {
+        self.backpressure_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_transport_threads(&self, n: u64) {
+        self.transport_threads.store(n, Ordering::Relaxed);
+    }
+
+    pub fn open_conns(&self) -> u64 {
+        self.open_conns.load(Ordering::Relaxed)
+    }
+
+    pub fn conns_rejected(&self) -> u64 {
+        self.conns_rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn outbox_frames(&self) -> u64 {
+        self.outbox_frames.load(Ordering::Relaxed)
+    }
+
+    pub fn backpressure_closed(&self) -> u64 {
+        self.backpressure_closed.load(Ordering::Relaxed)
+    }
+
+    pub fn transport_threads(&self) -> u64 {
+        self.transport_threads.load(Ordering::Relaxed)
     }
 
     pub fn on_admitted(&self) {
@@ -311,6 +384,17 @@ impl Metrics {
                 "cache_resident_blocks",
                 Json::Num(self.cache_resident_blocks() as f64),
             ),
+            ("open_conns", Json::Num(self.open_conns() as f64)),
+            ("conns_rejected", Json::Num(self.conns_rejected() as f64)),
+            ("outbox_frames", Json::Num(self.outbox_frames() as f64)),
+            (
+                "backpressure_closed",
+                Json::Num(self.backpressure_closed() as f64),
+            ),
+            (
+                "transport_threads",
+                Json::Num(self.transport_threads() as f64),
+            ),
         ])
     }
 }
@@ -369,6 +453,42 @@ mod tests {
         assert_eq!(m.tokens_in_flight(), 7);
         m.tokens_in_flight_sub(100); // saturates, never wraps
         assert_eq!(m.tokens_in_flight(), 0);
+    }
+
+    #[test]
+    fn transport_gauges_flow() {
+        let m = Metrics::new();
+        m.set_transport_threads(4);
+        m.on_conn_open();
+        m.on_conn_open();
+        m.on_conn_rejected();
+        m.outbox_inc();
+        m.outbox_inc();
+        m.outbox_inc();
+        m.outbox_dec(2);
+        m.on_backpressure_closed();
+        m.on_conn_closed();
+        assert_eq!(m.open_conns(), 1);
+        assert_eq!(m.conns_rejected(), 1);
+        assert_eq!(m.outbox_frames(), 1);
+        assert_eq!(m.backpressure_closed(), 1);
+        assert_eq!(m.transport_threads(), 4);
+        // Gauges saturate instead of wrapping when decrements race.
+        m.on_conn_closed();
+        m.on_conn_closed();
+        assert_eq!(m.open_conns(), 0);
+        m.outbox_dec(100);
+        assert_eq!(m.outbox_frames(), 0);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("open_conns").unwrap().as_usize(), Some(0));
+        assert_eq!(
+            snap.get("transport_threads").unwrap().as_usize(),
+            Some(4)
+        );
+        assert_eq!(
+            snap.get("backpressure_closed").unwrap().as_usize(),
+            Some(1)
+        );
     }
 
     #[test]

@@ -26,15 +26,15 @@ pub mod worker;
 
 pub use metrics::Metrics;
 pub use queue::{
-    CancelToken, FinishReason, GenEvent, GenParams, Request, RequestHandle,
-    RequestQueue, Response, RoundStats,
+    CancelToken, EventSink, FinishReason, GenEvent, GenParams, Request,
+    RequestHandle, RequestQueue, Response, RoundStats,
 };
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::config::Config;
+use crate::config::{Config, ServerConfig};
 use crate::models::LogitModel;
 
 /// Constructs a (draft, target) pair inside a worker thread.
@@ -47,11 +47,15 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
+    /// Serving-layer knobs the TCP transport reads back (reactor pool
+    /// size, connection/outbox limits).
+    server_cfg: ServerConfig,
 }
 
 impl Coordinator {
     /// Start `cfg.server.workers` workers over `factory`-built models.
     pub fn start(cfg: Config, factory: ModelFactory) -> Self {
+        let server_cfg = cfg.server.clone();
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
         let (queue, rx) = RequestQueue::new(cfg.server.queue_capacity, metrics.clone());
@@ -78,7 +82,13 @@ impl Coordinator {
             metrics,
             shutdown,
             workers,
+            server_cfg,
         }
+    }
+
+    /// The serving-layer configuration this coordinator was started with.
+    pub fn server_config(&self) -> &ServerConfig {
+        &self.server_cfg
     }
 
     /// Submit a request; events arrive on the returned handle's channel.
@@ -89,6 +99,19 @@ impl Coordinator {
         params: GenParams,
     ) -> Result<RequestHandle, String> {
         self.queue.try_submit(prompt, params)
+    }
+
+    /// Submit a request whose events land in a caller-supplied sink (the
+    /// reactor transport pushes frames straight into connection outboxes
+    /// this way — no per-request forwarder thread). Returns the
+    /// server-side id and the shared cancel token.
+    pub fn try_submit_sink(
+        &self,
+        prompt: Vec<u32>,
+        params: GenParams,
+        events: Box<dyn EventSink>,
+    ) -> Result<(u64, CancelToken), String> {
+        self.queue.try_submit_sink(prompt, params, events)
     }
 
     /// Blocking convenience: submit and wait for the final response.

@@ -1,11 +1,17 @@
 //! Bounded admission queue with fail-fast backpressure.
 //!
 //! Since the streaming redesign (DESIGN.md §Serving API v1) a request no
-//! longer carries a one-shot response sender: it carries an *event* sender
+//! longer carries a one-shot response sender: it carries an *event* sink
 //! ([`GenEvent`] per speculation round, then `Done`) and a shared
-//! [`CancelToken`]. Submitting returns a [`RequestHandle`] owning the
-//! receiving half and the token — dropping the handle does NOT cancel the
-//! request (the server cancels explicitly on client disconnect).
+//! [`CancelToken`]. Two submission surfaces share one admission path:
+//!
+//!   - [`RequestQueue::try_submit`] — the in-process API: builds an mpsc
+//!     pair and returns a [`RequestHandle`] owning the receiving half and
+//!     the token (dropping the handle does NOT cancel the request; the
+//!     server cancels explicitly on client disconnect);
+//!   - [`RequestQueue::try_submit_sink`] — the reactor transport: the
+//!     caller supplies its own [`EventSink`] (a connection outbox), so
+//!     worker events land there directly with no forwarder thread.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -14,7 +20,8 @@ use std::time::Instant;
 use super::metrics::Metrics;
 
 pub use crate::engine::events::{
-    CancelToken, FinishReason, GenEvent, GenParams, Response, RoundStats,
+    CancelToken, EventSink, FinishReason, GenEvent, GenParams, Response,
+    RoundStats,
 };
 
 /// One admitted generation request.
@@ -28,7 +35,7 @@ pub struct Request {
     /// Cooperative cancellation: checked by workers between rounds.
     pub cancel: CancelToken,
     /// Per-request event stream: chunks, then exactly one `Done`.
-    pub events: mpsc::Sender<GenEvent>,
+    pub events: Box<dyn EventSink>,
 }
 
 /// Submitter's half of an admitted request.
@@ -79,13 +86,31 @@ impl RequestQueue {
         prompt: Vec<u32>,
         params: GenParams,
     ) -> Result<RequestHandle, String> {
+        let (events, rx) = mpsc::channel();
+        let (id, cancel) =
+            self.try_submit_sink(prompt, params, Box::new(events))?;
+        Ok(RequestHandle {
+            id,
+            events: rx,
+            cancel,
+        })
+    }
+
+    /// Admit a request whose events go to a caller-supplied sink (the
+    /// reactor transport's connection outbox). Returns the server-side id
+    /// and the shared cancel token.
+    pub fn try_submit_sink(
+        &self,
+        prompt: Vec<u32>,
+        params: GenParams,
+        events: Box<dyn EventSink>,
+    ) -> Result<(u64, CancelToken), String> {
         if prompt.is_empty() {
             return Err("empty prompt".into());
         }
         if params.max_new_tokens == 0 {
             return Err("max_new_tokens must be >= 1".into());
         }
-        let (events, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let cancel = CancelToken::new();
         let req = Request {
@@ -100,11 +125,7 @@ impl RequestQueue {
         match tx.try_send(req) {
             Ok(()) => {
                 self.metrics.on_admitted();
-                Ok(RequestHandle {
-                    id,
-                    events: rx,
-                    cancel,
-                })
+                Ok((id, cancel))
             }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.on_rejected();

@@ -27,7 +27,7 @@ use super::metrics::Metrics;
 use super::queue::Request;
 use super::ModelFactory;
 use crate::config::{Config, SchedKind};
-use crate::engine::{FinishReason, GenEvent, Response, SpecEngine};
+use crate::engine::{EventSink, FinishReason, GenEvent, Response, SpecEngine};
 use crate::log_debug;
 use crate::models::LogitModel;
 use crate::sched::Batcher;

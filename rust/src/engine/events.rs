@@ -15,9 +15,35 @@
 //! KV residency immediately.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 
 use crate::config::PolicyKind;
+
+/// Destination of one request's event stream.
+///
+/// Executors (the FCFS worker, the continuous batcher) push every
+/// [`GenEvent`] through this trait without knowing where it lands. Two
+/// implementations exist:
+///
+///   - [`mpsc::Sender<GenEvent>`] — the in-process API surface
+///     (`RequestHandle`'s channel, drained by `wait()`);
+///   - the reactor transport's connection sink (`server/conn.rs`), which
+///     serializes the event into a wire frame, pushes it into the
+///     connection's bounded outbox and wakes the event loop — no
+///     per-request forwarder thread in between.
+///
+/// `send` returns `false` when the receiver is gone. That is
+/// informational only: executors never infer cancellation from a dead
+/// sink (cancellation is always explicit via [`CancelToken`]).
+pub trait EventSink: Send {
+    fn send(&self, ev: GenEvent) -> bool;
+}
+
+impl EventSink for mpsc::Sender<GenEvent> {
+    fn send(&self, ev: GenEvent) -> bool {
+        mpsc::Sender::send(self, ev).is_ok()
+    }
+}
 
 /// Why a generation stopped.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

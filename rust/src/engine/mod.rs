@@ -9,8 +9,8 @@ pub mod events;
 pub mod stats;
 
 pub use events::{
-    truncate_chunk, CancelToken, FinishReason, GenEvent, GenParams, Response,
-    RoundStats,
+    truncate_chunk, CancelToken, EventSink, FinishReason, GenEvent, GenParams,
+    Response, RoundStats,
 };
 pub use stats::{GenerationStats, StepStats};
 

@@ -66,6 +66,7 @@ fn config_from(cli: &Cli) -> Result<Config, String> {
                 | "drafter"
                 | "token_budget"
                 | "req_id"
+                | "conns"
         ) {
             continue; // harness-level options, not config keys
         }
@@ -180,6 +181,13 @@ fn cmd_serve(cli: &Cli) -> Result<(), String> {
 fn cmd_client(cli: &Cli) -> Result<(), String> {
     let cfg = config_from(cli)?;
     let addr = cli.opt("addr").unwrap_or(&cfg.server.addr);
+    if let Some(conns) = cli.opt("conns") {
+        // Before opening the control connection: the fan-out drive
+        // should own every one of the server's admission slots it asks
+        // for.
+        let conns: usize = conns.parse().map_err(|_| "bad --conns")?;
+        return cmd_client_conns(&cfg, addr, conns);
+    }
     let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
     if cli.has_flag("stats") {
         println!("{}", client.stats()?.to_string());
@@ -205,6 +213,73 @@ fn cmd_client(cli: &Cli) -> Result<(), String> {
         cfg.engine.target_temp,
     )?;
     println!("{}", reply.to_string());
+    Ok(())
+}
+
+/// Reactor fan-out drive: open `conns` concurrent connections, stream
+/// one request on each, and report completion + the server's transport
+/// gauges — the quick way to see a fixed reactor pool serving many
+/// sockets (`dyspec client --conns 64`).
+fn cmd_client_conns(
+    cfg: &Config,
+    addr: &str,
+    conns: usize,
+) -> Result<(), String> {
+    if conns == 0 {
+        return Err("--conns must be >= 1".into());
+    }
+    let prompts = PromptSet::by_name(
+        &cfg.dataset,
+        conns,
+        cfg.prompt_len,
+        cfg.engine.seed + 100,
+    )
+    .ok_or("bad dataset")?;
+    let max_new = cfg.engine.max_new_tokens;
+    let temp = cfg.engine.target_temp;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..conns)
+        .map(|k| {
+            let addr = addr.to_string();
+            let prompt: Vec<u32> = prompts.get(k).to_vec();
+            std::thread::spawn(move || -> Result<usize, String> {
+                let mut client =
+                    Client::connect(&addr).map_err(|e| e.to_string())?;
+                let params = dyspec::coordinator::GenParams::simple(max_new, temp);
+                let (tokens, _done) =
+                    client.generate_stream(1, &prompt, &params, |_| {})?;
+                Ok(tokens.len())
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut tokens = 0usize;
+    for h in handles {
+        match h.join().map_err(|_| "client thread panicked")? {
+            Ok(n) => {
+                ok += 1;
+                tokens += n;
+            }
+            Err(e) => {
+                failed += 1;
+                eprintln!("conn failed: {e}");
+            }
+        }
+    }
+    println!(
+        "{ok}/{conns} connections completed ({failed} failed), {tokens} tokens in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+    let stats = client.stats()?;
+    for key in ["transport_threads", "open_conns", "outbox_frames", "backpressure_closed"] {
+        let v = stats.get(key).and_then(Json::as_f64).unwrap_or(-1.0);
+        println!("  {key}: {v}");
+    }
+    if failed > 0 {
+        return Err(format!("{failed} of {conns} connections failed"));
+    }
     Ok(())
 }
 

@@ -36,7 +36,9 @@ use std::time::Duration;
 use crate::cache::{verify_bill, CacheManager, TreeLease, VerifyBill};
 use crate::config::{Config, PolicyKind};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::queue::{FinishReason, GenEvent, Request, RoundStats};
+use crate::coordinator::queue::{
+    EventSink, FinishReason, GenEvent, Request, RoundStats,
+};
 use crate::draft::{make_policy, TreePolicy};
 use crate::log_debug;
 use crate::models::{ForestItem, LogitModel, TimedModel};
@@ -573,7 +575,7 @@ mod tests {
                 params,
                 submitted_at: Instant::now(),
                 cancel: cancel.clone(),
-                events: tx,
+                events: Box::new(tx),
             },
             RequestHandle {
                 id,

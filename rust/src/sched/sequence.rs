@@ -17,11 +17,11 @@
 //! pin down. Each step's accepted chunk is streamed through the request's
 //! event channel as the step lands (`GenEvent::Chunk`).
 
-use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::coordinator::queue::{
-    CancelToken, FinishReason, GenEvent, Request, Response, RoundStats,
+    CancelToken, EventSink, FinishReason, GenEvent, Request, Response,
+    RoundStats,
 };
 use crate::util::Rng;
 
@@ -83,7 +83,7 @@ pub struct Sequence {
     pub finish: FinishReason,
     /// Cooperative cancellation, shared with the submitter.
     pub cancel: CancelToken,
-    events: mpsc::Sender<GenEvent>,
+    events: Box<dyn EventSink>,
 }
 
 impl Sequence {
@@ -195,13 +195,13 @@ impl Sequence {
         self.is_done()
     }
 
-    /// Consume the finished sequence into its response + event sender.
+    /// Consume the finished sequence into its response + event sink.
     /// Call exactly once, after `on_step` returned true or the batcher
     /// retired the sequence on cancellation (set `finish` first).
     pub fn into_response(
         self,
         worker: usize,
-    ) -> (mpsc::Sender<GenEvent>, Response) {
+    ) -> (Box<dyn EventSink>, Response) {
         let steps = self.steps.max(1);
         let resp = Response {
             id: self.id,
@@ -224,6 +224,7 @@ impl Sequence {
 mod tests {
     use super::*;
     use crate::coordinator::queue::GenParams;
+    use std::sync::mpsc;
 
     fn mk_req(
         id: u64,
@@ -238,7 +239,7 @@ mod tests {
                 params,
                 submitted_at: Instant::now(),
                 cancel: CancelToken::new(),
-                events: tx,
+                events: Box::new(tx),
             },
             rx,
         )
@@ -286,7 +287,7 @@ mod tests {
         assert_eq!(resp.steps, 3);
         assert_eq!(resp.finish, FinishReason::Length);
         assert!(resp.ttft_secs >= 0.0);
-        tx.send(GenEvent::Done(Box::new(resp))).unwrap();
+        assert!(tx.send(GenEvent::Done(Box::new(resp))));
         match rx.recv().unwrap() {
             GenEvent::Done(resp) => assert_eq!(resp.tokens.len(), 4),
             _ => panic!("expected done"),

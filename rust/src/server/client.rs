@@ -27,6 +27,13 @@ impl Client {
         })
     }
 
+    /// Raw write half of the connection — for tests and drivers that
+    /// need byte-level control over how envelopes hit the wire (the
+    /// incremental decoder must not care).
+    pub fn writer_mut(&mut self) -> &mut TcpStream {
+        &mut self.writer
+    }
+
     /// Send one raw line (no reply expected yet).
     pub fn send_line(&mut self, line: &str) -> Result<(), String> {
         self.writer

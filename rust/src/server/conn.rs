@@ -1,0 +1,887 @@
+//! Per-connection state machine for the reactor transport (DESIGN.md
+//! §Transport).
+//!
+//! One [`Conn`] owns a nonblocking socket end to end: an incremental
+//! [`FrameDecoder`] on the read side (bytes in → protocol lines out, no
+//! `BufRead::read_line`), and on the write side a bounded shared outbox
+//! of serialized frames plus the partially-written front frame. The
+//! reactor thread that owns the connection drives both directions from
+//! readiness events; worker threads never touch the socket — their
+//! [`ConnSink`] serializes each [`GenEvent`] into a wire frame, pushes
+//! it into the outbox and wakes the reactor.
+//!
+//! Disconnects are observed, not polled: a nonblocking read returning 0
+//! (or a failed write) cancels every in-flight request of the
+//! connection — the reactor-EOF replacement for the old destructive
+//! `peek`-polling `peer_gone` loop. Backpressure is bounded the same
+//! way: a client that stops draining its socket until the outbox cap is
+//! hit is treated as gone (requests cancelled, connection closed,
+//! `backpressure_closed` counted) rather than buffered without limit.
+//!
+//! Legacy un-enveloped generates keep their v0 contract — one blocking
+//! one-shot reply each, replies in submission order — via a per-
+//! connection FIFO: at most one legacy request is in flight at a time,
+//! the next one is submitted when its predecessor's reply frame is
+//! queued. Enveloped v1 traffic (including cancels) flows concurrently,
+//! which the old transport could not do while a legacy wait blocked its
+//! reader thread.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::protocol::{self, ClientMessage};
+use super::reactor::{raw_fd, ReactorHandle, Waker};
+use crate::coordinator::{
+    CancelToken, Coordinator, EventSink, GenEvent, GenParams, Metrics,
+};
+use crate::log_debug;
+use crate::util::json::{parse as parse_json, Json};
+
+/// Server-wide context a connection needs while handling traffic.
+pub struct TransportCtl {
+    pub coord: Arc<Coordinator>,
+    /// Accept-loop + reactor stop flag (`{"cmd":"shutdown"}` sets it).
+    pub stop: Arc<AtomicBool>,
+    /// Every reactor's waker, so a shutdown observed on any connection
+    /// reaches all event loops immediately.
+    pub wakers: Vec<Waker>,
+}
+
+impl TransportCtl {
+    fn metrics(&self) -> &Metrics {
+        &self.coord.metrics
+    }
+}
+
+/// The halves of a connection shared with worker-side sinks: the
+/// bounded frame outbox, the in-flight request map, and the flags the
+/// reactor polls on its dirty pass.
+pub struct ConnShared {
+    pub id: u64,
+    outbox: Mutex<VecDeque<String>>,
+    outbox_cap: usize,
+    /// A frame push found the outbox full: the client is not draining
+    /// its socket — the reactor tears the connection down.
+    overflowed: AtomicBool,
+    /// Reactor closed the connection; sinks drop events silently.
+    closed: AtomicBool,
+    /// The active legacy request queued its terminal reply; the reactor
+    /// submits the next one from the FIFO.
+    legacy_finished: AtomicBool,
+    /// Client req_id → cancel token for every in-flight v1 request.
+    inflight: Mutex<HashMap<u64, CancelToken>>,
+    reactor: Arc<ReactorHandle>,
+    metrics: Arc<Metrics>,
+}
+
+impl ConnShared {
+    pub fn new(
+        id: u64,
+        outbox_cap: usize,
+        reactor: Arc<ReactorHandle>,
+        metrics: Arc<Metrics>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            id,
+            outbox: Mutex::new(VecDeque::new()),
+            outbox_cap: outbox_cap.max(1),
+            overflowed: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
+            legacy_finished: AtomicBool::new(false),
+            inflight: Mutex::new(HashMap::new()),
+            reactor,
+            metrics,
+        })
+    }
+
+    /// Queue one serialized frame. Returns false when the connection is
+    /// closed or the outbox is at capacity (the overflow flag is set and
+    /// the reactor will close the connection — bounded memory beats an
+    /// unbounded buffer to a client that stopped reading).
+    fn push_frame(&self, line: String) -> bool {
+        let mut outbox = self.outbox.lock().unwrap();
+        // The closed check must happen under the outbox lock: `close()`
+        // drains the outbox (and its gauge contribution) under the same
+        // lock, so a racing push either lands before the drain (and is
+        // drained with the rest) or observes `closed` — never leaks a
+        // frame into a swept connection.
+        if self.closed.load(Ordering::SeqCst) {
+            return false;
+        }
+        if outbox.len() >= self.outbox_cap {
+            self.overflowed.store(true, Ordering::SeqCst);
+            false
+        } else {
+            outbox.push_back(line);
+            self.metrics.outbox_inc();
+            true
+        }
+    }
+
+    fn pop_frame(&self) -> Option<String> {
+        let line = self.outbox.lock().unwrap().pop_front();
+        if line.is_some() {
+            self.metrics.outbox_dec(1);
+        }
+        line
+    }
+
+    fn outbox_len(&self) -> usize {
+        self.outbox.lock().unwrap().len()
+    }
+
+    fn at_capacity(&self) -> bool {
+        self.outbox.lock().unwrap().len() >= self.outbox_cap
+    }
+
+    fn outbox_cap(&self) -> usize {
+        self.outbox_cap
+    }
+
+    fn notify(&self) {
+        self.reactor.notify_dirty(self.id);
+    }
+
+    /// Mark closed and drain the outbox (adjusting the frame gauge);
+    /// subsequent pushes are refused.
+    fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let drained = {
+            let mut outbox = self.outbox.lock().unwrap();
+            let n = outbox.len();
+            outbox.clear();
+            n
+        };
+        self.metrics.outbox_dec(drained as u64);
+    }
+}
+
+/// Worker-side event sink of one request: serializes events into wire
+/// frames, pushes them into the connection outbox and wakes the reactor
+/// — the replacement for the per-request forwarder thread.
+pub struct ConnSink {
+    req_id: u64,
+    stream: bool,
+    /// Legacy un-enveloped request: the terminal event becomes the v0
+    /// one-shot reply object and advances the connection's legacy FIFO.
+    legacy: bool,
+    shared: Arc<ConnShared>,
+    /// Set once the request was accepted by the admission queue — a sink
+    /// dropped before that (validation / queue-full rejection) must stay
+    /// silent, because the submitter already sent the error frame.
+    admitted: Arc<AtomicBool>,
+    done_sent: AtomicBool,
+}
+
+impl ConnSink {
+    fn new(
+        req_id: u64,
+        stream: bool,
+        legacy: bool,
+        shared: Arc<ConnShared>,
+        admitted: Arc<AtomicBool>,
+    ) -> Self {
+        Self {
+            req_id,
+            stream,
+            legacy,
+            shared,
+            admitted,
+            done_sent: AtomicBool::new(false),
+        }
+    }
+
+    fn finish(&self, line: String) -> bool {
+        self.done_sent.store(true, Ordering::SeqCst);
+        if self.legacy {
+            let ok = self.shared.push_frame(line);
+            self.shared.legacy_finished.store(true, Ordering::SeqCst);
+            ok
+        } else {
+            // Free the id BEFORE the terminal frame can reach the
+            // client: it may legitimately reuse its req_id the moment it
+            // reads `done`, and the duplicate check must not race that.
+            self.shared.inflight.lock().unwrap().remove(&self.req_id);
+            self.shared.push_frame(line)
+        }
+    }
+}
+
+impl EventSink for ConnSink {
+    fn send(&self, ev: GenEvent) -> bool {
+        if self.shared.closed.load(Ordering::SeqCst) {
+            return false;
+        }
+        let pushed = match ev {
+            GenEvent::Chunk { tokens, stats } => {
+                if self.stream && !self.legacy {
+                    self.shared.push_frame(
+                        protocol::chunk_frame(self.req_id, &tokens, &stats)
+                            .to_string(),
+                    )
+                } else {
+                    // One-shot surfaces only want the terminal frame.
+                    true
+                }
+            }
+            GenEvent::Done(resp) => {
+                let line = if self.legacy {
+                    protocol::response_json(&resp).to_string()
+                } else {
+                    protocol::done_frame(self.req_id, &resp, !self.stream)
+                        .to_string()
+                };
+                self.finish(line)
+            }
+        };
+        self.shared.notify();
+        pushed
+    }
+}
+
+impl Drop for ConnSink {
+    /// An admitted request dropped without its `Done` (coordinator torn
+    /// down mid-flight) still terminates its stream — the sink itself
+    /// emits the terminal error frame the forwarder thread used to send
+    /// on a disconnected channel.
+    fn drop(&mut self) {
+        if !self.admitted.load(Ordering::SeqCst)
+            || self.done_sent.load(Ordering::SeqCst)
+        {
+            return;
+        }
+        let line = if self.legacy {
+            protocol::error_json("worker dropped request").to_string()
+        } else {
+            protocol::error_frame(self.req_id, "worker dropped request")
+                .to_string()
+        };
+        self.finish(line);
+        self.shared.notify();
+    }
+}
+
+/// Ordered per-connection work the v0 reply contract depends on: the
+/// blocking transport answered every un-keyed line (legacy generates,
+/// parse errors, stats) strictly in submission order, so while legacy
+/// work is pending, later un-keyed replies queue behind it instead of
+/// overtaking on the wire (v1 frames are `req_id`-keyed and exempt).
+enum LegacyItem {
+    Generate(Vec<u32>, GenParams),
+    /// A pre-serialized un-keyed reply (parse-error object,
+    /// pipeline-full error).
+    Reply(String),
+    /// Stats snapshot — serialized at emission time, so the counters
+    /// are as fresh as the blocking transport's (which only snapshotted
+    /// after the preceding generates finished).
+    Stats,
+}
+
+/// One connection, owned and driven by exactly one reactor thread.
+pub struct Conn {
+    stream: TcpStream,
+    peer: String,
+    decoder: protocol::FrameDecoder,
+    shared: Arc<ConnShared>,
+    /// Front frame currently being written, and how much of it went out.
+    partial: Vec<u8>,
+    written: usize,
+    /// Un-keyed work not yet performed (FIFO preserves v0's
+    /// submission-order replies) and the cancel token of the legacy
+    /// generate in flight.
+    legacy_queue: VecDeque<LegacyItem>,
+    legacy_active: Option<CancelToken>,
+    /// Flush what is queued, then close (protocol violation path).
+    closing: bool,
+    /// Closed: awaiting sweep by the reactor loop.
+    pub closed: bool,
+    /// Write-interest currently registered with the poller.
+    pub registered_write: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, shared: Arc<ConnShared>) -> Self {
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into());
+        Self {
+            stream,
+            peer,
+            decoder: protocol::FrameDecoder::default(),
+            shared,
+            partial: Vec::new(),
+            written: 0,
+            legacy_queue: VecDeque::new(),
+            legacy_active: None,
+            closing: false,
+            closed: false,
+            registered_write: false,
+        }
+    }
+
+    pub fn fd(&self) -> i32 {
+        raw_fd(&self.stream)
+    }
+
+    /// Does the poller need to watch this socket for writability?
+    pub fn wants_write(&self) -> bool {
+        self.written < self.partial.len() || self.shared.outbox_len() > 0
+    }
+
+    /// Readiness: drain the socket, feed the decoder, handle every
+    /// complete line. EOF or a read error closes the connection and
+    /// cancels its in-flight work.
+    ///
+    /// A `closing` connection (protocol violation, flushing its error
+    /// reply) still reads — and discards — inbound bytes: leaving them
+    /// unread would make level-triggered epoll report the fd forever
+    /// (a busy-spin a hostile peer could provoke for free), and reading
+    /// is also how the peer's EOF/reset is observed while we wait for
+    /// the outbox to drain.
+    ///
+    /// The per-call read budget is the fairness bound: one firehose
+    /// peer yields the reactor back after ~256 KB and level-triggered
+    /// polling resumes it next iteration, instead of starving every
+    /// other connection on the thread.
+    pub fn on_readable(&mut self, ctl: &TransportCtl) {
+        let mut buf = [0u8; 16 * 1024];
+        for _ in 0..16 {
+            if self.closed {
+                return;
+            }
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.close(ctl, "peer closed");
+                    return;
+                }
+                Ok(n) => {
+                    if !self.closing {
+                        self.decoder.push(&buf[..n]);
+                        self.drain_lines(ctl);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.close(ctl, "read error");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drain_lines(&mut self, ctl: &TransportCtl) {
+        loop {
+            match self.decoder.next_line() {
+                Ok(Some(line)) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    self.handle_line(ctl, &line);
+                    if self.closed || self.closing {
+                        return;
+                    }
+                }
+                Ok(None) => return,
+                Err(e) => {
+                    // Framing is unrecoverable: tell the peer (legacy
+                    // error object — there is no attributable req_id in
+                    // a broken byte stream), flush, close.
+                    self.push(ctl, protocol::error_json(&e.to_string()).to_string());
+                    self.closing = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handle_line(&mut self, ctl: &TransportCtl, line: &str) {
+        match protocol::parse_client_message(line) {
+            Ok(ClientMessage::Generate {
+                req_id: Some(req_id),
+                prompt,
+                params,
+                stream,
+            }) => self.submit_v1(ctl, req_id, prompt, params, stream),
+            Ok(ClientMessage::Generate {
+                req_id: None,
+                prompt,
+                params,
+                ..
+            }) => {
+                // Bounded pipeline: the blocking transport implicitly
+                // throttled pipelined v0 clients through the kernel
+                // recv buffer (its reader was parked on the active
+                // generate); the reactor reads eagerly, so the FIFO
+                // needs an explicit cap — each queued request owes one
+                // reply frame, so the outbox cap is the natural bound.
+                if self.legacy_queue.len() >= self.shared.outbox_cap() {
+                    self.reply_unkeyed(
+                        ctl,
+                        LegacyItem::Reply(
+                            protocol::error_json("legacy pipeline full")
+                                .to_string(),
+                        ),
+                    );
+                } else {
+                    self.legacy_queue
+                        .push_back(LegacyItem::Generate(prompt, params));
+                    self.advance_legacy(ctl);
+                }
+            }
+            Ok(ClientMessage::Cancel { req_id }) => {
+                // Fire-and-forget and idempotent: the request's own
+                // `done` frame (finish:"cancelled") is the
+                // acknowledgement; an unknown/finished id is a silent
+                // no-op (a second terminal frame would violate the
+                // exactly-one-done|error stream contract).
+                if let Some(token) =
+                    self.shared.inflight.lock().unwrap().get(&req_id)
+                {
+                    token.cancel();
+                }
+            }
+            Ok(ClientMessage::Stats) => {
+                self.reply_unkeyed(ctl, LegacyItem::Stats);
+            }
+            Ok(ClientMessage::Shutdown) => {
+                self.push(ctl, protocol::ok_json().to_string());
+                ctl.stop.store(true, Ordering::SeqCst);
+                for waker in &ctl.wakers {
+                    waker.wake();
+                }
+            }
+            Err(e) => {
+                // Attribute the failure to the envelope's req_id when
+                // one is recoverable, so the submitter's stream still
+                // gets its terminal frame — UNLESS that id is currently
+                // in flight: a healthy stream must never receive a
+                // second terminal frame (the malformed line was not a
+                // valid submission for it), so such errors fall back to
+                // the un-attributed legacy object, as does any line
+                // with no readable req_id.
+                let req_id = parse_json(line).ok().and_then(|doc| {
+                    doc.get("req_id")
+                        .and_then(Json::as_f64)
+                        .map(|v| v as u64)
+                });
+                let attributable = match req_id {
+                    Some(rid) => {
+                        !self.shared.inflight.lock().unwrap().contains_key(&rid)
+                    }
+                    None => false,
+                };
+                if attributable {
+                    let rid = req_id.expect("attributable implies some id");
+                    self.push(ctl, protocol::error_frame(rid, &e).to_string());
+                } else {
+                    self.reply_unkeyed(
+                        ctl,
+                        LegacyItem::Reply(protocol::error_json(&e).to_string()),
+                    );
+                }
+            }
+        }
+    }
+
+    fn submit_v1(
+        &mut self,
+        ctl: &TransportCtl,
+        req_id: u64,
+        prompt: Vec<u32>,
+        params: GenParams,
+        stream: bool,
+    ) {
+        // The map lock is held across admission so a racing terminal
+        // event (sink-side removal) cannot interleave with the insert.
+        let mut map = self.shared.inflight.lock().unwrap();
+        if map.contains_key(&req_id) {
+            drop(map);
+            self.push(
+                ctl,
+                protocol::error_frame(req_id, "req_id already in flight")
+                    .to_string(),
+            );
+            return;
+        }
+        let admitted = Arc::new(AtomicBool::new(false));
+        let sink = ConnSink::new(
+            req_id,
+            stream,
+            false,
+            self.shared.clone(),
+            admitted.clone(),
+        );
+        match ctl
+            .coord
+            .try_submit_sink(prompt, params, Box::new(sink))
+        {
+            Ok((_id, cancel)) => {
+                admitted.store(true, Ordering::SeqCst);
+                map.insert(req_id, cancel);
+            }
+            Err(e) => {
+                drop(map);
+                self.push(ctl, protocol::error_frame(req_id, &e).to_string());
+            }
+        }
+    }
+
+    /// Work through the un-keyed FIFO: emit queued replies, submit the
+    /// next legacy generate once the active one has queued its reply —
+    /// at most one in flight per connection, so pipelined v0 clients
+    /// read every un-keyed reply in submission order.
+    fn advance_legacy(&mut self, ctl: &TransportCtl) {
+        if self.shared.legacy_finished.swap(false, Ordering::SeqCst) {
+            self.legacy_active = None;
+        }
+        while self.legacy_active.is_none() && !self.closed {
+            let Some(item) = self.legacy_queue.pop_front() else {
+                break;
+            };
+            let (prompt, params) = match item {
+                LegacyItem::Generate(prompt, params) => (prompt, params),
+                other => {
+                    self.emit_unkeyed(ctl, other);
+                    continue;
+                }
+            };
+            let admitted = Arc::new(AtomicBool::new(false));
+            let sink = ConnSink::new(
+                0,
+                false,
+                true,
+                self.shared.clone(),
+                admitted.clone(),
+            );
+            match ctl.coord.try_submit_sink(prompt, params, Box::new(sink)) {
+                Ok((_id, cancel)) => {
+                    admitted.store(true, Ordering::SeqCst);
+                    self.legacy_active = Some(cancel);
+                }
+                Err(e) => {
+                    // This item's own reply — at the head, so in order.
+                    self.push(ctl, protocol::error_json(&e).to_string());
+                }
+            }
+        }
+    }
+
+    /// Answer an un-keyed line (stats, parse error, pipeline-full).
+    /// While legacy work is pending the reply queues behind it in the
+    /// FIFO (v0's line-order contract); otherwise it goes straight to
+    /// the outbox. The FIFO fallback stays bounded: past twice the
+    /// outbox cap the reply skips the queue — a flood degrades ordering
+    /// (for the flooder alone) rather than growing memory.
+    fn reply_unkeyed(&mut self, ctl: &TransportCtl, item: LegacyItem) {
+        let legacy_pending =
+            self.legacy_active.is_some() || !self.legacy_queue.is_empty();
+        if legacy_pending
+            && self.legacy_queue.len() < 2 * self.shared.outbox_cap()
+        {
+            self.legacy_queue.push_back(item);
+        } else {
+            self.emit_unkeyed(ctl, item);
+        }
+    }
+
+    /// Serialize and queue one non-generate FIFO item's reply now.
+    fn emit_unkeyed(&mut self, ctl: &TransportCtl, item: LegacyItem) {
+        match item {
+            LegacyItem::Reply(line) => self.push(ctl, line),
+            LegacyItem::Stats => {
+                let snap = ctl.metrics().snapshot().to_string();
+                self.push(ctl, snap);
+            }
+            LegacyItem::Generate(..) => {
+                unreachable!("generate items are submitted, not emitted")
+            }
+        }
+    }
+
+    /// Reactor-side reply push (stats snapshots, error frames). Unlike
+    /// worker-side sinks, the reactor owns the socket, so a full outbox
+    /// is first given a chance to drain; if the socket is blocked AND
+    /// the outbox is at capacity, the reply cannot be delivered within
+    /// the buffering bound — dropping it silently would violate the
+    /// exactly-one-terminal-frame contract, so the connection is torn
+    /// down instead (the peer sees EOF, not a missing reply).
+    fn push(&mut self, ctl: &TransportCtl, line: String) {
+        if self.closed {
+            return;
+        }
+        if self.shared.at_capacity() {
+            self.pump_out(ctl);
+        }
+        if !self.shared.push_frame(line) && !self.closed {
+            ctl.metrics().on_backpressure_closed();
+            self.close(ctl, "outbox overflow (reactor reply)");
+        }
+    }
+
+    /// Dirty pass: worker pushed frames, a legacy request finished, or
+    /// the outbox overflowed.
+    pub fn on_dirty(&mut self, ctl: &TransportCtl) {
+        if self.closed {
+            return;
+        }
+        if self.shared.overflowed.load(Ordering::SeqCst) {
+            ctl.metrics().on_backpressure_closed();
+            self.close(ctl, "outbox overflow (client not draining)");
+            return;
+        }
+        self.advance_legacy(ctl);
+        self.pump_out(ctl);
+    }
+
+    /// Make the partial-write buffer non-empty: keep the half-written
+    /// front frame, or load (and newline-terminate) the next outbox
+    /// frame. Returns false when there is nothing left to write — the
+    /// ONE place frame framing happens, shared by the nonblocking pump
+    /// and the shutdown flush.
+    fn load_partial(&mut self) -> bool {
+        if self.written < self.partial.len() {
+            return true;
+        }
+        self.partial.clear();
+        self.written = 0;
+        match self.shared.pop_frame() {
+            Some(line) => {
+                self.partial = line.into_bytes();
+                self.partial.push(b'\n');
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Write until the socket would block or everything queued went out.
+    pub fn pump_out(&mut self, ctl: &TransportCtl) {
+        while !self.closed {
+            if !self.load_partial() {
+                break;
+            }
+            match self.stream.write(&self.partial[self.written..]) {
+                Ok(0) => {
+                    self.close(ctl, "write returned zero");
+                    return;
+                }
+                Ok(n) => self.written += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.close(ctl, "write error");
+                    return;
+                }
+            }
+        }
+        if self.closing && !self.closed {
+            self.close(ctl, "protocol violation");
+        }
+    }
+
+    /// Best-effort blocking flush for server shutdown: the reply to
+    /// `{"cmd":"shutdown"}` (and anything else queued) should reach the
+    /// peer before the event loop exits. Bounded twice over: a per-write
+    /// timeout for a fully-stalled peer AND an overall deadline, so a
+    /// trickle-reading peer cannot hold shutdown hostage one byte at a
+    /// time.
+    pub fn flush_blocking(&mut self, ctl: &TransportCtl) {
+        if self.closed {
+            return;
+        }
+        let _ = self.stream.set_nonblocking(false);
+        let _ = self
+            .stream
+            .set_write_timeout(Some(Duration::from_millis(250)));
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while self.load_partial() && Instant::now() < deadline {
+            match self.stream.write(&self.partial[self.written..]) {
+                Ok(n) if n > 0 => self.written += n,
+                _ => break,
+            }
+        }
+        self.close(ctl, "server shutdown");
+    }
+
+    /// Tear the connection down: every in-flight request (v1 and legacy)
+    /// is cancelled so scheduler slots and KV residency free up within
+    /// one speculation round, queued-but-unsubmitted legacy work is
+    /// dropped, and worker sinks go quiet. The reactor loop sweeps the
+    /// struct and deregisters the fd afterwards.
+    pub fn close(&mut self, ctl: &TransportCtl, why: &str) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        self.shared.close();
+        for token in self.shared.inflight.lock().unwrap().values() {
+            token.cancel();
+        }
+        if let Some(token) = self.legacy_active.take() {
+            token.cancel();
+        }
+        self.legacy_queue.clear();
+        ctl.metrics().on_conn_closed();
+        log_debug!("conn {} ({}) closed: {why}", self.shared.id, self.peer);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{FinishReason, Response, RoundStats};
+    use crate::server::reactor::Poller;
+
+    fn mk_shared(cap: usize) -> Arc<ConnShared> {
+        let poller = Poller::new().unwrap();
+        ConnShared::new(
+            1,
+            cap,
+            ReactorHandle::new(poller.waker()),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    fn resp(finish: FinishReason) -> Box<Response> {
+        Box::new(Response {
+            id: 1,
+            worker: 0,
+            tokens: vec![4, 5],
+            steps: 1,
+            emitted_per_step: 2.0,
+            queue_secs: 0.0,
+            gen_secs: 0.0,
+            ttft_secs: 0.0,
+            virtual_secs: 0.0,
+            cache_hits: 0,
+            finish,
+        })
+    }
+
+    /// The backpressure mechanism, isolated from kernel socket buffers:
+    /// pushes beyond the cap are refused and flag the connection for
+    /// teardown; the gauge tracks queued frames exactly.
+    #[test]
+    fn outbox_cap_refuses_and_flags_overflow() {
+        let shared = mk_shared(2);
+        assert!(shared.push_frame("a".into()));
+        assert!(shared.push_frame("b".into()));
+        assert!(!shared.push_frame("c".into()));
+        assert!(shared.overflowed.load(Ordering::SeqCst));
+        assert_eq!(shared.metrics.outbox_frames(), 2);
+        assert_eq!(shared.pop_frame().as_deref(), Some("a"));
+        assert_eq!(shared.metrics.outbox_frames(), 1);
+        shared.close();
+        assert_eq!(shared.metrics.outbox_frames(), 0);
+        assert!(!shared.push_frame("d".into()), "closed outbox accepted");
+    }
+
+    /// The sink serializes chunk + done into wire frames in the outbox,
+    /// and frees the req_id BEFORE queueing the terminal frame.
+    #[test]
+    fn sink_frames_events_and_frees_req_id_first() {
+        let shared = mk_shared(16);
+        shared
+            .inflight
+            .lock()
+            .unwrap()
+            .insert(7, CancelToken::new());
+        let sink = ConnSink::new(
+            7,
+            true,
+            false,
+            shared.clone(),
+            Arc::new(AtomicBool::new(true)),
+        );
+        use crate::coordinator::EventSink;
+        assert!(sink.send(GenEvent::Chunk {
+            tokens: vec![9, 8],
+            stats: RoundStats::default(),
+        }));
+        assert!(sink.send(GenEvent::Done(resp(FinishReason::Length))));
+        assert!(!shared.inflight.lock().unwrap().contains_key(&7));
+
+        let chunk =
+            protocol::parse_frame(&shared.pop_frame().unwrap()).unwrap();
+        assert_eq!((chunk.req_id, chunk.event.as_str()), (Some(7), "chunk"));
+        assert_eq!(chunk.tokens(), vec![9, 8]);
+        let done = protocol::parse_frame(&shared.pop_frame().unwrap()).unwrap();
+        assert_eq!((done.req_id, done.event.as_str()), (Some(7), "done"));
+        assert!(done.tokens().is_empty(), "streamed done repeats tokens");
+        drop(sink); // done was sent: drop emits nothing further
+        assert!(shared.pop_frame().is_none());
+    }
+
+    /// One-shot (stream=false) sinks suppress chunk frames; legacy sinks
+    /// reply with the bare v0 object and flip the FIFO-advance flag.
+    #[test]
+    fn oneshot_and_legacy_sink_shapes() {
+        let shared = mk_shared(16);
+        use crate::coordinator::EventSink;
+        let oneshot = ConnSink::new(
+            3,
+            false,
+            false,
+            shared.clone(),
+            Arc::new(AtomicBool::new(true)),
+        );
+        assert!(oneshot.send(GenEvent::Chunk {
+            tokens: vec![1],
+            stats: RoundStats::default(),
+        }));
+        assert!(shared.pop_frame().is_none(), "one-shot leaked a chunk");
+        assert!(oneshot.send(GenEvent::Done(resp(FinishReason::Length))));
+        let done = protocol::parse_frame(&shared.pop_frame().unwrap()).unwrap();
+        assert_eq!(done.tokens(), vec![4, 5], "one-shot done carries tokens");
+
+        let legacy = ConnSink::new(
+            0,
+            false,
+            true,
+            shared.clone(),
+            Arc::new(AtomicBool::new(true)),
+        );
+        assert!(legacy.send(GenEvent::Done(resp(FinishReason::Length))));
+        assert!(shared.legacy_finished.load(Ordering::SeqCst));
+        let reply = shared.pop_frame().unwrap();
+        let doc = parse_json(&reply).unwrap();
+        assert!(doc.get("event").is_none(), "legacy reply got enveloped");
+        assert_eq!(doc.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// An admitted sink dropped without its Done (coordinator teardown)
+    /// emits the terminal error frame; an unadmitted one (rejected
+    /// submission) stays silent — the submitter already answered.
+    #[test]
+    fn sink_drop_semantics() {
+        let shared = mk_shared(16);
+        let admitted = ConnSink::new(
+            5,
+            true,
+            false,
+            shared.clone(),
+            Arc::new(AtomicBool::new(true)),
+        );
+        drop(admitted);
+        let frame =
+            protocol::parse_frame(&shared.pop_frame().unwrap()).unwrap();
+        assert_eq!((frame.req_id, frame.event.as_str()), (Some(5), "error"));
+        assert_eq!(frame.error(), Some("worker dropped request"));
+
+        let unadmitted = ConnSink::new(
+            6,
+            true,
+            false,
+            shared.clone(),
+            Arc::new(AtomicBool::new(false)),
+        );
+        drop(unadmitted);
+        assert!(shared.pop_frame().is_none(), "unadmitted drop spoke");
+    }
+}

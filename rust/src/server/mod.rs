@@ -14,36 +14,69 @@
 //!   <- {"v":1,"req_id":8,"event":"done","finish":"length","tokens":[...]}
 //!   -> {"cmd":"stats"}
 //!   <- {"admitted":...,"completed":...,"cancelled":...,...}
-//!   -> {"cmd":"shutdown"}        (stops the accept loop)
+//!   -> {"cmd":"shutdown"}        (stops the transport)
+//!
+//! **Transport (DESIGN.md §Transport):** a reactor, not
+//! thread-per-connection. A nonblocking listener and every accepted
+//! socket are driven by a fixed pool of `server.reactor_threads` event
+//! loops (epoll on Linux, a portable readiness tick elsewhere —
+//! `server/reactor.rs`); each connection is a state machine
+//! (`server/conn.rs`) owning an incremental frame decoder and a bounded
+//! outbox. Worker `GenEvent`s are serialized into frames by the
+//! request's `ConnSink` and land directly in the connection outbox,
+//! waking the owning reactor — there are no per-request forwarder
+//! threads and no per-connection reader/writer threads, so server-side
+//! thread count is O(reactor_threads + workers), not O(connections).
+//!
+//! Admission control and backpressure: more than `server.max_conns`
+//! concurrent connections are refused at accept with a
+//! `{"error":"server at capacity"}` line; a client that stops draining
+//! its socket until `server.outbox_frames` frames pile up is treated as
+//! gone (connection closed, in-flight work cancelled,
+//! `backpressure_closed` counted).
 //!
 //! A request that cannot start (bad envelope, queue-full backpressure)
 //! gets {"v":1,"req_id":..,"event":"error","error":"..."}; un-enveloped
 //! parse errors get the legacy {"error":"..."} line. Legacy un-enveloped
-//! generates ({"prompt":[...]} with no req_id) are served blocking with
-//! the one-shot reply object, exactly as before protocol v1.
+//! generates ({"prompt":[...]} with no req_id) keep v0's contract — one
+//! one-shot reply each, in submission order — via a per-connection FIFO
+//! (one legacy request in flight at a time); enveloped traffic flows
+//! concurrently even while a legacy request runs, which the blocking
+//! transport could not do.
 //!
-//! Disconnect handling: when the client side goes away (reader EOF or a
-//! failed frame write), every in-flight request of that connection is
-//! cancelled — its scheduler slot and KV residency are released within
-//! one speculation round, and nothing panics on writes to the dead
-//! socket (the writer thread simply drains and exits).
+//! Disconnect handling: when the client side goes away, the reactor
+//! observes EOF (or a failed frame write) on the nonblocking socket and
+//! cancels every in-flight request of that connection — slots and KV
+//! residency are released within one speculation round. This replaces
+//! the old destructive-`peek` polling (`peer_gone`) that the legacy
+//! blocking-wait path used, which raced with interleaved v1 traffic.
 
 pub mod client;
+pub mod conn;
 pub mod protocol;
+pub mod reactor;
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::{CancelToken, Coordinator, GenEvent, GenParams};
-use crate::util::json::{parse as parse_json, Json};
+use crate::coordinator::Coordinator;
 use crate::{log_info, log_warn};
 
+use conn::{Conn, ConnShared, TransportCtl};
+use reactor::{raw_fd, Event, Interest, Poller, ReactorHandle, LISTENER_TOKEN};
+
 pub use client::Client;
-pub use protocol::{ClientMessage, Frame, ServerReply, PROTOCOL_VERSION};
+pub use protocol::{
+    ClientMessage, Frame, FrameDecoder, ServerReply, PROTOCOL_VERSION,
+};
+
+/// Idle poll ceiling: a reactor with nothing to do wakes at least this
+/// often to observe the stop flag (wakeups cut it short).
+const IDLE_WAIT: Duration = Duration::from_millis(100);
 
 /// Serve `coordinator` on `addr` until a shutdown command arrives.
 /// Returns the bound local address once listening (port 0 supported).
@@ -67,279 +100,298 @@ impl Server {
         self.listener.local_addr()
     }
 
-    /// Accept loop: one reader thread per connection plus one writer
-    /// thread serializing the connection's interleaved frames
-    /// (connections are few and long-lived in this workload; the worker
-    /// pool bounds real concurrency).
+    /// Run the reactor transport until shutdown: this thread becomes
+    /// reactor 0 (it owns the accept loop); `server.reactor_threads - 1`
+    /// more event loops are spawned. All are joined before returning.
     pub fn run(&self) -> std::io::Result<()> {
         log_info!("serving on {}", self.local_addr()?);
-        for stream in self.listener.incoming() {
-            if self.stop.load(Ordering::SeqCst) {
-                break;
-            }
-            match stream {
-                Ok(stream) => {
-                    let coord = self.coordinator.clone();
-                    let stop = self.stop.clone();
-                    std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, &coord, &stop) {
-                            log_warn!("connection error: {e}");
-                        }
-                    });
-                }
-                Err(e) => log_warn!("accept error: {e}"),
-            }
+        let scfg = self.coordinator.server_config().clone();
+        let n_reactors = scfg.reactor_threads.max(1);
+        self.listener.set_nonblocking(true)?;
+        self.coordinator
+            .metrics
+            .set_transport_threads(n_reactors as u64);
+
+        let mut parts: Vec<(Poller, Arc<ReactorHandle>)> = Vec::new();
+        for _ in 0..n_reactors {
+            let poller = Poller::new()?;
+            let handle = ReactorHandle::new(poller.waker());
+            parts.push((poller, handle));
+        }
+        let wakers = parts.iter().map(|(p, _)| p.waker()).collect();
+        let assign: Vec<Arc<ReactorHandle>> =
+            parts.iter().map(|(_, h)| h.clone()).collect();
+        let ctl = Arc::new(TransportCtl {
+            coord: self.coordinator.clone(),
+            stop: self.stop.clone(),
+            wakers,
+        });
+        let conn_seq = Arc::new(AtomicU64::new(1));
+        // Every fallible setup step happens BEFORE any thread is
+        // spawned — an error after the spawn loop would leak reactors
+        // that only exit on the stop flag.
+        let listener = self.listener.try_clone()?;
+
+        let mut joins = Vec::new();
+        for (tid, (poller, handle)) in parts.drain(1..).enumerate() {
+            let rt = ReactorThread {
+                tid: tid + 1,
+                poller,
+                handle,
+                ctl: ctl.clone(),
+                outbox_cap: scfg.outbox_frames,
+                max_conns: scfg.max_conns,
+                listener: None,
+                assign: Vec::new(),
+                conn_seq: conn_seq.clone(),
+            };
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("dyspec-reactor-{}", tid + 1))
+                    .spawn(move || reactor_loop(rt))
+                    .expect("spawning reactor thread"),
+            );
+        }
+        let (poller, handle) = parts.pop().expect("reactor 0 parts");
+        let rt = ReactorThread {
+            tid: 0,
+            poller,
+            handle,
+            ctl,
+            outbox_cap: scfg.outbox_frames,
+            max_conns: scfg.max_conns,
+            listener: Some(listener),
+            assign,
+            conn_seq,
+        };
+        reactor_loop(rt);
+        for join in joins {
+            let _ = join.join();
         }
         Ok(())
     }
 }
 
-/// In-flight requests of one connection: client req_id → cancel token.
-type Inflight = Arc<Mutex<HashMap<u64, CancelToken>>>;
-
-/// Is the peer of `probe` gone? Non-destructive (peek, never reads), used
-/// while a legacy blocking generate is in flight and nothing else is
-/// reading the socket. Requires a read timeout on `probe` to not block.
-fn peer_gone(probe: &TcpStream) -> bool {
-    let mut buf = [0u8; 1];
-    match probe.peek(&mut buf) {
-        Ok(0) => true,
-        Ok(_) => false,
-        Err(e) => !matches!(
-            e.kind(),
-            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-        ),
-    }
+/// Everything one reactor thread owns.
+struct ReactorThread {
+    tid: usize,
+    poller: Poller,
+    /// This thread's mailbox (dirty connections, injected sockets).
+    handle: Arc<ReactorHandle>,
+    ctl: Arc<TransportCtl>,
+    outbox_cap: usize,
+    max_conns: usize,
+    /// Reactor 0 owns the accept loop...
+    listener: Option<TcpListener>,
+    /// ...and round-robins accepted sockets over every reactor.
+    assign: Vec<Arc<ReactorHandle>>,
+    conn_seq: Arc<AtomicU64>,
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    coord: &Arc<Coordinator>,
-    stop: &AtomicBool,
-) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
-    let local = stream.local_addr()?;
-    // Second handle on the socket for EOF detection during legacy
-    // blocking waits (peek only — never consumes bytes the reader owns).
-    let probe = stream.try_clone()?;
-
-    // Single writer serializes frames from the reader (command replies)
-    // and from per-request forwarder threads (chunk/done frames). A write
-    // failure means the client is gone: the writer drains quietly and the
-    // reader's EOF takes care of cancellation.
-    let (frame_tx, frame_rx) = mpsc::channel::<String>();
-    let mut write_half = stream.try_clone()?;
-    let writer = std::thread::spawn(move || {
-        for line in frame_rx {
-            if write_half
-                .write_all(line.as_bytes())
-                .and_then(|_| write_half.write_all(b"\n"))
-                .and_then(|_| write_half.flush())
-                .is_err()
-            {
-                break; // client gone; drain remaining frames unsent
-            }
-        }
-    });
-
-    let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
-    let send = |json: protocol::ServerReply| {
-        let _ = frame_tx.send(json.to_string());
-    };
-
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(line) => line,
-            Err(_) => break, // client gone mid-line
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        match protocol::parse_client_message(&line) {
-            Ok(ClientMessage::Generate {
-                req_id: Some(req_id),
-                prompt,
-                params,
-                stream,
-            }) => spawn_request(
-                coord, &inflight, &frame_tx, req_id, prompt, params, stream,
-            ),
-            Ok(ClientMessage::Generate {
-                req_id: None,
-                prompt,
-                params,
-                ..
-            }) => {
-                // Legacy one-shot: blocking, so replies stay in submission
-                // order even for pipelined v0 clients — but the wait polls
-                // the socket for EOF (peek, non-destructive) so a client
-                // that vanished mid-generate cancels its request instead
-                // of running it to completion.
-                match coord.try_submit(prompt, params) {
-                    Err(e) => send(protocol::error_json(&e)),
-                    Ok(handle) => {
-                        let _ = probe
-                            .set_read_timeout(Some(Duration::from_millis(10)));
-                        let resp = loop {
-                            match handle
-                                .events
-                                .recv_timeout(Duration::from_millis(50))
-                            {
-                                Ok(GenEvent::Done(resp)) => break Some(resp),
-                                Ok(GenEvent::Chunk { .. }) => {}
-                                Err(mpsc::RecvTimeoutError::Timeout) => {
-                                    // Keep looping after cancel: the
-                                    // Done(cancelled) arrives within one
-                                    // round and tears down cleanly.
-                                    if peer_gone(&probe) {
-                                        handle.cancel.cancel();
-                                    }
-                                }
-                                Err(
-                                    mpsc::RecvTimeoutError::Disconnected,
-                                ) => break None,
-                            }
-                        };
-                        let _ = probe.set_read_timeout(None);
-                        match resp {
-                            Some(resp) => {
-                                send(protocol::response_json(&resp))
-                            }
-                            None => send(protocol::error_json(
-                                "worker dropped request",
-                            )),
-                        }
-                    }
-                }
-            }
-            Ok(ClientMessage::Cancel { req_id }) => {
-                // Fire-and-forget and idempotent: the request's own `done`
-                // frame (finish:"cancelled") is the acknowledgement, and a
-                // cancel racing the request's natural completion is normal
-                // — an unknown/finished id is a silent no-op, because a
-                // second terminal frame would violate the exactly-one-
-                // done|error stream contract.
-                if let Some(token) = inflight.lock().unwrap().get(&req_id) {
-                    token.cancel();
-                }
-            }
-            Ok(ClientMessage::Stats) => send(coord.metrics.snapshot()),
-            Ok(ClientMessage::Shutdown) => {
-                stop.store(true, Ordering::SeqCst);
-                send(protocol::ok_json());
-                // Poke the accept loop awake.
-                let _ = TcpStream::connect(local);
-            }
-            Err(e) => {
-                // Attribute the failure to the envelope's req_id whenever
-                // one is recoverable so the submitter's stream still gets
-                // its terminal frame (a healthy concurrent stream must
-                // never see an un-attributed error); otherwise fall back
-                // to the legacy error object.
-                let req_id = parse_json(&line).ok().and_then(|doc| {
-                    doc.get("req_id")
-                        .and_then(Json::as_f64)
-                        .map(|v| v as u64)
-                });
-                match req_id {
-                    Some(req_id) => send(protocol::error_frame(req_id, &e)),
-                    None => send(protocol::error_json(&e)),
-                }
-            }
-        }
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-    }
-
-    // Reader is done (disconnect or shutdown): cancel every request this
-    // connection still has in flight so slots and KV residency free up.
-    let orphaned: Vec<CancelToken> =
-        inflight.lock().unwrap().values().cloned().collect();
-    for token in orphaned {
-        token.cancel();
-    }
-    drop(frame_tx);
-    let _ = writer.join();
-    log_info!("peer {peer} disconnected");
-    Ok(())
-}
-
-/// Submit one enveloped request and spawn its event forwarder.
-fn spawn_request(
-    coord: &Arc<Coordinator>,
-    inflight: &Inflight,
-    frame_tx: &mpsc::Sender<String>,
-    req_id: u64,
-    prompt: Vec<u32>,
-    params: GenParams,
-    stream: bool,
-) {
-    {
-        let mut map = inflight.lock().unwrap();
-        if map.contains_key(&req_id) {
-            let _ = frame_tx.send(
-                protocol::error_frame(req_id, "req_id already in flight")
-                    .to_string(),
-            );
+fn reactor_loop(mut rt: ReactorThread) {
+    if let Some(listener) = &rt.listener {
+        if let Err(e) =
+            rt.poller
+                .register(raw_fd(listener), LISTENER_TOKEN, Interest::READ)
+        {
+            log_warn!("reactor {}: listener register failed: {e}", rt.tid);
+            broadcast_stop(&rt.ctl);
             return;
         }
-        let handle = match coord.try_submit(prompt, params) {
-            Ok(handle) => handle,
-            Err(e) => {
-                let _ = frame_tx
-                    .send(protocol::error_frame(req_id, &e).to_string());
-                return;
+    }
+    let mut conns: HashMap<usize, Conn> = HashMap::new();
+    let mut events: Vec<Event> = Vec::new();
+    // Tokens whose connection state may have changed this iteration —
+    // the only ones the sweep must look at.
+    let mut touched: Vec<usize> = Vec::new();
+    loop {
+        events.clear();
+        if let Err(e) = rt.poller.wait(&mut events, IDLE_WAIT) {
+            log_warn!("reactor {}: poll failed: {e}", rt.tid);
+            break;
+        }
+        if rt.ctl.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        for (id, stream) in rt.handle.take_injected() {
+            register_conn(&mut rt, &mut conns, id, stream);
+            touched.push(id as usize);
+        }
+        let ready = std::mem::take(&mut events);
+        for ev in &ready {
+            if ev.token == LISTENER_TOKEN {
+                accept_ready(&mut rt, &mut conns, &mut touched);
+                continue;
             }
-        };
-        map.insert(req_id, handle.cancel.clone());
-        let frame_tx = frame_tx.clone();
-        let inflight = inflight.clone();
-        std::thread::spawn(move || {
-            loop {
-                match handle.events.recv() {
-                    Ok(GenEvent::Chunk { tokens, stats }) => {
-                        if stream {
-                            let _ = frame_tx.send(
-                                protocol::chunk_frame(req_id, &tokens, &stats)
-                                    .to_string(),
-                            );
-                        }
-                    }
-                    Ok(GenEvent::Done(resp)) => {
-                        // Free the id BEFORE the terminal frame goes out:
-                        // a client may legitimately reuse its req_id the
-                        // moment it reads `done`, and the duplicate check
-                        // must not race that.
-                        inflight.lock().unwrap().remove(&req_id);
-                        let _ = frame_tx.send(
-                            protocol::done_frame(req_id, &resp, !stream)
-                                .to_string(),
-                        );
-                        break;
-                    }
-                    Err(_) => {
-                        // Worker dropped the request (coordinator torn
-                        // down before it ran): terminal error frame.
-                        inflight.lock().unwrap().remove(&req_id);
-                        let _ = frame_tx.send(
-                            protocol::error_frame(req_id, "worker dropped request")
-                                .to_string(),
-                        );
-                        break;
-                    }
+            if let Some(conn) = conns.get_mut(&ev.token) {
+                touched.push(ev.token);
+                if ev.readable {
+                    conn.on_readable(&rt.ctl);
+                }
+                if !conn.closed {
+                    conn.pump_out(&rt.ctl);
                 }
             }
-        });
+        }
+        events = ready;
+        for id in rt.handle.take_dirty() {
+            if let Some(conn) = conns.get_mut(&(id as usize)) {
+                touched.push(id as usize);
+                conn.on_dirty(&rt.ctl);
+            }
+        }
+        sweep(&mut rt.poller, &mut conns, &mut touched);
     }
+    // Whatever got us here — shutdown command or a poller failure — the
+    // whole transport goes down together: a lone dead reactor would
+    // otherwise hang Server::run's join (reactor 0) or keep receiving
+    // round-robined connections that are never served (reactor N>0).
+    broadcast_stop(&rt.ctl);
+    // Shutdown: flush what is queued (the `ok` reply to the shutdown
+    // command in particular), cancel all in-flight work, close.
+    for conn in conns.values_mut() {
+        conn.flush_blocking(&rt.ctl);
+    }
+    for (id, conn) in conns.drain() {
+        let _ = rt.poller.deregister(conn.fd(), id);
+    }
+    for (_, stream) in rt.handle.take_injected() {
+        drop(stream);
+        rt.ctl.coord.metrics.on_conn_closed();
+    }
+}
+
+/// Stop every reactor: set the shared flag and wake all event loops.
+/// Idempotent — the normal shutdown path re-broadcasts harmlessly.
+fn broadcast_stop(ctl: &TransportCtl) {
+    ctl.stop.store(true, Ordering::SeqCst);
+    for waker in &ctl.wakers {
+        waker.wake();
+    }
+}
+
+fn register_conn(
+    rt: &mut ReactorThread,
+    conns: &mut HashMap<usize, Conn>,
+    id: u64,
+    stream: TcpStream,
+) {
+    let shared = ConnShared::new(
+        id,
+        rt.outbox_cap,
+        rt.handle.clone(),
+        rt.ctl.coord.metrics.clone(),
+    );
+    let mut conn = Conn::new(stream, shared);
+    match rt.poller.register(conn.fd(), id as usize, Interest::READ) {
+        Ok(()) => {
+            conns.insert(id as usize, conn);
+        }
+        Err(e) => {
+            log_warn!("conn {id}: register failed: {e}");
+            conn.close(&rt.ctl, "poller register failed");
+        }
+    }
+}
+
+/// Accept until the listener would block (reactor 0 only). Connections
+/// beyond `max_conns` are refused with an error line — admission
+/// control, so a connection flood degrades into fast rejections instead
+/// of unbounded kernel/server state.
+fn accept_ready(
+    rt: &mut ReactorThread,
+    conns: &mut HashMap<usize, Conn>,
+    touched: &mut Vec<usize>,
+) {
+    loop {
+        let Some(listener) = rt.listener.as_ref() else {
+            return;
+        };
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let metrics = &rt.ctl.coord.metrics;
+                if metrics.open_conns() >= rt.max_conns as u64 {
+                    metrics.on_conn_rejected();
+                    reject_at_capacity(stream);
+                    continue;
+                }
+                let _ = stream.set_nonblocking(true);
+                let _ = stream.set_nodelay(true);
+                metrics.on_conn_open();
+                let id = rt.conn_seq.fetch_add(1, Ordering::Relaxed);
+                let target = (id as usize) % rt.assign.len().max(1);
+                if target == rt.tid {
+                    register_conn(rt, conns, id, stream);
+                    touched.push(id as usize);
+                } else {
+                    rt.assign[target].inject(id, stream);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                log_warn!("accept error: {e}");
+                break;
+            }
+        }
+    }
+}
+
+/// Best-effort refusal line for a connection over the admission limit.
+/// One nonblocking write and drop — a flood of rejected peers must
+/// never stall the accept loop (and with it every connection owned by
+/// reactor 0), so no blocking I/O happens here: a freshly-accepted
+/// socket's send buffer is empty, so the short line fits or the peer
+/// simply sees the close.
+fn reject_at_capacity(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(true);
+    let mut line = protocol::error_json("server at capacity").to_string();
+    line.push('\n');
+    // Nonblocking write_all: it errors out (WouldBlock) instead of
+    // parking the thread if the peer's buffer is somehow already full.
+    let _ = stream.write_all(line.as_bytes());
+}
+
+/// Drop the closed connections among `touched` and reconcile poller
+/// write-interest with each survivor's queued output (level-triggered
+/// epoll: EPOLLOUT is armed only while there is something to write).
+/// Only connections touched this iteration (readiness event, dirty
+/// notification, or injection) can have changed state, so the sweep is
+/// O(touched), not O(open connections).
+fn sweep(
+    poller: &mut Poller,
+    conns: &mut HashMap<usize, Conn>,
+    touched: &mut Vec<usize>,
+) {
+    touched.sort_unstable();
+    touched.dedup();
+    for &k in touched.iter() {
+        let Some(conn) = conns.get_mut(&k) else {
+            continue;
+        };
+        if conn.closed {
+            if let Some(conn) = conns.remove(&k) {
+                let _ = poller.deregister(conn.fd(), k);
+            }
+            continue;
+        }
+        let want = conn.wants_write();
+        if want != conn.registered_write
+            && poller
+                .reregister(conn.fd(), k, Interest::rw(want))
+                .is_ok()
+        {
+            conn.registered_write = want;
+        }
+    }
+    touched.clear();
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::Config;
-    use crate::coordinator::ModelFactory;
+    use crate::coordinator::{GenParams, ModelFactory};
     use crate::models::sim::{SimModel, SimSpec};
     use crate::models::LogitModel;
 
@@ -402,6 +454,73 @@ mod tests {
         let reply = client.send_raw("this is not json").unwrap();
         assert!(reply.get("error").is_some());
         client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    /// A split-up envelope (one byte per TCP write) decodes and serves
+    /// exactly like a whole line — the incremental decoder satellite,
+    /// over a real socket.
+    #[test]
+    fn byte_dribbled_envelope_is_served() {
+        let (addr, handle) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let line = protocol::generate_envelope(
+            3,
+            &[5, 6],
+            &GenParams::simple(6, 0.6),
+            false,
+        )
+        .to_string();
+        {
+            let raw = client.writer_mut();
+            for b in line.as_bytes() {
+                raw.write_all(std::slice::from_ref(b)).unwrap();
+                raw.flush().unwrap();
+            }
+            raw.write_all(b"\n").unwrap();
+            raw.flush().unwrap();
+        }
+        let frame = client.read_frame().unwrap();
+        assert_eq!(frame.req_id, Some(3));
+        assert_eq!(frame.event, "done");
+        assert_eq!(frame.tokens().len(), 6);
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    /// An over-long line gets the connection closed (with a best-effort
+    /// error line) instead of being buffered without bound, and the
+    /// server stays healthy for new connections.
+    #[test]
+    fn oversized_line_errors_and_closes() {
+        let (addr, handle) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let flood = "x".repeat(protocol::MAX_LINE_BYTES + 2);
+        // The server may close (RST) while we are still flooding; both
+        // halves of the exchange are allowed to fail from our side —
+        // what matters is that the connection dies and the server lives.
+        let _ = client.send_line(&flood);
+        let mut closed = false;
+        for _ in 0..2 {
+            match client.read_json() {
+                Ok(reply) => {
+                    let msg = reply
+                        .get("error")
+                        .and_then(crate::util::json::Json::as_str)
+                        .expect("non-error reply to an oversized line");
+                    assert!(msg.contains("exceeds"), "unexpected error: {msg}");
+                }
+                Err(_) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        assert!(closed, "connection stayed open after an oversized line");
+        let mut c2 = Client::connect(&addr.to_string()).unwrap();
+        let tokens = c2.generate(&[1, 2], 4, 0.6).unwrap();
+        assert_eq!(tokens.len(), 4);
+        c2.shutdown().unwrap();
         handle.join().unwrap();
     }
 }

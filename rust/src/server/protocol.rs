@@ -33,6 +33,134 @@ use crate::util::json::{parse, Json};
 /// Protocol version spoken by this server.
 pub const PROTOCOL_VERSION: u64 = 1;
 
+/// Ceiling on one wire line (request envelope or reply frame). A peer
+/// that streams more than this without a newline is violating the
+/// protocol; the reactor closes the connection instead of buffering
+/// without bound (the old `BufRead::read_line` transport had no guard).
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Why the incremental decoder gave up on a connection's byte stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// More than `max_line` bytes arrived without a line terminator.
+    Oversized(usize),
+    /// A complete line was not valid UTF-8 (the blocking transport's
+    /// `read_line` rejected these too — the connection closes).
+    Utf8,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Oversized(n) => {
+                write!(f, "line exceeds {n} bytes without newline")
+            }
+            Self::Utf8 => f.write_str("line is not valid utf-8"),
+        }
+    }
+}
+
+/// Incremental frame decoder: bytes in, complete newline-terminated
+/// lines out. The reactor transport feeds whatever each nonblocking read
+/// returns — a line may arrive one byte at a time or many lines may land
+/// in one read — and pops frames as they complete. A trailing fragment
+/// (no newline yet) stays buffered across calls. `\r\n` is accepted as a
+/// terminator (`\r` stripped), matching what `BufRead::read_line` +
+/// `trim` tolerated before.
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (bytes of already-popped lines). Popping
+    /// a line only advances this cursor; the buffer is compacted once
+    /// per `push` — one memmove per socket read, not one per line, so a
+    /// 16 KB read full of short lines costs O(bytes), not O(lines ×
+    /// buffer).
+    start: usize,
+    /// Bytes of `buf` already scanned for a newline (restart point, so
+    /// repeated pushes of a long fragment stay O(new bytes)). Invariant:
+    /// `start <= scanned <= buf.len()`.
+    scanned: usize,
+    max_line: usize,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        Self::new(MAX_LINE_BYTES)
+    }
+}
+
+impl FrameDecoder {
+    pub fn new(max_line: usize) -> Self {
+        Self {
+            buf: Vec::new(),
+            start: 0,
+            scanned: 0,
+            max_line: max_line.max(1),
+        }
+    }
+
+    /// Feed bytes off the wire.
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.start == self.buf.len() {
+            self.buf.clear();
+        } else if self.start > 0 {
+            self.buf.drain(..self.start);
+        }
+        self.scanned -= self.start;
+        self.start = 0;
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet popped as lines (tests, backpressure
+    /// accounting).
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Pop the next complete line, `Ok(None)` when more bytes are needed.
+    /// After an `Err` the stream is unrecoverable (framing is lost): the
+    /// caller closes the connection.
+    pub fn next_line(&mut self) -> Result<Option<String>, DecodeError> {
+        match self.buf[self.scanned..]
+            .iter()
+            .position(|&b| b == b'\n')
+        {
+            Some(off) => {
+                let end = self.scanned + off;
+                let mut line: Vec<u8> = self.buf[self.start..end].to_vec();
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                self.start = end + 1;
+                self.scanned = self.start;
+                if line.len() > self.max_line {
+                    return Err(DecodeError::Oversized(self.max_line));
+                }
+                match String::from_utf8(line) {
+                    Ok(s) => Ok(Some(s)),
+                    Err(_) => Err(DecodeError::Utf8),
+                }
+            }
+            None => {
+                self.scanned = self.buf.len();
+                // Content length so far: a trailing '\r' may be the
+                // first half of a `\r\n` terminator still in flight, so
+                // it does not count against the ceiling — keeping the
+                // verdict identical however the stream is split (a line
+                // of exactly `max_line` bytes must pass whether its
+                // `\r\n` arrives in the same read or byte by byte).
+                let pending = self.pending()
+                    - usize::from(self.buf.last() == Some(&b'\r'));
+                if pending > self.max_line {
+                    Err(DecodeError::Oversized(self.max_line))
+                } else {
+                    Ok(None)
+                }
+            }
+        }
+    }
+}
+
 /// Messages a client may send.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientMessage {
@@ -646,5 +774,154 @@ mod tests {
         assert_eq!(f.event, "error");
         assert_eq!(f.req_id, Some(4));
         assert_eq!(f.error(), Some("queue full"));
+    }
+
+    /// Drain every currently-complete line out of the decoder.
+    fn drain(dec: &mut FrameDecoder) -> Vec<String> {
+        let mut out = Vec::new();
+        while let Some(line) = dec.next_line().expect("decode") {
+            out.push(line);
+        }
+        out
+    }
+
+    /// The reactor's framing invariant: however the byte stream is cut
+    /// into reads, the decoded line sequence is identical. Exhaustive
+    /// over every split point of a multi-frame payload, plus the
+    /// one-byte-at-a-time extreme.
+    #[test]
+    fn decoder_is_split_invariant_at_every_byte_boundary() {
+        let payload = concat!(
+            r#"{"v":1,"req_id":7,"prompt":[1,2,3],"stream":true}"#,
+            "\n",
+            r#"{"cmd":"cancel","req_id":7}"#,
+            "\r\n",
+            "\n", // blank line (skipped by the caller, not the decoder)
+            r#"{"cmd":"stats"}"#,
+            "\n",
+        )
+        .as_bytes();
+        let want = {
+            let mut d = FrameDecoder::default();
+            d.push(payload);
+            drain(&mut d)
+        };
+        assert_eq!(want.len(), 4);
+        assert_eq!(want[2], "");
+        assert!(parse_client_message(&want[0]).is_ok());
+        assert!(parse_client_message(&want[3]).is_ok());
+
+        for cut in 0..=payload.len() {
+            let mut d = FrameDecoder::default();
+            d.push(&payload[..cut]);
+            let mut got = drain(&mut d);
+            d.push(&payload[cut..]);
+            got.extend(drain(&mut d));
+            assert_eq!(got, want, "split at byte {cut} diverged");
+        }
+
+        let mut d = FrameDecoder::default();
+        let mut got = Vec::new();
+        for b in payload {
+            d.push(&[*b]);
+            got.extend(drain(&mut d));
+        }
+        assert_eq!(got, want, "byte-at-a-time diverged");
+        assert_eq!(d.pending(), 0);
+    }
+
+    /// Merged frames in one read pop out one by one; a trailing fragment
+    /// (garbage or a half-written envelope) stays pending until its
+    /// newline arrives — and is NOT misparsed as a line.
+    #[test]
+    fn decoder_merged_frames_and_trailing_fragment() {
+        let mut d = FrameDecoder::default();
+        d.push(b"{\"cmd\":\"stats\"}\n{\"cmd\":\"shutdown\"}\ntrailing garb");
+        assert_eq!(
+            drain(&mut d),
+            vec![
+                r#"{"cmd":"stats"}"#.to_string(),
+                r#"{"cmd":"shutdown"}"#.to_string()
+            ]
+        );
+        assert_eq!(d.pending(), "trailing garb".len());
+        // The fragment completes later — possibly across several pushes.
+        d.push(b"age");
+        assert!(d.next_line().unwrap().is_none());
+        d.push(b"\n");
+        assert_eq!(d.next_line().unwrap().as_deref(), Some("trailing garbage"));
+        assert_eq!(d.pending(), 0);
+    }
+
+    /// A peer that streams past the line ceiling without a newline is cut
+    /// off deterministically — whether the flood arrives in one push or
+    /// many — and an over-long *terminated* line is rejected too.
+    #[test]
+    fn decoder_oversized_lines_error() {
+        let mut d = FrameDecoder::new(16);
+        d.push(&[b'x'; 17]);
+        assert_eq!(d.next_line(), Err(DecodeError::Oversized(16)));
+
+        let mut d = FrameDecoder::new(16);
+        for _ in 0..16 {
+            d.push(b"x");
+            assert_eq!(d.next_line(), Ok(None));
+        }
+        d.push(b"x");
+        assert_eq!(d.next_line(), Err(DecodeError::Oversized(16)));
+
+        // Newline and payload arriving together: still over the ceiling.
+        let mut d = FrameDecoder::new(8);
+        d.push(b"123456789\n");
+        assert_eq!(d.next_line(), Err(DecodeError::Oversized(8)));
+
+        // Exactly at the ceiling is fine.
+        let mut d = FrameDecoder::new(8);
+        d.push(b"12345678\n");
+        assert_eq!(d.next_line().unwrap().as_deref(), Some("12345678"));
+
+        // The ceiling verdict is split-invariant: a line of exactly
+        // `max_line` content bytes terminated by `\r\n` passes no
+        // matter where the reads cut it (the pending `\r` must not
+        // count against the ceiling), and one content byte more fails
+        // at every split too.
+        let payload = b"12345678\r\n";
+        for cut in 0..=payload.len() {
+            let mut d = FrameDecoder::new(8);
+            d.push(&payload[..cut]);
+            let got = match d.next_line().unwrap() {
+                Some(line) => line,
+                None => {
+                    d.push(&payload[cut..]);
+                    d.next_line().unwrap().expect("terminated line")
+                }
+            };
+            assert_eq!(got, "12345678", "split at {cut}");
+        }
+        let payload = b"123456789\r\n";
+        for cut in 0..=payload.len() {
+            let mut d = FrameDecoder::new(8);
+            d.push(&payload[..cut]);
+            let first = d.next_line();
+            let verdict = if first.is_err() {
+                first
+            } else {
+                d.push(&payload[cut..]);
+                d.next_line()
+            };
+            assert_eq!(
+                verdict,
+                Err(DecodeError::Oversized(8)),
+                "split at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_invalid_utf8_lines() {
+        let mut d = FrameDecoder::default();
+        d.push(b"ok line\n\xff\xfe\n");
+        assert_eq!(d.next_line().unwrap().as_deref(), Some("ok line"));
+        assert_eq!(d.next_line(), Err(DecodeError::Utf8));
     }
 }

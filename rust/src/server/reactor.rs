@@ -1,0 +1,538 @@
+//! Readiness polling for the reactor transport (DESIGN.md §Transport).
+//!
+//! [`Poller`] is a minimal, std-only I/O event multiplexer. On Linux it
+//! is a direct `extern "C"` binding to `epoll_create1` / `epoll_ctl` /
+//! `epoll_wait` (level-triggered), with a self-pipe as the cross-thread
+//! [`Waker`]. Everywhere else a portable fallback reports every
+//! registered fd as ready on a short tick; the connection state machines
+//! treat readiness as a hint and handle `WouldBlock`, so spurious
+//! readiness costs a failed nonblocking syscall, never correctness.
+//!
+//! [`ReactorHandle`] is the cross-thread mailbox of one reactor thread:
+//! worker-side event sinks push a connection id onto its dirty list and
+//! wake the poller; the accept loop injects new connections the same
+//! way. Both are drained at the top of every reactor iteration.
+
+use std::io;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// What a registered fd should be watched for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+
+    pub fn rw(writable: bool) -> Interest {
+        Interest {
+            readable: true,
+            writable,
+        }
+    }
+}
+
+/// One readiness report. EPOLLHUP/EPOLLERR fold into `readable`: the
+/// read path observes the actual EOF/error and closes the connection.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Token values `usize::MAX` (waker) and `usize::MAX - 1` (listener) are
+/// reserved by the transport; connection ids stay far below them.
+pub const LISTENER_TOKEN: usize = usize::MAX - 1;
+const WAKE_TOKEN: usize = usize::MAX;
+
+#[cfg(target_os = "linux")]
+pub use epoll::{Poller, Waker};
+#[cfg(not(target_os = "linux"))]
+pub use tick::{Poller, Waker};
+
+/// Raw fd of a socket, for [`Poller`] registration. On non-unix targets
+/// the tick poller never dereferences it.
+#[cfg(unix)]
+pub fn raw_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn raw_fd<T>(_t: &T) -> i32 {
+    -1
+}
+
+/// Cross-thread mailbox of one reactor thread. Shared with every
+/// connection sink the thread's connections hand to workers.
+pub struct ReactorHandle {
+    /// Connections with pending outbox work (worker pushed frames, a
+    /// legacy request finished, or the outbox overflowed).
+    dirty: Mutex<Vec<u64>>,
+    /// Freshly accepted connections assigned to this reactor.
+    inject: Mutex<Vec<(u64, TcpStream)>>,
+    waker: Waker,
+}
+
+impl ReactorHandle {
+    pub fn new(waker: Waker) -> Arc<Self> {
+        Arc::new(Self {
+            dirty: Mutex::new(Vec::new()),
+            inject: Mutex::new(Vec::new()),
+            waker,
+        })
+    }
+
+    /// Mark a connection as having pending outbound work and wake the
+    /// reactor. Called from worker threads (event sinks).
+    pub fn notify_dirty(&self, conn_id: u64) {
+        self.dirty.lock().unwrap().push(conn_id);
+        self.waker.wake();
+    }
+
+    /// Hand a new connection to this reactor. Called from the accept
+    /// loop (reactor thread 0).
+    pub fn inject(&self, conn_id: u64, stream: TcpStream) {
+        self.inject.lock().unwrap().push((conn_id, stream));
+        self.waker.wake();
+    }
+
+    pub fn wake(&self) {
+        self.waker.wake();
+    }
+
+    pub fn take_dirty(&self) -> Vec<u64> {
+        std::mem::take(&mut *self.dirty.lock().unwrap())
+    }
+
+    pub fn take_injected(&self) -> Vec<(u64, TcpStream)> {
+        std::mem::take(&mut *self.inject.lock().unwrap())
+    }
+}
+
+/// Linux: level-triggered epoll + a nonblocking self-pipe waker.
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::{Event, Interest, WAKE_TOKEN};
+    use std::io;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const O_NONBLOCK: i32 = 0o4000;
+    const O_CLOEXEC: i32 = 0o2000000;
+
+    /// `struct epoll_event`; packed on x86-64 exactly as the kernel ABI
+    /// demands (`__EPOLL_PACKED`), natural layout elsewhere.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+        fn pipe2(fds: *mut i32, flags: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+
+    fn cvt(ret: i32) -> io::Result<i32> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    fn interest_bits(interest: Interest) -> u32 {
+        let mut bits = 0;
+        if interest.readable {
+            bits |= EPOLLIN | EPOLLRDHUP;
+        }
+        if interest.writable {
+            bits |= EPOLLOUT;
+        }
+        bits
+    }
+
+    /// Write end of the self-pipe, closed when the last waker drops.
+    struct WakeFd(i32);
+
+    impl Drop for WakeFd {
+        fn drop(&mut self) {
+            unsafe { close(self.0) };
+        }
+    }
+
+    /// Wakes the owning [`Poller`] out of `wait` from any thread.
+    #[derive(Clone)]
+    pub struct Waker(Arc<WakeFd>);
+
+    impl Waker {
+        pub fn wake(&self) {
+            // A full pipe already guarantees a pending wakeup; every
+            // other failure mode is ignorable for a wake signal.
+            let byte = 1u8;
+            unsafe { write(self.0 .0, &byte, 1) };
+        }
+    }
+
+    pub struct Poller {
+        epfd: i32,
+        wake_read: i32,
+        waker: Waker,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            let mut fds = [0i32; 2];
+            if let Err(e) =
+                cvt(unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) })
+            {
+                unsafe { close(epfd) };
+                return Err(e);
+            }
+            let poller = Poller {
+                epfd,
+                wake_read: fds[0],
+                waker: Waker(Arc::new(WakeFd(fds[1]))),
+            };
+            poller.ctl(EPOLL_CTL_ADD, fds[0], WAKE_TOKEN, Interest::READ)?;
+            Ok(poller)
+        }
+
+        fn ctl(
+            &self,
+            op: i32,
+            fd: i32,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: interest_bits(interest),
+                data: token as u64,
+            };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub fn register(
+            &mut self,
+            fd: i32,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn reregister(
+            &mut self,
+            fd: i32,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: i32, _token: usize) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, Interest::READ)
+        }
+
+        pub fn waker(&self) -> Waker {
+            self.waker.clone()
+        }
+
+        /// Wait up to `timeout` and append readiness events. A wakeup or
+        /// signal interruption returns with no events — callers treat an
+        /// empty batch as "check your mailboxes".
+        pub fn wait(
+            &mut self,
+            out: &mut Vec<Event>,
+            timeout: Duration,
+        ) -> io::Result<()> {
+            let mut evs = [EpollEvent { events: 0, data: 0 }; 64];
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = unsafe {
+                epoll_wait(self.epfd, evs.as_mut_ptr(), evs.len() as i32, ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in evs.iter().take(n as usize) {
+                // Copy out of the (possibly packed) struct before use.
+                let bits = { ev.events };
+                let data = { ev.data };
+                if data == WAKE_TOKEN as u64 {
+                    self.drain_wake_pipe();
+                    continue;
+                }
+                out.push(Event {
+                    token: data as usize,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR)
+                        != 0,
+                    writable: bits & EPOLLOUT != 0,
+                });
+            }
+            Ok(())
+        }
+
+        fn drain_wake_pipe(&self) {
+            let mut buf = [0u8; 64];
+            loop {
+                let n = unsafe {
+                    read(self.wake_read, buf.as_mut_ptr(), buf.len())
+                };
+                if n <= 0 {
+                    break; // drained (EAGAIN) or pipe gone
+                }
+            }
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.wake_read);
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+/// Portable fallback: no syscall multiplexer. `wait` sleeps a short tick
+/// (cut short by a pending wake) and reports every registered fd as
+/// ready for whatever it is interested in; the nonblocking state
+/// machines absorb the spurious readiness.
+#[cfg(not(target_os = "linux"))]
+mod tick {
+    use super::{Event, Interest};
+    use std::io;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const TICK: Duration = Duration::from_millis(2);
+
+    #[derive(Clone)]
+    pub struct Waker(Arc<AtomicBool>);
+
+    impl Waker {
+        pub fn wake(&self) {
+            self.0.store(true, Ordering::SeqCst);
+        }
+    }
+
+    pub struct Poller {
+        registered: Vec<(i32, usize, Interest)>,
+        woken: Arc<AtomicBool>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                registered: Vec::new(),
+                woken: Arc::new(AtomicBool::new(false)),
+            })
+        }
+
+        pub fn register(
+            &mut self,
+            fd: i32,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.registered.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn reregister(
+            &mut self,
+            fd: i32,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.registered.retain(|&(_, t, _)| t != token);
+            self.registered.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, _fd: i32, token: usize) -> io::Result<()> {
+            self.registered.retain(|&(_, t, _)| t != token);
+            Ok(())
+        }
+
+        pub fn waker(&self) -> Waker {
+            Waker(self.woken.clone())
+        }
+
+        pub fn wait(
+            &mut self,
+            out: &mut Vec<Event>,
+            timeout: Duration,
+        ) -> io::Result<()> {
+            if !self.woken.swap(false, Ordering::SeqCst) {
+                std::thread::sleep(timeout.min(TICK));
+                self.woken.store(false, Ordering::SeqCst);
+            }
+            for &(_, token, interest) in &self.registered {
+                out.push(Event {
+                    token,
+                    readable: interest.readable,
+                    writable: interest.writable,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    fn socket_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn readable_after_peer_writes() {
+        let (mut a, b) = socket_pair();
+        b.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(raw_fd(&b), 7, Interest::READ).unwrap();
+
+        a.write_all(b"ping").unwrap();
+        a.flush().unwrap();
+
+        let mut events = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut got = false;
+        while std::time::Instant::now() < deadline && !got {
+            events.clear();
+            poller
+                .wait(&mut events, Duration::from_millis(100))
+                .unwrap();
+            got = events.iter().any(|e| e.token == 7 && e.readable);
+        }
+        assert!(got, "peer write never reported readable");
+        // The tick fallback reports readiness optimistically; retry the
+        // nonblocking read until the bytes are actually there.
+        let mut buf = [0u8; 8];
+        let mut c = &b;
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match c.read(&mut buf) {
+                Ok(n) => {
+                    assert_eq!(n, 4);
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    assert!(std::time::Instant::now() < deadline);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("read failed: {e}"),
+            }
+        }
+        poller.deregister(raw_fd(&b), 7).unwrap();
+    }
+
+    #[test]
+    fn waker_interrupts_wait_from_another_thread() {
+        let mut poller = Poller::new().unwrap();
+        let waker = poller.waker();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            waker.wake();
+        });
+        let t0 = std::time::Instant::now();
+        let mut events = Vec::new();
+        // Without the wake this would sleep the full 10 s (linux); the
+        // tick fallback returns early anyway, which also passes.
+        poller.wait(&mut events, Duration::from_secs(10)).unwrap();
+        while t0.elapsed() < Duration::from_millis(40) {
+            events.clear();
+            poller.wait(&mut events, Duration::from_secs(10)).unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(9),
+            "wake did not interrupt wait"
+        );
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn write_interest_toggles() {
+        let (_a, b) = socket_pair();
+        b.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(raw_fd(&b), 3, Interest::rw(true)).unwrap();
+        let mut events = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut writable = false;
+        while std::time::Instant::now() < deadline && !writable {
+            events.clear();
+            poller
+                .wait(&mut events, Duration::from_millis(100))
+                .unwrap();
+            writable = events.iter().any(|e| e.token == 3 && e.writable);
+        }
+        assert!(writable, "idle socket never writable");
+        // Drop write interest: subsequent batches stop reporting it.
+        poller.reregister(raw_fd(&b), 3, Interest::rw(false)).unwrap();
+        events.clear();
+        poller.wait(&mut events, Duration::from_millis(50)).unwrap();
+        assert!(events.iter().all(|e| e.token != 3 || !e.writable));
+    }
+
+    #[test]
+    fn reactor_handle_mailboxes() {
+        let poller = Poller::new().unwrap();
+        let handle = ReactorHandle::new(poller.waker());
+        handle.notify_dirty(4);
+        handle.notify_dirty(9);
+        assert_eq!(handle.take_dirty(), vec![4, 9]);
+        assert!(handle.take_dirty().is_empty());
+        let (a, _b) = socket_pair();
+        handle.inject(11, a);
+        let injected = handle.take_injected();
+        assert_eq!(injected.len(), 1);
+        assert_eq!(injected[0].0, 11);
+    }
+}

@@ -191,7 +191,7 @@ fn batcher_tokens(
                 params: GenParams::simple(20, 0.6),
                 submitted_at: Instant::now(),
                 cancel: CancelToken::new(),
-                events: tx,
+                events: Box::new(tx),
             });
             rx
         })

@@ -53,7 +53,7 @@ fn mk_request(
             params: GenParams::simple(max_new, temperature),
             submitted_at: Instant::now(),
             cancel: cancel.clone(),
-            events: tx,
+            events: Box::new(tx),
         },
         RequestHandle {
             id,

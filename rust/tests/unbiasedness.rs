@@ -167,7 +167,7 @@ fn continuous_batching_preserves_first_token_distribution() {
                     params: GenParams::simple(2, 0.6),
                     submitted_at: Instant::now(),
                     cancel: CancelToken::new(),
-                    events: tx,
+                    events: Box::new(tx),
                 });
                 rx
             })
@@ -295,7 +295,7 @@ fn batched_cache_on_off_identical_streams_and_billed_positions_dominate() {
                     params: GenParams::simple(16, 0.6),
                     submitted_at: Instant::now(),
                     cancel: CancelToken::new(),
-                    events: tx,
+                    events: Box::new(tx),
                 });
                 rx
             })
