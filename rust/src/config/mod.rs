@@ -192,10 +192,13 @@ pub struct LatencyRegime {
     /// SPECULATED tokens one target dispatch absorbs at
     /// `target_step_secs` — the batch width the step time was calibrated
     /// at (paper §5.1: bs 1+64, i.e. 64 speculated tokens; root rows ride
-    /// free, matching the engine's one-unit step). The continuous batcher
-    /// bills ceil(speculated / width) dispatch units, so packing beyond
-    /// the calibrated width is not free. `usize::MAX` for the offload
-    /// regime, whose step is weight-streaming-bound (flat per dispatch).
+    /// free). The shared round pipeline (`round::conclude_round`) bills
+    /// every dispatch — both schedulers — in ceil(speculated / width)
+    /// units, so packing beyond the calibrated width is not free: a
+    /// batch-of-1 at `tree_budget <= verify_width` bills exactly one
+    /// step, a bigger single tree proportionally more. `usize::MAX` for
+    /// the offload regime, whose step is weight-streaming-bound (flat per
+    /// dispatch).
     pub verify_width: usize,
     /// Marginal seconds per COMPUTED position in a verification dispatch
     /// (the context-length term the KV cache removes: uncached scoring

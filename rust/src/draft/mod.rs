@@ -35,6 +35,28 @@ pub trait TreePolicy {
     ) -> TokenTree;
 }
 
+/// Resolve the draft policy one speculation round runs, from the
+/// participating sequences' per-request overrides: the override when the
+/// set is homogeneous (every sequence names the same policy, explicitly or
+/// by defaulting), the worker `default` otherwise — the cross-request
+/// greedy allocator is policy-global by construction, so a mixed batch
+/// cannot honor per-sequence policies (DESIGN.md §Round Pipeline). An
+/// empty set (nothing speculating) resolves to `default`.
+pub fn round_policy<I>(overrides: I, default: PolicyKind) -> PolicyKind
+where
+    I: IntoIterator<Item = Option<PolicyKind>>,
+{
+    let mut kinds = overrides.into_iter().map(|o| o.unwrap_or(default));
+    let Some(first) = kinds.next() else {
+        return default;
+    };
+    if kinds.all(|k| k == first) {
+        first
+    } else {
+        default
+    }
+}
+
 /// Instantiate the policy selected by the config.
 pub fn make_policy(kind: PolicyKind) -> Box<dyn TreePolicy> {
     match kind {
@@ -107,6 +129,19 @@ mod tests {
             }
             assert!(!tree.node(ROOT).draft_dist.is_empty(), "{kind}: root dist");
         }
+    }
+
+    #[test]
+    fn round_policy_honors_homogeneous_overrides_only() {
+        use PolicyKind::{Chain, DySpec, Sequoia};
+        assert_eq!(round_policy(std::iter::empty(), DySpec), DySpec);
+        assert_eq!(round_policy([Some(Chain)], DySpec), Chain);
+        assert_eq!(round_policy([None::<PolicyKind>, None], DySpec), DySpec);
+        // Explicit override agreeing with defaulted sequences: homogeneous.
+        assert_eq!(round_policy([Some(DySpec), None], DySpec), DySpec);
+        // Mixed batch falls back to the worker default.
+        assert_eq!(round_policy([Some(Chain), Some(Sequoia)], DySpec), DySpec);
+        assert_eq!(round_policy([Some(Chain), None], DySpec), DySpec);
     }
 
     #[test]

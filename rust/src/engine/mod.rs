@@ -1,9 +1,13 @@
-//! The speculative decoding engine: one step = build draft tree → DFS
-//! reorder → parallel target verification → accept a root path + bonus
-//! token. Collects the per-step statistics every paper table/figure is
-//! computed from, and (when a `LatencyRegime` is configured) the virtual
-//! hardware-regime latency ledger that maps our CPU testbed onto the
-//! paper's A100 setups (DESIGN.md §3).
+//! The FCFS speculative decoding front end: one request at a time, one
+//! speculation round per step, each round a **batch-of-1 instance of the
+//! shared round pipeline** (`crate::round`, DESIGN.md §Round Pipeline) —
+//! draft tree → DFS reorder → parallel target verification → accept a
+//! root path + bonus token. The engine owns what is per-request about the
+//! FCFS path (the running sampling stream, the per-generation cache
+//! session, chunk truncation and emission) and collects the per-step
+//! statistics every paper table/figure is computed from, including the
+//! virtual hardware-regime latency ledger (DESIGN.md §3) the pipeline
+//! prices.
 
 pub mod events;
 pub mod stats;
@@ -14,15 +18,12 @@ pub use events::{
 };
 pub use stats::{GenerationStats, StepStats};
 
-use crate::cache::{verify_bill, CacheManager};
+use crate::cache::CacheManager;
 use crate::config::{CacheConfig, EngineConfig, LatencyRegime, PolicyKind};
 use crate::draft::{make_policy, TreePolicy};
-use crate::models::{LogitModel, TimedModel};
-use crate::sampling::{dist_from_logits, sample};
-use crate::tree::dfs_order;
-use crate::util::timer::Timer;
+use crate::models::LogitModel;
+use crate::round::{self, RoundCtx, SeqRound};
 use crate::util::Rng;
-use crate::verify::{row_map, verify_tree};
 
 /// The engine serves one generation at a time; its cache manager tracks
 /// that single sequence under a fixed id.
@@ -119,20 +120,13 @@ impl SpecEngine {
                 finish = FinishReason::Cancelled;
                 break;
             }
-            let mut step = if self.cfg.policy == PolicyKind::Baseline {
-                self.autoregressive_step(&mut ctx)
-            } else {
-                self.speculative_step(&mut ctx)
-            };
             let remaining = self.cfg.max_new_tokens - stats.tokens.len();
-            let stopped = truncate_chunk(
-                &mut step.tokens,
-                &self.cfg.stop_tokens,
-                remaining,
-            );
-            step.step.emitted = step.tokens.len();
+            let (mut tokens, mut step) = self.round_step(&ctx, remaining);
+            let stopped =
+                truncate_chunk(&mut tokens, &self.cfg.stop_tokens, remaining);
+            step.emitted = tokens.len();
             let before = stats.tokens.len();
-            stats.push_step(step, &mut ctx, remaining);
+            stats.push_step(tokens, step, &mut ctx, remaining);
             let chunk = stats.tokens[before..].to_vec();
             if stopped {
                 finish = FinishReason::Stop;
@@ -160,152 +154,60 @@ impl SpecEngine {
         (stats, finish)
     }
 
-    /// One plain autoregressive step: target forward, sample, emit. The
-    /// KV cache applies here too: with residency the forward bills only
-    /// the newly appended position instead of the whole context.
-    fn autoregressive_step(&mut self, ctx: &[u32]) -> StepOutput {
-        let mut step = StepStats::default();
-        let prefix_len = ctx.len();
-        let cached_len = self.cache.begin_round(ENGINE_SEQ).min(prefix_len);
-        let t = Timer::start();
-        let logits = self.target.next_logits(ctx);
-        step.times.add("target_infer", t.elapsed_secs());
-        let t = Timer::start();
-        let dist = dist_from_logits(&logits, self.cfg.target_temp);
-        let token = sample(&dist, &mut self.rng) as u32;
-        step.times.add("sample", t.elapsed_secs());
-        step.emitted = 1;
-        step.target_dispatches = 1;
-        let bill = verify_bill(
-            prefix_len,
-            cached_len,
-            0,
-            self.cache.block_tokens(),
-        );
-        self.cache.record_lookup(
-            bill.cached_positions as u64,
-            (prefix_len - bill.cached_positions) as u64,
-        );
-        self.cache.commit(ENGINE_SEQ, cached_len, prefix_len, 0);
-        step.billed_positions = bill.billed_positions;
-        step.cached_positions = bill.cached_positions;
-        step.virtual_secs = self.regime.map(|r| {
-            r.target_step_secs
-                + r.target_pos_secs * bill.billed_positions as f64
-                + r.cache_fetch_secs * bill.fetched_blocks as f64
-                + r.cache_write_secs * bill.written_blocks as f64
-                + step.times.get("sample")
-        });
-        StepOutput {
-            tokens: vec![token],
-            step,
-        }
-    }
-
-    /// One speculative step (the paper's full pipeline).
-    fn speculative_step(&mut self, ctx: &[u32]) -> StepOutput {
-        let mut step = StepStats::default();
-        let prefix_len = ctx.len();
-        let cached_len = self.cache.begin_round(ENGINE_SEQ).min(prefix_len);
-
-        // --- draft tree construction (Fig 4: "tree construction" + "draft") ---
-        let t_build = Timer::start();
-        let (tree, draft_secs, draft_dispatches) = {
-            let mut timed = TimedModel::new(self.draft.as_mut());
-            let tree = self
-                .policy
-                .build(&mut timed, ctx, &self.cfg, &mut self.rng);
-            (tree, timed.secs, timed.dispatches())
+    /// One speculation round = a batch-of-1 instance of the shared round
+    /// pipeline (`crate::round`). The pipeline owns draft-tree growth,
+    /// mask construction, the incremental verification dispatch,
+    /// acceptance + bonus sampling, cache lease commit/rollback, and the
+    /// cost accounting; this method only adapts its outcome into the
+    /// engine's per-step statistics. `PolicyKind::Baseline` takes the
+    /// pipeline's bare-verification-row path — plain autoregressive
+    /// decoding with no draft cost — and so does the final round when
+    /// exactly one token remains (the continuous batcher's Drain rule:
+    /// the bonus token needs no speculated tree, so FCFS and
+    /// continuous-with-one-slot run identical rounds end to end; pinned
+    /// by `rust/tests/round_equivalence.rs`).
+    fn round_step(
+        &mut self,
+        ctx: &[u32],
+        remaining: usize,
+    ) -> (Vec<u32>, StepStats) {
+        let rc = RoundCtx {
+            cfg: &self.cfg,
+            policy: self.policy.as_ref(),
+            policy_kind: self.cfg.policy,
+            global_budget: self.cfg.tree_budget,
+            regime: self.regime,
         };
-        let build_total = t_build.elapsed_secs();
-        step.times.add("draft_infer", draft_secs);
-        step.times
-            .add("tree_construct", (build_total - draft_secs).max(0.0));
-        step.draft_dispatches = draft_dispatches;
-        step.tree_size = tree.size();
-        step.tree_depth = tree.depth();
-
-        // --- token order + mask (Fig 4: "generate masks") ---
-        let t = Timer::start();
-        let order = dfs_order(&tree);
-        let row_of = row_map(&tree, &order);
-        step.times.add("mask", t.elapsed_secs());
-
-        // --- parallel target verification pass (incremental: only the
-        // non-resident prefix + tree rows are computed/billed) ---
-        let lease = self.cache.lease_tree(&tree);
-        let t = Timer::start();
-        let rows = self
-            .target
-            .score_tree_incremental(ctx, cached_len, &tree, &order);
-        step.times.add("target_infer", t.elapsed_secs());
-        step.target_dispatches = 1;
-
-        // --- temperature + sampling dists (Fig 4: "sampling") ---
-        let t = Timer::start();
-        let dists: Vec<Vec<f32>> = rows
-            .iter()
-            .map(|r| dist_from_logits(r, self.cfg.target_temp))
-            .collect();
-        step.times.add("sample", t.elapsed_secs());
-
-        // --- verification walk (Fig 4: "verification") ---
-        let t = Timer::start();
-        let outcome = verify_tree(&tree, &dists, &row_of, &mut self.rng);
-        step.times.add("verify", t.elapsed_secs());
-
-        step.emitted = outcome.emitted;
-        step.accepted_speculated = outcome.accepted.len();
-
-        // Cache round end: rejected branches roll back (refcounts to
-        // zero), the accepted path + the scored miss region become the new
-        // resident prefix (billed below as cache writes).
-        self.cache.end_lease(lease, &tree, &outcome.accepted_nodes);
-        self.cache.commit(
-            ENGINE_SEQ,
-            cached_len,
-            prefix_len,
-            outcome.accepted.len(),
+        let mut seqs = [SeqRound {
+            id: ENGINE_SEQ,
+            prefix: ctx,
+            rng: &mut self.rng,
+            temperature: self.cfg.target_temp,
+            cap: self.cfg.tree_budget,
+            wants_spec: remaining > 1,
+        }];
+        let outcome = round::run_round(
+            &rc,
+            self.draft.as_mut(),
+            self.target.as_mut(),
+            &mut self.cache,
+            &mut seqs,
         );
-        let bill = verify_bill(
-            prefix_len,
-            cached_len,
-            order.len(),
-            self.cache.block_tokens(),
-        );
-        self.cache.record_lookup(
-            bill.cached_positions as u64,
-            (prefix_len - bill.cached_positions) as u64,
-        );
-        step.billed_positions = bill.billed_positions;
-        step.cached_positions = bill.cached_positions;
-
-        // Virtual hardware-regime latency (paper Eq. 3): the draft/target
-        // dispatches are billed at the regime's step times, the computed
-        // positions and cache traffic at the regime's marginal rates, and
-        // the pure-logic components at measured wall time.
-        step.virtual_secs = self.regime.map(|r| {
-            r.draft_step_secs * draft_dispatches as f64
-                + r.target_step_secs
-                + r.target_pos_secs * bill.billed_positions as f64
-                + r.cache_fetch_secs * bill.fetched_blocks as f64
-                + r.cache_write_secs * bill.written_blocks as f64
-                + step.times.get("tree_construct")
-                + step.times.get("mask")
-                + step.times.get("sample")
-                + step.times.get("verify")
-        });
-
-        let mut tokens = outcome.accepted;
-        tokens.push(outcome.bonus);
-        StepOutput { tokens, step }
+        let seq = outcome.seqs.into_iter().next().expect("batch of one");
+        let step = StepStats {
+            tree_size: seq.allocated,
+            tree_depth: seq.tree_depth,
+            accepted_speculated: seq.accepted,
+            emitted: seq.tokens.len(),
+            draft_dispatches: outcome.draft_dispatches,
+            target_dispatches: outcome.target_dispatches,
+            billed_positions: seq.bill.billed_positions,
+            cached_positions: seq.bill.cached_positions,
+            times: outcome.times,
+            virtual_secs: outcome.virtual_secs,
+        };
+        (seq.tokens, step)
     }
-}
-
-/// Tokens + stats produced by one engine step.
-pub struct StepOutput {
-    pub tokens: Vec<u32>,
-    pub step: StepStats,
 }
 
 #[cfg(test)]

@@ -43,16 +43,16 @@ impl GenerationStats {
         }
     }
 
-    /// Record a step, extending the context and truncating overshoot so the
-    /// generation holds exactly `max_new_tokens` (paper protocol: 128).
+    /// Record a step's emitted tokens + stats, extending the context and
+    /// truncating overshoot so the generation holds exactly
+    /// `max_new_tokens` (paper protocol: 128).
     pub fn push_step(
         &mut self,
-        output: crate::engine::StepOutput,
+        mut tokens: Vec<u32>,
+        mut step: StepStats,
         ctx: &mut Vec<u32>,
         remaining: usize,
     ) {
-        let mut tokens = output.tokens;
-        let mut step = output.step;
         if tokens.len() > remaining {
             tokens.truncate(remaining);
             step.emitted = tokens.len();
@@ -221,14 +221,7 @@ mod tests {
         let mut g = GenerationStats::new(4);
         let mut ctx = vec![1, 2, 3, 4];
         for _ in 0..3 {
-            g.push_step(
-                crate::engine::StepOutput {
-                    tokens: vec![7, 8],
-                    step: step(2, 10, 0.5),
-                },
-                &mut ctx,
-                100,
-            );
+            g.push_step(vec![7, 8], step(2, 10, 0.5), &mut ctx, 100);
         }
         assert_eq!(g.tokens.len(), 6);
         assert!((g.mean_emitted_per_step() - 2.0).abs() < 1e-12);
@@ -241,14 +234,7 @@ mod tests {
     fn truncates_overshoot() {
         let mut g = GenerationStats::new(1);
         let mut ctx = vec![1];
-        g.push_step(
-            crate::engine::StepOutput {
-                tokens: vec![5, 6, 7],
-                step: step(3, 4, 0.1),
-            },
-            &mut ctx,
-            2,
-        );
+        g.push_step(vec![5, 6, 7], step(3, 4, 0.1), &mut ctx, 2);
         assert_eq!(g.tokens, vec![5, 6]);
         assert_eq!(ctx, vec![1, 5, 6]);
         assert_eq!(g.steps[0].emitted, 2);
@@ -258,14 +244,7 @@ mod tests {
     fn aggregate_combines() {
         let mut g = GenerationStats::new(1);
         let mut ctx = vec![1];
-        g.push_step(
-            crate::engine::StepOutput {
-                tokens: vec![5],
-                step: step(1, 8, 0.2),
-            },
-            &mut ctx,
-            10,
-        );
+        g.push_step(vec![5], step(1, 8, 0.2), &mut ctx, 10);
         let mut agg = RunAggregate::default();
         agg.add(&g);
         agg.add(&g);

@@ -7,10 +7,11 @@
 //! - **L3 (this crate)** — the coordinator: draft-tree construction
 //!   ([`draft`], Algorithms 1 & 2 plus the Sequoia/SpecInfer/chain
 //!   baselines), unbiased multi-branch verification ([`verify`],
-//!   Algorithm 3), the speculative decoding engine ([`engine`]), tree
-//!   attention masks + block-sparsity reorders ([`tree`], Appendix C), and
-//!   a request router with a step-level continuous-batching scheduler
-//!   ([`coordinator`], [`sched`], [`server`]).
+//!   Algorithm 3), the shared speculation-round pipeline ([`round`]) with
+//!   its FCFS front end ([`engine`]), tree attention masks +
+//!   block-sparsity reorders ([`tree`], Appendix C), and a request router
+//!   with a step-level continuous-batching scheduler ([`coordinator`],
+//!   [`sched`], [`server`]).
 //! - **L2** — a JAX transformer (`python/compile/model.py`), AOT-lowered to
 //!   HLO text and executed from rust via PJRT ([`runtime`], [`models::hlo`]).
 //! - **L1** — a Pallas block-sparse tree-attention kernel
@@ -29,6 +30,7 @@ pub mod data;
 pub mod draft;
 pub mod engine;
 pub mod models;
+pub mod round;
 pub mod runtime;
 pub mod sampling;
 pub mod sched;

@@ -1,0 +1,600 @@
+//! The unified speculation-round pipeline (DESIGN.md §Round Pipeline).
+//!
+//! One speculation round — draft-tree growth under a budget allocation,
+//! forest/mask construction, the batched incremental verification
+//! dispatch, stochastic acceptance + bonus-token sampling, KV lease
+//! commit/rollback, and the `RoundStats`/virtual-latency accounting — used
+//! to be implemented twice: once in `engine/mod.rs` (the FCFS path) and
+//! once in `sched/batcher.rs` (the continuous path). This module is the
+//! single implementation both now call, parameterized over one-or-many
+//! sequences:
+//!
+//!   - [`plan_round`] — snapshot KV residency, allocate the shared
+//!     speculation budget across the participating sequences, grow one
+//!     draft tree per sequence (bare verification rows for the rest), and
+//!     lay out verification orders + row maps ([`RoundPlan`]);
+//!   - [`dispatch_round`] — take transient copy-on-write KV leases for the
+//!     speculated branches and run ONE batched
+//!     `LogitModel::score_forest` dispatch over the whole set
+//!     ([`RoundDispatch`]);
+//!   - [`conclude_round`] — per sequence: temperature the rows, walk the
+//!     stochastic accept/reject verification, roll back rejected branches,
+//!     commit the accepted path as the new resident prefix, and price the
+//!     dispatch slice ([`RoundOutcome`]).
+//!
+//! [`run_round`] chains the three phases. The FCFS engine is a batch-of-1
+//! instance (`SpecEngine::generate_streamed` builds one [`SeqRound`] per
+//! round); the continuous batcher is the batch-of-n instance plus
+//! admission/sweep/retire. `scheduler=fcfs|continuous` therefore selects an
+//! admission policy, not an implementation — bit-identity of the two
+//! callers is pinned by `rust/tests/round_equivalence.rs` on top of the
+//! pre-existing `unbiasedness.rs` / `cache_equivalence.rs` /
+//! `scheduler.rs` / `protocol_v1.rs` contracts.
+//!
+//! Policy semantics inside the pipeline:
+//!
+//!   - `PolicyKind::DySpec` grows the whole forest with the cross-sequence
+//!     greedy heap (`sched::budget::build_forest`) — bit-identical to
+//!     `DySpecPolicy::build` when one sequence participates (pinned by
+//!     `scheduler.rs::single_sequence_reduces_to_dyspec_policy_tree`);
+//!   - other speculative policies build per-sequence trees at a fair split
+//!     of the budget (`build_forest_fair`), which for one sequence is
+//!     exactly the policy's single-request tree;
+//!   - `PolicyKind::Baseline` takes a bare verification row and NO draft
+//!     dispatch: the bonus sample from the target row 0 IS autoregressive
+//!     decoding, with the same single rng draw per round.
+
+use crate::cache::{verify_bill, CacheManager, TreeLease, VerifyBill};
+use crate::config::{EngineConfig, LatencyRegime, PolicyKind};
+use crate::draft::TreePolicy;
+use crate::engine::RoundStats;
+use crate::models::{ForestItem, LogitModel, TimedModel};
+use crate::sampling::dist_from_logits;
+use crate::sched::budget::{build_forest, build_forest_fair};
+use crate::tree::{dfs_order, NodeId, TokenTree};
+use crate::util::timer::{ComponentTimes, Timer};
+use crate::util::Rng;
+use crate::verify::{row_map, verify_tree};
+
+/// Round-wide parameters, fixed for one `run_round` call.
+pub struct RoundCtx<'a> {
+    pub cfg: &'a EngineConfig,
+    /// Tree builder matching `policy_kind` (used by the fair-split path;
+    /// the DySpec heap and the Baseline bare row never consult it).
+    pub policy: &'a dyn TreePolicy,
+    /// Effective draft policy this round (the caller resolves per-request
+    /// overrides — see `draft::round_policy`).
+    pub policy_kind: PolicyKind,
+    /// Shared speculated-token budget offered to the round. Zeroed by the
+    /// pipeline when no sequence speculates.
+    pub global_budget: usize,
+    pub regime: Option<LatencyRegime>,
+}
+
+/// One sequence's view into its caller-owned state for one round.
+pub struct SeqRound<'a> {
+    /// KV-residency key (`cache::CacheManager` sequence id).
+    pub id: u64,
+    /// prompt ++ emitted tokens — the context this round verifies against.
+    pub prefix: &'a [u32],
+    /// The sequence's sampling stream (draft draws + verification walk).
+    pub rng: &'a mut Rng,
+    pub temperature: f32,
+    /// Per-round speculation cap (engine tree budget, clamped further by
+    /// the request's own `token_budget`).
+    pub cap: usize,
+    /// False = bare verification row (draining / no speculation wanted).
+    pub wants_spec: bool,
+}
+
+/// Phase 1 output: residency snapshots + the allocated draft forest.
+pub struct RoundPlan {
+    pub trees: Vec<TokenTree>,
+    pub orders: Vec<Vec<NodeId>>,
+    pub row_maps: Vec<Vec<usize>>,
+    /// Resident prefix positions per sequence, snapshotted before the
+    /// dispatch (the bill is computed against this mark).
+    pub cached_lens: Vec<usize>,
+    /// Speculated tokens allocated per sequence (== trees[i].size()).
+    pub allocated: Vec<usize>,
+    /// Effective budget: the caller's `global_budget`, or 0 when no
+    /// sequence speculated this round.
+    pub global_budget: usize,
+    pub draft_dispatches: u64,
+    times: ComponentTimes,
+}
+
+/// Phase 2 output: the batched verification rows + live KV leases.
+pub struct RoundDispatch {
+    pub plan: RoundPlan,
+    /// Per sequence, the target logits rows (row 0 = root).
+    pub rows: Vec<Vec<Vec<f32>>>,
+    leases: Vec<TreeLease>,
+}
+
+/// Per-sequence result of one concluded round.
+pub struct SeqRoundOutcome {
+    pub id: u64,
+    /// Accepted speculated tokens + the bonus token, untruncated (the
+    /// caller applies stop-token/length truncation via
+    /// `engine::truncate_chunk`).
+    pub tokens: Vec<u32>,
+    /// Speculated tokens accepted (excludes the bonus).
+    pub accepted: usize,
+    /// Speculated tokens allocated to this sequence (its tree size).
+    pub allocated: usize,
+    pub tree_depth: usize,
+    pub bill: VerifyBill,
+}
+
+impl SeqRoundOutcome {
+    /// Round statistics for this sequence's chunk. `round` is 0 — the
+    /// caller stamps its own 1-based round index; `virtual_secs` is the
+    /// round's shared dispatch cost.
+    pub fn stats(&self, virtual_secs: f64) -> RoundStats {
+        RoundStats {
+            round: 0,
+            tree_size: self.allocated,
+            accepted: self.accepted,
+            billed_positions: self.bill.billed_positions,
+            cached_positions: self.bill.cached_positions,
+            virtual_secs,
+        }
+    }
+}
+
+/// Phase 3 output: everything one round did.
+pub struct RoundOutcome {
+    /// Aligned with the `SeqRound` input order.
+    pub seqs: Vec<SeqRoundOutcome>,
+    pub global_budget: usize,
+    pub draft_dispatches: u64,
+    /// Always 1: the round is one (forest-)batched target dispatch.
+    pub target_dispatches: u64,
+    /// Totals across the dispatch (`cache::verify_bill` split).
+    pub billed_positions: usize,
+    pub cached_positions: usize,
+    pub fetched_blocks: usize,
+    pub written_blocks: usize,
+    /// Σ allocated — the speculated tokens the dispatch carried.
+    pub spec_tokens: usize,
+    /// Measured wall time per component (Fig 4 buckets: draft_infer,
+    /// tree_construct, mask, target_infer, sample, verify).
+    pub times: ComponentTimes,
+    /// Shared virtual regime cost of the round's dispatch (None without a
+    /// regime). Model inference is billed at regime rates only; the
+    /// pure-logic components at measured wall time.
+    pub virtual_secs: Option<f64>,
+}
+
+impl RoundOutcome {
+    pub fn virtual_secs_or_zero(&self) -> f64 {
+        self.virtual_secs.unwrap_or(0.0)
+    }
+}
+
+/// Phase 1: snapshot residency, allocate the budget, grow the forest.
+pub fn plan_round(
+    rc: &RoundCtx<'_>,
+    draft: &mut dyn LogitModel,
+    cache: &mut CacheManager,
+    seqs: &mut [SeqRound<'_>],
+) -> RoundPlan {
+    let n = seqs.len();
+    let mut times = ComponentTimes::new();
+
+    // Residency snapshots (also touches the LRU clock). Tree construction
+    // never consults the cache, so snapshotting before the build is
+    // equivalent to after it — and matches the FCFS engine's historical
+    // begin-round-first ordering.
+    let cached_lens: Vec<usize> = seqs
+        .iter()
+        .map(|v| cache.begin_round(v.id).min(v.prefix.len()))
+        .collect();
+
+    // Who speculates this round. Baseline takes the bare-row path for
+    // every sequence: autoregressive decoding pays no draft dispatch.
+    let spec: Vec<usize> = if rc.policy_kind == PolicyKind::Baseline {
+        Vec::new()
+    } else {
+        (0..n).filter(|&i| seqs[i].wants_spec).collect()
+    };
+    let global_budget = if spec.is_empty() { 0 } else { rc.global_budget };
+
+    // --- draft-tree construction (Fig 4: "tree construction" + "draft") ---
+    let t_build = Timer::start();
+    let (spec_trees, draft_secs, draft_dispatches) = if spec.is_empty() {
+        (Vec::new(), 0.0, 0)
+    } else {
+        let prefixes: Vec<&[u32]> =
+            spec.iter().map(|&i| seqs[i].prefix).collect();
+        let caps: Vec<usize> = spec.iter().map(|&i| seqs[i].cap).collect();
+        // Rngs are cloned out and written back: the allocator needs them
+        // mutably while the prefixes borrow the sequences.
+        let mut rngs: Vec<Rng> =
+            spec.iter().map(|&i| seqs[i].rng.clone()).collect();
+        let mut timed = TimedModel::new(draft);
+        let alloc = if rc.policy_kind == PolicyKind::DySpec {
+            build_forest(
+                &mut timed,
+                &prefixes,
+                &mut rngs,
+                rc.cfg,
+                global_budget,
+                &caps,
+            )
+        } else {
+            build_forest_fair(
+                rc.policy,
+                &mut timed,
+                &prefixes,
+                &mut rngs,
+                rc.cfg,
+                global_budget,
+                &caps,
+            )
+        };
+        let secs = timed.secs;
+        let dispatches = timed.dispatches();
+        for (k, &i) in spec.iter().enumerate() {
+            *seqs[i].rng = rngs[k].clone();
+        }
+        (alloc.trees, secs, dispatches)
+    };
+    let build_total = t_build.elapsed_secs();
+    times.add("draft_infer", draft_secs);
+    times.add("tree_construct", (build_total - draft_secs).max(0.0));
+
+    // Align trees with the full set; non-speculating sequences get a bare
+    // root row (no speculation, still >= 1 emitted token).
+    let mut trees: Vec<TokenTree> = Vec::with_capacity(n);
+    {
+        let mut built = spec_trees.into_iter();
+        let mut sp = 0usize;
+        for (i, v) in seqs.iter().enumerate() {
+            if sp < spec.len() && spec[sp] == i {
+                trees.push(built.next().expect("allocator arity"));
+                sp += 1;
+            } else {
+                let last = *v.prefix.last().expect("empty prefix");
+                trees.push(TokenTree::new(last, Vec::new()));
+            }
+        }
+    }
+    let allocated: Vec<usize> = trees.iter().map(TokenTree::size).collect();
+
+    // --- verification order + row maps (Fig 4: "generate masks") ---
+    let t_mask = Timer::start();
+    let orders: Vec<Vec<NodeId>> = trees.iter().map(dfs_order).collect();
+    let row_maps: Vec<Vec<usize>> = trees
+        .iter()
+        .zip(&orders)
+        .map(|(t, o)| row_map(t, o))
+        .collect();
+    times.add("mask", t_mask.elapsed_secs());
+
+    RoundPlan {
+        trees,
+        orders,
+        row_maps,
+        cached_lens,
+        allocated,
+        global_budget,
+        draft_dispatches,
+        times,
+    }
+}
+
+/// Phase 2: lease the speculated branches and run the one batched target
+/// verification dispatch (incremental: only non-resident prefixes + tree
+/// rows are computed/billed).
+pub fn dispatch_round(
+    mut plan: RoundPlan,
+    target: &mut dyn LogitModel,
+    cache: &mut CacheManager,
+    seqs: &[SeqRound<'_>],
+) -> RoundDispatch {
+    let leases: Vec<TreeLease> =
+        plan.trees.iter().map(|t| cache.lease_tree(t)).collect();
+    let t = Timer::start();
+    let rows = {
+        let items: Vec<ForestItem<'_>> = seqs
+            .iter()
+            .enumerate()
+            .map(|(i, v)| ForestItem {
+                prefix: v.prefix,
+                cached_len: plan.cached_lens[i],
+                tree: &plan.trees[i],
+                order: &plan.orders[i],
+            })
+            .collect();
+        target.score_forest(&items)
+    };
+    plan.times.add("target_infer", t.elapsed_secs());
+    RoundDispatch { plan, rows, leases }
+}
+
+/// Phase 3: per-sequence acceptance walk, lease rollback, residency
+/// commit, and the round's cost accounting.
+pub fn conclude_round(
+    rc: &RoundCtx<'_>,
+    dispatch: RoundDispatch,
+    cache: &mut CacheManager,
+    seqs: &mut [SeqRound<'_>],
+) -> RoundOutcome {
+    let RoundDispatch {
+        plan,
+        rows,
+        mut leases,
+    } = dispatch;
+    let mut times = plan.times;
+    let block_tokens = cache.block_tokens();
+
+    let mut out = Vec::with_capacity(seqs.len());
+    let (mut billed, mut cached) = (0usize, 0usize);
+    let (mut fetched, mut written) = (0usize, 0usize);
+    let (mut sample_secs, mut verify_secs) = (0.0f64, 0.0f64);
+    for (i, v) in seqs.iter_mut().enumerate() {
+        let prefix_len = v.prefix.len();
+
+        // --- temperature + sampling dists (Fig 4: "sampling") ---
+        let t = Timer::start();
+        let dists: Vec<Vec<f32>> = rows[i]
+            .iter()
+            .map(|r| dist_from_logits(r, v.temperature))
+            .collect();
+        sample_secs += t.elapsed_secs();
+
+        // --- stochastic accept/reject walk (Fig 4: "verification") ---
+        let t = Timer::start();
+        let walked =
+            verify_tree(&plan.trees[i], &dists, &plan.row_maps[i], v.rng);
+        verify_secs += t.elapsed_secs();
+
+        // Cache round end: rejected branches roll back (refcounts to
+        // zero), the accepted path + the scored miss region become the
+        // new resident prefix, and the dispatch slice is priced.
+        let lease = std::mem::take(&mut leases[i]);
+        cache.end_lease(lease, &plan.trees[i], &walked.accepted_nodes);
+        cache.commit(
+            v.id,
+            plan.cached_lens[i],
+            prefix_len,
+            walked.accepted.len(),
+        );
+        let bill = verify_bill(
+            prefix_len,
+            plan.cached_lens[i],
+            plan.orders[i].len(),
+            block_tokens,
+        );
+        cache.record_lookup(
+            bill.cached_positions as u64,
+            (prefix_len - bill.cached_positions) as u64,
+        );
+        billed += bill.billed_positions;
+        cached += bill.cached_positions;
+        fetched += bill.fetched_blocks;
+        written += bill.written_blocks;
+
+        let accepted = walked.accepted.len();
+        let mut tokens = walked.accepted;
+        tokens.push(walked.bonus);
+        out.push(SeqRoundOutcome {
+            id: v.id,
+            tokens,
+            accepted,
+            allocated: plan.allocated[i],
+            tree_depth: plan.trees[i].depth(),
+            bill,
+        });
+    }
+    times.add("sample", sample_secs);
+    times.add("verify", verify_secs);
+
+    // Virtual hardware-regime cost of the round (paper Eq. 3): draft and
+    // target dispatches at the regime's step times — the shared target
+    // dispatch in ceil(spec_tokens / verify_width) units, so root rows
+    // ride free and a batch-of-1 bills exactly one step — computed
+    // positions and cache traffic at the regime's marginal rates, and the
+    // pure-logic components at measured wall time (model wall time is
+    // excluded via TimedModel / the target timer; never billed).
+    let spec_tokens: usize = plan.allocated.iter().sum();
+    let virtual_secs = rc.regime.map(|r| {
+        let units = if r.verify_width == usize::MAX || spec_tokens == 0 {
+            1
+        } else {
+            spec_tokens.div_ceil(r.verify_width.max(1)).max(1)
+        };
+        r.draft_step_secs * plan.draft_dispatches as f64
+            + r.target_step_secs * units as f64
+            + r.target_pos_secs * billed as f64
+            + r.cache_fetch_secs * fetched as f64
+            + r.cache_write_secs * written as f64
+            + times.get("tree_construct")
+            + times.get("mask")
+            + times.get("sample")
+            + times.get("verify")
+    });
+
+    RoundOutcome {
+        seqs: out,
+        global_budget: plan.global_budget,
+        draft_dispatches: plan.draft_dispatches,
+        target_dispatches: 1,
+        billed_positions: billed,
+        cached_positions: cached,
+        fetched_blocks: fetched,
+        written_blocks: written,
+        spec_tokens,
+        times,
+        virtual_secs,
+    }
+}
+
+/// The full round: plan → dispatch → conclude.
+pub fn run_round(
+    rc: &RoundCtx<'_>,
+    draft: &mut dyn LogitModel,
+    target: &mut dyn LogitModel,
+    cache: &mut CacheManager,
+    seqs: &mut [SeqRound<'_>],
+) -> RoundOutcome {
+    let plan = plan_round(rc, draft, cache, seqs);
+    let dispatch = dispatch_round(plan, target, cache, seqs);
+    conclude_round(rc, dispatch, cache, seqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheConfig;
+    use crate::draft::make_policy;
+    use crate::models::sim::{SimModel, SimSpec};
+
+    fn ctx_cfg(policy: PolicyKind, budget: usize) -> EngineConfig {
+        EngineConfig {
+            policy,
+            tree_budget: budget,
+            target_temp: 0.6,
+            ..EngineConfig::default()
+        }
+    }
+
+    fn run_one(
+        policy: PolicyKind,
+        budget: usize,
+        wants_spec: bool,
+        regime: Option<LatencyRegime>,
+    ) -> RoundOutcome {
+        let (mut draft, mut target) =
+            SimModel::pair(SimSpec::new(64, 2.0, 0.8, 11));
+        let cfg = ctx_cfg(policy, budget);
+        let pol = make_policy(policy);
+        let rc = RoundCtx {
+            cfg: &cfg,
+            policy: pol.as_ref(),
+            policy_kind: policy,
+            global_budget: budget,
+            regime,
+        };
+        let mut cache = CacheManager::new(&CacheConfig::default());
+        let mut rng = Rng::new(3);
+        let prefix = [5u32, 6, 7];
+        let mut seqs = [SeqRound {
+            id: 0,
+            prefix: &prefix[..],
+            rng: &mut rng,
+            temperature: 0.6,
+            cap: budget,
+            wants_spec,
+        }];
+        run_round(&rc, &mut draft, &mut target, &mut cache, &mut seqs)
+    }
+
+    #[test]
+    fn speculative_round_emits_accepted_plus_bonus() {
+        let out = run_one(PolicyKind::DySpec, 12, true, None);
+        assert_eq!(out.seqs.len(), 1);
+        let s = &out.seqs[0];
+        assert_eq!(s.tokens.len(), s.accepted + 1);
+        assert_eq!(s.allocated, 12);
+        assert_eq!(out.spec_tokens, 12);
+        assert_eq!(out.global_budget, 12);
+        assert!(out.draft_dispatches >= 1);
+        assert_eq!(out.target_dispatches, 1);
+        // Cold round bills the whole prefix plus every tree row.
+        assert_eq!(s.bill.billed_positions, 3 + 12);
+        assert!(out.virtual_secs.is_none());
+    }
+
+    #[test]
+    fn baseline_round_is_autoregressive_with_no_draft_cost() {
+        let out = run_one(PolicyKind::Baseline, 12, true, None);
+        let s = &out.seqs[0];
+        assert_eq!(s.tokens.len(), 1, "baseline emits exactly the bonus");
+        assert_eq!(s.accepted, 0);
+        assert_eq!(s.allocated, 0);
+        assert_eq!(out.draft_dispatches, 0, "baseline paid a draft dispatch");
+        assert_eq!(out.global_budget, 0);
+        assert_eq!(s.bill.billed_positions, 3);
+    }
+
+    #[test]
+    fn draining_sequence_takes_a_bare_row() {
+        let out = run_one(PolicyKind::DySpec, 12, false, None);
+        let s = &out.seqs[0];
+        assert_eq!(s.allocated, 0);
+        assert_eq!(s.tokens.len(), 1);
+        assert_eq!(out.draft_dispatches, 0);
+        assert_eq!(out.global_budget, 0, "no speculator, no budget");
+    }
+
+    #[test]
+    fn regime_bills_one_unit_for_batch_of_one() {
+        let regime = LatencyRegime::pair_7b();
+        let out = run_one(PolicyKind::DySpec, 12, true, Some(regime));
+        let v = out.virtual_secs.expect("regime configured");
+        assert!(v >= regime.target_step_secs);
+        assert!(
+            v >= regime.target_step_secs
+                + regime.draft_step_secs * out.draft_dispatches as f64
+                + regime.target_pos_secs * out.billed_positions as f64
+        );
+        // 12 speculated tokens <= verify_width 64: exactly one step unit.
+        assert!(
+            v < 2.0 * regime.target_step_secs,
+            "batch-of-1 billed more than one dispatch unit"
+        );
+    }
+
+    #[test]
+    fn multi_sequence_round_serves_every_sequence() {
+        let (mut draft, mut target) =
+            SimModel::pair(SimSpec::new(64, 2.0, 0.8, 11));
+        let cfg = ctx_cfg(PolicyKind::DySpec, 8);
+        let pol = make_policy(PolicyKind::DySpec);
+        let rc = RoundCtx {
+            cfg: &cfg,
+            policy: pol.as_ref(),
+            policy_kind: PolicyKind::DySpec,
+            global_budget: 12,
+            regime: None,
+        };
+        let mut cache = CacheManager::new(&CacheConfig::default());
+        let mut rngs: Vec<Rng> = (0..3).map(Rng::new).collect();
+        let prefixes: Vec<Vec<u32>> =
+            vec![vec![1, 2], vec![3, 4, 5], vec![6]];
+        let mut it = rngs.iter_mut();
+        let mut seqs: Vec<SeqRound> = prefixes
+            .iter()
+            .enumerate()
+            .map(|(i, p)| SeqRound {
+                id: i as u64 + 1,
+                prefix: p.as_slice(),
+                rng: it.next().expect("rng arity"),
+                temperature: 0.6,
+                cap: 8,
+                // middle sequence drains: bare row
+                wants_spec: i != 1,
+            })
+            .collect();
+        let out =
+            run_round(&rc, &mut draft, &mut target, &mut cache, &mut seqs);
+        assert_eq!(out.seqs.len(), 3);
+        assert_eq!(out.seqs[1].allocated, 0, "draining seq got budget");
+        assert!(out.seqs[0].allocated >= 1, "speculator starved");
+        assert!(out.seqs[2].allocated >= 1, "speculator starved");
+        assert!(out.spec_tokens <= 12, "over budget");
+        for s in &out.seqs {
+            assert!(!s.tokens.is_empty(), "no progress for a sequence");
+        }
+        assert_eq!(out.target_dispatches, 1);
+        // Residency committed for every sequence; drop cleans the pool.
+        assert!(cache.used_blocks() > 0);
+        for i in 1..=3u64 {
+            cache.drop_seq(i);
+        }
+        assert_eq!(cache.used_blocks(), 0);
+    }
+}

@@ -1,26 +1,25 @@
-//! Step-level continuous batcher.
+//! Step-level continuous batcher — the batch-of-n admission wrapper around
+//! the shared round pipeline (`crate::round`, DESIGN.md §Round Pipeline).
 //!
 //! Each iteration of [`Batcher::run`]:
 //!   1. retires cancelled sequences (slot + KV residency released before
 //!      any further work is spent on them);
 //!   2. admits new requests from the shared queue up to `sched.max_active`;
-//!   3. asks the budget allocator for one speculated tree per sequence,
-//!      spending the GLOBAL per-dispatch token budget greedily across
-//!      sequences by estimated acceptance (`sched::budget`), each sequence
-//!      further capped by its request's own `token_budget`;
-//!   4. packs every sequence's tree (plus bare root rows for draining
-//!      sequences) into ONE batched target verification
-//!      (`models::LogitModel::score_forest`);
-//!   5. walks each sequence's accept/reject outcome, streams the accepted
-//!      chunk through the request's event channel (`GenEvent::Chunk`), and
-//!      advances its state machine (`sched::sequence`).
+//!   3. resolves the step's effective draft policy and global budget, then
+//!      hands the whole active set to `round::run_round` — budget
+//!      allocation, tree growth, the ONE batched verification dispatch
+//!      (`models::LogitModel::score_forest`), acceptance, and KV
+//!      commit/rollback all happen inside the pipeline;
+//!   4. streams each sequence's accepted chunk through its event channel
+//!      (`GenEvent::Chunk`) and advances its state machine
+//!      (`sched::sequence`), retiring finished sequences.
 //!
 //! One target dispatch therefore serves the whole active set — under the
 //! paper's hardware-regime accounting that is the continuous-batching
 //! throughput win, measured by `bench --experiment serve`.
 //!
 //! Per-request `drafter` overrides are honored when the step's speculating
-//! set agrees on one policy (a homogeneous batch); a mixed batch falls
+//! set agrees on one policy (`draft::round_policy`); a mixed batch falls
 //! back to the worker's configured policy — the cross-request greedy
 //! allocator is policy-global by construction (DESIGN.md §Serving API v1).
 //!
@@ -33,22 +32,15 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
-use crate::cache::{verify_bill, CacheManager, TreeLease, VerifyBill};
+use crate::cache::CacheManager;
 use crate::config::{Config, PolicyKind};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::queue::{
-    EventSink, FinishReason, GenEvent, Request, RoundStats,
-};
-use crate::draft::{make_policy, TreePolicy};
+use crate::coordinator::queue::{EventSink, FinishReason, GenEvent, Request};
+use crate::draft::{make_policy, round_policy, TreePolicy};
 use crate::log_debug;
-use crate::models::{ForestItem, LogitModel, TimedModel};
-use crate::sampling::dist_from_logits;
-use crate::sched::budget::{build_forest, build_forest_fair, ForestAlloc};
+use crate::models::LogitModel;
+use crate::round::{self, RoundCtx, SeqRound};
 use crate::sched::sequence::Sequence;
-use crate::tree::{dfs_order, NodeId, TokenTree};
-use crate::util::timer::Timer;
-use crate::util::Rng;
-use crate::verify::{row_map, verify_tree};
 
 /// What one scheduler step did — consumed by metrics and the invariant
 /// tests in `rust/tests/scheduler.rs`.
@@ -194,26 +186,10 @@ impl Batcher {
         base.max(n_spec)
     }
 
-    /// The draft policy this step runs: the per-request override when the
-    /// speculating set is homogeneous, the worker default otherwise.
-    fn step_policy(&self, spec_idx: &[usize]) -> PolicyKind {
-        let mut kinds = spec_idx.iter().map(|&i| {
-            self.seqs[i]
-                .drafter
-                .unwrap_or(self.cfg.engine.policy)
-        });
-        let Some(first) = kinds.next() else {
-            return self.cfg.engine.policy;
-        };
-        if kinds.all(|k| k == first) {
-            first
-        } else {
-            self.cfg.engine.policy
-        }
-    }
-
-    /// One scheduler iteration over the current active set. No-op when the
-    /// active set is empty.
+    /// One scheduler iteration over the current active set: resolve the
+    /// step's policy + budget, run the shared round pipeline
+    /// (`round::run_round`) over every sequence, then stream chunks and
+    /// advance state machines. No-op when the active set is empty.
     pub fn step(&mut self) -> StepReport {
         let mut report = StepReport {
             cancelled: self.sweep_cancelled(),
@@ -225,230 +201,82 @@ impl Batcher {
         }
         report.active = n;
         let metrics = self.metrics.clone();
-        let draft_before = self.draft.call_counts().dispatches;
 
-        // --- cross-request budget allocation + tree construction ---
-        let spec_idx: Vec<usize> = (0..n)
-            .filter(|&i| self.seqs[i].wants_speculation())
-            .collect();
-        let budget = if spec_idx.is_empty() {
+        // --- admission-policy side of the round: who speculates, under
+        // which policy, at what shared budget ---
+        let spec_count =
+            self.seqs.iter().filter(|s| s.wants_speculation()).count();
+        let budget = if spec_count == 0 {
             0
         } else {
-            self.global_budget(spec_idx.len())
+            self.global_budget(spec_count)
         };
-        report.global_budget = budget;
-        let policy_kind = self.step_policy(&spec_idx);
+        let policy_kind = round_policy(
+            self.seqs
+                .iter()
+                .filter(|s| s.wants_speculation())
+                .map(|s| s.drafter),
+            self.cfg.engine.policy,
+        );
         if policy_kind != self.fair_policy_kind {
             self.fair_policy = make_policy(policy_kind);
             self.fair_policy_kind = policy_kind;
         }
 
-        let t_build = Timer::start();
-        let (alloc, draft_wall_secs): (ForestAlloc, f64) = {
-            // Rngs are cloned out and written back: the allocator needs
-            // them mutably while the prefixes borrow the sequences.
-            let mut rngs: Vec<Rng> = spec_idx
-                .iter()
-                .map(|&i| self.seqs[i].rng.clone())
-                .collect();
-            let prefixes: Vec<&[u32]> = spec_idx
-                .iter()
-                .map(|&i| self.seqs[i].ctx.as_slice())
-                .collect();
-            let caps: Vec<usize> = spec_idx
-                .iter()
-                .map(|&i| self.seqs[i].tree_cap(self.cfg.engine.tree_budget))
-                .collect();
-            // Split inference wall time out of construction logic, exactly
-            // like the engine's FCFS ledger — model time is billed at
-            // regime rates below, never wall time.
-            let mut timed = TimedModel::new(self.draft.as_mut());
-            let alloc = if policy_kind == PolicyKind::DySpec {
-                build_forest(
-                    &mut timed,
-                    &prefixes,
-                    &mut rngs,
-                    &self.cfg.engine,
-                    budget,
-                    &caps,
-                )
-            } else {
-                build_forest_fair(
-                    self.fair_policy.as_ref(),
-                    &mut timed,
-                    &prefixes,
-                    &mut rngs,
-                    &self.cfg.engine,
-                    budget,
-                    &caps,
-                )
+        // --- the shared round pipeline over the whole active set ---
+        let engine_budget = self.cfg.engine.tree_budget;
+        let outcome = {
+            let rc = RoundCtx {
+                cfg: &self.cfg.engine,
+                policy: self.fair_policy.as_ref(),
+                policy_kind,
+                global_budget: budget,
+                regime: self.cfg.regime,
             };
-            let draft_wall_secs = timed.secs;
-            drop(prefixes);
-            for (k, &i) in spec_idx.iter().enumerate() {
-                self.seqs[i].rng = rngs[k].clone();
-            }
-            (alloc, draft_wall_secs)
-        };
-        let build_secs = t_build.elapsed_secs();
-        report.draft_dispatches =
-            self.draft.call_counts().dispatches - draft_before;
-
-        // Align trees with the full active set; draining sequences get a
-        // bare root row (no speculation, still >= 1 emitted token).
-        let mut trees: Vec<TokenTree> = Vec::with_capacity(n);
-        let mut alloc_by_seq = vec![0usize; n];
-        {
-            let mut built = alloc.trees.into_iter();
-            let mut spec_pos = 0usize;
-            for (i, row) in alloc_by_seq.iter_mut().enumerate() {
-                if spec_pos < spec_idx.len() && spec_idx[spec_pos] == i {
-                    let tree = built.next().expect("allocator arity");
-                    *row = tree.size();
-                    trees.push(tree);
-                    spec_pos += 1;
-                } else {
-                    let last = *self.seqs[i].ctx.last().expect("empty ctx");
-                    trees.push(TokenTree::new(last, Vec::new()));
-                }
-            }
-        }
-        report.allocated = alloc_by_seq.clone();
-        let orders: Vec<Vec<NodeId>> =
-            trees.iter().map(dfs_order).collect();
-
-        // --- KV residency: resident prefix marks + transient COW leases
-        // for the speculated branches (DESIGN.md §KV cache) ---
-        let cached_lens: Vec<usize> = (0..n)
-            .map(|i| {
-                self.cache
-                    .begin_round(self.seqs[i].id)
-                    .min(self.seqs[i].ctx.len())
-            })
-            .collect();
-        let mut leases: Vec<TreeLease> =
-            trees.iter().map(|t| self.cache.lease_tree(t)).collect();
-
-        // --- ONE batched target dispatch for the whole active set ---
-        let all_rows = {
-            let items: Vec<ForestItem<'_>> = (0..n)
-                .map(|i| ForestItem {
-                    prefix: &self.seqs[i].ctx,
-                    cached_len: cached_lens[i],
-                    tree: &trees[i],
-                    order: &orders[i],
+            let mut views: Vec<SeqRound<'_>> = self
+                .seqs
+                .iter_mut()
+                .map(|s| {
+                    let cap = s.tree_cap(engine_budget);
+                    let wants = s.wants_speculation();
+                    SeqRound {
+                        id: s.id,
+                        prefix: s.ctx.as_slice(),
+                        rng: &mut s.rng,
+                        temperature: s.temperature,
+                        cap,
+                        wants_spec: wants,
+                    }
                 })
                 .collect();
-            self.target.score_forest(&items)
+            round::run_round(
+                &rc,
+                self.draft.as_mut(),
+                self.target.as_mut(),
+                &mut self.cache,
+                &mut views,
+            )
         };
-
-        // --- phase A: per-sequence verification + cache round end ---
-        // (chunk emission waits for phase B so every chunk's RoundStats
-        // can carry the step's shared virtual cost)
-        let t_verify = Timer::start();
-        let block_tokens = self.cache.block_tokens();
-        let mut outcomes: Vec<(Vec<u32>, usize, VerifyBill)> =
-            Vec::with_capacity(n);
-        let mut billed_total = 0usize;
-        let mut cached_total = 0usize;
-        let mut fetched_total = 0usize;
-        let mut written_total = 0usize;
-        for i in 0..n {
-            let seq = &mut self.seqs[i];
-            let seq_id = seq.id;
-            let prefix_len = seq.ctx.len();
-            let dists: Vec<Vec<f32>> = all_rows[i]
-                .iter()
-                .map(|r| dist_from_logits(r, seq.temperature))
-                .collect();
-            let row_of = row_map(&trees[i], &orders[i]);
-            let out = verify_tree(&trees[i], &dists, &row_of, &mut seq.rng);
-
-            // Rollback rejected branches, retain miss region + accepted
-            // path as the new resident prefix, price the dispatch slice.
-            let lease = std::mem::take(&mut leases[i]);
-            self.cache.end_lease(lease, &trees[i], &out.accepted_nodes);
-            self.cache.commit(
-                seq_id,
-                cached_lens[i],
-                prefix_len,
-                out.accepted.len(),
-            );
-            let bill = verify_bill(
-                prefix_len,
-                cached_lens[i],
-                orders[i].len(),
-                block_tokens,
-            );
-            self.cache.record_lookup(
-                bill.cached_positions as u64,
-                (prefix_len - bill.cached_positions) as u64,
-            );
-            billed_total += bill.billed_positions;
-            cached_total += bill.cached_positions;
-            fetched_total += bill.fetched_blocks;
-            written_total += bill.written_blocks;
-
-            let accepted = out.accepted.len();
-            let mut tokens = out.accepted;
-            tokens.push(out.bonus);
-            outcomes.push((tokens, accepted, bill));
-        }
-        let verify_secs = t_verify.elapsed_secs();
-        report.billed_positions = billed_total;
-        report.cached_positions = cached_total;
-
-        let used: usize = alloc_by_seq.iter().sum();
-
-        // Virtual regime accounting, mirroring the engine's FCFS ledger
-        // (engine/mod.rs): model inference is billed at regime rates ONLY
-        // (wall time excluded via TimedModel; target wall never billed),
-        // pure scheduling/verification logic at measured wall time. The
-        // shared target dispatch is billed in ceil(spec_tokens /
-        // verify_width) units: per-sequence root rows ride free exactly as
-        // the single root row does in the engine's one-unit step, so a
-        // single-sequence continuous step bills identically to FCFS, and
-        // packing more SPECULATED tokens than the width the regime's step
-        // time was calibrated at costs proportionally more.
-        let construct_secs = (build_secs - draft_wall_secs).max(0.0);
-        let virt = self
-            .cfg
-            .regime
-            .map(|r| {
-                let units = if r.verify_width == usize::MAX || used == 0 {
-                    1
-                } else {
-                    ((used + r.verify_width - 1) / r.verify_width.max(1)).max(1)
-                };
-                r.draft_step_secs * report.draft_dispatches as f64
-                    + r.target_step_secs * units as f64
-                    + r.target_pos_secs * billed_total as f64
-                    + r.cache_fetch_secs * fetched_total as f64
-                    + r.cache_write_secs * written_total as f64
-                    + construct_secs
-                    + verify_secs
-            })
-            .unwrap_or(0.0);
+        report.global_budget = outcome.global_budget;
+        report.allocated = outcome.seqs.iter().map(|s| s.allocated).collect();
+        report.draft_dispatches = outcome.draft_dispatches;
+        report.billed_positions = outcome.billed_positions;
+        report.cached_positions = outcome.cached_positions;
+        let virt = outcome.virtual_secs_or_zero();
         report.virtual_secs = virt;
+        let used = outcome.spec_tokens;
 
-        // --- phase B: stream chunks + advance state machines ---
+        // --- stream chunks + advance state machines (after the round so
+        // every chunk's RoundStats carries the shared virtual cost) ---
         let mut finished: Vec<usize> = Vec::new();
-        for (i, (tokens, accepted, bill)) in
-            outcomes.into_iter().enumerate()
-        {
+        for (i, so) in outcome.seqs.into_iter().enumerate() {
             let seq = &mut self.seqs[i];
-            seq.cache_hits += bill.cached_positions as u64;
+            seq.cache_hits += so.bill.cached_positions as u64;
             seq.virtual_secs += virt;
-            let stats = RoundStats {
-                round: 0, // set by on_step to the sequence's step count
-                tree_size: alloc_by_seq[i],
-                accepted,
-                billed_positions: bill.billed_positions,
-                cached_positions: bill.cached_positions,
-                virtual_secs: virt,
-            };
+            let stats = so.stats(virt); // round stamped by on_step
+            let allocated = so.allocated;
             let before = seq.emitted.len();
-            let done = seq.on_step(tokens, alloc_by_seq[i], stats);
+            let done = seq.on_step(so.tokens, allocated, stats);
             report.emitted.push(seq.emitted.len() - before);
             metrics.on_chunk();
             if seq.steps == 1 {
@@ -462,11 +290,17 @@ impl Batcher {
         }
 
         let emitted_total: usize = report.emitted.iter().sum();
-        metrics.on_dispatches(1, n as u64, used as u64, budget as u64, virt);
+        metrics.on_dispatches(
+            1,
+            n as u64,
+            used as u64,
+            report.global_budget as u64,
+            virt,
+        );
         metrics.tokens_in_flight_add(emitted_total as u64);
         metrics.on_cache(
-            cached_total as u64,
-            billed_total as u64,
+            report.cached_positions as u64,
+            report.billed_positions as u64,
             self.cache.used_blocks() as u64,
         );
 

@@ -12,11 +12,16 @@
 //!     candidate samplings from every active sequence, spending the shared
 //!     per-dispatch token budget on the globally highest estimated
 //!     acceptance (DySpec's Algorithm 1 lifted across sequences);
-//!   - [`batcher`] — the step loop that admits, allocates, packs one
-//!     batched verification dispatch, and distributes results.
+//!   - [`batcher`] — the step loop that admits, sweeps cancellations,
+//!     runs the shared round pipeline (`crate::round`) over the active
+//!     set, and distributes results.
 //!
-//! Select it with `scheduler = continuous` (see `config::SchedConfig`);
-//! DESIGN.md §Scheduler has the full design rationale.
+//! The round itself (tree growth, batched verification, acceptance, KV
+//! commit/rollback) lives in `crate::round` and is shared with the FCFS
+//! engine — the scheduler switch selects an admission policy, not an
+//! implementation (DESIGN.md §Round Pipeline). Select this one with
+//! `scheduler = continuous` (see `config::SchedConfig`); DESIGN.md
+//! §Scheduler has the full design rationale.
 
 pub mod batcher;
 pub mod budget;

@@ -48,7 +48,7 @@ pub struct Sequence {
     /// Per-request speculation cap (protocol-v1 `token_budget`).
     pub token_budget: Option<usize>,
     /// Per-request draft-policy override (honored when the step's
-    /// speculating set is homogeneous; see `batcher::Batcher::step_policy`).
+    /// speculating set is homogeneous; see `draft::round_policy`).
     pub drafter: Option<crate::config::PolicyKind>,
     pub emitted: Vec<u32>,
     /// Scheduler steps this sequence took part in.

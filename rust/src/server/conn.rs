@@ -62,7 +62,10 @@ impl TransportCtl {
 /// reactor polls on its dirty pass.
 pub struct ConnShared {
     pub id: u64,
-    outbox: Mutex<VecDeque<String>>,
+    /// Serialized, newline-terminated wire frames. Stored as raw bytes so
+    /// the writer never re-encodes: flushing coalesces queued frames into
+    /// one buffer and hands the kernel a single `write` per pump.
+    outbox: Mutex<VecDeque<Vec<u8>>>,
     outbox_cap: usize,
     /// A frame push found the outbox full: the client is not draining
     /// its socket — the reactor tears the connection down.
@@ -98,7 +101,8 @@ impl ConnShared {
         })
     }
 
-    /// Queue one serialized frame. Returns false when the connection is
+    /// Queue one serialized frame (newline-terminated here, once — the
+    /// write path appends nothing). Returns false when the connection is
     /// closed or the outbox is at capacity (the overflow flag is set and
     /// the reactor will close the connection — bounded memory beats an
     /// unbounded buffer to a client that stopped reading).
@@ -116,18 +120,51 @@ impl ConnShared {
             self.overflowed.store(true, Ordering::SeqCst);
             false
         } else {
-            outbox.push_back(line);
+            let mut frame = line.into_bytes();
+            frame.push(b'\n');
+            outbox.push_back(frame);
             self.metrics.outbox_inc();
             true
         }
     }
 
-    fn pop_frame(&self) -> Option<String> {
-        let line = self.outbox.lock().unwrap().pop_front();
-        if line.is_some() {
+    /// Pop a single frame (tests only — the write path drains bursts via
+    /// [`ConnShared::drain_into`]).
+    #[cfg(test)]
+    fn pop_frame(&self) -> Option<Vec<u8>> {
+        let frame = self.outbox.lock().unwrap().pop_front();
+        if frame.is_some() {
             self.metrics.outbox_dec(1);
         }
-        line
+        frame
+    }
+
+    /// Drain queued frames into `buf` until it reaches `limit` bytes (the
+    /// first frame always moves, without a copy, when `buf` is empty).
+    /// One lock acquisition and one gauge update cover the whole burst —
+    /// the coalesced write must not trade its saved syscall for N mutex
+    /// round-trips against the worker threads pushing frames. Returns how
+    /// many frames were taken.
+    fn drain_into(&self, buf: &mut Vec<u8>, limit: usize) -> usize {
+        let mut taken = 0u64;
+        {
+            let mut outbox = self.outbox.lock().unwrap();
+            while buf.len() < limit {
+                let Some(frame) = outbox.pop_front() else {
+                    break;
+                };
+                if buf.is_empty() {
+                    *buf = frame;
+                } else {
+                    buf.extend_from_slice(&frame);
+                }
+                taken += 1;
+            }
+        }
+        if taken > 0 {
+            self.metrics.outbox_dec(taken);
+        }
+        taken as usize
     }
 
     fn outbox_len(&self) -> usize {
@@ -639,10 +676,17 @@ impl Conn {
         self.pump_out(ctl);
     }
 
+    /// Cap on how many queued bytes one load coalesces into the write
+    /// buffer. Big enough to turn a burst of chunk frames into a single
+    /// `write`, small enough that one connection's flush cannot hold the
+    /// reactor thread for an unbounded memcpy.
+    const COALESCE_BYTES: usize = 64 * 1024;
+
     /// Make the partial-write buffer non-empty: keep the half-written
-    /// front frame, or load (and newline-terminate) the next outbox
-    /// frame. Returns false when there is nothing left to write — the
-    /// ONE place frame framing happens, shared by the nonblocking pump
+    /// front buffer, or coalesce queued outbox frames (already
+    /// newline-terminated byte vectors) into one buffer so the pump
+    /// issues a single `write` for the whole burst. Returns false when
+    /// there is nothing left to write — shared by the nonblocking pump
     /// and the shutdown flush.
     fn load_partial(&mut self) -> bool {
         if self.written < self.partial.len() {
@@ -650,14 +694,12 @@ impl Conn {
         }
         self.partial.clear();
         self.written = 0;
-        match self.shared.pop_frame() {
-            Some(line) => {
-                self.partial = line.into_bytes();
-                self.partial.push(b'\n');
-                true
-            }
-            None => false,
-        }
+        // First frame moves without a copy; further queued frames append
+        // until the coalesce cap so one syscall covers the burst — all
+        // under a single outbox lock (`ConnShared::drain_into`).
+        self.shared
+            .drain_into(&mut self.partial, Self::COALESCE_BYTES)
+            > 0
     }
 
     /// Write until the socket would block or everything queued went out.
@@ -748,6 +790,15 @@ mod tests {
         )
     }
 
+    /// Pop one queued frame back as its wire line (newline stripped).
+    fn pop_line(shared: &ConnShared) -> Option<String> {
+        shared.pop_frame().map(|bytes| {
+            let mut s = String::from_utf8(bytes).expect("frames are utf-8");
+            assert_eq!(s.pop(), Some('\n'), "frame not newline-terminated");
+            s
+        })
+    }
+
     fn resp(finish: FinishReason) -> Box<Response> {
         Box::new(Response {
             id: 1,
@@ -775,7 +826,7 @@ mod tests {
         assert!(!shared.push_frame("c".into()));
         assert!(shared.overflowed.load(Ordering::SeqCst));
         assert_eq!(shared.metrics.outbox_frames(), 2);
-        assert_eq!(shared.pop_frame().as_deref(), Some("a"));
+        assert_eq!(pop_line(&shared).as_deref(), Some("a"));
         assert_eq!(shared.metrics.outbox_frames(), 1);
         shared.close();
         assert_eq!(shared.metrics.outbox_frames(), 0);
@@ -808,10 +859,10 @@ mod tests {
         assert!(!shared.inflight.lock().unwrap().contains_key(&7));
 
         let chunk =
-            protocol::parse_frame(&shared.pop_frame().unwrap()).unwrap();
+            protocol::parse_frame(&pop_line(&shared).unwrap()).unwrap();
         assert_eq!((chunk.req_id, chunk.event.as_str()), (Some(7), "chunk"));
         assert_eq!(chunk.tokens(), vec![9, 8]);
-        let done = protocol::parse_frame(&shared.pop_frame().unwrap()).unwrap();
+        let done = protocol::parse_frame(&pop_line(&shared).unwrap()).unwrap();
         assert_eq!((done.req_id, done.event.as_str()), (Some(7), "done"));
         assert!(done.tokens().is_empty(), "streamed done repeats tokens");
         drop(sink); // done was sent: drop emits nothing further
@@ -837,7 +888,7 @@ mod tests {
         }));
         assert!(shared.pop_frame().is_none(), "one-shot leaked a chunk");
         assert!(oneshot.send(GenEvent::Done(resp(FinishReason::Length))));
-        let done = protocol::parse_frame(&shared.pop_frame().unwrap()).unwrap();
+        let done = protocol::parse_frame(&pop_line(&shared).unwrap()).unwrap();
         assert_eq!(done.tokens(), vec![4, 5], "one-shot done carries tokens");
 
         let legacy = ConnSink::new(
@@ -849,10 +900,34 @@ mod tests {
         );
         assert!(legacy.send(GenEvent::Done(resp(FinishReason::Length))));
         assert!(shared.legacy_finished.load(Ordering::SeqCst));
-        let reply = shared.pop_frame().unwrap();
+        let reply = pop_line(&shared).unwrap();
         let doc = parse_json(&reply).unwrap();
         assert!(doc.get("event").is_none(), "legacy reply got enveloped");
         assert_eq!(doc.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// The zero-copy write path: queued frames are stored as
+    /// newline-terminated bytes and one load coalesces the whole burst
+    /// into a single write buffer (one syscall), draining the gauge.
+    #[test]
+    fn load_partial_coalesces_queued_frames() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let shared = mk_shared(16);
+        let mut conn = Conn::new(stream, shared.clone());
+        assert!(shared.push_frame("a".into()));
+        assert!(shared.push_frame("bb".into()));
+        assert!(shared.push_frame("ccc".into()));
+        assert!(conn.load_partial());
+        assert_eq!(conn.partial.as_slice(), b"a\nbb\nccc\n".as_slice());
+        assert_eq!(shared.outbox_len(), 0, "burst not fully coalesced");
+        assert_eq!(shared.metrics.outbox_frames(), 0, "gauge not drained");
+        // The pending buffer stays loaded until fully written.
+        assert!(conn.load_partial());
+        assert_eq!(conn.written, 0);
+        drop(client);
     }
 
     /// An admitted sink dropped without its Done (coordinator teardown)
@@ -870,7 +945,7 @@ mod tests {
         );
         drop(admitted);
         let frame =
-            protocol::parse_frame(&shared.pop_frame().unwrap()).unwrap();
+            protocol::parse_frame(&pop_line(&shared).unwrap()).unwrap();
         assert_eq!((frame.req_id, frame.event.as_str()), (Some(5), "error"));
         assert_eq!(frame.error(), Some("worker dropped request"));
 

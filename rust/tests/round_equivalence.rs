@@ -1,0 +1,372 @@
+//! Differential wall for the unified round pipeline (ISSUE 5 tentpole):
+//! FCFS and continuous-with-one-slot are the SAME implementation behind
+//! two admission policies, so driving one request through
+//! `SpecEngine::generate_streamed` and through a one-slot `Batcher` must
+//! produce bit-identical token streams, per-round `RoundStats`, and
+//! billed positions — across seeds × drafters × cache on/off.
+//!
+//! The two front ends seed their per-request sampling streams differently
+//! (the engine's `reseed`, the batcher's per-sequence derivation), so the
+//! test aligns them by construction: it solves for the batcher engine
+//! seed that makes the sequence rng equal the FCFS engine rng for a given
+//! request seed. The constants below mirror `engine::SpecEngine::reseed`
+//! and `sched::sequence::Sequence::new` / `sched::batcher::Batcher::new`;
+//! if either seeding scheme changes, the stream-identity assertions fail
+//! loudly and this mirror must be updated with it.
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dyspec::config::{
+    CacheConfig, Config, EngineConfig, PolicyKind, SchedKind,
+};
+use dyspec::coordinator::{
+    CancelToken, FinishReason, GenEvent, GenParams, Metrics, Request,
+    RoundStats,
+};
+use dyspec::engine::SpecEngine;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::sched::Batcher;
+
+const POLICIES: [PolicyKind; 6] = [
+    PolicyKind::DySpec,
+    PolicyKind::DySpecThreshold,
+    PolicyKind::Sequoia,
+    PolicyKind::SpecInfer,
+    PolicyKind::Chain,
+    PolicyKind::Baseline,
+];
+
+const VOCAB: usize = 64;
+const PROMPT: [u32; 3] = [3, 1, 4];
+const MAX_NEW: usize = 24;
+const TREE_BUDGET: usize = 8;
+const TEMP: f32 = 0.6;
+
+/// `SpecEngine::new`/`reseed` salt.
+const ENGINE_SALT: u64 = 0x0DD5_9EC0_0000_0001;
+/// `Batcher::new` seed salt.
+const BATCHER_SALT: u64 = 0x5EED_BA7C_0000_0001;
+/// `Sequence::new` explicit-seed mixer.
+const SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The batcher engine seed that gives a request carrying `req_seed` the
+/// SAME sampling stream the FCFS engine uses after `reseed(req_seed)`:
+///   engine rng   = Rng::new(req_seed ^ ENGINE_SALT)
+///   sequence rng = Rng::new((engine_seed ^ BATCHER_SALT)
+///                           ^ req_seed.wrapping_mul(SEED_MIX))
+fn batcher_engine_seed(req_seed: u64) -> u64 {
+    BATCHER_SALT
+        ^ req_seed.wrapping_mul(SEED_MIX)
+        ^ req_seed
+        ^ ENGINE_SALT
+}
+
+fn sim_pair(seed: u64) -> (SimModel, SimModel) {
+    SimModel::pair(SimSpec::new(VOCAB, 2.0, 1.0, seed))
+}
+
+/// One request's observable round/stream trace, identical fields on both
+/// front ends.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    tokens: Vec<u32>,
+    chunks: Vec<(Vec<u32>, RoundStats)>,
+    finish: FinishReason,
+}
+
+fn fcfs_trace(policy: PolicyKind, cache: &CacheConfig, seed: u64) -> Trace {
+    let (draft, target) = sim_pair(99);
+    let cfg = EngineConfig {
+        policy,
+        tree_budget: TREE_BUDGET,
+        max_new_tokens: MAX_NEW,
+        target_temp: TEMP,
+        draft_temp: 0.6,
+        ..EngineConfig::default()
+    };
+    let mut e = SpecEngine::new(Box::new(draft), Box::new(target), cfg, None)
+        .with_cache(cache);
+    e.reseed(seed);
+    let mut chunks = Vec::new();
+    let (stats, finish) = e.generate_streamed(&PROMPT, None, |ev| {
+        if let GenEvent::Chunk { tokens, stats } = ev {
+            chunks.push((tokens, stats));
+        }
+    });
+    assert_eq!(e.cache().used_blocks(), 0, "fcfs leaked residency");
+    Trace {
+        tokens: stats.tokens,
+        chunks,
+        finish,
+    }
+}
+
+fn continuous_trace(
+    policy: PolicyKind,
+    cache: &CacheConfig,
+    seed: u64,
+) -> Trace {
+    let (draft, target) = sim_pair(99);
+    let mut cfg = Config::new();
+    cfg.engine.policy = policy;
+    cfg.engine.tree_budget = TREE_BUDGET;
+    cfg.engine.seed = batcher_engine_seed(seed);
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.sched.max_active = 1;
+    cfg.sched.global_budget = 0; // inherit tree_budget, exactly like FCFS
+    cfg.cache = cache.clone();
+    let mut b = Batcher::new(
+        0,
+        cfg,
+        Box::new(draft),
+        Box::new(target),
+        Arc::new(Metrics::new()),
+    );
+    let (tx, rx) = mpsc::channel();
+    b.admit(Request {
+        id: 4242,
+        prompt: PROMPT.to_vec(),
+        params: GenParams {
+            max_new_tokens: MAX_NEW,
+            temperature: TEMP,
+            seed: Some(seed),
+            stop_tokens: Vec::new(),
+            // Exercise the per-request override path too (homogeneous
+            // batch of one): must resolve to the same policy.
+            drafter: Some(policy),
+            token_budget: None,
+        },
+        submitted_at: Instant::now(),
+        cancel: CancelToken::new(),
+        events: Box::new(tx),
+    });
+    while b.active() > 0 {
+        b.step();
+    }
+    assert_eq!(b.cache().used_blocks(), 0, "batcher leaked residency");
+    let mut chunks = Vec::new();
+    loop {
+        match rx.recv().expect("request dropped") {
+            GenEvent::Chunk { tokens, stats } => chunks.push((tokens, stats)),
+            GenEvent::Done(resp) => {
+                return Trace {
+                    tokens: resp.tokens,
+                    chunks,
+                    finish: resp.finish,
+                };
+            }
+        }
+    }
+}
+
+/// The tentpole property: identical token streams, round stats, and
+/// billed/cached positions on both front ends, for every drafter, with
+/// the KV cache on and off, across seeds.
+#[test]
+fn fcfs_equals_continuous_with_one_slot() {
+    let on = CacheConfig::default();
+    let off = CacheConfig {
+        enabled: false,
+        ..CacheConfig::default()
+    };
+    for policy in POLICIES {
+        for cache in [&on, &off] {
+            for seed in 0..4u64 {
+                let f = fcfs_trace(policy, cache, seed);
+                let c = continuous_trace(policy, cache, seed);
+                assert_eq!(
+                    f.tokens, c.tokens,
+                    "{policy} seed {seed} cache={}: token streams diverged",
+                    cache.enabled
+                );
+                assert_eq!(
+                    f.chunks.len(),
+                    c.chunks.len(),
+                    "{policy} seed {seed}: round counts diverged"
+                );
+                for (k, (fc, cc)) in
+                    f.chunks.iter().zip(&c.chunks).enumerate()
+                {
+                    assert_eq!(
+                        fc, cc,
+                        "{policy} seed {seed} cache={} round {k}: \
+                         chunk/RoundStats diverged",
+                        cache.enabled
+                    );
+                }
+                assert_eq!(f.finish, c.finish);
+                assert_eq!(f.finish, FinishReason::Length);
+                assert_eq!(f.tokens.len(), MAX_NEW);
+                // Chunks reassemble the stream exactly.
+                let rejoined: Vec<u32> = f
+                    .chunks
+                    .iter()
+                    .flat_map(|(t, _)| t.iter().copied())
+                    .collect();
+                assert_eq!(rejoined, f.tokens);
+            }
+        }
+    }
+}
+
+/// Warm rounds bill strictly fewer positions than cold ones on BOTH front
+/// ends, and the per-round bills agree pairwise — the cache residency
+/// protocol lives inside the shared pipeline, not in either caller.
+#[test]
+fn billed_positions_agree_and_shrink_with_residency() {
+    let on = CacheConfig::default();
+    let f = fcfs_trace(PolicyKind::DySpec, &on, 7);
+    let c = continuous_trace(PolicyKind::DySpec, &on, 7);
+    assert!(f.chunks.len() >= 2, "need multiple rounds");
+    for ((_, fs), (_, cs)) in f.chunks.iter().zip(&c.chunks) {
+        assert_eq!(fs.billed_positions, cs.billed_positions);
+        assert_eq!(fs.cached_positions, cs.cached_positions);
+    }
+    assert_eq!(f.chunks[0].1.cached_positions, 0, "cold start cannot hit");
+    for (_, s) in &f.chunks[1..] {
+        assert!(s.cached_positions > 0, "no residency after round 1");
+    }
+}
+
+/// Per-request `token_budget` caps the speculated tree identically on
+/// both front ends (FCFS clamps the engine budget; the batcher clamps the
+/// per-sequence cap inside the allocator — one pipeline, one result).
+#[test]
+fn token_budget_cap_is_scheduler_independent() {
+    let cache = CacheConfig::default();
+    let seed = 3u64;
+
+    // FCFS front end, the way the worker applies the cap
+    // (coordinator/worker.rs: tree_budget = min(tree_budget, cap)).
+    let f = {
+        let (draft, target) = sim_pair(99);
+        let cfg = EngineConfig {
+            policy: PolicyKind::DySpec,
+            tree_budget: TREE_BUDGET.min(2),
+            max_new_tokens: MAX_NEW,
+            target_temp: TEMP,
+            draft_temp: 0.6,
+            ..EngineConfig::default()
+        };
+        let mut e =
+            SpecEngine::new(Box::new(draft), Box::new(target), cfg, None)
+                .with_cache(&cache);
+        e.reseed(seed);
+        let mut chunks = Vec::new();
+        let (stats, _) = e.generate_streamed(&PROMPT, None, |ev| {
+            if let GenEvent::Chunk { tokens, stats } = ev {
+                chunks.push((tokens, stats));
+            }
+        });
+        (stats.tokens, chunks)
+    };
+
+    // Continuous front end: same cap via the per-request token_budget.
+    let c = {
+        let (draft, target) = sim_pair(99);
+        let mut cfg = Config::new();
+        cfg.engine.policy = PolicyKind::DySpec;
+        cfg.engine.tree_budget = TREE_BUDGET;
+        cfg.engine.seed = batcher_engine_seed(seed);
+        cfg.sched.kind = SchedKind::Continuous;
+        cfg.sched.max_active = 1;
+        // The shared budget must not out-offer the request's own cap for
+        // the comparison to be exact: a one-slot batcher offers
+        // max(global, 1) and the cap clamps the tree.
+        cfg.sched.global_budget = 2;
+        cfg.cache = cache.clone();
+        let mut b = Batcher::new(
+            0,
+            cfg,
+            Box::new(draft),
+            Box::new(target),
+            Arc::new(Metrics::new()),
+        );
+        let (tx, rx) = mpsc::channel();
+        b.admit(Request {
+            id: 7,
+            prompt: PROMPT.to_vec(),
+            params: GenParams {
+                max_new_tokens: MAX_NEW,
+                temperature: TEMP,
+                seed: Some(seed),
+                stop_tokens: Vec::new(),
+                drafter: None,
+                token_budget: Some(2),
+            },
+            submitted_at: Instant::now(),
+            cancel: CancelToken::new(),
+            events: Box::new(tx),
+        });
+        while b.active() > 0 {
+            b.step();
+        }
+        let mut chunks = Vec::new();
+        loop {
+            match rx.recv().expect("request dropped") {
+                GenEvent::Chunk { tokens, stats } => {
+                    chunks.push((tokens, stats))
+                }
+                GenEvent::Done(resp) => break (resp.tokens, chunks),
+            }
+        }
+    };
+
+    assert_eq!(f.0, c.0, "token streams diverged under token_budget cap");
+    assert_eq!(f.1, c.1, "round stats diverged under token_budget cap");
+    for (_, s) in &f.1 {
+        assert!(s.tree_size <= 2, "cap exceeded: {}", s.tree_size);
+    }
+}
+
+/// The engine now applies the batcher's Drain rule (the final round with
+/// one token remaining takes a bare verification row), which means a
+/// 1-token generation samples straight from the target. Guard the
+/// unbiasedness of a REAL first-layer tree the way
+/// `rust/tests/unbiasedness.rs` does, but with `max_new_tokens = 2` so
+/// the first token still comes from a speculated tree: its distribution
+/// must match target-only decoding.
+#[test]
+fn first_token_from_a_real_tree_remains_unbiased() {
+    const HIST_VOCAB: usize = 16;
+    const RUNS: usize = 3000;
+    let hist = |policy: PolicyKind, salt: u64| -> Vec<f64> {
+        let mut counts = vec![0usize; HIST_VOCAB];
+        for seed in 0..RUNS as u64 {
+            let spec = SimSpec::new(HIST_VOCAB, 2.0, 1.0, 99);
+            let (draft, target) = SimModel::pair(spec);
+            let cfg = EngineConfig {
+                policy,
+                tree_budget: 6,
+                max_new_tokens: 2, // round 1 sees remaining=2: a real tree
+                target_temp: 0.6,
+                draft_temp: 0.6,
+                seed: seed ^ salt,
+                max_depth: 4,
+                ..EngineConfig::default()
+            };
+            let mut e = SpecEngine::new(
+                Box::new(draft),
+                Box::new(target),
+                cfg,
+                None,
+            );
+            counts[e.generate(&[3, 1, 4]).tokens[0] as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / RUNS as f64).collect()
+    };
+    let tv = |p: &[f64], q: &[f64]| -> f64 {
+        0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+    };
+    let reference = hist(PolicyKind::Baseline, 7777);
+    let floor = tv(&reference, &hist(PolicyKind::Baseline, 1234));
+    for policy in [PolicyKind::DySpec, PolicyKind::Chain] {
+        let d = tv(&reference, &hist(policy, 0));
+        assert!(
+            d < (3.0 * floor).max(0.06),
+            "{policy}: first-token TV {d:.4} vs floor {floor:.4} — \
+             BIASED OUTPUT FROM A REAL TREE"
+        );
+    }
+}
