@@ -72,6 +72,15 @@ fn flag<T: std::str::FromStr>(
     }
 }
 
+/// Value of an unlabelled series in a Prometheus text exposition
+/// (`name value`), or -1 when the series is absent.
+fn prom_gauge(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name)?.strip_prefix(' '))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(-1.0)
+}
+
 fn main() {
     let (positional, flags) = parse_args();
     let n_requests: usize =
@@ -190,6 +199,18 @@ fn main() {
         }));
     }
 
+    // Mid-run scrape: the Prometheus surface must answer while the
+    // reactor is under load, not only at drain (CI drives this path).
+    let midrun_lines = {
+        let mut scraper = Client::connect(&addr).expect("metrics conn");
+        let text = scraper.metrics().expect("mid-run metrics scrape");
+        assert!(
+            text.contains("# TYPE dyspec_round_stage_seconds summary"),
+            "mid-run exposition missing the stage summary"
+        );
+        text.lines().count()
+    };
+
     let mut lat = Histogram::new();
     let mut ttft = Histogram::new();
     let mut total_tokens = 0usize;
@@ -229,10 +250,45 @@ fn main() {
         gauge("backpressure_closed"),
         gauge("conns_rejected"),
     );
+    // Post-drain scrape: the in-flight gauges must return to zero once
+    // every request finished and every client connection is gone — the
+    // one allowed remainder is this scraper's own connection. Teardown
+    // is observed asynchronously by the reactor, so stragglers get a
+    // bounded window to be swept before this counts as a failure.
+    let want = [
+        ("dyspec_open_conns", 1.0),
+        ("dyspec_outbox_frames", 0.0),
+        ("dyspec_tokens_in_flight", 0.0),
+        ("dyspec_queue_depth", 0.0),
+        ("dyspec_cache_resident_blocks", 0.0),
+    ];
+    let mut undrained: Vec<String> = Vec::new();
+    for _ in 0..40 {
+        let prom = client.metrics().expect("post-drain metrics scrape");
+        undrained = want
+            .iter()
+            .filter(|(name, v)| prom_gauge(&prom, name) != *v)
+            .map(|(name, v)| {
+                format!("{name} = {} (want {v})", prom_gauge(&prom, name))
+            })
+            .collect();
+        if undrained.is_empty() {
+            println!(
+                "prometheus exposition: {midrun_lines} lines mid-run, {} lines post-drain, gauges drained",
+                prom.lines().count()
+            );
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    for line in &undrained {
+        eprintln!("gauge not drained: {line}");
+    }
+
     client.shutdown().expect("shutdown");
     server_thread.join().unwrap();
-    if failures > 0 {
-        eprintln!("{failures} requests failed");
+    if failures > 0 || !undrained.is_empty() {
+        eprintln!("{failures} requests failed, {} gauges undrained", undrained.len());
         std::process::exit(1);
     }
 }

@@ -97,7 +97,10 @@ COMMANDS:
                finish=cancelled done frame; --drafter / --token_budget /
                --req_id set the per-request envelope fields;
                --conns N opens N concurrent streaming connections (one
-               request each) to exercise the reactor pool
+               request each) to exercise the reactor pool;
+               --stats prints the JSON metrics snapshot, --metrics the
+               Prometheus text exposition, --trace the flight-recorder
+               span dump as JSONL (trace=on server-side to record spans)
   selfcheck    verify artifacts + PJRT wiring against golden.json
   help         show this text
 
@@ -108,7 +111,9 @@ CONFIG KEYS (key=value, see config/mod.rs):
   dataset (cnn|c4|owt), artifacts, prompt_len, num_prompts, addr, workers,
   scheduler (fcfs|continuous), global_budget, max_active, idle_tick_ms,
   cache (on|off), cache_block, cache_blocks,
-  reactor_threads, max_conns, outbox_frames
+  reactor_threads, max_conns, outbox_frames,
+  trace (on|off — per-round span recording + trace-id echo on v1 frames),
+  trace_ring (flight-recorder capacity per worker, spans)
 
 EXAMPLES:
   dyspec generate policy=dyspec backend=hlo dataset=cnn temp=0
@@ -119,6 +124,8 @@ EXAMPLES:
   dyspec client --addr 127.0.0.1:7341 --stream max_new_tokens=64
   dyspec client --addr 127.0.0.1:7341 --stream --cancel-after 2
   dyspec client --addr 127.0.0.1:7341 --conns 64 max_new_tokens=16
+  dyspec serve --addr 127.0.0.1:7341 backend=sim trace=on
+  dyspec client --addr 127.0.0.1:7341 --metrics
 ";
 
 #[cfg(test)]

@@ -354,6 +354,31 @@ impl Default for ServerConfig {
     }
 }
 
+/// Observability knobs (`obs/`, DESIGN.md §Observability). Acceptance
+/// counters and stage latency histograms are always on (they are plain
+/// arithmetic on data the round pipeline already computed); only span
+/// *recording* is gated, because spans allocate and take a per-worker
+/// lock.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Record per-round pipeline-stage spans into the flight-recorder
+    /// ring and echo trace ids on protocol-v1 frames (`trace=on`).
+    /// Default off; pinned bit-identical when off by
+    /// `tests/obs_differential.rs`.
+    pub trace: bool,
+    /// Flight-recorder capacity per worker, in spans (5 per round).
+    pub trace_ring: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            trace: false,
+            trace_ring: 4096,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -361,6 +386,7 @@ pub struct Config {
     pub server: ServerConfig,
     pub sched: SchedConfig,
     pub cache: CacheConfig,
+    pub obs: ObsConfig,
     pub backend: ModelBackend,
     pub regime: Option<LatencyRegime>,
     pub dataset: String,
@@ -388,6 +414,7 @@ impl Config {
             server: ServerConfig::default(),
             sched: SchedConfig::default(),
             cache: CacheConfig::default(),
+            obs: ObsConfig::default(),
             backend: ModelBackend::Sim,
             regime: None,
             dataset: "c4".into(),
@@ -521,6 +548,15 @@ impl Config {
                 Ok(v) if v > 0 => self.cache.max_blocks = v,
                 _ => return bad("cache_blocks"),
             },
+            "trace" => match value {
+                "on" | "true" | "1" => self.obs.trace = true,
+                "off" | "false" | "0" => self.obs.trace = false,
+                _ => return bad("trace"),
+            },
+            "trace_ring" => match value.parse() {
+                Ok(v) if v >= 1 => self.obs.trace_ring = v,
+                _ => return bad("trace_ring"),
+            },
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -618,6 +654,11 @@ impl Config {
             self.cache.block_tokens.to_string(),
         );
         m.insert("cache_blocks".into(), self.cache.max_blocks.to_string());
+        m.insert(
+            "trace".into(),
+            if self.obs.trace { "on" } else { "off" }.into(),
+        );
+        m.insert("trace_ring".into(), self.obs.trace_ring.to_string());
         m.insert(
             "reactor_threads".into(),
             self.server.reactor_threads.to_string(),
@@ -745,6 +786,24 @@ mod tests {
         assert!(cfg.set("cache", "maybe").is_err());
         assert!(cfg.set("cache_block", "0").is_err());
         assert!(cfg.set("cache_blocks", "zero").is_err());
+    }
+
+    #[test]
+    fn trace_keys_round_trip_and_validate() {
+        let mut cfg = Config::new();
+        assert!(!cfg.obs.trace);
+        assert_eq!(cfg.obs.trace_ring, 4096);
+        cfg.set("trace", "on").unwrap();
+        cfg.set("trace_ring", "64").unwrap();
+        assert!(cfg.obs.trace);
+        assert_eq!(cfg.obs.trace_ring, 64);
+        assert!(cfg.set("trace", "maybe").is_err());
+        assert!(cfg.set("trace_ring", "0").is_err());
+        let map = cfg.to_map();
+        assert_eq!(map.get("trace").unwrap(), "on");
+        assert_eq!(map.get("trace_ring").unwrap(), "64");
+        cfg.set("trace", "off").unwrap();
+        assert!(!cfg.obs.trace);
     }
 
     /// The invariant `cache::verify_bill` prices against: fetching a

@@ -8,7 +8,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::json::Json;
-use crate::util::Histogram;
+use crate::util::{AtomicF64, Histogram};
 
 pub struct Metrics {
     started_at: Instant,
@@ -35,8 +35,9 @@ pub struct Metrics {
     /// Σ speculated tokens actually allocated / Σ budget offered.
     budget_used: AtomicU64,
     budget_total: AtomicU64,
-    /// Virtual hardware-regime seconds consumed, in µs (atomic f64 stand-in).
-    virtual_micros: AtomicU64,
+    /// Virtual hardware-regime seconds consumed (full-precision atomic
+    /// f64 accumulator — sub-microsecond costs are never truncated).
+    virtual_secs: AtomicF64,
     /// KV-cache accounting: prefix positions served from residency vs
     /// verification positions actually computed, and the current
     /// resident-block gauge (DESIGN.md §KV cache).
@@ -75,7 +76,7 @@ impl Metrics {
             seq_steps: AtomicU64::new(0),
             budget_used: AtomicU64::new(0),
             budget_total: AtomicU64::new(0),
-            virtual_micros: AtomicU64::new(0),
+            virtual_secs: AtomicF64::new(0.0),
             cache_hit_positions: AtomicU64::new(0),
             cache_billed_positions: AtomicU64::new(0),
             cache_resident_blocks: AtomicU64::new(0),
@@ -204,8 +205,7 @@ impl Metrics {
         self.seq_steps.fetch_add(seq_steps, Ordering::Relaxed);
         self.budget_used.fetch_add(used, Ordering::Relaxed);
         self.budget_total.fetch_add(budget, Ordering::Relaxed);
-        self.virtual_micros
-            .fetch_add((virtual_secs * 1e6) as u64, Ordering::Relaxed);
+        self.virtual_secs.add(virtual_secs);
     }
 
     /// Record one dispatch round's KV-cache outcome: `hit` prefix
@@ -291,7 +291,7 @@ impl Metrics {
 
     /// Virtual hardware-regime seconds consumed across all workers.
     pub fn virtual_secs(&self) -> f64 {
-        self.virtual_micros.load(Ordering::Relaxed) as f64 * 1e-6
+        self.virtual_secs.load()
     }
 
     /// Tokens per virtual regime second (0 when no regime is configured).
@@ -333,9 +333,9 @@ impl Metrics {
 
     /// Snapshot as JSON (served by the `stats` protocol command).
     pub fn snapshot(&self) -> Json {
-        let mut qw = self.queue_wait.lock().unwrap().clone();
-        let mut gl = self.gen_latency.lock().unwrap().clone();
-        let mut tt = self.ttft.lock().unwrap().clone();
+        let qw = self.queue_wait.lock().unwrap().clone();
+        let gl = self.gen_latency.lock().unwrap().clone();
+        let tt = self.ttft.lock().unwrap().clone();
         Json::obj(vec![
             ("admitted", Json::Num(self.admitted() as f64)),
             ("rejected", Json::Num(self.rejected() as f64)),
@@ -442,7 +442,9 @@ mod tests {
         assert_eq!(m.dispatches(), 11);
         assert!((m.batch_occupancy() - 14.0 / 11.0).abs() < 1e-9);
         assert!((m.budget_utilization() - 84.0 / 112.0).abs() < 1e-9);
-        assert!((m.virtual_secs() - 0.3225).abs() < 1e-4);
+        // Full f64 precision: the old microsecond stand-in only got
+        // within 1e-4 of this.
+        assert!((m.virtual_secs() - 0.3225).abs() < 1e-12);
         m.on_first_token(0.2);
         m.on_cache(90, 30, 12);
         m.on_cache(30, 10, 7);
@@ -501,5 +503,46 @@ mod tests {
         assert_eq!(snap.get("completed").unwrap().as_usize(), Some(1));
         assert_eq!(snap.get("total_tokens").unwrap().as_usize(), Some(10));
         assert!(snap.get("gen_latency_p50").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    /// The exposition contract: every field of the metrics snapshot
+    /// appears as a `dyspec_<field>` series in the Prometheus rendering,
+    /// alongside the stage-latency and acceptance series (their line
+    /// syntax is pinned in obs::tests).
+    #[test]
+    fn prometheus_exposition_covers_every_snapshot_field() {
+        let m = Metrics::new();
+        m.on_admitted();
+        m.on_started(0.25);
+        m.on_first_token(0.3);
+        m.on_completed(16, 1.5);
+        m.on_dispatches(2, 3, 10, 16, 0.125);
+        m.on_cache(5, 10, 2);
+        let obs = crate::obs::Observatory::new(1, false, 16);
+        let snap = m.snapshot();
+        let text = crate::obs::render_prometheus(&snap, &obs);
+        let Json::Obj(map) = &snap else {
+            panic!("snapshot must be an object")
+        };
+        assert!(map.len() >= 25, "snapshot lost fields: {}", map.len());
+        for key in map.keys() {
+            let needle = format!("\ndyspec_{key} ");
+            assert!(
+                text.contains(&needle) || text.starts_with(&needle[1..]),
+                "snapshot field {key} missing from exposition"
+            );
+        }
+        for series in [
+            "dyspec_round_stage_seconds",
+            "dyspec_accept_depth_proposed_total",
+            "dyspec_accept_prob_accepted_total",
+            "dyspec_tracing_enabled",
+            "dyspec_trace_spans_dropped_total",
+        ] {
+            assert!(
+                text.contains(&format!("# TYPE {series} ")),
+                "series {series} missing from exposition"
+            );
+        }
     }
 }

@@ -36,6 +36,8 @@ use std::thread::JoinHandle;
 
 use crate::config::{Config, ServerConfig};
 use crate::models::LogitModel;
+use crate::obs::Observatory;
+use crate::util::json::Json;
 
 /// Constructs a (draft, target) pair inside a worker thread.
 pub type ModelFactory =
@@ -45,6 +47,9 @@ pub type ModelFactory =
 pub struct Coordinator {
     queue: RequestQueue,
     pub metrics: Arc<Metrics>,
+    /// Tracing + acceptance observatory shared by every worker (spans are
+    /// recorded only when `obs.trace = on`; counters always).
+    obs: Arc<Observatory>,
     shutdown: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
     /// Serving-layer knobs the TCP transport reads back (reactor pool
@@ -57,8 +62,14 @@ impl Coordinator {
     pub fn start(cfg: Config, factory: ModelFactory) -> Self {
         let server_cfg = cfg.server.clone();
         let metrics = Arc::new(Metrics::new());
+        let obs = Arc::new(Observatory::new(
+            cfg.server.workers.max(1),
+            cfg.obs.trace,
+            cfg.obs.trace_ring,
+        ));
         let shutdown = Arc::new(AtomicBool::new(false));
         let (queue, rx) = RequestQueue::new(cfg.server.queue_capacity, metrics.clone());
+        let queue = queue.with_tracing(cfg.obs.trace);
         let shared_rx = Arc::new(std::sync::Mutex::new(rx));
 
         let workers = (0..cfg.server.workers.max(1))
@@ -66,12 +77,15 @@ impl Coordinator {
                 let rx = shared_rx.clone();
                 let factory = factory.clone();
                 let metrics = metrics.clone();
+                let obs = obs.clone();
                 let shutdown = shutdown.clone();
                 let cfg = cfg.clone();
                 std::thread::Builder::new()
                     .name(format!("dyspec-worker-{wid}"))
                     .spawn(move || {
-                        worker::run_worker(wid, cfg, factory, rx, metrics, shutdown)
+                        worker::run_worker(
+                            wid, cfg, factory, rx, metrics, obs, shutdown,
+                        )
                     })
                     .expect("spawning worker")
             })
@@ -80,6 +94,7 @@ impl Coordinator {
         Self {
             queue,
             metrics,
+            obs,
             shutdown,
             workers,
             server_cfg,
@@ -89,6 +104,24 @@ impl Coordinator {
     /// The serving-layer configuration this coordinator was started with.
     pub fn server_config(&self) -> &ServerConfig {
         &self.server_cfg
+    }
+
+    /// The shared observatory (stage quantiles, acceptance counters,
+    /// span flight recorder).
+    pub fn observatory(&self) -> &Arc<Observatory> {
+        &self.obs
+    }
+
+    /// Prometheus text exposition of the full metrics snapshot plus the
+    /// observatory series (the `{"cmd":"metrics"}` payload).
+    pub fn prometheus(&self) -> String {
+        crate::obs::render_prometheus(&self.metrics.snapshot(), &self.obs)
+    }
+
+    /// Flight-recorder dump (the `{"cmd":"trace"}` payload): recorded
+    /// spans sorted by start time, plus the overflow-drop counter.
+    pub fn trace_json(&self) -> Json {
+        self.obs.trace_json()
     }
 
     /// Submit a request; events arrive on the returned handle's channel.

@@ -36,6 +36,10 @@ pub struct Request {
     pub cancel: CancelToken,
     /// Per-request event stream: chunks, then exactly one `Done`.
     pub events: Box<dyn EventSink>,
+    /// Trace id minted at admission when tracing is enabled (0 when off).
+    /// Workers tag the request's round spans with it; wire sinks echo it
+    /// in every frame.
+    pub trace: u64,
 }
 
 /// Submitter's half of an admitted request.
@@ -64,6 +68,7 @@ pub struct RequestQueue {
     tx: Option<mpsc::SyncSender<Request>>,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
+    tracing: bool,
 }
 
 impl RequestQueue {
@@ -74,9 +79,17 @@ impl RequestQueue {
                 tx: Some(tx),
                 next_id: AtomicU64::new(1),
                 metrics,
+                tracing: false,
             },
             rx,
         )
+    }
+
+    /// Enable trace-id minting at admission (`obs.trace = on`). Off by
+    /// default so existing construction sites and tests are unchanged.
+    pub fn with_tracing(mut self, tracing: bool) -> Self {
+        self.tracing = tracing;
+        self
     }
 
     /// Admit a request or reject immediately if the queue is full
@@ -113,6 +126,17 @@ impl RequestQueue {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let cancel = CancelToken::new();
+        // Mint the trace id before enqueueing so the sink knows it for
+        // every frame it will ever emit (no chunk/attach race). With
+        // tracing off nothing is minted or attached: the wire stream is
+        // bit-identical to a build without observability.
+        let trace = if self.tracing {
+            let t = crate::obs::TraceId::mint(id);
+            events.attach_trace(t.0);
+            t.0
+        } else {
+            0
+        };
         let req = Request {
             id,
             prompt,
@@ -120,6 +144,7 @@ impl RequestQueue {
             submitted_at: Instant::now(),
             cancel: cancel.clone(),
             events,
+            trace,
         };
         let tx = self.tx.as_ref().ok_or("queue closed")?;
         match tx.try_send(req) {
@@ -181,6 +206,24 @@ mod tests {
         q.close();
         assert!(q.try_submit(vec![1], GenParams::simple(8, 0.0)).is_err());
         assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn trace_ids_are_minted_only_when_tracing_is_on() {
+        let metrics = Arc::new(Metrics::new());
+        let (q, rx) = RequestQueue::new(2, metrics.clone());
+        q.try_submit(vec![1], GenParams::simple(8, 0.0)).unwrap();
+        assert_eq!(rx.recv().unwrap().trace, 0);
+
+        let (q, rx) = RequestQueue::new(2, metrics).with_tracing(true);
+        q.try_submit(vec![1], GenParams::simple(8, 0.0)).unwrap();
+        q.try_submit(vec![2], GenParams::simple(8, 0.0)).unwrap();
+        let a = rx.recv().unwrap();
+        let b = rx.recv().unwrap();
+        assert_ne!(a.trace, 0);
+        assert_ne!(b.trace, 0);
+        assert_ne!(a.trace, b.trace);
+        assert_eq!(a.trace, crate::obs::TraceId::mint(a.id).0);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::config::{Config, SchedKind};
 use crate::engine::{EventSink, FinishReason, GenEvent, Response, SpecEngine};
 use crate::log_debug;
 use crate::models::LogitModel;
+use crate::obs::Observatory;
 use crate::sched::Batcher;
 
 pub fn run_worker(
@@ -38,20 +39,23 @@ pub fn run_worker(
     factory: ModelFactory,
     rx: Arc<Mutex<mpsc::Receiver<Request>>>,
     metrics: Arc<Metrics>,
+    obs: Arc<Observatory>,
     shutdown: Arc<AtomicBool>,
 ) {
     let (draft, target) = factory();
     match cfg.sched.kind {
         SchedKind::Continuous => {
-            let mut batcher = Batcher::new(wid, cfg, draft, target, metrics);
+            let mut batcher = Batcher::new(wid, cfg, draft, target, metrics)
+                .with_obs(obs);
             batcher.run(&rx, &shutdown);
         }
         SchedKind::Fcfs => {
-            run_fcfs(wid, cfg, draft, target, rx, metrics, shutdown)
+            run_fcfs(wid, cfg, draft, target, rx, metrics, obs, shutdown)
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_fcfs(
     wid: usize,
     cfg: Config,
@@ -59,10 +63,12 @@ fn run_fcfs(
     target: Box<dyn LogitModel>,
     rx: Arc<Mutex<mpsc::Receiver<Request>>>,
     metrics: Arc<Metrics>,
+    obs: Arc<Observatory>,
     shutdown: Arc<AtomicBool>,
 ) {
     let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime)
-        .with_cache(&cfg.cache);
+        .with_cache(&cfg.cache)
+        .with_obs(obs, wid);
     let idle = Duration::from_millis(cfg.sched.idle_tick_ms.max(1));
     log_debug!("worker {wid} up (fcfs, policy={})", cfg.engine.policy);
 
@@ -135,6 +141,9 @@ fn serve_one(
     if let Some(seed) = req.params.seed {
         engine.reseed(seed);
     }
+    // Tag this request's round spans with its admission-minted trace id
+    // (0 when tracing is off — the observatory then records no spans).
+    engine.set_trace(req.trace);
 
     let t = Instant::now();
     let mut ttft_secs = 0.0f64;

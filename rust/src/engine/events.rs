@@ -37,6 +37,14 @@ use crate::config::PolicyKind;
 /// sink (cancellation is always explicit via [`CancelToken`]).
 pub trait EventSink: Send {
     fn send(&self, ev: GenEvent) -> bool;
+
+    /// Observability hook: the admission path calls this once, before the
+    /// request is enqueued, with the request's minted trace id (see
+    /// `obs::TraceId`). Sinks that surface a wire protocol echo it in
+    /// every frame they emit; the default (and the in-process mpsc sink)
+    /// ignores it. Only called when tracing is enabled, so the wire
+    /// output is bit-identical with tracing off.
+    fn attach_trace(&self, _trace: u64) {}
 }
 
 impl EventSink for mpsc::Sender<GenEvent> {

@@ -18,10 +18,13 @@ pub use events::{
 };
 pub use stats::{GenerationStats, StepStats};
 
+use std::sync::Arc;
+
 use crate::cache::CacheManager;
 use crate::config::{CacheConfig, EngineConfig, LatencyRegime, PolicyKind};
 use crate::draft::{make_policy, TreePolicy};
 use crate::models::LogitModel;
+use crate::obs::{Observatory, TraceId};
 use crate::round::{self, RoundCtx, SeqRound};
 use crate::util::Rng;
 
@@ -40,6 +43,11 @@ pub struct SpecEngine {
     /// KV prefix residency across this generation's speculation rounds
     /// (reset at every `generate`; default-enabled, see `CacheConfig`).
     cache: CacheManager,
+    /// Observatory + worker id for per-round span/acceptance recording
+    /// (`None` for standalone engines — benches, tests).
+    obs: Option<(Arc<Observatory>, usize)>,
+    /// Current request's trace id (0 = untraced).
+    trace: u64,
 }
 
 impl SpecEngine {
@@ -59,6 +67,8 @@ impl SpecEngine {
             regime,
             rng,
             cache: CacheManager::new(&CacheConfig::default()),
+            obs: None,
+            trace: 0,
         }
     }
 
@@ -67,6 +77,21 @@ impl SpecEngine {
     pub fn with_cache(mut self, cache: &CacheConfig) -> Self {
         self.cache = CacheManager::new(cache);
         self
+    }
+
+    /// Attach the worker's observatory (builder style): each round then
+    /// lands its stage latencies and acceptance counters there, plus a
+    /// span per stage when tracing is enabled. Recording reads only data
+    /// the round already computed — the sampling stream is untouched.
+    pub fn with_obs(mut self, obs: Arc<Observatory>, wid: usize) -> Self {
+        self.obs = Some((obs, wid));
+        self
+    }
+
+    /// Set the trace id rounds are tagged with (0 = untraced; called per
+    /// request by the FCFS worker).
+    pub fn set_trace(&mut self, trace: u64) {
+        self.trace = trace;
     }
 
     pub fn cache(&self) -> &CacheManager {
@@ -193,6 +218,16 @@ impl SpecEngine {
             &mut self.cache,
             &mut seqs,
         );
+        if let Some((obs, wid)) = &self.obs {
+            obs.record_round(
+                *wid,
+                TraceId(self.trace),
+                1,
+                self.cfg.policy,
+                &outcome.times,
+                &outcome.accept,
+            );
+        }
         let seq = outcome.seqs.into_iter().next().expect("batch of one");
         let step = StepStats {
             tree_size: seq.allocated,
@@ -466,9 +501,41 @@ mod tests {
         let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 6);
         let out = e.generate(&[1, 2, 3]);
         let agg = out.aggregate_times();
-        for key in ["draft_infer", "tree_construct", "mask", "target_infer", "verify", "sample"] {
+        for key in ["draft_infer", "tree_construct", "mask", "target_infer", "verify", "sample", "commit"] {
             assert!(agg.get(key) >= 0.0);
         }
         assert!(agg.total() > 0.0);
+    }
+
+    /// An engine wired to an observatory lands stage latencies and
+    /// acceptance counters for every round, and spans only when tracing —
+    /// with token output identical either way.
+    #[test]
+    fn attached_observatory_records_rounds_without_changing_tokens() {
+        let bare = engine(PolicyKind::DySpec, 0.8, 0.6, 21).generate(&[2, 3]).tokens;
+
+        let obs = Arc::new(Observatory::new(1, true, 64));
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 21).with_obs(obs.clone(), 0);
+        e.set_trace(TraceId::mint(42).0);
+        let traced = e.generate(&[2, 3]).tokens;
+        assert_eq!(traced, bare, "observatory perturbed the token stream");
+
+        let q = obs.stage_quantiles();
+        assert_eq!(q.len(), 5);
+        assert!(q.iter().all(|(_, n, ..)| *n > 0), "stage histogram empty");
+        let (spans, _) = obs.dump_spans();
+        assert!(!spans.is_empty());
+        assert!(spans.iter().all(|s| s.trace == TraceId::mint(42).0));
+        let table = obs.acceptance();
+        assert_eq!(table.len(), 1);
+        assert_eq!(table[0].0, "dyspec");
+        assert!(table[0].1.proposed() > 0);
+
+        let quiet = Arc::new(Observatory::new(1, false, 64));
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 21).with_obs(quiet.clone(), 0);
+        let untraced = e.generate(&[2, 3]).tokens;
+        assert_eq!(untraced, bare);
+        assert!(quiet.dump_spans().0.is_empty(), "spans recorded while off");
+        assert!(!quiet.acceptance().is_empty(), "counters must stay on");
     }
 }

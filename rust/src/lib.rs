@@ -30,6 +30,7 @@ pub mod data;
 pub mod draft;
 pub mod engine;
 pub mod models;
+pub mod obs;
 pub mod round;
 pub mod runtime;
 pub mod sampling;

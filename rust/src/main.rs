@@ -193,6 +193,28 @@ fn cmd_client(cli: &Cli) -> Result<(), String> {
         println!("{}", client.stats()?.to_string());
         return Ok(());
     }
+    if cli.has_flag("metrics") {
+        // Raw Prometheus text exposition — pipe straight into a scraper.
+        print!("{}", client.metrics()?);
+        return Ok(());
+    }
+    if cli.has_flag("trace") {
+        // Flight-recorder dump as JSONL: one span object per line, with
+        // a stderr header carrying the recorder state.
+        let dump = client.trace()?;
+        let tracing = matches!(dump.get("tracing"), Some(Json::Bool(true)));
+        let dropped = dump.get("dropped").and_then(Json::as_f64).unwrap_or(0.0);
+        let spans = dump.get("spans").and_then(Json::as_arr);
+        eprintln!(
+            "tracing={} dropped={dropped} spans={}",
+            if tracing { "on" } else { "off" },
+            spans.map(|s| s.len()).unwrap_or(0)
+        );
+        for span in spans.into_iter().flatten() {
+            println!("{}", span.to_string());
+        }
+        return Ok(());
+    }
     if cli.has_flag("shutdown") {
         client.shutdown()?;
         println!("server shut down");

@@ -1,0 +1,824 @@
+//! Observability: end-to-end tracing, the acceptance observatory, and a
+//! Prometheus-style text exposition surface (DESIGN.md §Observability).
+//!
+//! Three independent layers, all dependency-free:
+//!
+//! - **Structured tracing** — a per-request [`TraceId`] is minted at
+//!   submission (`coordinator::queue`) and echoed in every reply frame of
+//!   that request. Each worker owns a bounded flight-recorder ring
+//!   ([`SpanRing`]) into which one [`Span`] per round-pipeline stage
+//!   (`plan → draft → dispatch → verify → commit`) is pushed after every
+//!   speculation round. The ring is dumpable as JSONL over the wire
+//!   (`{"cmd":"trace"}`) for postmortems. Tracing is off by default and
+//!   checked before any lock is taken, so the disabled path costs one
+//!   branch — token streams are bit-identical either way (pinned by
+//!   rust/tests/obs_differential.rs).
+//! - **Acceptance observatory** — per-drafter × per-tree-depth acceptance
+//!   counters plus draft-probability-bucket → acceptance cells, folded in
+//!   from every round's [`AcceptanceRecord`] (computed in
+//!   `round::conclude_round` from the verified tree). This measures the
+//!   paper's core claim — acceptance tracks estimated draft probability
+//!   (§3, Fig. 2) — online, and is the data contract for the ROADMAP's
+//!   adaptive-drafter policy.
+//! - **Exposition** — [`render_prometheus`] serializes the whole
+//!   `coordinator::Metrics` snapshot plus per-stage latency quantiles and
+//!   the acceptance series in Prometheus text format, served via
+//!   `{"cmd":"metrics"}` and the `client --metrics` flag.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::PolicyKind;
+use crate::util::json::Json;
+use crate::util::timer::ComponentTimes;
+use crate::util::Histogram;
+
+/// Round-pipeline stages, in pipeline order. `plan` covers tree
+/// construction + mask generation, `draft` the draft-model forward passes,
+/// `dispatch` the batched target scoring, `verify` sampling + the
+/// multi-branch verification walk, and `commit` the KV accept/rollback —
+/// the Fig-4 buckets regrouped along the `round::` pipeline seams.
+pub const STAGES: [&str; 5] = ["plan", "draft", "dispatch", "verify", "commit"];
+
+/// Map the engine's Fig-4 component labels onto the five pipeline stages.
+pub fn stage_secs(times: &ComponentTimes) -> [f64; 5] {
+    [
+        times.get("tree_construct") + times.get("mask"),
+        times.get("draft_infer"),
+        times.get("target_infer"),
+        times.get("sample") + times.get("verify"),
+        times.get("commit"),
+    ]
+}
+
+/// Tracked tree depths (deeper nodes clamp into the last cell).
+pub const MAX_DEPTH: usize = 16;
+/// Draft-probability buckets: bucket `b` covers `[2^(b-8), 2^(b-7))`,
+/// except the top bucket which closes at 1 and the bottom which opens
+/// at 0.
+pub const PROB_BUCKETS: usize = 8;
+
+/// Per-request trace identifier. Zero means "no trace attached" and is
+/// never minted, so a `u64` can double as an optional slot in atomics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// Mint the trace id for a request id: a splitmix64 scramble, so ids
+    /// are deterministic (same request id → same trace id, which keeps
+    /// the differential suite and postmortems reproducible) yet visibly
+    /// distinct from the sequential request counter.
+    pub fn mint(req_id: u64) -> Self {
+        let mut z = req_id.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        Self(z.max(1))
+    }
+
+    pub fn is_set(&self) -> bool {
+        self.0 != 0
+    }
+
+    /// Wire form: 16 lowercase hex digits.
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// One recorded stage of one speculation round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// Worker that ran the round.
+    pub worker: usize,
+    /// Per-worker round counter (monotonic since worker start).
+    pub round: u64,
+    /// One of [`STAGES`].
+    pub stage: &'static str,
+    /// Microseconds since the observatory epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Sequences served by the round (1 on FCFS, batch size on
+    /// continuous).
+    pub seqs: usize,
+    /// Trace id of the request, 0 for multi-sequence rounds (a batched
+    /// dispatch belongs to every co-scheduled request at once).
+    pub trace: u64,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("worker", Json::Num(self.worker as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("stage", Json::Str(self.stage.to_string())),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+            ("seqs", Json::Num(self.seqs as f64)),
+            (
+                "trace",
+                Json::Str(TraceId(self.trace).to_hex()),
+            ),
+        ])
+    }
+}
+
+/// Bounded flight recorder: the newest `cap` spans win, overflow is
+/// counted, never silently lost.
+#[derive(Debug)]
+pub struct SpanRing {
+    cap: usize,
+    spans: VecDeque<Span>,
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            cap,
+            spans: VecDeque::with_capacity(cap.min(1024)),
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, span: Span) {
+        if self.spans.len() == self.cap {
+            self.spans.pop_front();
+            self.dropped += 1;
+        }
+        self.spans.push_back(span);
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Span> {
+        self.spans.iter()
+    }
+}
+
+/// What one round's verification said about its speculated nodes, bucketed
+/// the way the adaptive-drafter policy will consume it: by tree depth and
+/// by the construction-time acceptance estimate (`Node::est`, the product
+/// of draft probabilities along the path — the paper's Fig. 2 x-axis).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AcceptanceRecord {
+    pub depth_proposed: [u64; MAX_DEPTH],
+    pub depth_accepted: [u64; MAX_DEPTH],
+    pub prob_proposed: [u64; PROB_BUCKETS],
+    pub prob_accepted: [u64; PROB_BUCKETS],
+}
+
+impl AcceptanceRecord {
+    /// Bucket for an acceptance estimate in (0, 1]: log2-spaced, the top
+    /// bucket holding [1/2, 1] and everything below 2^-7 pooling into
+    /// bucket 0.
+    pub fn prob_bucket(est: f64) -> usize {
+        let mut b = PROB_BUCKETS - 1;
+        let mut lo = 0.5;
+        while b > 0 && est < lo {
+            lo *= 0.5;
+            b -= 1;
+        }
+        b
+    }
+
+    /// Record one speculated node's verdict.
+    pub fn note(&mut self, depth: usize, est: f64, accepted: bool) {
+        let d = depth.saturating_sub(1).min(MAX_DEPTH - 1);
+        let p = Self::prob_bucket(est);
+        self.depth_proposed[d] += 1;
+        self.prob_proposed[p] += 1;
+        if accepted {
+            self.depth_accepted[d] += 1;
+            self.prob_accepted[p] += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &AcceptanceRecord) {
+        for i in 0..MAX_DEPTH {
+            self.depth_proposed[i] += other.depth_proposed[i];
+            self.depth_accepted[i] += other.depth_accepted[i];
+        }
+        for i in 0..PROB_BUCKETS {
+            self.prob_proposed[i] += other.prob_proposed[i];
+            self.prob_accepted[i] += other.prob_accepted[i];
+        }
+    }
+
+    pub fn proposed(&self) -> u64 {
+        self.depth_proposed.iter().sum()
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.depth_accepted.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.proposed() == 0
+    }
+}
+
+/// Shared observability state for one coordinator: per-worker span rings,
+/// per-stage latency histograms, and the per-drafter acceptance table.
+/// Stage timing and acceptance are always on (they feed the metrics
+/// exposition); span recording only happens when `tracing` is enabled.
+pub struct Observatory {
+    tracing: bool,
+    epoch: Instant,
+    rings: Vec<Mutex<SpanRing>>,
+    rounds: Vec<AtomicU64>,
+    stage_hist: Vec<Mutex<Histogram>>,
+    accept: Mutex<BTreeMap<&'static str, AcceptanceRecord>>,
+}
+
+impl Observatory {
+    pub fn new(workers: usize, tracing: bool, ring_cap: usize) -> Self {
+        let workers = workers.max(1);
+        Self {
+            tracing,
+            epoch: Instant::now(),
+            rings: (0..workers)
+                .map(|_| Mutex::new(SpanRing::new(ring_cap)))
+                .collect(),
+            rounds: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            stage_hist: STAGES
+                .iter()
+                .map(|_| Mutex::new(Histogram::new()))
+                .collect(),
+            accept: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn tracing(&self) -> bool {
+        self.tracing
+    }
+
+    /// Record one finished speculation round: fold the stage times into
+    /// the latency histograms, the acceptance record into the drafter
+    /// table, and — when tracing — five spans into the worker's ring.
+    /// Purely observational: touches no RNG and no request state.
+    pub fn record_round(
+        &self,
+        wid: usize,
+        trace: TraceId,
+        seqs: usize,
+        drafter: PolicyKind,
+        times: &ComponentTimes,
+        accept: &AcceptanceRecord,
+    ) {
+        let secs = stage_secs(times);
+        for (hist, &s) in self.stage_hist.iter().zip(secs.iter()) {
+            hist.lock().expect("stage hist poisoned").record(s);
+        }
+        if !accept.is_empty() {
+            self.accept
+                .lock()
+                .expect("accept table poisoned")
+                .entry(drafter.name())
+                .or_default()
+                .merge(accept);
+        }
+        if !self.tracing {
+            return;
+        }
+        let wid = wid.min(self.rings.len() - 1);
+        let round = self.rounds[wid].fetch_add(1, Ordering::Relaxed);
+        // Synthesize a contiguous timeline ending now: the stages ran
+        // back-to-back inside the round, so cumulative offsets from
+        // (now − total) reconstruct their wall-clock placement.
+        let end_us = self.epoch.elapsed().as_micros() as u64;
+        let total_us: u64 =
+            secs.iter().map(|s| (s.max(0.0) * 1e6) as u64).sum();
+        let mut cursor = end_us.saturating_sub(total_us);
+        let mut ring = self.rings[wid].lock().expect("span ring poisoned");
+        for (stage, &s) in STAGES.iter().zip(secs.iter()) {
+            let dur = (s.max(0.0) * 1e6) as u64;
+            ring.push(Span {
+                worker: wid,
+                round,
+                stage,
+                start_us: cursor,
+                dur_us: dur,
+                seqs,
+                trace: trace.0,
+            });
+            cursor += dur;
+        }
+    }
+
+    /// All recorded spans across workers, ordered by start time, plus the
+    /// total overflow count.
+    pub fn dump_spans(&self) -> (Vec<Span>, u64) {
+        let mut spans = Vec::new();
+        let mut dropped = 0;
+        for ring in &self.rings {
+            let ring = ring.lock().expect("span ring poisoned");
+            spans.extend(ring.iter().cloned());
+            dropped += ring.dropped();
+        }
+        spans.sort_by_key(|s| (s.start_us, s.worker, s.round));
+        (spans, dropped)
+    }
+
+    /// The `{"cmd":"trace"}` reply body.
+    pub fn trace_json(&self) -> Json {
+        let (spans, dropped) = self.dump_spans();
+        Json::obj(vec![
+            ("tracing", Json::Bool(self.tracing)),
+            ("dropped", Json::Num(dropped as f64)),
+            (
+                "spans",
+                Json::Arr(spans.iter().map(Span::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Per-stage latency quantiles: (stage, count, sum, p50, p95, p99).
+    pub fn stage_quantiles(&self) -> Vec<(&'static str, u64, f64, f64, f64, f64)> {
+        STAGES
+            .iter()
+            .zip(self.stage_hist.iter())
+            .map(|(&stage, hist)| {
+                let h = hist.lock().expect("stage hist poisoned");
+                (
+                    stage,
+                    h.len() as u64,
+                    h.sum(),
+                    h.p50(),
+                    h.p95(),
+                    h.p99(),
+                )
+            })
+            .collect()
+    }
+
+    /// Snapshot of the per-drafter acceptance table.
+    pub fn acceptance(&self) -> Vec<(&'static str, AcceptanceRecord)> {
+        self.accept
+            .lock()
+            .expect("accept table poisoned")
+            .iter()
+            .map(|(&k, v)| (k, v.clone()))
+            .collect()
+    }
+
+    /// Total spans dropped to ring overflow (tests, exposition).
+    pub fn spans_dropped(&self) -> u64 {
+        self.rings
+            .iter()
+            .map(|r| r.lock().expect("span ring poisoned").dropped())
+            .sum()
+    }
+}
+
+fn prom_value(out: &mut String, v: f64) {
+    if !v.is_finite() {
+        out.push('0');
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        out.push_str(&format!("{}", v as i64));
+    } else {
+        out.push_str(&format!("{v}"));
+    }
+}
+
+fn prom_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} "));
+    prom_value(out, v);
+    out.push('\n');
+}
+
+fn prom_header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn prom_row(out: &mut String, name: &str, labels: &[(&str, String)], v: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, val)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{val}\""));
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    prom_value(out, v);
+    out.push('\n');
+}
+
+/// Lower bound of probability bucket `b` (0 for the open bottom bucket).
+fn bucket_lo(b: usize) -> f64 {
+    if b == 0 {
+        0.0
+    } else {
+        2f64.powi(b as i32 - PROB_BUCKETS as i32)
+    }
+}
+
+fn bucket_hi(b: usize) -> f64 {
+    2f64.powi(b as i32 + 1 - PROB_BUCKETS as i32)
+}
+
+/// Render the full telemetry surface in Prometheus text exposition
+/// format: every scalar of the `Metrics` snapshot as a `dyspec_*` gauge,
+/// per-stage round-latency summaries, and the acceptance observatory
+/// series. `snapshot` is the JSON object from `Metrics::snapshot()`, so
+/// new metrics fields appear here automatically.
+pub fn render_prometheus(snapshot: &Json, obs: &Observatory) -> String {
+    let mut out = String::new();
+    if let Json::Obj(map) = snapshot {
+        for (key, val) in map {
+            let v = match val {
+                Json::Num(x) => *x,
+                Json::Bool(b) => {
+                    if *b {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                _ => continue,
+            };
+            let name = format!("dyspec_{key}");
+            prom_gauge(&mut out, &name, "coordinator metrics snapshot field", v);
+        }
+    }
+
+    prom_header(
+        &mut out,
+        "dyspec_round_stage_seconds",
+        "per-stage speculation-round latency (plan|draft|dispatch|verify|commit)",
+        "summary",
+    );
+    for (stage, n, sum, p50, p95, p99) in obs.stage_quantiles() {
+        let label = |q: &str| {
+            vec![
+                ("stage", stage.to_string()),
+                ("quantile", q.to_string()),
+            ]
+        };
+        prom_row(&mut out, "dyspec_round_stage_seconds", &label("0.5"), p50);
+        prom_row(&mut out, "dyspec_round_stage_seconds", &label("0.95"), p95);
+        prom_row(&mut out, "dyspec_round_stage_seconds", &label("0.99"), p99);
+        let stage_label = vec![("stage", stage.to_string())];
+        prom_row(&mut out, "dyspec_round_stage_seconds_sum", &stage_label, sum);
+        prom_row(
+            &mut out,
+            "dyspec_round_stage_seconds_count",
+            &stage_label,
+            n as f64,
+        );
+    }
+
+    let table = obs.acceptance();
+    prom_header(
+        &mut out,
+        "dyspec_accept_depth_proposed_total",
+        "speculated nodes proposed, by drafter and tree depth",
+        "counter",
+    );
+    prom_header(
+        &mut out,
+        "dyspec_accept_depth_accepted_total",
+        "speculated nodes accepted by verification, by drafter and tree depth",
+        "counter",
+    );
+    for (drafter, rec) in &table {
+        for d in 0..MAX_DEPTH {
+            if rec.depth_proposed[d] == 0 {
+                continue;
+            }
+            let labels = vec![
+                ("drafter", drafter.to_string()),
+                ("depth", (d + 1).to_string()),
+            ];
+            prom_row(
+                &mut out,
+                "dyspec_accept_depth_proposed_total",
+                &labels,
+                rec.depth_proposed[d] as f64,
+            );
+            prom_row(
+                &mut out,
+                "dyspec_accept_depth_accepted_total",
+                &labels,
+                rec.depth_accepted[d] as f64,
+            );
+        }
+    }
+    prom_header(
+        &mut out,
+        "dyspec_accept_prob_proposed_total",
+        "speculated nodes proposed, by drafter and estimated-acceptance bucket",
+        "counter",
+    );
+    prom_header(
+        &mut out,
+        "dyspec_accept_prob_accepted_total",
+        "speculated nodes accepted, by drafter and estimated-acceptance bucket",
+        "counter",
+    );
+    for (drafter, rec) in &table {
+        for b in 0..PROB_BUCKETS {
+            if rec.prob_proposed[b] == 0 {
+                continue;
+            }
+            let labels = vec![
+                ("drafter", drafter.to_string()),
+                ("bucket", b.to_string()),
+                ("lo", format!("{}", bucket_lo(b))),
+                ("hi", format!("{}", bucket_hi(b))),
+            ];
+            prom_row(
+                &mut out,
+                "dyspec_accept_prob_proposed_total",
+                &labels,
+                rec.prob_proposed[b] as f64,
+            );
+            prom_row(
+                &mut out,
+                "dyspec_accept_prob_accepted_total",
+                &labels,
+                rec.prob_accepted[b] as f64,
+            );
+        }
+    }
+
+    prom_gauge(
+        &mut out,
+        "dyspec_tracing_enabled",
+        "1 when span tracing is on",
+        if obs.tracing() { 1.0 } else { 0.0 },
+    );
+    prom_gauge(
+        &mut out,
+        "dyspec_trace_spans_dropped_total",
+        "spans lost to flight-recorder ring overflow",
+        obs.spans_dropped() as f64,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn times(plan: f64, draft: f64, disp: f64, verify: f64, commit: f64) -> ComponentTimes {
+        let mut t = ComponentTimes::new();
+        t.add("tree_construct", plan);
+        t.add("draft_infer", draft);
+        t.add("target_infer", disp);
+        t.add("verify", verify);
+        t.add("commit", commit);
+        t
+    }
+
+    #[test]
+    fn trace_ids_are_deterministic_nonzero_and_distinct() {
+        assert_eq!(TraceId::mint(7), TraceId::mint(7));
+        assert_ne!(TraceId::mint(7), TraceId::mint(8));
+        for id in 0..100 {
+            assert!(TraceId::mint(id).is_set());
+        }
+        assert_eq!(TraceId::mint(1).to_hex().len(), 16);
+        assert!(!TraceId::default().is_set());
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let mut ring = SpanRing::new(3);
+        for i in 0..5 {
+            ring.push(Span {
+                worker: 0,
+                round: i,
+                stage: "plan",
+                start_us: i * 10,
+                dur_us: 1,
+                seqs: 1,
+                trace: 0,
+            });
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let rounds: Vec<u64> = ring.iter().map(|s| s.round).collect();
+        assert_eq!(rounds, vec![2, 3, 4], "oldest spans must go first");
+    }
+
+    #[test]
+    fn spans_come_out_in_pipeline_order_with_contiguous_offsets() {
+        let obs = Observatory::new(1, true, 64);
+        let t = times(0.001, 0.002, 0.004, 0.001, 0.0005);
+        obs.record_round(
+            0,
+            TraceId::mint(1),
+            1,
+            PolicyKind::DySpec,
+            &t,
+            &AcceptanceRecord::default(),
+        );
+        let (spans, dropped) = obs.dump_spans();
+        assert_eq!(dropped, 0);
+        assert_eq!(spans.len(), STAGES.len());
+        let stages: Vec<&str> = spans.iter().map(|s| s.stage).collect();
+        assert_eq!(stages, STAGES.to_vec());
+        for w in spans.windows(2) {
+            assert_eq!(
+                w[0].start_us + w[0].dur_us,
+                w[1].start_us,
+                "stages must tile the round back-to-back"
+            );
+        }
+        assert_eq!(spans[1].dur_us, 2000, "draft_infer is the draft stage");
+        assert_eq!(spans[2].dur_us, 4000, "target_infer is the dispatch stage");
+        assert!(spans.iter().all(|s| s.trace == TraceId::mint(1).0));
+        assert!(spans.iter().all(|s| s.round == 0));
+    }
+
+    #[test]
+    fn tracing_off_records_no_spans_but_keeps_stage_stats() {
+        let obs = Observatory::new(2, false, 64);
+        let t = times(0.001, 0.002, 0.004, 0.001, 0.0005);
+        obs.record_round(
+            1,
+            TraceId::default(),
+            3,
+            PolicyKind::DySpec,
+            &t,
+            &AcceptanceRecord::default(),
+        );
+        let (spans, _) = obs.dump_spans();
+        assert!(spans.is_empty());
+        let q = obs.stage_quantiles();
+        assert!(q.iter().all(|&(_, n, ..)| n == 1));
+        let dispatch = q.iter().find(|&&(s, ..)| s == "dispatch").unwrap();
+        assert!(dispatch.2 > 0.0039 && dispatch.2 < 0.0041);
+    }
+
+    #[test]
+    fn observatory_ring_overflow_is_visible_in_dump() {
+        let obs = Observatory::new(1, true, 7); // not a multiple of 5
+        let t = times(0.001, 0.001, 0.001, 0.001, 0.001);
+        for i in 0..4 {
+            obs.record_round(
+                0,
+                TraceId::mint(i),
+                1,
+                PolicyKind::Chain,
+                &t,
+                &AcceptanceRecord::default(),
+            );
+        }
+        let (spans, dropped) = obs.dump_spans();
+        assert_eq!(spans.len(), 7);
+        assert_eq!(dropped, 20 - 7);
+        assert_eq!(obs.spans_dropped(), 13);
+    }
+
+    #[test]
+    fn prob_buckets_are_log2_spaced() {
+        assert_eq!(AcceptanceRecord::prob_bucket(1.0), 7);
+        assert_eq!(AcceptanceRecord::prob_bucket(0.6), 7);
+        assert_eq!(AcceptanceRecord::prob_bucket(0.5), 7);
+        assert_eq!(AcceptanceRecord::prob_bucket(0.49), 6);
+        assert_eq!(AcceptanceRecord::prob_bucket(0.25), 6);
+        assert_eq!(AcceptanceRecord::prob_bucket(0.1), 4);
+        assert_eq!(AcceptanceRecord::prob_bucket(1.0 / 128.0), 0);
+        assert_eq!(AcceptanceRecord::prob_bucket(1e-9), 0);
+        assert_eq!(AcceptanceRecord::prob_bucket(0.0), 0);
+        for b in 0..PROB_BUCKETS {
+            assert!(bucket_lo(b) < bucket_hi(b));
+        }
+        assert_eq!(bucket_hi(PROB_BUCKETS - 1), 1.0);
+        assert_eq!(bucket_lo(0), 0.0);
+    }
+
+    #[test]
+    fn acceptance_record_notes_and_merges() {
+        let mut a = AcceptanceRecord::default();
+        a.note(1, 0.9, true);
+        a.note(2, 0.3, false);
+        a.note(99, 0.3, true); // depth clamps into the last cell
+        assert_eq!(a.proposed(), 3);
+        assert_eq!(a.accepted(), 2);
+        assert_eq!(a.depth_proposed[0], 1);
+        assert_eq!(a.depth_proposed[MAX_DEPTH - 1], 1);
+        assert_eq!(a.prob_proposed[7], 1);
+        assert_eq!(a.prob_proposed[6], 2);
+        assert_eq!(a.prob_accepted[6], 1);
+        let mut b = AcceptanceRecord::default();
+        b.note(1, 0.9, false);
+        a.merge(&b);
+        assert_eq!(a.proposed(), 4);
+        assert_eq!(a.accepted(), 2);
+    }
+
+    #[test]
+    fn acceptance_table_is_per_drafter() {
+        let obs = Observatory::new(1, false, 8);
+        let mut rec = AcceptanceRecord::default();
+        rec.note(1, 0.9, true);
+        let t = ComponentTimes::new();
+        obs.record_round(0, TraceId::default(), 1, PolicyKind::DySpec, &t, &rec);
+        obs.record_round(0, TraceId::default(), 1, PolicyKind::Chain, &t, &rec);
+        obs.record_round(0, TraceId::default(), 1, PolicyKind::DySpec, &t, &rec);
+        let table = obs.acceptance();
+        assert_eq!(table.len(), 2);
+        let dyspec = table.iter().find(|(k, _)| *k == "dyspec").unwrap();
+        assert_eq!(dyspec.1.proposed(), 2);
+        let chain = table.iter().find(|(k, _)| *k == "chain").unwrap();
+        assert_eq!(chain.1.proposed(), 1);
+    }
+
+    #[test]
+    fn trace_json_shape() {
+        let obs = Observatory::new(1, true, 16);
+        let t = times(0.001, 0.001, 0.001, 0.001, 0.001);
+        obs.record_round(
+            0,
+            TraceId::mint(3),
+            1,
+            PolicyKind::DySpec,
+            &t,
+            &AcceptanceRecord::default(),
+        );
+        let doc = obs.trace_json();
+        assert_eq!(doc.get("tracing"), Some(&Json::Bool(true)));
+        assert_eq!(doc.get("dropped").unwrap().as_usize(), Some(0));
+        let spans = doc.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 5);
+        assert_eq!(
+            spans[0].get("trace").unwrap().as_str(),
+            Some(TraceId::mint(3).to_hex().as_str())
+        );
+        // JSONL round trip: every span line reparses.
+        for s in spans {
+            assert!(crate::util::json::parse(&s.to_string()).is_ok());
+        }
+    }
+
+    /// Every emitted line is either a comment or `name{labels} value` with
+    /// a parseable float value — the syntactic half of the exposition
+    /// contract (the field-coverage half lives in
+    /// coordinator/metrics.rs tests).
+    #[test]
+    fn prometheus_output_is_line_valid() {
+        let obs = Observatory::new(1, true, 16);
+        let mut rec = AcceptanceRecord::default();
+        rec.note(1, 0.9, true);
+        rec.note(3, 0.01, false);
+        let t = times(0.001, 0.002, 0.004, 0.001, 0.0005);
+        obs.record_round(0, TraceId::mint(1), 1, PolicyKind::DySpec, &t, &rec);
+        let snapshot = Json::obj(vec![
+            ("admitted", Json::Num(3.0)),
+            ("tokens_per_sec", Json::Num(12.5)),
+        ]);
+        let text = render_prometheus(&snapshot, &obs);
+        assert!(text.ends_with('\n'));
+        for line in text.lines() {
+            if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+                continue;
+            }
+            let (series, value) =
+                line.rsplit_once(' ').expect("sample line has a value");
+            value.parse::<f64>().expect("value parses as float");
+            let name = series.split('{').next().unwrap();
+            assert!(!name.is_empty());
+            assert!(
+                name.chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name: {name}"
+            );
+            assert!(name.starts_with("dyspec_"), "unprefixed series: {name}");
+            if let Some(rest) = series.strip_prefix(name) {
+                if !rest.is_empty() {
+                    assert!(rest.starts_with('{') && rest.ends_with('}'));
+                }
+            }
+        }
+        assert!(text.contains("dyspec_admitted 3\n"));
+        assert!(text.contains("dyspec_tokens_per_sec 12.5\n"));
+        assert!(text.contains(
+            "dyspec_round_stage_seconds{stage=\"dispatch\",quantile=\"0.95\"}"
+        ));
+        assert!(text.contains(
+            "dyspec_accept_depth_proposed_total{drafter=\"dyspec\",depth=\"1\"} 1\n"
+        ));
+        assert!(text.contains("dyspec_accept_prob_accepted_total{drafter=\"dyspec\",bucket=\"7\""));
+        assert!(text.contains("dyspec_tracing_enabled 1\n"));
+    }
+}

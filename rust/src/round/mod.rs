@@ -49,6 +49,7 @@ use crate::config::{EngineConfig, LatencyRegime, PolicyKind};
 use crate::draft::TreePolicy;
 use crate::engine::RoundStats;
 use crate::models::{ForestItem, LogitModel, TimedModel};
+use crate::obs::AcceptanceRecord;
 use crate::sampling::dist_from_logits;
 use crate::sched::budget::{build_forest, build_forest_fair};
 use crate::tree::{dfs_order, NodeId, TokenTree};
@@ -159,8 +160,15 @@ pub struct RoundOutcome {
     /// Σ allocated — the speculated tokens the dispatch carried.
     pub spec_tokens: usize,
     /// Measured wall time per component (Fig 4 buckets: draft_infer,
-    /// tree_construct, mask, target_infer, sample, verify).
+    /// tree_construct, mask, target_infer, sample, verify — plus the KV
+    /// commit/rollback under "commit").
     pub times: ComponentTimes,
+    /// What verification said about every speculated node, bucketed by
+    /// tree depth and construction-time acceptance estimate — the
+    /// observability layer's per-round acceptance sample
+    /// (`obs::Observatory`). Purely observational: computed from the
+    /// verified tree without touching any sampling stream.
+    pub accept: AcceptanceRecord,
     /// Shared virtual regime cost of the round's dispatch (None without a
     /// regime). Model inference is billed at regime rates only; the
     /// pure-logic components at measured wall time.
@@ -331,9 +339,11 @@ pub fn conclude_round(
     let block_tokens = cache.block_tokens();
 
     let mut out = Vec::with_capacity(seqs.len());
+    let mut accept = AcceptanceRecord::default();
     let (mut billed, mut cached) = (0usize, 0usize);
     let (mut fetched, mut written) = (0usize, 0usize);
-    let (mut sample_secs, mut verify_secs) = (0.0f64, 0.0f64);
+    let (mut sample_secs, mut verify_secs, mut commit_secs) =
+        (0.0f64, 0.0f64, 0.0f64);
     for (i, v) in seqs.iter_mut().enumerate() {
         let prefix_len = v.prefix.len();
 
@@ -351,9 +361,24 @@ pub fn conclude_round(
             verify_tree(&plan.trees[i], &dists, &plan.row_maps[i], v.rng);
         verify_secs += t.elapsed_secs();
 
-        // Cache round end: rejected branches roll back (refcounts to
-        // zero), the accepted path + the scored miss region become the
-        // new resident prefix, and the dispatch slice is priced.
+        // Acceptance observatory sample: every speculated node's verdict,
+        // keyed by depth and the construction-time estimate (`Node::est`,
+        // the paper's Fig-2 x-axis). `accepted_nodes` is a root path, so
+        // the membership scan is O(depth) per node.
+        for id in plan.trees[i].speculated() {
+            let node = plan.trees[i].node(id);
+            accept.note(
+                node.depth,
+                node.est,
+                walked.accepted_nodes.contains(&id),
+            );
+        }
+
+        // Cache round end (the "commit" stage): rejected branches roll
+        // back (refcounts to zero), the accepted path + the scored miss
+        // region become the new resident prefix, and the dispatch slice
+        // is priced.
+        let t = Timer::start();
         let lease = std::mem::take(&mut leases[i]);
         cache.end_lease(lease, &plan.trees[i], &walked.accepted_nodes);
         cache.commit(
@@ -372,6 +397,7 @@ pub fn conclude_round(
             bill.cached_positions as u64,
             (prefix_len - bill.cached_positions) as u64,
         );
+        commit_secs += t.elapsed_secs();
         billed += bill.billed_positions;
         cached += bill.cached_positions;
         fetched += bill.fetched_blocks;
@@ -391,6 +417,9 @@ pub fn conclude_round(
     }
     times.add("sample", sample_secs);
     times.add("verify", verify_secs);
+    // A separate label: virtual_secs below sums its explicit pure-logic
+    // labels, so commit wall time never perturbs regime accounting.
+    times.add("commit", commit_secs);
 
     // Virtual hardware-regime cost of the round (paper Eq. 3): draft and
     // target dispatches at the regime's step times — the shared target
@@ -429,6 +458,7 @@ pub fn conclude_round(
         spec_tokens,
         times,
         virtual_secs,
+        accept,
     }
 }
 
@@ -545,6 +575,59 @@ mod tests {
         assert!(
             v < 2.0 * regime.target_step_secs,
             "batch-of-1 billed more than one dispatch unit"
+        );
+    }
+
+    #[test]
+    fn acceptance_record_counts_every_speculated_node() {
+        let out = run_one(PolicyKind::DySpec, 12, true, None);
+        let s = &out.seqs[0];
+        assert_eq!(
+            out.accept.proposed(),
+            12,
+            "every speculated node must be counted"
+        );
+        assert_eq!(out.accept.accepted(), s.accepted as u64);
+        // Accepted nodes form a root path: at most one acceptance per
+        // depth level.
+        for d in 0..crate::obs::MAX_DEPTH {
+            assert!(out.accept.depth_accepted[d] <= 1);
+            assert!(
+                out.accept.depth_accepted[d] <= out.accept.depth_proposed[d]
+            );
+        }
+        // Baseline and bare-row rounds record nothing.
+        assert!(run_one(PolicyKind::Baseline, 12, true, None)
+            .accept
+            .is_empty());
+        assert!(run_one(PolicyKind::DySpec, 12, false, None)
+            .accept
+            .is_empty());
+    }
+
+    #[test]
+    fn commit_stage_is_timed() {
+        let out = run_one(PolicyKind::DySpec, 12, true, None);
+        assert!(out.times.get("commit") >= 0.0);
+        // The regime's virtual cost sums explicit labels only, so the new
+        // label must not leak into regime accounting.
+        let regime = LatencyRegime::pair_7b();
+        let with = run_one(PolicyKind::DySpec, 12, true, Some(regime));
+        let v = with.virtual_secs.expect("regime configured");
+        let floor = regime.target_step_secs
+            + regime.draft_step_secs * with.draft_dispatches as f64
+            + regime.target_pos_secs * with.billed_positions as f64
+            + with.times.get("tree_construct")
+            + with.times.get("mask")
+            + with.times.get("sample")
+            + with.times.get("verify");
+        assert!(v >= floor - 1e-12);
+        assert!(
+            v <= floor
+                + regime.cache_fetch_secs * with.fetched_blocks as f64
+                + regime.cache_write_secs * with.written_blocks as f64
+                + 1e-12,
+            "commit wall time leaked into virtual cost"
         );
     }
 

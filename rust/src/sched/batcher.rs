@@ -39,6 +39,7 @@ use crate::coordinator::queue::{EventSink, FinishReason, GenEvent, Request};
 use crate::draft::{make_policy, round_policy, TreePolicy};
 use crate::log_debug;
 use crate::models::LogitModel;
+use crate::obs::{Observatory, TraceId};
 use crate::round::{self, RoundCtx, SeqRound};
 use crate::sched::sequence::Sequence;
 
@@ -86,6 +87,9 @@ pub struct Batcher {
     /// KV residency across rounds for every multiplexed sequence, under
     /// this worker's global block budget (`cfg.cache`).
     cache: CacheManager,
+    /// Observatory for per-round span/acceptance recording (`None` for
+    /// standalone batchers — tests, benches).
+    obs: Option<Arc<Observatory>>,
 }
 
 impl Batcher {
@@ -110,7 +114,16 @@ impl Batcher {
             seqs: Vec::new(),
             seed_salt,
             cache,
+            obs: None,
         }
+    }
+
+    /// Attach the worker's observatory (builder style): each step then
+    /// lands its stage latencies and acceptance counters there, plus
+    /// spans when tracing is enabled. Purely observational.
+    pub fn with_obs(mut self, obs: Arc<Observatory>) -> Self {
+        self.obs = Some(obs);
+        self
     }
 
     pub fn active(&self) -> usize {
@@ -266,6 +279,20 @@ impl Batcher {
         report.virtual_secs = virt;
         let used = outcome.spec_tokens;
 
+        if let Some(obs) = &self.obs {
+            // A batched round's spans belong to every co-batched request;
+            // only a batch of one is attributed to a single trace id.
+            let trace = if n == 1 { self.seqs[0].trace } else { 0 };
+            obs.record_round(
+                self.wid,
+                TraceId(trace),
+                n,
+                policy_kind,
+                &outcome.times,
+                &outcome.accept,
+            );
+        }
+
         // --- stream chunks + advance state machines (after the round so
         // every chunk's RoundStats carries the shared virtual cost) ---
         let mut finished: Vec<usize> = Vec::new();
@@ -410,6 +437,7 @@ mod tests {
                 submitted_at: Instant::now(),
                 cancel: cancel.clone(),
                 events: Box::new(tx),
+                trace: 0,
             },
             RequestHandle {
                 id,
@@ -622,6 +650,35 @@ mod tests {
             assert_eq!(rep.cached_positions, 0);
             assert_eq!(b.cache().used_blocks(), 0);
         }
+    }
+
+    /// Batched steps land in the observatory: one record per step with
+    /// the batch's sequence count, trace attributed only at batch-of-1.
+    #[test]
+    fn observatory_sees_batched_steps() {
+        let obs = Arc::new(crate::obs::Observatory::new(1, true, 256));
+        let mut b = mk_batcher(8, 16).with_obs(obs.clone());
+        let _handles: Vec<_> = (0..3)
+            .map(|i| {
+                let (req, h) = mk_request(i + 1, 6);
+                b.admit(req);
+                h
+            })
+            .collect();
+        let mut steps = 0u64;
+        while b.active() > 0 {
+            b.step();
+            steps += 1;
+        }
+        let q = obs.stage_quantiles();
+        assert!(q.iter().all(|(_, n, ..)| *n == steps));
+        let (spans, _) = obs.dump_spans();
+        assert_eq!(spans.len(), steps as usize * 5);
+        // Batch of 3: spans carry the batch width and no single trace.
+        assert!(spans.iter().take(5).all(|s| s.seqs == 3 && s.trace == 0));
+        let table = obs.acceptance();
+        assert_eq!(table.len(), 1);
+        assert!(table[0].1.proposed() > 0);
     }
 
     #[test]

@@ -83,6 +83,9 @@ pub struct Sequence {
     pub finish: FinishReason,
     /// Cooperative cancellation, shared with the submitter.
     pub cancel: CancelToken,
+    /// Admission-minted trace id (0 = untraced); round spans carry it
+    /// when the sequence is dispatched alone.
+    pub trace: u64,
     events: Box<dyn EventSink>,
 }
 
@@ -117,6 +120,7 @@ impl Sequence {
             virtual_secs: 0.0,
             finish: FinishReason::Length,
             cancel: req.cancel,
+            trace: req.trace,
             events: req.events,
         }
     }
@@ -240,6 +244,7 @@ mod tests {
                 submitted_at: Instant::now(),
                 cancel: CancelToken::new(),
                 events: Box::new(tx),
+                trace: 0,
             },
             rx,
         )

@@ -206,6 +206,24 @@ impl Client {
         self.send(Json::obj(vec![("cmd", Json::Str("stats".into()))]))
     }
 
+    /// Prometheus text exposition of the server's metrics snapshot plus
+    /// the observatory series (stage quantiles, acceptance table). The
+    /// multi-line text rides the line-JSON wire as one string field.
+    pub fn metrics(&mut self) -> Result<String, String> {
+        let reply =
+            self.send(Json::obj(vec![("cmd", Json::Str("metrics".into()))]))?;
+        reply
+            .get("prometheus")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| "reply missing prometheus text".into())
+    }
+
+    /// Flight-recorder dump: `{"tracing":…,"dropped":…,"spans":[…]}`.
+    pub fn trace(&mut self) -> Result<Json, String> {
+        self.send(Json::obj(vec![("cmd", Json::Str("trace".into()))]))
+    }
+
     pub fn shutdown(&mut self) -> Result<(), String> {
         self.send(Json::obj(vec![("cmd", Json::Str("shutdown".into()))]))?;
         Ok(())

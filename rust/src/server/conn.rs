@@ -29,7 +29,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -212,6 +212,12 @@ pub struct ConnSink {
     /// silent, because the submitter already sent the error frame.
     admitted: Arc<AtomicBool>,
     done_sent: AtomicBool,
+    /// Trace id minted at admission (0 = tracing off). The queue stores
+    /// it via `attach_trace` BEFORE the request is enqueued, so even the
+    /// first chunk frame — which may race the submitter's return — sees
+    /// it. At 0 the frames are bit-identical to an untraced server
+    /// (`protocol::with_trace` is the identity there).
+    trace: AtomicU64,
 }
 
 impl ConnSink {
@@ -229,6 +235,7 @@ impl ConnSink {
             shared,
             admitted,
             done_sent: AtomicBool::new(false),
+            trace: AtomicU64::new(0),
         }
     }
 
@@ -249,16 +256,24 @@ impl ConnSink {
 }
 
 impl EventSink for ConnSink {
+    fn attach_trace(&self, trace: u64) {
+        self.trace.store(trace, Ordering::SeqCst);
+    }
+
     fn send(&self, ev: GenEvent) -> bool {
         if self.shared.closed.load(Ordering::SeqCst) {
             return false;
         }
+        let trace = self.trace.load(Ordering::SeqCst);
         let pushed = match ev {
             GenEvent::Chunk { tokens, stats } => {
                 if self.stream && !self.legacy {
                     self.shared.push_frame(
-                        protocol::chunk_frame(self.req_id, &tokens, &stats)
-                            .to_string(),
+                        protocol::with_trace(
+                            protocol::chunk_frame(self.req_id, &tokens, &stats),
+                            trace,
+                        )
+                        .to_string(),
                     )
                 } else {
                     // One-shot surfaces only want the terminal frame.
@@ -269,8 +284,11 @@ impl EventSink for ConnSink {
                 let line = if self.legacy {
                     protocol::response_json(&resp).to_string()
                 } else {
-                    protocol::done_frame(self.req_id, &resp, !self.stream)
-                        .to_string()
+                    protocol::with_trace(
+                        protocol::done_frame(self.req_id, &resp, !self.stream),
+                        trace,
+                    )
+                    .to_string()
                 };
                 self.finish(line)
             }
@@ -294,8 +312,11 @@ impl Drop for ConnSink {
         let line = if self.legacy {
             protocol::error_json("worker dropped request").to_string()
         } else {
-            protocol::error_frame(self.req_id, "worker dropped request")
-                .to_string()
+            protocol::with_trace(
+                protocol::error_frame(self.req_id, "worker dropped request"),
+                self.trace.load(Ordering::SeqCst),
+            )
+            .to_string()
         };
         self.finish(line);
         self.shared.notify();
@@ -316,6 +337,13 @@ enum LegacyItem {
     /// are as fresh as the blocking transport's (which only snapshotted
     /// after the preceding generates finished).
     Stats,
+    /// Prometheus exposition of the metrics snapshot plus the
+    /// observatory's stage/acceptance series — rendered at emission
+    /// time, same freshness argument as `Stats`.
+    Metrics,
+    /// Flight-recorder span dump (`{"cmd":"trace"}`) — emission-time
+    /// too, so the reply reflects rounds recorded up to this frame.
+    Trace,
 }
 
 /// One connection, owned and driven by exactly one reactor thread.
@@ -486,6 +514,12 @@ impl Conn {
             Ok(ClientMessage::Stats) => {
                 self.reply_unkeyed(ctl, LegacyItem::Stats);
             }
+            Ok(ClientMessage::Metrics) => {
+                self.reply_unkeyed(ctl, LegacyItem::Metrics);
+            }
+            Ok(ClientMessage::Trace) => {
+                self.reply_unkeyed(ctl, LegacyItem::Trace);
+            }
             Ok(ClientMessage::Shutdown) => {
                 self.push(ctl, protocol::ok_json().to_string());
                 ctl.stop.store(true, Ordering::SeqCst);
@@ -634,6 +668,20 @@ impl Conn {
             LegacyItem::Stats => {
                 let snap = ctl.metrics().snapshot().to_string();
                 self.push(ctl, snap);
+            }
+            LegacyItem::Metrics => {
+                // The exposition text is multi-line; the line-JSON wire
+                // carries it as a single string field the client unwraps.
+                let line = Json::obj(vec![(
+                    "prometheus",
+                    Json::Str(ctl.coord.prometheus()),
+                )])
+                .to_string();
+                self.push(ctl, line);
+            }
+            LegacyItem::Trace => {
+                let line = ctl.coord.trace_json().to_string();
+                self.push(ctl, line);
             }
             LegacyItem::Generate(..) => {
                 unreachable!("generate items are submitted, not emitted")
@@ -928,6 +976,60 @@ mod tests {
         assert!(conn.load_partial());
         assert_eq!(conn.written, 0);
         drop(client);
+    }
+
+    /// With a trace attached (admission minted one), every v1 frame of
+    /// the stream — chunk, done, and the drop-path error — echoes it as
+    /// 16 lowercase hex; without one, no `trace` key appears at all
+    /// (wire bit-identity when tracing is off).
+    #[test]
+    fn sink_echoes_attached_trace_on_every_v1_frame() {
+        use crate::coordinator::EventSink;
+        let shared = mk_shared(16);
+        let traced = ConnSink::new(
+            7,
+            true,
+            false,
+            shared.clone(),
+            Arc::new(AtomicBool::new(true)),
+        );
+        traced.attach_trace(0xabc1_2345_6789_0def);
+        assert!(traced.send(GenEvent::Chunk {
+            tokens: vec![1],
+            stats: RoundStats::default(),
+        }));
+        let chunk =
+            protocol::parse_frame(&pop_line(&shared).unwrap()).unwrap();
+        assert_eq!(chunk.trace(), Some("abc1234567890def"));
+        assert!(traced.send(GenEvent::Done(resp(FinishReason::Length))));
+        let done = protocol::parse_frame(&pop_line(&shared).unwrap()).unwrap();
+        assert_eq!(done.trace(), Some("abc1234567890def"));
+
+        // Drop-path terminal error carries it too.
+        let dropped = ConnSink::new(
+            8,
+            true,
+            false,
+            shared.clone(),
+            Arc::new(AtomicBool::new(true)),
+        );
+        dropped.attach_trace(0x1);
+        drop(dropped);
+        let err = protocol::parse_frame(&pop_line(&shared).unwrap()).unwrap();
+        assert_eq!(err.event.as_str(), "error");
+        assert_eq!(err.trace(), Some("0000000000000001"));
+
+        // No trace attached: the key is absent, not empty.
+        let untraced = ConnSink::new(
+            9,
+            true,
+            false,
+            shared.clone(),
+            Arc::new(AtomicBool::new(true)),
+        );
+        assert!(untraced.send(GenEvent::Done(resp(FinishReason::Length))));
+        let plain = pop_line(&shared).unwrap();
+        assert!(!plain.contains("trace"), "untraced frame grew a key: {plain}");
     }
 
     /// An admitted sink dropped without its Done (coordinator teardown)

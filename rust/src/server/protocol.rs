@@ -178,6 +178,11 @@ pub enum ClientMessage {
         req_id: u64,
     },
     Stats,
+    /// Prometheus text exposition of the metrics snapshot + observatory
+    /// series, delivered as one `{"prometheus":"<text>"}` reply line.
+    Metrics,
+    /// Flight-recorder dump: `{"tracing":bool,"dropped":n,"spans":[..]}`.
+    Trace,
     Shutdown,
 }
 
@@ -272,6 +277,8 @@ pub fn parse_client_message(line: &str) -> Result<ClientMessage, String> {
     if let Some(cmd) = doc.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "stats" => Ok(ClientMessage::Stats),
+            "metrics" => Ok(ClientMessage::Metrics),
+            "trace" => Ok(ClientMessage::Trace),
             "shutdown" => Ok(ClientMessage::Shutdown),
             "cancel" => {
                 let req_id = doc
@@ -396,6 +403,26 @@ pub fn error_frame(req_id: u64, msg: &str) -> Json {
     )
 }
 
+/// Echo a request's trace id on a v1 frame: a nonzero trace adds a
+/// `"trace":"<16-hex>"` field; zero (tracing off) returns the frame
+/// untouched, keeping the wire bytes bit-identical to an untraced run
+/// (pinned by `tests/obs_differential.rs`).
+pub fn with_trace(frame: Json, trace: u64) -> Json {
+    if trace == 0 {
+        return frame;
+    }
+    match frame {
+        Json::Obj(mut map) => {
+            map.insert(
+                "trace".into(),
+                Json::Str(crate::obs::TraceId(trace).to_hex()),
+            );
+            Json::Obj(map)
+        }
+        other => other,
+    }
+}
+
 /// Legacy one-shot reply (no envelope, full token array).
 pub fn response_json(resp: &Response) -> Json {
     Json::obj(response_fields(resp, true))
@@ -441,6 +468,12 @@ impl Frame {
 
     pub fn error(&self) -> Option<&str> {
         self.body.get("error").and_then(Json::as_str)
+    }
+
+    /// The echoed trace id (present only when the server traced the
+    /// request), as its 16-hex-digit wire form.
+    pub fn trace(&self) -> Option<&str> {
+        self.body.get("trace").and_then(Json::as_str)
     }
 }
 
@@ -699,6 +732,14 @@ mod tests {
             ClientMessage::Stats
         );
         assert_eq!(
+            parse_client_message(r#"{"cmd":"metrics"}"#).unwrap(),
+            ClientMessage::Metrics
+        );
+        assert_eq!(
+            parse_client_message(r#"{"cmd":"trace"}"#).unwrap(),
+            ClientMessage::Trace
+        );
+        assert_eq!(
             parse_client_message(r#"{"cmd":"shutdown"}"#).unwrap(),
             ClientMessage::Shutdown
         );
@@ -774,6 +815,33 @@ mod tests {
         assert_eq!(f.event, "error");
         assert_eq!(f.req_id, Some(4));
         assert_eq!(f.error(), Some("queue full"));
+    }
+
+    /// Trace echo: zero leaves the frame byte-identical; nonzero appends
+    /// the 16-hex id, recoverable through the client-side parser.
+    #[test]
+    fn with_trace_is_identity_at_zero_and_echoes_otherwise() {
+        let stats = RoundStats::default();
+        let bare = chunk_frame(7, &[9], &stats).to_string();
+        assert_eq!(
+            with_trace(chunk_frame(7, &[9], &stats), 0).to_string(),
+            bare,
+            "zero trace must not change the wire bytes"
+        );
+
+        let id = crate::obs::TraceId::mint(7);
+        let line = with_trace(chunk_frame(7, &[9], &stats), id.0).to_string();
+        assert_ne!(line, bare);
+        let f = parse_frame(&line).unwrap();
+        assert_eq!(f.trace(), Some(id.to_hex().as_str()));
+        assert_eq!(f.tokens(), vec![9]);
+        assert!(parse_frame(&bare).unwrap().trace().is_none());
+
+        let done = with_trace(done_frame(7, &test_response(), false), id.0);
+        assert_eq!(
+            parse_frame(&done.to_string()).unwrap().trace(),
+            Some(id.to_hex().as_str())
+        );
     }
 
     /// Drain every currently-complete line out of the decoder.

@@ -12,5 +12,5 @@ pub mod stats;
 pub mod timer;
 
 pub use rng::Rng;
-pub use stats::Histogram;
+pub use stats::{AtomicF64, Histogram};
 pub use timer::Timer;

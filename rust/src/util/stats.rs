@@ -1,84 +1,147 @@
-//! Latency statistics: an exact-percentile histogram (stores samples; our
-//! bench populations are small) plus running mean/min/max. Used by the bench
-//! harness and the coordinator metrics.
+//! Latency statistics: a log-bucketed quantile histogram (bounded memory,
+//! ~9% worst-case relative quantile error), running mean/min/max, and a
+//! lock-free f64 accumulator. Used by the bench harness, the coordinator
+//! metrics, and the observability layer.
 
-/// Sample reservoir with exact percentiles.
-#[derive(Clone, Debug, Default)]
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Buckets per power of two. Four sub-buckets per octave bounds the
+/// relative quantile error at 2^(1/8) − 1 ≈ 9.1% (a reported quantile is
+/// the geometric midpoint of its bucket).
+const BUCKETS_PER_OCTAVE: usize = 4;
+/// Smallest resolvable magnitude: 2^-30 ≈ 1 ns when recording seconds.
+/// Anything at or below it (including 0) lands in bucket 0.
+const MIN_EXP: i32 = -30;
+/// Octaves covered: 2^-30 .. 2^34 ≈ 1.7e10 — nanoseconds to centuries.
+const OCTAVES: usize = 64;
+const NUM_BUCKETS: usize = OCTAVES * BUCKETS_PER_OCTAVE;
+
+/// Log-bucketed histogram with exact count/sum/min/max. Replaces the old
+/// exact-sample reservoir: serving-path histograms grow without bound on
+/// samples, while buckets are O(1) per record and fixed-size forever.
+#[derive(Clone, Debug)]
 pub struct Histogram {
-    samples: Vec<f64>,
-    sorted: bool,
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn bucket_of(v: f64) -> usize {
+    if !(v > 0.0) || v.log2() < MIN_EXP as f64 {
+        return 0;
+    }
+    let idx = ((v.log2() - MIN_EXP as f64) * BUCKETS_PER_OCTAVE as f64) as usize;
+    idx.min(NUM_BUCKETS - 1)
+}
+
+/// Geometric midpoint of a bucket.
+fn representative(idx: usize) -> f64 {
+    let exp = MIN_EXP as f64 + (idx as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64;
+    exp.exp2()
 }
 
 impl Histogram {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            counts: vec![0; NUM_BUCKETS],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
-        self.sorted = false;
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.counts[bucket_of(v)] += 1;
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.n as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.n == 0
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.n == 0 {
             return 0.0;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum / self.n as f64
     }
 
     pub fn min(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        self.min
     }
 
     pub fn max(&self) -> f64 {
-        self.samples
-            .iter()
-            .copied()
-            .fold(f64::NEG_INFINITY, f64::max)
+        self.max
     }
 
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        self.sum
     }
 
-    /// Exact percentile by nearest-rank (q in [0, 1]).
-    pub fn percentile(&mut self, q: f64) -> f64 {
-        if self.samples.is_empty() {
+    /// Nearest-rank percentile (q in [0, 1]) to within one bucket's
+    /// resolution; q = 0 and q = 1 return the tracked exact min/max, and
+    /// every answer is clamped into [min, max].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.n == 0 {
             return 0.0;
         }
-        if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            self.sorted = true;
+        if q <= 0.0 {
+            return self.min;
         }
-        let rank = ((q * self.samples.len() as f64).ceil() as usize)
-            .clamp(1, self.samples.len());
-        self.samples[rank - 1]
+        if q >= 1.0 {
+            return self.max;
+        }
+        let rank = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return representative(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
     }
 
-    pub fn p50(&mut self) -> f64 {
+    pub fn p50(&self) -> f64 {
         self.percentile(0.50)
     }
 
-    pub fn p90(&mut self) -> f64 {
+    pub fn p90(&self) -> f64 {
         self.percentile(0.90)
     }
 
-    pub fn p99(&mut self) -> f64 {
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
         self.percentile(0.99)
     }
 
     pub fn merge(&mut self, other: &Histogram) {
-        self.samples.extend_from_slice(&other.samples);
-        self.sorted = false;
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 }
 
@@ -118,26 +181,94 @@ impl Running {
     }
 }
 
+/// Atomic f64 accumulator over `to_bits`/`from_bits` CAS — full f64
+/// precision, unlike integer-microsecond stand-ins that drop
+/// sub-microsecond remainders on every add.
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        Self(AtomicU64::new(v.to_bits()))
+    }
+
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn store(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Atomically add `delta`; returns the new value.
+    pub fn add(&self, delta: f64) -> f64 {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = f64::from_bits(cur) + delta;
+            match self.0.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return next,
+                Err(got) => cur = got,
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Quantiles are exact in rank and accurate in value to one log
+    /// bucket (≤ ~9.1% relative); the extremes are exact.
     #[test]
-    fn percentiles_exact() {
+    fn percentiles_are_log_bucket_accurate() {
         let mut h = Histogram::new();
         for v in 1..=100 {
             h.record(v as f64);
         }
-        assert_eq!(h.p50(), 50.0);
-        assert_eq!(h.p90(), 90.0);
-        assert_eq!(h.p99(), 99.0);
+        for (got, want) in [(h.p50(), 50.0), (h.p90(), 90.0), (h.p99(), 99.0)] {
+            assert!(
+                (got - want).abs() / want < 0.1,
+                "got {got}, want {want} ± 10%"
+            );
+        }
         assert_eq!(h.percentile(1.0), 100.0);
         assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.len(), 100);
+        assert_eq!(h.sum(), 5050.0);
+        assert_eq!(h.mean(), 50.5);
+    }
+
+    #[test]
+    fn quantiles_never_leave_the_observed_range() {
+        let mut h = Histogram::new();
+        h.record(0.003);
+        h.record(0.004);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let v = h.percentile(q);
+            assert!((0.003..=0.004).contains(&v), "q={q} gave {v}");
+        }
+    }
+
+    #[test]
+    fn zero_and_negative_samples_land_in_the_bottom_bucket() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e-12);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.min(), -1.0);
+        // Bucket-0 representative clamps to the tracked min.
+        assert_eq!(h.p50(), -1.0);
     }
 
     #[test]
     fn empty_histogram_is_zero() {
-        let mut h = Histogram::new();
+        let h = Histogram::new();
         assert_eq!(h.p50(), 0.0);
         assert_eq!(h.mean(), 0.0);
     }
@@ -151,6 +282,9 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.len(), 2);
         assert_eq!(a.mean(), 2.0);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 3.0);
+        assert_eq!(a.percentile(1.0), 3.0);
     }
 
     #[test]
@@ -163,5 +297,43 @@ mod tests {
         assert_eq!(r.min, 2.0);
         assert_eq!(r.max, 6.0);
         assert_eq!(r.n, 3);
+    }
+
+    #[test]
+    fn atomic_f64_accumulates_at_full_precision() {
+        let a = AtomicF64::new(0.0);
+        // Sub-microsecond deltas that a u64-microsecond accumulator
+        // truncates to zero.
+        for _ in 0..1000 {
+            a.add(1e-7);
+        }
+        assert!((a.load() - 1e-4).abs() < 1e-12);
+        a.store(2.5);
+        assert_eq!(a.load(), 2.5);
+        assert_eq!(a.add(0.5), 3.0);
+        let d = AtomicF64::default();
+        assert_eq!(d.load(), 0.0);
+    }
+
+    #[test]
+    fn atomic_f64_is_consistent_across_threads() {
+        use std::sync::Arc;
+        let a = Arc::new(AtomicF64::new(0.0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let a = a.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        a.add(0.125);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 0.125 is exact in binary: no rounding, the total is exact iff
+        // every CAS retried correctly.
+        assert_eq!(a.load(), 4.0 * 10_000.0 * 0.125);
     }
 }

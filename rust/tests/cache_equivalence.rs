@@ -192,6 +192,7 @@ fn batcher_tokens(
                 submitted_at: Instant::now(),
                 cancel: CancelToken::new(),
                 events: Box::new(tx),
+                trace: 0,
             });
             rx
         })

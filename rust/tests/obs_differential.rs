@@ -1,0 +1,172 @@
+//! Differential wall for the observability layer (ISSUE 6 tentpole):
+//! tracing must be provably free when disabled and invisible when
+//! enabled. The same requests, driven through coordinators identical
+//! except for `trace = on|off`, must produce bit-identical event
+//! streams — tokens, per-round chunks with their `RoundStats`, step
+//! counts and finish reasons — across both schedulers × cache on/off.
+//!
+//! The traced side additionally has to actually observe: spans recorded
+//! for every round, each carrying the admission-minted trace id, with
+//! nothing dropped; the untraced side records no spans but still feeds
+//! the always-on stage/acceptance counters and renders a Prometheus
+//! exposition.
+
+use std::sync::Arc;
+
+use dyspec::config::{Config, SchedKind};
+use dyspec::coordinator::{
+    Coordinator, FinishReason, GenEvent, GenParams, ModelFactory, RoundStats,
+};
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+use dyspec::util::json::Json;
+
+const MAX_NEW: usize = 20;
+const SEEDS: [u64; 3] = [2, 5, 11];
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|| {
+        let spec = SimSpec::new(64, 2.0, 0.8, 99);
+        let (d, t) = SimModel::pair(spec);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    })
+}
+
+fn cfg(sched: SchedKind, cache: bool, trace: bool) -> Config {
+    let mut cfg = Config::new();
+    cfg.server.workers = 1; // one worker: request order is deterministic
+    cfg.server.queue_capacity = 8;
+    cfg.engine.tree_budget = 8;
+    cfg.engine.max_new_tokens = MAX_NEW;
+    cfg.sched.kind = sched;
+    cfg.cache.enabled = cache;
+    cfg.obs.trace = trace;
+    cfg
+}
+
+/// Everything a client can observe about one request's stream.
+#[derive(Debug, PartialEq)]
+struct Stream {
+    tokens: Vec<u32>,
+    chunks: Vec<(Vec<u32>, RoundStats)>,
+    steps: usize,
+    finish: FinishReason,
+}
+
+/// Drive `SEEDS` requests sequentially (each drained before the next is
+/// submitted, so scheduling is identical on every run) and return the
+/// observed streams plus the coordinator's trace dump and exposition.
+fn run(cfg: Config) -> (Vec<Stream>, Json, String) {
+    let coord = Coordinator::start(cfg, sim_factory());
+    let mut streams = Vec::new();
+    for (i, &seed) in SEEDS.iter().enumerate() {
+        let params = GenParams {
+            max_new_tokens: MAX_NEW,
+            temperature: 0.6,
+            seed: Some(seed),
+            stop_tokens: Vec::new(),
+            drafter: None,
+            token_budget: None,
+        };
+        let prompt = vec![3, 1, 4, 1 + i as u32];
+        let handle = coord.try_submit(prompt, params).expect("submit");
+        let mut chunks = Vec::new();
+        let resp = loop {
+            match handle.events.recv().expect("worker dropped request") {
+                GenEvent::Chunk { tokens, stats } => {
+                    chunks.push((tokens, stats))
+                }
+                GenEvent::Done(resp) => break resp,
+            }
+        };
+        streams.push(Stream {
+            tokens: resp.tokens,
+            chunks,
+            steps: resp.steps,
+            finish: resp.finish,
+        });
+    }
+    let dump = coord.trace_json();
+    let prom = coord.prometheus();
+    coord.shutdown();
+    (streams, dump, prom)
+}
+
+fn spans(dump: &Json) -> &[Json] {
+    dump.get("spans").and_then(Json::as_arr).unwrap_or(&[])
+}
+
+/// The tentpole property: the client-visible stream is bit-identical
+/// with tracing on and off, for both schedulers, with the cache on and
+/// off — observability is provably free where it claims to be.
+#[test]
+fn streams_are_bit_identical_with_tracing_on_and_off() {
+    for sched in [SchedKind::Fcfs, SchedKind::Continuous] {
+        for cache in [true, false] {
+            let (off, off_dump, _) = run(cfg(sched, cache, false));
+            let (on, on_dump, _) = run(cfg(sched, cache, true));
+            assert_eq!(
+                off, on,
+                "{sched:?} cache={cache}: tracing changed the stream"
+            );
+            for s in &off {
+                assert_eq!(s.finish, FinishReason::Length);
+                assert_eq!(s.tokens.len(), MAX_NEW);
+                let rejoined: Vec<u32> = s
+                    .chunks
+                    .iter()
+                    .flat_map(|(t, _)| t.iter().copied())
+                    .collect();
+                assert_eq!(rejoined, s.tokens, "chunks do not reassemble");
+            }
+            // Off: the recorder stays empty. On: one span per
+            // (round, stage), every one tagged with a minted trace id.
+            assert!(spans(&off_dump).is_empty(), "untraced run kept spans");
+            let on_spans = spans(&on_dump);
+            let rounds: usize = on.iter().map(|s| s.chunks.len()).sum();
+            assert_eq!(
+                on_spans.len(),
+                rounds * 5,
+                "{sched:?} cache={cache}: expected 5 spans per round"
+            );
+            for span in on_spans {
+                let trace =
+                    span.get("trace").and_then(Json::as_str).unwrap_or("");
+                assert_eq!(trace.len(), 16, "span missing its trace id");
+                assert_ne!(trace, "0000000000000000");
+            }
+            assert_eq!(
+                on_dump.get("dropped").and_then(Json::as_f64),
+                Some(0.0),
+                "flight recorder overflowed in a tiny run"
+            );
+        }
+    }
+}
+
+/// Counters are always-on (tracing only gates spans): both runs render
+/// a Prometheus exposition with populated stage and acceptance series,
+/// and the gauges drain to zero once the coordinator is idle.
+#[test]
+fn exposition_is_populated_with_tracing_off() {
+    let (_, dump, prom) = run(cfg(SchedKind::Continuous, true, false));
+    assert!(spans(&dump).is_empty());
+    for series in [
+        "# TYPE dyspec_round_stage_seconds summary",
+        "dyspec_round_stage_seconds{stage=\"draft\",quantile=\"0.5\"}",
+        "dyspec_round_stage_seconds_count{stage=\"commit\"}",
+        "dyspec_accept_depth_proposed_total{drafter=\"dyspec\"",
+        "dyspec_accept_prob_proposed_total{drafter=\"dyspec\"",
+        "# TYPE dyspec_total_tokens gauge",
+    ] {
+        assert!(prom.contains(series), "exposition missing: {series}\n{prom}");
+    }
+    // Every sequence finished before shutdown: in-flight gauges are back
+    // to zero in the same exposition a scraper would see post-drain.
+    for line in ["dyspec_tokens_in_flight 0\n", "dyspec_queue_depth 0\n"] {
+        assert!(prom.contains(line), "gauge not drained: {line}\n{prom}");
+    }
+}

@@ -140,6 +140,7 @@ fn continuous_trace(
         submitted_at: Instant::now(),
         cancel: CancelToken::new(),
         events: Box::new(tx),
+        trace: 0,
     });
     while b.active() > 0 {
         b.step();
@@ -298,6 +299,7 @@ fn token_budget_cap_is_scheduler_independent() {
             submitted_at: Instant::now(),
             cancel: CancelToken::new(),
             events: Box::new(tx),
+            trace: 0,
         });
         while b.active() > 0 {
             b.step();

@@ -54,6 +54,7 @@ fn mk_request(
             submitted_at: Instant::now(),
             cancel: cancel.clone(),
             events: Box::new(tx),
+            trace: 0,
         },
         RequestHandle {
             id,

@@ -168,6 +168,7 @@ fn continuous_batching_preserves_first_token_distribution() {
                     submitted_at: Instant::now(),
                     cancel: CancelToken::new(),
                     events: Box::new(tx),
+                    trace: 0,
                 });
                 rx
             })
@@ -296,6 +297,7 @@ fn batched_cache_on_off_identical_streams_and_billed_positions_dominate() {
                     submitted_at: Instant::now(),
                     cancel: CancelToken::new(),
                     events: Box::new(tx),
+                    trace: 0,
                 });
                 rx
             })
