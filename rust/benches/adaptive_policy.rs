@@ -1,0 +1,19 @@
+//! Adaptive-policy benchmark: accepted tokens/round on a mixed-temperature
+//! workload, each static drafter vs online-adaptive selection over the same
+//! set (see DESIGN.md §Adaptive Policy). Shares the runner with
+//! `dyspec bench --experiment adaptive` and records the result as
+//! BENCH_adaptive.json at the repo root to seed the perf trajectory.
+//! Env: DYSPEC_BENCH_PROMPTS (requests per client), DYSPEC_BENCH_TOKENS.
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts {
+        prompts: std::env::var("DYSPEC_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4),
+        max_new_tokens: std::env::var("DYSPEC_BENCH_TOKENS").ok().and_then(|v| v.parse().ok()).unwrap_or(64),
+        out: Some("../BENCH_adaptive.json".into()),
+        ..ExpOpts::default()
+    };
+    for table in run_experiment("adaptive", &opts).expect("experiment") {
+        println!("{}", table.render());
+    }
+}

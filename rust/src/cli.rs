@@ -84,7 +84,7 @@ USAGE:
 COMMANDS:
   generate     run one generation (policy=dyspec|sequoia|specinfer|chain|baseline)
   bench        run a paper experiment (--experiment table1|table2|table3|table4|
-               table5|fig2|fig4|fig5|fig9|serve|cache|stream)
+               table5|fig2|fig4|fig5|fig9|serve|cache|stream|adaptive)
   serve        start the TCP serving coordinator (--addr host:port,
                scheduler=fcfs|continuous); wire protocol v1 over the
                reactor transport (reactor_threads=N event loops serve
@@ -113,7 +113,14 @@ CONFIG KEYS (key=value, see config/mod.rs):
   cache (on|off), cache_block, cache_blocks,
   reactor_threads, max_conns, outbox_frames,
   trace (on|off — per-round span recording + trace-id echo on v1 frames),
-  trace_ring (flight-recorder capacity per worker, spans)
+  trace_ring (flight-recorder capacity per worker, spans),
+  policy_mode (static|adaptive — online drafter/budget selection from the
+  acceptance observatory; `policy=adaptive` is accepted as an alias),
+  adapt_drafters (comma-separated competing drafters; empty = configured
+  policy only), adapt_explore (UCB exploration weight),
+  adapt_min_samples (cold-start proposals per drafter),
+  adapt_cut (useful-bucket acceptance threshold),
+  adapt_min_budget (retuned tree-budget floor)
 
 EXAMPLES:
   dyspec generate policy=dyspec backend=hlo dataset=cnn temp=0

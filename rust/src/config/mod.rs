@@ -65,6 +65,77 @@ impl fmt::Display for PolicyKind {
     }
 }
 
+/// Whether the per-round drafter/budget choice is fixed by config
+/// (`static`) or driven online by the acceptance observatory
+/// (`adaptive`) — the closed loop over the PR-6 telemetry
+/// (DESIGN.md §Adaptive Policy).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PolicyMode {
+    #[default]
+    Static,
+    Adaptive,
+}
+
+impl PolicyMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "static" => Self::Static,
+            "adaptive" | "adapt" => Self::Adaptive,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::Adaptive => "adaptive",
+        }
+    }
+}
+
+impl fmt::Display for PolicyMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Online-adaptive policy knobs (`round::adapt`, DESIGN.md §Adaptive
+/// Policy). All estimator state lives per worker; this struct only
+/// carries the registered drafter set and the UCB/retune dials.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptConfig {
+    pub mode: PolicyMode,
+    /// Drafters the controller may select among, in registration order.
+    /// Empty = the singleton set `[engine.policy]`, which degenerates to
+    /// static selection by construction (the equivalence the differential
+    /// suite pins).
+    pub drafters: Vec<PolicyKind>,
+    /// UCB exploration coefficient `c` in
+    /// `rate + c * sqrt(ln(N+1) / (n+1))`.
+    pub explore: f64,
+    /// Proposed-node samples below which a drafter counts as cold and is
+    /// explored ahead of any exploitation.
+    pub min_samples: u64,
+    /// Probability-bucket smoothed acceptance rate below which a bucket's
+    /// proposed mass counts as wasted when retuning the tree budget.
+    pub cut: f64,
+    /// Retuned tree budgets never shrink below this floor.
+    pub min_budget: usize,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        Self {
+            mode: PolicyMode::Static,
+            drafters: Vec::new(),
+            explore: 0.5,
+            min_samples: 128,
+            cut: 0.25,
+            min_budget: 4,
+        }
+    }
+}
+
 /// Which serving scheduler multiplexes requests onto a worker.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedKind {
@@ -387,6 +458,7 @@ pub struct Config {
     pub sched: SchedConfig,
     pub cache: CacheConfig,
     pub obs: ObsConfig,
+    pub adapt: AdaptConfig,
     pub backend: ModelBackend,
     pub regime: Option<LatencyRegime>,
     pub dataset: String,
@@ -415,6 +487,7 @@ impl Config {
             sched: SchedConfig::default(),
             cache: CacheConfig::default(),
             obs: ObsConfig::default(),
+            adapt: AdaptConfig::default(),
             backend: ModelBackend::Sim,
             regime: None,
             dataset: "c4".into(),
@@ -429,9 +502,50 @@ impl Config {
     pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
         let bad = |what: &str| Err(format!("invalid {what}: {value}"));
         match key {
+            // `policy` names the (base) drafter; as a convenience the
+            // ISSUE-spelled `policy=adaptive|static` toggles the mode
+            // instead, leaving the drafter untouched (canonical mode key:
+            // `policy_mode`).
             "policy" => match PolicyKind::parse(value) {
                 Some(p) => self.engine.policy = p,
-                None => return bad("policy"),
+                None => match PolicyMode::parse(value) {
+                    Some(m) => self.adapt.mode = m,
+                    None => return bad("policy"),
+                },
+            },
+            "policy_mode" => match PolicyMode::parse(value) {
+                Some(m) => self.adapt.mode = m,
+                None => return bad("policy_mode"),
+            },
+            "adapt_drafters" => {
+                let mut kinds = Vec::new();
+                for part in value.split(',').filter(|p| !p.trim().is_empty())
+                {
+                    match PolicyKind::parse(part.trim()) {
+                        Some(k) if !kinds.contains(&k) => kinds.push(k),
+                        Some(_) => {} // duplicate registration is a no-op
+                        None => return bad("adapt_drafters"),
+                    }
+                }
+                self.adapt.drafters = kinds;
+            }
+            "adapt_explore" => match value.parse::<f64>() {
+                Ok(v) if v >= 0.0 && v.is_finite() => {
+                    self.adapt.explore = v
+                }
+                _ => return bad("adapt_explore"),
+            },
+            "adapt_min_samples" => match value.parse() {
+                Ok(v) => self.adapt.min_samples = v,
+                Err(_) => return bad("adapt_min_samples"),
+            },
+            "adapt_cut" => match value.parse::<f64>() {
+                Ok(v) if (0.0..=1.0).contains(&v) => self.adapt.cut = v,
+                _ => return bad("adapt_cut"),
+            },
+            "adapt_min_budget" => match value.parse() {
+                Ok(v) if v >= 1 => self.adapt.min_budget = v,
+                _ => return bad("adapt_min_budget"),
             },
             "tree_budget" | "budget" => match value.parse() {
                 Ok(v) => self.engine.tree_budget = v,
@@ -659,6 +773,26 @@ impl Config {
             if self.obs.trace { "on" } else { "off" }.into(),
         );
         m.insert("trace_ring".into(), self.obs.trace_ring.to_string());
+        m.insert("policy_mode".into(), self.adapt.mode.name().into());
+        m.insert(
+            "adapt_drafters".into(),
+            self.adapt
+                .drafters
+                .iter()
+                .map(|k| k.name().to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        m.insert("adapt_explore".into(), self.adapt.explore.to_string());
+        m.insert(
+            "adapt_min_samples".into(),
+            self.adapt.min_samples.to_string(),
+        );
+        m.insert("adapt_cut".into(), self.adapt.cut.to_string());
+        m.insert(
+            "adapt_min_budget".into(),
+            self.adapt.min_budget.to_string(),
+        );
         m.insert(
             "reactor_threads".into(),
             self.server.reactor_threads.to_string(),
@@ -843,6 +977,8 @@ mod tests {
     fn to_map_round_trips() {
         let mut cfg = Config::preset("table4").unwrap();
         cfg.set("dataset", "owt").unwrap();
+        cfg.set("policy_mode", "adaptive").unwrap();
+        cfg.set("adapt_drafters", "dyspec,chain").unwrap();
         let map = cfg.to_map();
         let mut cfg2 = Config::new();
         for (k, v) in &map {
@@ -850,5 +986,63 @@ mod tests {
         }
         assert_eq!(cfg2.engine, cfg.engine);
         assert_eq!(cfg2.dataset, cfg.dataset);
+        assert_eq!(cfg2.adapt, cfg.adapt);
+    }
+
+    #[test]
+    fn adapt_keys_round_trip_and_validate() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.adapt, AdaptConfig::default());
+        assert_eq!(cfg.adapt.mode, PolicyMode::Static);
+        cfg.set("policy_mode", "adaptive").unwrap();
+        assert_eq!(cfg.adapt.mode, PolicyMode::Adaptive);
+        cfg.set("adapt_drafters", "dyspec, chain,specinfer").unwrap();
+        assert_eq!(
+            cfg.adapt.drafters,
+            vec![
+                PolicyKind::DySpec,
+                PolicyKind::Chain,
+                PolicyKind::SpecInfer
+            ]
+        );
+        // Duplicate registration collapses; empty clears.
+        cfg.set("adapt_drafters", "chain,chain").unwrap();
+        assert_eq!(cfg.adapt.drafters, vec![PolicyKind::Chain]);
+        cfg.set("adapt_drafters", "").unwrap();
+        assert!(cfg.adapt.drafters.is_empty());
+        cfg.set("adapt_explore", "1.25").unwrap();
+        cfg.set("adapt_min_samples", "32").unwrap();
+        cfg.set("adapt_cut", "0.4").unwrap();
+        cfg.set("adapt_min_budget", "2").unwrap();
+        assert!((cfg.adapt.explore - 1.25).abs() < 1e-12);
+        assert_eq!(cfg.adapt.min_samples, 32);
+        assert!((cfg.adapt.cut - 0.4).abs() < 1e-12);
+        assert_eq!(cfg.adapt.min_budget, 2);
+        assert!(cfg.set("policy_mode", "magic").is_err());
+        assert!(cfg.set("adapt_drafters", "dyspec,nope").is_err());
+        assert!(cfg.set("adapt_explore", "-1").is_err());
+        assert!(cfg.set("adapt_cut", "1.5").is_err());
+        assert!(cfg.set("adapt_min_budget", "0").is_err());
+        let map = cfg.to_map();
+        assert_eq!(map.get("policy_mode").unwrap(), "adaptive");
+        assert_eq!(map.get("adapt_min_samples").unwrap(), "32");
+    }
+
+    /// The ISSUE's literal spelling: `policy=adaptive|static` toggles the
+    /// mode without clobbering the configured drafter.
+    #[test]
+    fn policy_key_accepts_mode_aliases() {
+        let mut cfg = Config::new();
+        cfg.set("policy", "sequoia").unwrap();
+        cfg.set("policy", "adaptive").unwrap();
+        assert_eq!(cfg.engine.policy, PolicyKind::Sequoia);
+        assert_eq!(cfg.adapt.mode, PolicyMode::Adaptive);
+        cfg.set("policy", "static").unwrap();
+        assert_eq!(cfg.adapt.mode, PolicyMode::Static);
+        assert_eq!(cfg.engine.policy, PolicyKind::Sequoia);
+        assert!(cfg.set("policy", "nope").is_err());
+        for m in [PolicyMode::Static, PolicyMode::Adaptive] {
+            assert_eq!(PolicyMode::parse(m.name()), Some(m));
+        }
     }
 }

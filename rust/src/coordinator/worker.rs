@@ -68,6 +68,7 @@ fn run_fcfs(
 ) {
     let mut engine = SpecEngine::new(draft, target, cfg.engine.clone(), cfg.regime)
         .with_cache(&cfg.cache)
+        .with_adapt(&cfg.adapt)
         .with_obs(obs, wid);
     let idle = Duration::from_millis(cfg.sched.idle_tick_ms.max(1));
     log_debug!("worker {wid} up (fcfs, policy={})", cfg.engine.policy);
@@ -137,7 +138,10 @@ fn serve_one(
         Some(cap) if cap > 0 => cfg.engine.tree_budget.min(cap),
         _ => cfg.engine.tree_budget,
     };
-    engine.set_policy(req.params.drafter.unwrap_or(cfg.engine.policy));
+    // `drafter` pins the request's rounds; `None` leaves resolution to
+    // the engine (adaptive controller when enabled, else the worker's
+    // configured policy).
+    engine.set_request_drafter(req.params.drafter);
     if let Some(seed) = req.params.seed {
         engine.reseed(seed);
     }

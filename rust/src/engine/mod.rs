@@ -21,10 +21,13 @@ pub use stats::{GenerationStats, StepStats};
 use std::sync::Arc;
 
 use crate::cache::CacheManager;
-use crate::config::{CacheConfig, EngineConfig, LatencyRegime, PolicyKind};
+use crate::config::{
+    AdaptConfig, CacheConfig, EngineConfig, LatencyRegime, PolicyKind,
+};
 use crate::draft::{make_policy, TreePolicy};
 use crate::models::LogitModel;
 use crate::obs::{Observatory, TraceId};
+use crate::round::adapt::AdaptiveController;
 use crate::round::{self, RoundCtx, SeqRound};
 use crate::util::Rng;
 
@@ -48,6 +51,17 @@ pub struct SpecEngine {
     obs: Option<(Arc<Observatory>, usize)>,
     /// Current request's trace id (0 = untraced).
     trace: u64,
+    /// The engine-level default drafter ([`Self::set_policy`]); the
+    /// static-mode round resolution falls back here, not to the
+    /// possibly-drifted `cfg.policy` (which [`Self::ensure_policy`]
+    /// syncs to whatever drafter the *current* round runs).
+    base_policy: PolicyKind,
+    /// Per-request drafter override (protocol-v1 `drafter` param); wins
+    /// over both the adaptive controller and the base policy.
+    request_drafter: Option<PolicyKind>,
+    /// Online drafter/budget selection (`policy_mode=adaptive`,
+    /// DESIGN.md §Adaptive Policy); `None` keeps the static path.
+    adapt: Option<AdaptiveController>,
 }
 
 impl SpecEngine {
@@ -59,6 +73,7 @@ impl SpecEngine {
     ) -> Self {
         let rng = Rng::new(cfg.seed ^ 0x0DD5_9EC0_0000_0001);
         let policy = make_policy(cfg.policy);
+        let base_policy = cfg.policy;
         Self {
             draft,
             target,
@@ -69,6 +84,9 @@ impl SpecEngine {
             cache: CacheManager::new(&CacheConfig::default()),
             obs: None,
             trace: 0,
+            base_policy,
+            request_drafter: None,
+            adapt: None,
         }
     }
 
@@ -105,8 +123,30 @@ impl SpecEngine {
         self.rng = Rng::new(seed ^ 0x0DD5_9EC0_0000_0001);
     }
 
-    /// Swap the draft-tree policy (per-request `drafter` override).
+    /// Enable online-adaptive drafter/budget selection (builder style).
+    /// A `policy_mode=static` config is a no-op, so callers can pass
+    /// their `cfg.adapt` unconditionally.
+    pub fn with_adapt(mut self, adapt: &AdaptConfig) -> Self {
+        self.adapt = AdaptiveController::new(adapt, self.base_policy);
+        self
+    }
+
+    /// Swap the engine's default draft-tree policy.
     pub fn set_policy(&mut self, kind: PolicyKind) {
+        self.base_policy = kind;
+        self.ensure_policy(kind);
+    }
+
+    /// Set (or clear) the per-request drafter override; `Some` pins the
+    /// round's drafter regardless of mode, `None` restores the
+    /// adaptive/static resolution. Called per request by the FCFS worker.
+    pub fn set_request_drafter(&mut self, drafter: Option<PolicyKind>) {
+        self.request_drafter = drafter;
+    }
+
+    /// Make the boxed policy (and `cfg.policy`, which the round pipeline
+    /// and observatory read) match `kind`, rebuilding only on change.
+    fn ensure_policy(&mut self, kind: PolicyKind) {
         if self.cfg.policy != kind {
             self.cfg.policy = kind;
             self.policy = make_policy(kind);
@@ -196,11 +236,21 @@ impl SpecEngine {
         ctx: &[u32],
         remaining: usize,
     ) -> (Vec<u32>, StepStats) {
+        // Round resolution: a per-request override pins the drafter at
+        // the base budget; otherwise the adaptive controller (when
+        // enabled) picks drafter + budget; otherwise the static default.
+        let base_budget = self.cfg.tree_budget;
+        let (kind, budget) = match (self.request_drafter, &self.adapt) {
+            (Some(k), _) => (k, base_budget),
+            (None, Some(a)) => a.resolve(base_budget),
+            (None, None) => (self.base_policy, base_budget),
+        };
+        self.ensure_policy(kind);
         let rc = RoundCtx {
             cfg: &self.cfg,
             policy: self.policy.as_ref(),
-            policy_kind: self.cfg.policy,
-            global_budget: self.cfg.tree_budget,
+            policy_kind: kind,
+            global_budget: budget,
             regime: self.regime,
         };
         let mut seqs = [SeqRound {
@@ -208,7 +258,7 @@ impl SpecEngine {
             prefix: ctx,
             rng: &mut self.rng,
             temperature: self.cfg.target_temp,
-            cap: self.cfg.tree_budget,
+            cap: budget,
             wants_spec: remaining > 1,
         }];
         let outcome = round::run_round(
@@ -218,6 +268,9 @@ impl SpecEngine {
             &mut self.cache,
             &mut seqs,
         );
+        if let Some(a) = &mut self.adapt {
+            a.observe(kind, &outcome.accept);
+        }
         if let Some((obs, wid)) = &self.obs {
             obs.record_round(
                 *wid,
@@ -494,6 +547,64 @@ mod tests {
         e.set_policy(PolicyKind::DySpec);
         let out = e.generate(&[5, 6]);
         assert!(out.mean_emitted_per_step() >= 1.0);
+    }
+
+    /// The tentpole equivalence at engine level: adaptive mode with one
+    /// registered drafter never consults the estimator, so the token
+    /// stream is bit-identical to static mode. (The full matrix across
+    /// schedulers × cache lives in `rust/tests/adaptive_differential.rs`.)
+    #[test]
+    fn adaptive_singleton_matches_static_bit_for_bit() {
+        let static_tokens =
+            engine(PolicyKind::DySpec, 0.8, 0.6, 13).generate(&[2, 7]).tokens;
+        let adapt_cfg = AdaptConfig {
+            mode: crate::config::PolicyMode::Adaptive,
+            drafters: vec![PolicyKind::DySpec],
+            ..AdaptConfig::default()
+        };
+        let mut e =
+            engine(PolicyKind::DySpec, 0.8, 0.6, 13).with_adapt(&adapt_cfg);
+        let adaptive_tokens = e.generate(&[2, 7]).tokens;
+        assert_eq!(adaptive_tokens, static_tokens);
+    }
+
+    /// With ≥2 registered drafters the controller explores each cold arm
+    /// and records observations against the drafter that actually ran.
+    #[test]
+    fn adaptive_multi_drafter_explores_and_observes() {
+        let adapt_cfg = AdaptConfig {
+            mode: crate::config::PolicyMode::Adaptive,
+            drafters: vec![PolicyKind::DySpec, PolicyKind::Chain],
+            min_samples: 8,
+            ..AdaptConfig::default()
+        };
+        let obs = Arc::new(Observatory::new(1, false, 8));
+        let mut e = engine(PolicyKind::DySpec, 0.8, 0.6, 17)
+            .with_adapt(&adapt_cfg)
+            .with_obs(obs.clone(), 0);
+        let out = e.generate(&[1, 2, 3, 4]);
+        assert_eq!(out.tokens.len(), 40);
+        let table = obs.acceptance();
+        assert_eq!(table.len(), 2, "a cold drafter was never explored");
+        assert!(table.iter().all(|(_, rec)| rec.proposed() > 0));
+    }
+
+    /// A per-request drafter override wins over the adaptive controller.
+    #[test]
+    fn request_drafter_override_pins_the_round_kind() {
+        let adapt_cfg = AdaptConfig {
+            mode: crate::config::PolicyMode::Adaptive,
+            drafters: vec![PolicyKind::DySpec, PolicyKind::Chain],
+            ..AdaptConfig::default()
+        };
+        let mut e =
+            engine(PolicyKind::DySpec, 0.8, 0.6, 19).with_adapt(&adapt_cfg);
+        e.set_request_drafter(Some(PolicyKind::Baseline));
+        let out = e.generate(&[5, 6]);
+        assert_eq!(out.steps.len(), out.tokens.len(), "not autoregressive");
+        e.set_request_drafter(None);
+        let out = e.generate(&[5, 6]);
+        assert!(out.mean_emitted_per_step() > 1.0, "override stuck");
     }
 
     #[test]

@@ -229,6 +229,36 @@ impl AcceptanceRecord {
     pub fn is_empty(&self) -> bool {
         self.proposed() == 0
     }
+
+    /// Laplace-smoothed cumulative acceptance rate,
+    /// `(accepted + 1) / (proposed + 2)` — 0.5 with no data, converging
+    /// on the empirical rate as samples land. This is the estimate the
+    /// adaptive policy scores drafters by (`round::adapt`), and what the
+    /// `dyspec_adaptive_drafter_estimate` gauge exposes.
+    pub fn smoothed_rate(&self) -> f64 {
+        (self.accepted() + 1) as f64 / (self.proposed() + 2) as f64
+    }
+
+    /// Fraction of this drafter's proposed mass that sat in probability
+    /// buckets whose smoothed acceptance rate clears `cut` — the budget
+    /// retune signal: low-probability buckets that verification keeps
+    /// rejecting are wasted tree nodes, so the effective budget shrinks
+    /// toward the useful mass. 1.0 with no data (never shrink blind).
+    pub fn useful_fraction(&self, cut: f64) -> f64 {
+        let total: u64 = self.prob_proposed.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let useful: u64 = (0..PROB_BUCKETS)
+            .filter(|&b| {
+                (self.prob_accepted[b] + 1) as f64
+                    / (self.prob_proposed[b] + 2) as f64
+                    >= cut
+            })
+            .map(|b| self.prob_proposed[b])
+            .sum();
+        useful as f64 / total as f64
+    }
 }
 
 /// Shared observability state for one coordinator: per-worker span rings,
@@ -372,6 +402,16 @@ impl Observatory {
             .expect("accept table poisoned")
             .iter()
             .map(|(&k, v)| (k, v.clone()))
+            .collect()
+    }
+
+    /// Per-drafter `(name, samples, smoothed acceptance rate)` estimates —
+    /// the same estimator the adaptive policy runs per worker, computed
+    /// over the observatory's cumulative cells for the metrics surface.
+    pub fn estimates(&self) -> Vec<(&'static str, u64, f64)> {
+        self.acceptance()
+            .iter()
+            .map(|(k, r)| (*k, r.proposed(), r.smoothed_rate()))
             .collect()
     }
 
@@ -557,6 +597,34 @@ pub fn render_prometheus(snapshot: &Json, obs: &Observatory) -> String {
                 rec.prob_accepted[b] as f64,
             );
         }
+    }
+
+    prom_header(
+        &mut out,
+        "dyspec_adaptive_drafter_estimate",
+        "smoothed acceptance-rate estimate the adaptive policy scores drafters by",
+        "gauge",
+    );
+    prom_header(
+        &mut out,
+        "dyspec_adaptive_drafter_samples_total",
+        "proposed-node samples behind each drafter's estimate",
+        "counter",
+    );
+    for (drafter, samples, rate) in obs.estimates() {
+        let labels = vec![("drafter", drafter.to_string())];
+        prom_row(
+            &mut out,
+            "dyspec_adaptive_drafter_estimate",
+            &labels,
+            rate,
+        );
+        prom_row(
+            &mut out,
+            "dyspec_adaptive_drafter_samples_total",
+            &labels,
+            samples as f64,
+        );
     }
 
     prom_gauge(
@@ -819,6 +887,71 @@ mod tests {
             "dyspec_accept_depth_proposed_total{drafter=\"dyspec\",depth=\"1\"} 1\n"
         ));
         assert!(text.contains("dyspec_accept_prob_accepted_total{drafter=\"dyspec\",bucket=\"7\""));
+        assert!(text.contains(
+            "dyspec_adaptive_drafter_estimate{drafter=\"dyspec\"} 0.5\n"
+        ));
+        assert!(text.contains(
+            "dyspec_adaptive_drafter_samples_total{drafter=\"dyspec\"} 2\n"
+        ));
         assert!(text.contains("dyspec_tracing_enabled 1\n"));
+    }
+
+    #[test]
+    fn smoothed_rate_starts_at_half_and_tracks_samples() {
+        let rec = AcceptanceRecord::default();
+        assert!((rec.smoothed_rate() - 0.5).abs() < 1e-12);
+        let mut rec = AcceptanceRecord::default();
+        for _ in 0..98 {
+            rec.note(1, 0.9, true);
+        }
+        // 98 accepted of 98: (99)/(100) = 0.99
+        assert!((rec.smoothed_rate() - 0.99).abs() < 1e-12);
+        for _ in 0..98 {
+            rec.note(1, 0.9, false);
+        }
+        // 98 of 196: (99)/(198) = 0.5
+        assert!((rec.smoothed_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn useful_fraction_discounts_rejected_buckets() {
+        let rec = AcceptanceRecord::default();
+        assert!((rec.useful_fraction(0.25) - 1.0).abs() < 1e-12);
+        let mut rec = AcceptanceRecord::default();
+        // Bucket 7 (est >= 0.5): 30 proposed, all accepted.
+        for _ in 0..30 {
+            rec.note(1, 0.9, true);
+        }
+        // Bucket 0 (est << 1): 10 proposed, none accepted.
+        for _ in 0..10 {
+            rec.note(2, 1e-4, false);
+        }
+        // Bucket 0's smoothed rate 1/12 < 0.25: its quarter of the mass
+        // is wasted.
+        let u = rec.useful_fraction(0.25);
+        assert!((u - 0.75).abs() < 1e-12, "useful fraction {u}");
+        // A permissive cut counts everything; an impossible cut nothing.
+        assert!((rec.useful_fraction(0.0) - 1.0).abs() < 1e-12);
+        assert!(rec.useful_fraction(1.0) < 1e-12);
+    }
+
+    #[test]
+    fn estimates_cover_every_recorded_drafter() {
+        let obs = Observatory::new(1, false, 8);
+        let t = ComponentTimes::new();
+        let mut rec = AcceptanceRecord::default();
+        rec.note(1, 0.9, true);
+        rec.note(2, 0.9, false);
+        obs.record_round(0, TraceId::default(), 1, PolicyKind::DySpec, &t, &rec);
+        obs.record_round(0, TraceId::default(), 1, PolicyKind::Chain, &t, &rec);
+        obs.record_round(0, TraceId::default(), 1, PolicyKind::DySpec, &t, &rec);
+        let est = obs.estimates();
+        assert_eq!(est.len(), 2);
+        let dy = est.iter().find(|(k, ..)| *k == "dyspec").unwrap();
+        assert_eq!(dy.1, 4);
+        assert!((dy.2 - 3.0 / 6.0).abs() < 1e-12);
+        let ch = est.iter().find(|(k, ..)| *k == "chain").unwrap();
+        assert_eq!(ch.1, 2);
+        assert!((ch.2 - 2.0 / 4.0).abs() < 1e-12);
     }
 }

@@ -1,0 +1,293 @@
+//! Online-adaptive drafter + budget selection (DESIGN.md §Adaptive
+//! Policy).
+//!
+//! DySpec's Figure 2 observation — draft probability predicts acceptance
+//! — is measured online by the PR 6 acceptance observatory. This module
+//! closes the loop: an [`AdaptiveController`] keeps one smoothed
+//! [`AcceptanceRecord`] per *registered* drafter and, each round, (a)
+//! picks the drafter by a deterministic UCB score and (b) retunes the
+//! token-tree budget by the useful-probability-mass fraction of the
+//! chosen drafter's observed proposals.
+//!
+//! Determinism is load-bearing. The exploration term is UCB-style, not
+//! epsilon-greedy, precisely so no RNG draw is consumed: the token
+//! stream's bit-identity depends on the per-sequence rng sequence, and
+//! an adaptive controller that burned draws would perturb every stream.
+//! Selection depends only on the observation history, which in a
+//! deterministic simulation is itself reproducible.
+//!
+//! Equivalence argument (pinned by `rust/tests/adaptive_differential.rs`):
+//! with exactly one registered drafter both [`AdaptiveController::pick`]
+//! and [`AdaptiveController::scale`] short-circuit *before* reading the
+//! estimator — `pick` returns the singleton, `scale` returns the base
+//! budget unchanged — so `policy_mode=adaptive` with one drafter is
+//! `policy_mode=static` by construction, not by numerical coincidence.
+//! Adaptivity (selection *and* budget retune) engages only when two or
+//! more drafters compete.
+
+use crate::config::{AdaptConfig, PolicyKind, PolicyMode};
+use crate::obs::AcceptanceRecord;
+
+/// Per-worker estimator closing the observatory→planner loop.
+///
+/// Owned by whichever component drives `run_round` for a worker (the
+/// FCFS `SpecEngine` or the continuous `Batcher`); never shared across
+/// workers, so no locking — the observatory remains the cross-worker
+/// aggregate while this is the per-worker working estimate.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    /// Drafters competing for selection, in registration order.
+    /// Registration order is the deterministic tie-break everywhere.
+    registered: Vec<PolicyKind>,
+    /// Per-drafter observation totals, index-aligned with `registered`.
+    seen: Vec<AcceptanceRecord>,
+    /// UCB exploration weight (`adapt_explore`).
+    explore: f64,
+    /// Proposals below which a drafter is "cold" and explored
+    /// round-robin before any exploitation (`adapt_min_samples`).
+    min_samples: u64,
+    /// Per-bucket smoothed acceptance threshold under which a
+    /// probability bucket's proposals count as wasted (`adapt_cut`).
+    cut: f64,
+    /// Floor for the retuned budget (`adapt_min_budget`).
+    min_budget: usize,
+}
+
+impl AdaptiveController {
+    /// Build the controller from config, or `None` when
+    /// `policy_mode=static` (callers then keep the static path
+    /// untouched). An empty `adapt_drafters` list registers just the
+    /// engine's configured drafter, which by the singleton
+    /// short-circuit degenerates to static behaviour.
+    pub fn new(cfg: &AdaptConfig, fallback: PolicyKind) -> Option<Self> {
+        if cfg.mode == PolicyMode::Static {
+            return None;
+        }
+        let registered = if cfg.drafters.is_empty() {
+            vec![fallback]
+        } else {
+            cfg.drafters.clone()
+        };
+        let seen = vec![AcceptanceRecord::default(); registered.len()];
+        Some(AdaptiveController {
+            registered,
+            seen,
+            explore: cfg.explore,
+            min_samples: cfg.min_samples,
+            cut: cfg.cut,
+            min_budget: cfg.min_budget.max(1),
+        })
+    }
+
+    /// The registered drafter set, in registration order.
+    pub fn registered(&self) -> &[PolicyKind] {
+        &self.registered
+    }
+
+    /// Pick the drafter for the next round.
+    ///
+    /// Cold-start: any drafter with fewer than `min_samples` proposals
+    /// is explored first (fewest proposals wins, registration order
+    /// breaks ties), guaranteeing every drafter keeps getting sampled.
+    /// Warm: argmax of the UCB score
+    /// `smoothed_rate + explore * sqrt(ln(N + 1) / (n_d + 1))`
+    /// where `N` is total proposals across drafters and `n_d` this
+    /// drafter's — the exploration floor decays but never vanishes.
+    pub fn pick(&self) -> PolicyKind {
+        if self.registered.len() == 1 {
+            return self.registered[0];
+        }
+        if let Some(cold) = self
+            .seen
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.proposed() < self.min_samples)
+            .min_by_key(|(_, r)| r.proposed())
+        {
+            return self.registered[cold.0];
+        }
+        let total: u64 = self.seen.iter().map(|r| r.proposed()).sum();
+        let ln_n = ((total + 1) as f64).ln();
+        let mut best = 0;
+        let mut best_score = f64::NEG_INFINITY;
+        for (i, rec) in self.seen.iter().enumerate() {
+            let bonus =
+                self.explore * (ln_n / (rec.proposed() + 1) as f64).sqrt();
+            let score = rec.smoothed_rate() + bonus;
+            if score > best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        self.registered[best]
+    }
+
+    /// Retune a base token-tree budget from the chosen drafter's
+    /// observed per-probability-bucket acceptance: shrink toward the
+    /// useful fraction of proposed mass (buckets whose smoothed
+    /// acceptance clears `cut`), grow back toward `base` as acceptance
+    /// recovers. Never exceeds `base`, never drops below `min_budget`,
+    /// and returns `base` untouched for a singleton registration.
+    pub fn scale(&self, base: usize) -> usize {
+        if self.registered.len() == 1 {
+            return base;
+        }
+        let idx = self
+            .registered
+            .iter()
+            .position(|&k| k == self.pick())
+            .unwrap_or(0);
+        let u = self.seen[idx].useful_fraction(self.cut);
+        let scaled = (base as f64 * u).ceil() as usize;
+        scaled.clamp(self.min_budget.min(base), base)
+    }
+
+    /// One-call resolution for round planning: the drafter for this
+    /// round and the budget it should run under.
+    pub fn resolve(&self, base: usize) -> (PolicyKind, usize) {
+        (self.pick(), self.scale(base))
+    }
+
+    /// Fold a concluded round's acceptance record into the estimate for
+    /// the drafter that ran it. Unregistered drafters (e.g. a per-request
+    /// override outside the adaptive set) are ignored — they carry no
+    /// information about the competing set.
+    pub fn observe(&mut self, kind: PolicyKind, rec: &AcceptanceRecord) {
+        if let Some(i) = self.registered.iter().position(|&k| k == kind) {
+            self.seen[i].merge(rec);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn adaptive_cfg(drafters: &str) -> AdaptConfig {
+        let mut cfg = Config::new();
+        cfg.set("policy_mode", "adaptive").unwrap();
+        if !drafters.is_empty() {
+            cfg.set("adapt_drafters", drafters).unwrap();
+        }
+        cfg.adapt
+    }
+
+    fn accepted_rec(proposed: u64, accepted: u64) -> AcceptanceRecord {
+        let mut rec = AcceptanceRecord::default();
+        for i in 0..proposed {
+            rec.note(1, 0.9, i < accepted);
+        }
+        rec
+    }
+
+    #[test]
+    fn static_mode_builds_no_controller() {
+        let cfg = AdaptConfig::default();
+        assert!(AdaptiveController::new(&cfg, PolicyKind::DySpec).is_none());
+    }
+
+    #[test]
+    fn empty_drafter_list_registers_the_fallback() {
+        let cfg = adaptive_cfg("");
+        let a = AdaptiveController::new(&cfg, PolicyKind::Chain).unwrap();
+        assert_eq!(a.registered(), &[PolicyKind::Chain]);
+    }
+
+    #[test]
+    fn singleton_short_circuits_before_the_estimator() {
+        let cfg = adaptive_cfg("chain");
+        let mut a =
+            AdaptiveController::new(&cfg, PolicyKind::DySpec).unwrap();
+        // Pour in an arbitrarily hostile history: selection and budget
+        // must not move, because a singleton never consults the data.
+        a.observe(PolicyKind::Chain, &accepted_rec(10_000, 0));
+        assert_eq!(a.pick(), PolicyKind::Chain);
+        for base in [1usize, 4, 64, 512] {
+            assert_eq!(a.scale(base), base);
+        }
+        assert_eq!(a.resolve(64), (PolicyKind::Chain, 64));
+    }
+
+    #[test]
+    fn cold_drafters_are_explored_in_registration_order() {
+        let cfg = adaptive_cfg("dyspec,chain,specinfer");
+        let mut a =
+            AdaptiveController::new(&cfg, PolicyKind::DySpec).unwrap();
+        // All cold with zero samples: registration order breaks the tie.
+        assert_eq!(a.pick(), PolicyKind::DySpec);
+        a.observe(PolicyKind::DySpec, &accepted_rec(1, 1));
+        // DySpec now has 1 proposal, others 0: fewest-first.
+        assert_eq!(a.pick(), PolicyKind::Chain);
+        a.observe(PolicyKind::Chain, &accepted_rec(2, 2));
+        assert_eq!(a.pick(), PolicyKind::SpecInfer);
+    }
+
+    #[test]
+    fn warm_selection_exploits_the_best_observed_rate() {
+        let mut cfg = adaptive_cfg("dyspec,chain");
+        cfg.min_samples = 4;
+        cfg.explore = 0.1;
+        let mut a =
+            AdaptiveController::new(&cfg, PolicyKind::DySpec).unwrap();
+        a.observe(PolicyKind::DySpec, &accepted_rec(100, 20));
+        a.observe(PolicyKind::Chain, &accepted_rec(100, 90));
+        assert_eq!(a.pick(), PolicyKind::Chain);
+        // ...and flips when the evidence flips.
+        a.observe(PolicyKind::DySpec, &accepted_rec(4_000, 4_000));
+        assert_eq!(a.pick(), PolicyKind::DySpec);
+    }
+
+    #[test]
+    fn exploration_floor_revisits_a_starved_drafter() {
+        let mut cfg = adaptive_cfg("dyspec,chain");
+        cfg.min_samples = 1;
+        cfg.explore = 2.0;
+        let mut a =
+            AdaptiveController::new(&cfg, PolicyKind::DySpec).unwrap();
+        // Chain is slightly better but dyspec is barely sampled: a large
+        // exploration weight must pull the pick back to the starved arm.
+        a.observe(PolicyKind::DySpec, &accepted_rec(1, 0));
+        a.observe(PolicyKind::Chain, &accepted_rec(10_000, 6_000));
+        assert_eq!(a.pick(), PolicyKind::DySpec);
+    }
+
+    #[test]
+    fn budget_shrinks_with_wasted_mass_and_respects_floors() {
+        let mut cfg = adaptive_cfg("dyspec,chain");
+        cfg.min_samples = 1;
+        cfg.explore = 0.0;
+        cfg.min_budget = 4;
+        let mut a =
+            AdaptiveController::new(&cfg, PolicyKind::DySpec).unwrap();
+        // dyspec: half its proposed mass in a bucket that never lands.
+        let mut rec = AcceptanceRecord::default();
+        for _ in 0..50 {
+            rec.note(1, 0.9, true);
+        }
+        for _ in 0..50 {
+            rec.note(2, 1e-4, false);
+        }
+        a.observe(PolicyKind::DySpec, &rec);
+        a.observe(PolicyKind::Chain, &accepted_rec(100, 10));
+        assert_eq!(a.pick(), PolicyKind::DySpec);
+        assert_eq!(a.scale(64), 32);
+        // Floor: never below min_budget...
+        assert_eq!(a.scale(6), 4);
+        // ...unless base itself is smaller, which is never exceeded.
+        assert_eq!(a.scale(2), 2);
+    }
+
+    #[test]
+    fn observe_ignores_unregistered_drafters() {
+        let cfg = adaptive_cfg("dyspec,chain");
+        let mut a =
+            AdaptiveController::new(&cfg, PolicyKind::DySpec).unwrap();
+        a.observe(PolicyKind::Sequoia, &accepted_rec(500, 500));
+        assert_eq!(
+            a.seen.iter().map(|r| r.proposed()).sum::<u64>(),
+            0,
+            "foreign drafter leaked into the estimator"
+        );
+    }
+}

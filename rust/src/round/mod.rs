@@ -44,6 +44,8 @@
 //!     dispatch: the bonus sample from the target row 0 IS autoregressive
 //!     decoding, with the same single rng draw per round.
 
+pub mod adapt;
+
 use crate::cache::{verify_bill, CacheManager, TreeLease, VerifyBill};
 use crate::config::{EngineConfig, LatencyRegime, PolicyKind};
 use crate::draft::TreePolicy;

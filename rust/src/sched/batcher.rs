@@ -40,6 +40,7 @@ use crate::draft::{make_policy, round_policy, TreePolicy};
 use crate::log_debug;
 use crate::models::LogitModel;
 use crate::obs::{Observatory, TraceId};
+use crate::round::adapt::AdaptiveController;
 use crate::round::{self, RoundCtx, SeqRound};
 use crate::sched::sequence::Sequence;
 
@@ -90,6 +91,11 @@ pub struct Batcher {
     /// Observatory for per-round span/acceptance recording (`None` for
     /// standalone batchers — tests, benches).
     obs: Option<Arc<Observatory>>,
+    /// Online drafter/budget selection (`policy_mode=adaptive`,
+    /// DESIGN.md §Adaptive Policy); `None` keeps the static path. The
+    /// controller supplies the *default* kind each step — homogeneous
+    /// per-request overrides still win via `draft::round_policy`.
+    adapt: Option<AdaptiveController>,
 }
 
 impl Batcher {
@@ -103,6 +109,7 @@ impl Batcher {
         let seed_salt = cfg.engine.seed ^ 0x5EED_BA7C_0000_0001;
         let cache = CacheManager::new(&cfg.cache);
         let fair_policy_kind = cfg.engine.policy;
+        let adapt = AdaptiveController::new(&cfg.adapt, cfg.engine.policy);
         Self {
             wid,
             cfg,
@@ -115,6 +122,7 @@ impl Batcher {
             seed_salt,
             cache,
             obs: None,
+            adapt,
         }
     }
 
@@ -219,17 +227,30 @@ impl Batcher {
         // which policy, at what shared budget ---
         let spec_count =
             self.seqs.iter().filter(|s| s.wants_speculation()).count();
+        // Adaptive default: the controller picks the step's fallback
+        // drafter and shrinks budgets by observed useful mass; static
+        // mode keeps the configured policy and budgets untouched. The
+        // `.max(spec_count)` floor (one token per speculating sequence)
+        // survives the retune.
+        let default_kind = match &self.adapt {
+            Some(a) => a.pick(),
+            None => self.cfg.engine.policy,
+        };
         let budget = if spec_count == 0 {
             0
         } else {
-            self.global_budget(spec_count)
+            let base = self.global_budget(spec_count);
+            match &self.adapt {
+                Some(a) => a.scale(base).max(spec_count),
+                None => base,
+            }
         };
         let policy_kind = round_policy(
             self.seqs
                 .iter()
                 .filter(|s| s.wants_speculation())
                 .map(|s| s.drafter),
-            self.cfg.engine.policy,
+            default_kind,
         );
         if policy_kind != self.fair_policy_kind {
             self.fair_policy = make_policy(policy_kind);
@@ -237,7 +258,10 @@ impl Batcher {
         }
 
         // --- the shared round pipeline over the whole active set ---
-        let engine_budget = self.cfg.engine.tree_budget;
+        let engine_budget = match &self.adapt {
+            Some(a) => a.scale(self.cfg.engine.tree_budget),
+            None => self.cfg.engine.tree_budget,
+        };
         let outcome = {
             let rc = RoundCtx {
                 cfg: &self.cfg.engine,
@@ -279,6 +303,9 @@ impl Batcher {
         report.virtual_secs = virt;
         let used = outcome.spec_tokens;
 
+        if let Some(a) = &mut self.adapt {
+            a.observe(policy_kind, &outcome.accept);
+        }
         if let Some(obs) = &self.obs {
             // A batched round's spans belong to every co-batched request;
             // only a batch of one is attributed to a single trace id.
@@ -679,6 +706,81 @@ mod tests {
         let table = obs.acceptance();
         assert_eq!(table.len(), 1);
         assert!(table[0].1.proposed() > 0);
+    }
+
+    fn mk_adaptive_batcher(drafters: &str) -> Batcher {
+        let mut cfg = Config::new();
+        cfg.engine.tree_budget = 8;
+        cfg.engine.target_temp = 0.6;
+        cfg.sched.max_active = 8;
+        cfg.sched.global_budget = 16;
+        cfg.set("policy_mode", "adaptive").unwrap();
+        if !drafters.is_empty() {
+            cfg.set("adapt_drafters", drafters).unwrap();
+        }
+        cfg.set("adapt_min_samples", "8").unwrap();
+        let (d, t) = SimModel::pair(SimSpec::new(64, 2.0, 0.8, 11));
+        Batcher::new(
+            0,
+            cfg,
+            Box::new(d),
+            Box::new(t),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    /// The tentpole equivalence at batcher level: adaptive mode with one
+    /// registered drafter (here: the implicit fallback of an empty list)
+    /// streams bit-identically to static mode. The full matrix lives in
+    /// `rust/tests/adaptive_differential.rs`.
+    #[test]
+    fn adaptive_singleton_batch_matches_static() {
+        let run = |mut b: Batcher| {
+            let handles: Vec<_> = (0..3)
+                .map(|i| {
+                    let (req, h) = mk_request(i + 1, 10);
+                    b.admit(req);
+                    h
+                })
+                .collect();
+            while b.active() > 0 {
+                b.step();
+            }
+            handles
+                .into_iter()
+                .map(|h| h.wait().unwrap().tokens)
+                .collect::<Vec<_>>()
+        };
+        let static_streams = run(mk_batcher(8, 16));
+        let adaptive_streams = run(mk_adaptive_batcher(""));
+        assert_eq!(adaptive_streams, static_streams);
+    }
+
+    /// With competing drafters every cold arm gets explored, the shared
+    /// budget never loses its one-token-per-sequence floor, and every
+    /// request still completes exactly.
+    #[test]
+    fn adaptive_multi_drafter_batch_completes_and_explores() {
+        let obs = Arc::new(crate::obs::Observatory::new(1, false, 8));
+        let mut b = mk_adaptive_batcher("dyspec,chain").with_obs(obs.clone());
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let (req, h) = mk_request(i + 1, 12);
+                b.admit(req);
+                h
+            })
+            .collect();
+        while b.active() > 0 {
+            let rep = b.step();
+            if rep.global_budget > 0 {
+                assert!(rep.global_budget >= rep.active.min(4));
+            }
+        }
+        for h in handles {
+            assert_eq!(h.wait().unwrap().tokens.len(), 12);
+        }
+        let table = obs.acceptance();
+        assert_eq!(table.len(), 2, "a cold drafter was never explored");
     }
 
     #[test]

@@ -273,6 +273,79 @@ mod tests {
         assert_eq!(h.mean(), 0.0);
     }
 
+    /// ISSUE 7 regression: every quantile of an empty histogram — the
+    /// extremes included — is a finite 0.0, never the infinity min/max
+    /// sentinels and never a panic.
+    #[test]
+    fn empty_histogram_quantiles_are_finite_at_every_q() {
+        let h = Histogram::new();
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0, -3.0, 7.0] {
+            assert_eq!(h.percentile(q), 0.0, "q={q}");
+        }
+        assert!(h.is_empty());
+        assert_eq!(h.sum(), 0.0);
+    }
+
+    /// ISSUE 7 regression: zero, subnormal, and below-resolution (≪ the
+    /// 2^-30 ≈ 1 ns floor) magnitudes all index bucket 0 — no negative
+    /// index from `log2` of a denormal, no panic, and `log2(0) = -inf`
+    /// stays out of the cast entirely. NaN is swallowed by the same
+    /// `!(v > 0.0)` guard.
+    #[test]
+    fn zero_denormal_and_subnanosecond_values_index_bucket_zero() {
+        for v in [
+            0.0,
+            -0.0,
+            f64::MIN_POSITIVE, // smallest normal, 2^-1022
+            5e-324,            // smallest subnormal
+            (MIN_EXP as f64 - 1.0).exp2(), // one octave under the floor
+            1e-12,                         // a real sub-ns duration
+            f64::NAN,
+            f64::NEG_INFINITY,
+        ] {
+            assert_eq!(bucket_of(v), 0, "v={v}");
+        }
+        // The floor itself and everything above it index normally…
+        assert_eq!(bucket_of((MIN_EXP as f64).exp2()), 0);
+        assert!(bucket_of(1e-6) > 0, "1 µs must clear bucket 0");
+        // …and the top is clamped, `+inf` included.
+        assert_eq!(bucket_of(f64::MAX), NUM_BUCKETS - 1);
+        assert_eq!(bucket_of(f64::INFINITY), NUM_BUCKETS - 1);
+    }
+
+    /// The bucket index is monotone over positive magnitudes and always
+    /// in range — recording any float can never index out of bounds.
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut last = 0usize;
+        let mut v = 1e-15f64;
+        while v < 1e15 {
+            let idx = bucket_of(v);
+            assert!(idx < NUM_BUCKETS, "v={v} idx={idx}");
+            assert!(idx >= last, "v={v}: bucket went backwards");
+            last = idx;
+            v *= 1.5;
+        }
+    }
+
+    /// ≪1 µs samples quantize into bucket 0 but quantiles still clamp
+    /// into the observed [min, max] instead of reporting the bucket-0
+    /// representative (~1 ns).
+    #[test]
+    fn sub_microsecond_quantiles_stay_in_observed_range() {
+        let mut h = Histogram::new();
+        for v in [2e-10, 5e-10, 8e-10] {
+            h.record(v);
+        }
+        for q in [0.0, 0.5, 0.9, 1.0] {
+            let got = h.percentile(q);
+            assert!(
+                (2e-10..=8e-10).contains(&got),
+                "q={q} escaped the range: {got}"
+            );
+        }
+    }
+
     #[test]
     fn merge_combines_samples() {
         let mut a = Histogram::new();

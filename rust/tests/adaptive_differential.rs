@@ -1,0 +1,159 @@
+//! Differential wall for the online-adaptive policy (ISSUE 7 tentpole):
+//! `policy_mode=adaptive` with exactly one registered drafter must be
+//! `policy_mode=static` by construction — the controller short-circuits
+//! before ever reading the estimator (DESIGN.md §Adaptive Policy), so the
+//! same requests driven through coordinators identical except for the
+//! mode produce bit-identical event streams — tokens, per-round chunks
+//! with their `RoundStats`, step counts and finish reasons — across both
+//! schedulers × cache on/off. Both the explicit singleton list and the
+//! empty list (which registers the configured policy) are pinned.
+//!
+//! With two competing drafters the adaptive side must actually adapt:
+//! every registered drafter gets explored, requests still complete
+//! exactly, and the Prometheus exposition carries the controller's
+//! per-drafter estimate series.
+
+use std::sync::Arc;
+
+use dyspec::config::{Config, SchedKind};
+use dyspec::coordinator::{
+    Coordinator, FinishReason, GenEvent, GenParams, ModelFactory, RoundStats,
+};
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+
+const MAX_NEW: usize = 20;
+const SEEDS: [u64; 3] = [2, 5, 11];
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|| {
+        let spec = SimSpec::new(64, 2.0, 0.8, 99);
+        let (d, t) = SimModel::pair(spec);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    })
+}
+
+/// `adaptive: None` = static mode; `Some(list)` = adaptive mode over the
+/// comma-separated drafter list ("" registers the configured policy).
+fn cfg(sched: SchedKind, cache: bool, adaptive: Option<&str>) -> Config {
+    let mut cfg = Config::new();
+    cfg.server.workers = 1; // one worker: request order is deterministic
+    cfg.server.queue_capacity = 8;
+    cfg.engine.tree_budget = 8;
+    cfg.engine.max_new_tokens = MAX_NEW;
+    cfg.sched.kind = sched;
+    cfg.cache.enabled = cache;
+    if let Some(drafters) = adaptive {
+        cfg.set("policy_mode", "adaptive").expect("mode key");
+        if !drafters.is_empty() {
+            cfg.set("adapt_drafters", drafters).expect("drafter key");
+        }
+    }
+    cfg
+}
+
+/// Everything a client can observe about one request's stream.
+#[derive(Debug, PartialEq)]
+struct Stream {
+    tokens: Vec<u32>,
+    chunks: Vec<(Vec<u32>, RoundStats)>,
+    steps: usize,
+    finish: FinishReason,
+}
+
+/// Drive `SEEDS` requests sequentially (each drained before the next is
+/// submitted, so scheduling is identical on every run) and return the
+/// observed streams plus the final Prometheus exposition.
+fn run(cfg: Config) -> (Vec<Stream>, String) {
+    let coord = Coordinator::start(cfg, sim_factory());
+    let mut streams = Vec::new();
+    for (i, &seed) in SEEDS.iter().enumerate() {
+        let params = GenParams {
+            max_new_tokens: MAX_NEW,
+            temperature: 0.6,
+            seed: Some(seed),
+            stop_tokens: Vec::new(),
+            drafter: None,
+            token_budget: None,
+        };
+        let prompt = vec![3, 1, 4, 1 + i as u32];
+        let handle = coord.try_submit(prompt, params).expect("submit");
+        let mut chunks = Vec::new();
+        let resp = loop {
+            match handle.events.recv().expect("worker dropped request") {
+                GenEvent::Chunk { tokens, stats } => {
+                    chunks.push((tokens, stats))
+                }
+                GenEvent::Done(resp) => break resp,
+            }
+        };
+        streams.push(Stream {
+            tokens: resp.tokens,
+            chunks,
+            steps: resp.steps,
+            finish: resp.finish,
+        });
+    }
+    let prom = coord.prometheus();
+    coord.shutdown();
+    (streams, prom)
+}
+
+/// The tentpole equivalence: adaptive mode with one registered drafter
+/// (explicit singleton AND implicit via the empty list) is bit-identical
+/// to static mode on both schedulers, cache on and off.
+#[test]
+fn adaptive_singleton_is_bit_identical_to_static() {
+    for sched in [SchedKind::Fcfs, SchedKind::Continuous] {
+        for cache in [true, false] {
+            let (stat, _) = run(cfg(sched, cache, None));
+            for drafters in ["dyspec", ""] {
+                let (adap, _) = run(cfg(sched, cache, Some(drafters)));
+                assert_eq!(
+                    stat, adap,
+                    "{sched:?} cache={cache} drafters={drafters:?}: \
+                     adaptive singleton diverged from static"
+                );
+            }
+            for s in &stat {
+                assert_eq!(s.finish, FinishReason::Length);
+                assert_eq!(s.tokens.len(), MAX_NEW);
+                let rejoined: Vec<u32> = s
+                    .chunks
+                    .iter()
+                    .flat_map(|(t, _)| t.iter().copied())
+                    .collect();
+                assert_eq!(rejoined, s.tokens, "chunks do not reassemble");
+            }
+        }
+    }
+}
+
+/// With competing drafters the controller explores every cold arm while
+/// requests still complete exactly, and `{"cmd":"metrics"}` exposes the
+/// per-drafter estimates the selection runs on.
+#[test]
+fn adaptive_multi_drafter_explores_and_exposes_estimates() {
+    for sched in [SchedKind::Fcfs, SchedKind::Continuous] {
+        let (streams, prom) = run(cfg(sched, true, Some("dyspec,chain")));
+        for s in &streams {
+            assert_eq!(s.finish, FinishReason::Length);
+            assert_eq!(s.tokens.len(), MAX_NEW, "{sched:?}: short stream");
+        }
+        for series in [
+            "# TYPE dyspec_adaptive_drafter_estimate gauge",
+            "dyspec_adaptive_drafter_estimate{drafter=\"dyspec\"}",
+            "dyspec_adaptive_drafter_estimate{drafter=\"chain\"}",
+            "dyspec_adaptive_drafter_samples_total{drafter=\"dyspec\"}",
+            "dyspec_adaptive_drafter_samples_total{drafter=\"chain\"}",
+        ] {
+            assert!(
+                prom.contains(series),
+                "{sched:?}: exposition missing {series}\n{prom}"
+            );
+        }
+    }
+}

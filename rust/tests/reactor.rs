@@ -232,6 +232,63 @@ fn mass_disconnect_releases_all_slots_and_residency() {
     shutdown(&addr, handle);
 }
 
+/// Mid-frame disconnect (ISSUE 7): peers that vanish with a partial
+/// frame buffered in the incremental decoder — half an envelope line
+/// with no terminating newline, a split v1 envelope whose second half
+/// never arrives, even a lone `{` — must be reaped without a panic or a
+/// leaked slot, and must never materialize as a request. A peer that
+/// disconnects mid-chunk-stream (frames still queued in its outbox) is
+/// the write-side variant: its sequence is cancelled and its outbox
+/// frames dropped, not flushed to a dead socket.
+#[test]
+fn mid_frame_disconnect_leaks_nothing() {
+    let (addr, handle) = start_server(ServerOpts::default());
+
+    // Read-side: three shapes of torn input, dropped without a newline.
+    for partial in [
+        "{\"v\":1,\"req_id\":7,\"prompt\":[1,2",
+        "{",
+        "{\"prompt\":[1,2,3],\"max_new_tokens\"",
+    ] {
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client.writer_mut().write_all(partial.as_bytes()).unwrap();
+        client.writer_mut().flush().unwrap();
+        drop(client); // EOF with the fragment still in the decoder
+    }
+
+    // Write-side: start a long stream, read one chunk so generation is
+    // live and the outbox is in use, then vanish mid-stream.
+    let mut streamer = Client::connect(&addr.to_string()).unwrap();
+    streamer
+        .submit(1, &[9, 8, 7], &GenParams::simple(1_000_000, 0.6), true)
+        .unwrap();
+    let frame = streamer.read_frame().unwrap();
+    assert_eq!(frame.event, "chunk");
+    drop(streamer);
+
+    // Every fragment peer and the streamer drain away: no request was
+    // ever admitted for a torn frame (only the streamer's one, which
+    // the disconnect cancelled), and all transport/scheduler/cache
+    // gauges zero out.
+    let snap = poll_stats(&addr, 20, |s| {
+        stat(s, "open_conns") <= 1
+            && stat(s, "outbox_frames") == 0
+            && stat(s, "tokens_in_flight") == 0
+            && stat(s, "cache_resident_blocks") == 0
+            && stat(s, "cancelled") == 1
+    });
+    assert_eq!(stat(&snap, "completed"), 0);
+    assert_eq!(stat(&snap, "admitted"), 1, "a torn frame became a request");
+
+    // The reactor is still healthy for well-formed work.
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    let (tokens, _) = client
+        .generate_oneshot(1, &[5, 6], &GenParams::simple(8, 0.6))
+        .unwrap();
+    assert_eq!(tokens.len(), 8);
+    shutdown(&addr, handle);
+}
+
 /// Admission control: the connection after `max_conns` is refused with
 /// an error line instead of consuming server state, and slots free up
 /// when connections close.
