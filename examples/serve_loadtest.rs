@@ -8,7 +8,7 @@
 //!   cargo run --release --example serve_loadtest -- \
 //!       [requests] [rate_rps] [workers] [scheduler] \
 //!       [--reactor-threads N] [--max-conns N] [--outbox N] \
-//!       [--cancel-every N]
+//!       [--cancel-every N] [--route affinity|rr] [--kill-worker N]
 //!
 //! `scheduler` is `fcfs` (default) or `continuous` — the latter runs the
 //! step-level batcher (`sched/`), so one worker multiplexes many
@@ -19,12 +19,24 @@
 //! bounds per-connection buffering. `--cancel-every N` cancels every Nth
 //! request after its first chunk and checks the stream terminates with
 //! finish="cancelled" — the streamed + cancelled mix the CI reactor
-//! smoke step drives at 64 connections. Compare:
+//! smoke step drives at 64 connections.
+//!
+//! `workers` > 1 runs the router tier: `--route` picks prefix-affinity
+//! (default) or round-robin placement, the post-drain report prints the
+//! per-worker routed-request skew (parsed back out of the Prometheus
+//! `dyspec_worker_*` series), and under rr a healthy worker that served
+//! zero requests fails the run. `--kill-worker N` kills worker N halfway
+//! through the trace: its in-flight requests must settle as
+//! finish="cancelled" (counted as kill casualties, not failures), its
+//! gauges must drain to zero, and the survivors must absorb the rest —
+//! the CI routed-conformance step drives this at 4 workers. Compare:
 //!
 //!   cargo run --release --example serve_loadtest -- 48 40 1 fcfs
 //!   cargo run --release --example serve_loadtest -- 48 40 1 continuous
 //!   cargo run --release --example serve_loadtest -- \
 //!       64 400 2 continuous --reactor-threads 4 --cancel-every 4
+//!   cargo run --release --example serve_loadtest -- \
+//!       64 200 4 fcfs --route affinity --kill-worker 2
 
 use std::sync::Arc;
 
@@ -81,6 +93,16 @@ fn prom_gauge(text: &str, name: &str) -> f64 {
         .unwrap_or(-1.0)
 }
 
+/// What one client thread observed for its request.
+enum Outcome {
+    /// (e2e seconds, ttft seconds, tokens received)
+    Served(f64, f64, usize),
+    /// Cancelled or rejected because its worker was killed mid-run —
+    /// expected collateral in `--kill-worker` mode, a failure otherwise.
+    Casualty,
+    Failed,
+}
+
 fn main() {
     let (positional, flags) = parse_args();
     let n_requests: usize =
@@ -96,6 +118,20 @@ fn main() {
     let outbox_frames: usize = flag(&flags, "outbox", 1024);
     // Every Nth request is cancelled after its first chunk (0 = never).
     let cancel_every: usize = flag(&flags, "cancel-every", 0);
+    let route = flags
+        .get("route")
+        .cloned()
+        .unwrap_or_else(|| "affinity".to_string());
+    // Kill this worker halfway through the trace (absent = never).
+    let kill_worker: Option<usize> =
+        flags.get("kill-worker").map(|v| match v.parse() {
+            Ok(w) => w,
+            Err(_) => {
+                eprintln!("bad value for --kill-worker: {v}");
+                std::process::exit(2);
+            }
+        });
+    let kill_mode = kill_worker.is_some();
 
     let mut cfg = Config::new();
     cfg.server.workers = workers;
@@ -106,6 +142,12 @@ fn main() {
     cfg.engine.tree_budget = 24;
     cfg.sched.kind = scheduler;
     cfg.sched.max_active = 16;
+    cfg.set("route", &route).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    // Canonical spelling ("rr" however the flag spelled round-robin).
+    let route = cfg.route.mode.name().to_string();
 
     let factory: ModelFactory = Arc::new(|| {
         let spec = SimSpec::for_dataset("c4", 1.2, 77);
@@ -113,7 +155,8 @@ fn main() {
         (Box::new(d) as Box<dyn LogitModel>, Box::new(t) as Box<dyn LogitModel>)
     });
     let coord = Arc::new(Coordinator::start(cfg.clone(), factory));
-    let server = Server::bind(&cfg.server.addr, coord).expect("bind");
+    // Keep a handle for the mid-run `--kill-worker` injection.
+    let server = Server::bind(&cfg.server.addr, coord.clone()).expect("bind");
     let addr = server.local_addr().unwrap().to_string();
     let server_thread = std::thread::spawn(move || {
         let _ = server.run();
@@ -122,7 +165,7 @@ fn main() {
     let prompts = PromptSet::by_name("c4", 8, 64, 5).unwrap();
     let trace = RequestTrace::poisson(n_requests, rate, prompts.len(), 64, 0.6, 9);
     println!(
-        "replaying {} requests at {:.0} rps over {} workers ({} scheduler, {} reactor threads, cancel-every={})  -> {addr}",
+        "replaying {} requests at {:.0} rps over {} workers ({} scheduler, {route} routing, {} reactor threads, cancel-every={})  -> {addr}",
         trace.len(),
         rate,
         workers,
@@ -143,7 +186,10 @@ fn main() {
                 std::thread::sleep(std::time::Duration::from_secs_f64(wait));
             }
             let sent = std::time::Instant::now();
-            let mut client = Client::connect(&addr).ok()?;
+            let mut client = match Client::connect(&addr) {
+                Ok(c) => c,
+                Err(_) => return Outcome::Failed,
+            };
             let params = GenParams::simple(ev.max_new_tokens, ev.temperature);
             if cancel_this {
                 // Streamed + cancelled: first chunk, cancel, then require
@@ -151,51 +197,85 @@ fn main() {
                 // request is effectively unbounded so the cancel cannot
                 // lose a race against natural completion (which would
                 // read as a spurious failure).
-                let params =
-                    GenParams::simple(1_000_000, ev.temperature);
-                client.submit(1, &prompt, &params, true).ok()?;
-                let mut tokens = 0usize;
-                let mut cancelled = false;
-                let mut first = None;
-                loop {
-                    let frame = client.read_frame().ok()?;
-                    match frame.event.as_str() {
-                        "chunk" => {
-                            if first.is_none() {
-                                first = Some(sent.elapsed().as_secs_f64());
+                let mut run = || -> Option<(f64, f64, usize)> {
+                    let params =
+                        GenParams::simple(1_000_000, ev.temperature);
+                    client.submit(1, &prompt, &params, true).ok()?;
+                    let mut tokens = 0usize;
+                    let mut cancelled = false;
+                    let mut first = None;
+                    loop {
+                        let frame = client.read_frame().ok()?;
+                        match frame.event.as_str() {
+                            "chunk" => {
+                                if first.is_none() {
+                                    first =
+                                        Some(sent.elapsed().as_secs_f64());
+                                }
+                                tokens += frame.tokens().len();
+                                if !cancelled {
+                                    client.cancel(1).ok()?;
+                                    cancelled = true;
+                                }
                             }
-                            tokens += frame.tokens().len();
-                            if !cancelled {
-                                client.cancel(1).ok()?;
-                                cancelled = true;
+                            "done" => {
+                                let finish = frame
+                                    .finish()
+                                    .map(|f| f.name())
+                                    .unwrap_or("?");
+                                if finish != "cancelled" {
+                                    eprintln!(
+                                        "request {idx}: expected cancelled, got {finish}"
+                                    );
+                                    return None;
+                                }
+                                let e2e = sent.elapsed().as_secs_f64();
+                                return Some((
+                                    e2e,
+                                    first.unwrap_or(e2e),
+                                    tokens,
+                                ));
                             }
+                            _ => return None,
                         }
-                        "done" => {
-                            let finish =
-                                frame.finish().map(|f| f.name()).unwrap_or("?");
-                            if finish != "cancelled" {
-                                eprintln!(
-                                    "request {idx}: expected cancelled, got {finish}"
-                                );
-                                return None;
-                            }
-                            let e2e = sent.elapsed().as_secs_f64();
-                            return Some((e2e, first.unwrap_or(e2e), tokens));
-                        }
-                        _ => return None,
                     }
-                }
+                };
+                return match run() {
+                    Some((e2e, first, tokens)) => {
+                        Outcome::Served(e2e, first, tokens)
+                    }
+                    // A cancel stream cut short by a killed worker (error
+                    // frame or dropped connection) is kill collateral.
+                    None if kill_mode => Outcome::Casualty,
+                    None => Outcome::Failed,
+                };
             }
             let mut first = None;
-            let (tokens, _done) = client
-                .generate_stream(1, &prompt, &params, |_| {
-                    if first.is_none() {
-                        first = Some(sent.elapsed().as_secs_f64());
+            match client.generate_stream(1, &prompt, &params, |_| {
+                if first.is_none() {
+                    first = Some(sent.elapsed().as_secs_f64());
+                }
+            }) {
+                Ok((tokens, done)) => {
+                    if done.finish().map(|f| f.name()) == Some("cancelled") {
+                        // Nobody cancels on this path: the worker was
+                        // killed with the request in flight.
+                        if kill_mode {
+                            Outcome::Casualty
+                        } else {
+                            Outcome::Failed
+                        }
+                    } else {
+                        let e2e = sent.elapsed().as_secs_f64();
+                        Outcome::Served(e2e, first.unwrap_or(e2e), tokens.len())
                     }
-                })
-                .ok()?;
-            let e2e = sent.elapsed().as_secs_f64();
-            Some((e2e, first.unwrap_or(e2e), tokens.len()))
+                }
+                // A killed worker rejects queued submissions ("queue
+                // closed") and drops in-flight streams; both count as
+                // casualties only when a kill was actually injected.
+                Err(_) if kill_mode => Outcome::Casualty,
+                Err(_) => Outcome::Failed,
+            }
         }));
     }
 
@@ -211,23 +291,41 @@ fn main() {
         text.lines().count()
     };
 
+    // Worker-death injection: wait until roughly half the trace has been
+    // submitted, then kill the target. The router stops placing new
+    // requests there, cancels its tracked ones, and the coordinator
+    // joins the worker thread before kill_worker returns.
+    if let Some(k) = kill_worker {
+        let half = trace.events.last().map(|e| e.at_secs / 2.0).unwrap_or(0.0);
+        let elapsed = t0.elapsed().as_secs_f64();
+        if half > elapsed {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                half - elapsed,
+            ));
+        }
+        assert!(coord.kill_worker(k), "worker {k} was not killable");
+        println!("killed worker {k} at t={:.2}s", t0.elapsed().as_secs_f64());
+    }
+
     let mut lat = Histogram::new();
     let mut ttft = Histogram::new();
     let mut total_tokens = 0usize;
     let mut failures = 0usize;
+    let mut casualties = 0usize;
     for h in handles {
         match h.join().expect("client thread") {
-            Some((e2e, first, tokens)) => {
+            Outcome::Served(e2e, first, tokens) => {
                 lat.record(e2e);
                 ttft.record(first);
                 total_tokens += tokens;
             }
-            None => failures += 1,
+            Outcome::Casualty => casualties += 1,
+            Outcome::Failed => failures += 1,
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "done in {wall:.2}s: {} ok / {failures} failed | {:.0} tokens/s | e2e p50 {:.3}s p99 {:.3}s | ttft p50 {:.3}s p99 {:.3}s",
+        "done in {wall:.2}s: {} ok / {failures} failed / {casualties} kill casualties | {:.0} tokens/s | e2e p50 {:.3}s p99 {:.3}s | ttft p50 {:.3}s p99 {:.3}s",
         lat.len(),
         total_tokens as f64 / wall,
         lat.p50(),
@@ -255,16 +353,29 @@ fn main() {
     // one allowed remainder is this scraper's own connection. Teardown
     // is observed asynchronously by the reactor, so stragglers get a
     // bounded window to be swept before this counts as a failure.
-    let want = [
+    let mut want: Vec<(String, f64)> = [
         ("dyspec_open_conns", 1.0),
         ("dyspec_outbox_frames", 0.0),
         ("dyspec_tokens_in_flight", 0.0),
         ("dyspec_queue_depth", 0.0),
         ("dyspec_cache_resident_blocks", 0.0),
-    ];
+    ]
+    .into_iter()
+    .map(|(n, v)| (n.to_string(), v))
+    .collect();
+    // Every worker's router gauges must also drain — a killed worker's
+    // additionally proves cancellation settled each tracked request.
+    for w in 0..workers {
+        want.push((format!("dyspec_worker_queue_depth{{worker=\"{w}\"}}"), 0.0));
+        want.push((format!("dyspec_worker_inflight{{worker=\"{w}\"}}"), 0.0));
+    }
+    if let Some(k) = kill_worker {
+        want.push((format!("dyspec_worker_alive{{worker=\"{k}\"}}"), 0.0));
+    }
     let mut undrained: Vec<String> = Vec::new();
+    let mut prom = String::new();
     for _ in 0..40 {
-        let prom = client.metrics().expect("post-drain metrics scrape");
+        prom = client.metrics().expect("post-drain metrics scrape");
         undrained = want
             .iter()
             .filter(|(name, v)| prom_gauge(&prom, name) != *v)
@@ -285,10 +396,37 @@ fn main() {
         eprintln!("gauge not drained: {line}");
     }
 
+    // Per-worker placement skew, read back off the public Prometheus
+    // surface exactly as a dashboard would. Under round-robin every
+    // healthy worker must have served traffic; affinity is allowed to
+    // concentrate (that is the point), so it only reports.
+    let series = |name: &str, w: usize| {
+        prom_gauge(&prom, &format!("dyspec_worker_{name}{{worker=\"{w}\"}}"))
+    };
+    let routed: Vec<f64> = (0..workers).map(|w| series("routed_total", w)).collect();
+    let alive: Vec<f64> = (0..workers).map(|w| series("alive", w)).collect();
+    let spilled: Vec<f64> =
+        (0..workers).map(|w| series("spilled_total", w)).collect();
+    println!(
+        "per-worker routed {routed:?} | spilled {spilled:?} | alive {alive:?} | route={route}"
+    );
+    let mut starved = 0usize;
+    if route == "rr" {
+        for w in 0..workers {
+            if alive[w] == 1.0 && routed[w] <= 0.0 {
+                eprintln!("healthy worker {w} served zero requests under rr");
+                starved += 1;
+            }
+        }
+    }
+
     client.shutdown().expect("shutdown");
     server_thread.join().unwrap();
-    if failures > 0 || !undrained.is_empty() {
-        eprintln!("{failures} requests failed, {} gauges undrained", undrained.len());
+    if failures > 0 || !undrained.is_empty() || starved > 0 {
+        eprintln!(
+            "{failures} requests failed, {} gauges undrained, {starved} workers starved",
+            undrained.len()
+        );
         std::process::exit(1);
     }
 }

@@ -1,0 +1,19 @@
+//! Router benchmark: prefix-affinity vs round-robin routing at 1 and 4
+//! workers on a shared-prefix workload (see DESIGN.md §Router Tier).
+//! Shares the runner with `dyspec bench --experiment route` and records
+//! the result as BENCH_route.json at the repo root to seed the perf
+//! trajectory. Env: DYSPEC_BENCH_PROMPTS (requests per prefix group),
+//! DYSPEC_BENCH_TOKENS.
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts {
+        prompts: std::env::var("DYSPEC_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4),
+        max_new_tokens: std::env::var("DYSPEC_BENCH_TOKENS").ok().and_then(|v| v.parse().ok()).unwrap_or(64),
+        out: Some("../BENCH_route.json".into()),
+        ..ExpOpts::default()
+    };
+    for table in run_experiment("route", &opts).expect("experiment") {
+        println!("{}", table.render());
+    }
+}

@@ -84,7 +84,7 @@ USAGE:
 COMMANDS:
   generate     run one generation (policy=dyspec|sequoia|specinfer|chain|baseline)
   bench        run a paper experiment (--experiment table1|table2|table3|table4|
-               table5|fig2|fig4|fig5|fig9|serve|cache|stream|adaptive)
+               table5|fig2|fig4|fig5|fig9|serve|cache|stream|adaptive|route)
   serve        start the TCP serving coordinator (--addr host:port,
                scheduler=fcfs|continuous); wire protocol v1 over the
                reactor transport (reactor_threads=N event loops serve
@@ -120,7 +120,11 @@ CONFIG KEYS (key=value, see config/mod.rs):
   policy only), adapt_explore (UCB exploration weight),
   adapt_min_samples (cold-start proposals per drafter),
   adapt_cut (useful-bucket acceptance threshold),
-  adapt_min_budget (retuned tree-budget floor)
+  adapt_min_budget (retuned tree-budget floor),
+  route (affinity|rr — prefix-affinity vs round-robin placement over the
+  per-worker queues when workers > 1), route_prefix_len (tokens hashed
+  for ownership), route_vnodes (ring virtual nodes per worker),
+  route_max_depth (owner load before spilling), route_spill (on|off)
 
 EXAMPLES:
   dyspec generate policy=dyspec backend=hlo dataset=cnn temp=0

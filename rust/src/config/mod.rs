@@ -450,6 +450,68 @@ impl Default for ObsConfig {
     }
 }
 
+/// How the router tier picks a worker for an admitted request
+/// (`router/`, DESIGN.md §Router Tier).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RouteMode {
+    /// Consistent-hash the prompt prefix so each worker's cache
+    /// concentrates residency for the prefixes it owns.
+    #[default]
+    Affinity,
+    /// Round-robin over live workers — the affinity-off baseline the
+    /// route bench compares against.
+    Rr,
+}
+
+impl RouteMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Affinity => "affinity",
+            Self::Rr => "rr",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "affinity" => Self::Affinity,
+            "rr" | "round-robin" | "roundrobin" => Self::Rr,
+            _ => return None,
+        })
+    }
+}
+
+/// Router-tier knobs (`route*` keys).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteConfig {
+    pub mode: RouteMode,
+    /// Prompt tokens hashed for ring placement: requests sharing their
+    /// first `prefix_len` tokens land on the same worker.
+    pub prefix_len: usize,
+    /// Virtual nodes per worker on the consistent-hash ring (more vnodes
+    /// → smoother per-worker arc length → less skew).
+    pub vnodes: usize,
+    /// Spill threshold: when the owner's load (queued + in flight)
+    /// exceeds this, the request goes to the least-loaded healthy worker
+    /// instead (counted as a spill).
+    pub max_depth: usize,
+    /// Enable the spill policy (`route_spill=on`, the default). Off
+    /// means strict affinity: the owner takes all its traffic no matter
+    /// how deep its queue (backpressure still applies per shard).
+    pub spill: bool,
+}
+
+impl Default for RouteConfig {
+    fn default() -> Self {
+        Self {
+            mode: RouteMode::Affinity,
+            prefix_len: 32,
+            vnodes: 64,
+            max_depth: 64,
+            spill: true,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -459,6 +521,7 @@ pub struct Config {
     pub cache: CacheConfig,
     pub obs: ObsConfig,
     pub adapt: AdaptConfig,
+    pub route: RouteConfig,
     pub backend: ModelBackend,
     pub regime: Option<LatencyRegime>,
     pub dataset: String,
@@ -488,6 +551,7 @@ impl Config {
             cache: CacheConfig::default(),
             obs: ObsConfig::default(),
             adapt: AdaptConfig::default(),
+            route: RouteConfig::default(),
             backend: ModelBackend::Sim,
             regime: None,
             dataset: "c4".into(),
@@ -671,6 +735,27 @@ impl Config {
                 Ok(v) if v >= 1 => self.obs.trace_ring = v,
                 _ => return bad("trace_ring"),
             },
+            "route" => match RouteMode::parse(value) {
+                Some(m) => self.route.mode = m,
+                None => return bad("route"),
+            },
+            "route_prefix_len" => match value.parse() {
+                Ok(v) if v >= 1 => self.route.prefix_len = v,
+                _ => return bad("route_prefix_len"),
+            },
+            "route_vnodes" => match value.parse() {
+                Ok(v) if v >= 1 => self.route.vnodes = v,
+                _ => return bad("route_vnodes"),
+            },
+            "route_max_depth" => match value.parse() {
+                Ok(v) if v >= 1 => self.route.max_depth = v,
+                _ => return bad("route_max_depth"),
+            },
+            "route_spill" => match value {
+                "on" | "true" | "1" => self.route.spill = true,
+                "off" | "false" | "0" => self.route.spill = false,
+                _ => return bad("route_spill"),
+            },
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -801,6 +886,20 @@ impl Config {
         m.insert(
             "outbox_frames".into(),
             self.server.outbox_frames.to_string(),
+        );
+        m.insert("route".into(), self.route.mode.name().into());
+        m.insert(
+            "route_prefix_len".into(),
+            self.route.prefix_len.to_string(),
+        );
+        m.insert("route_vnodes".into(), self.route.vnodes.to_string());
+        m.insert(
+            "route_max_depth".into(),
+            self.route.max_depth.to_string(),
+        );
+        m.insert(
+            "route_spill".into(),
+            if self.route.spill { "on" } else { "off" }.into(),
         );
         m
     }
@@ -938,6 +1037,39 @@ mod tests {
         assert_eq!(map.get("trace_ring").unwrap(), "64");
         cfg.set("trace", "off").unwrap();
         assert!(!cfg.obs.trace);
+    }
+
+    #[test]
+    fn route_keys_round_trip_and_validate() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.route, RouteConfig::default());
+        assert_eq!(cfg.route.mode, RouteMode::Affinity);
+        cfg.set("route", "rr").unwrap();
+        cfg.set("route_prefix_len", "16").unwrap();
+        cfg.set("route_vnodes", "128").unwrap();
+        cfg.set("route_max_depth", "8").unwrap();
+        cfg.set("route_spill", "off").unwrap();
+        assert_eq!(cfg.route.mode, RouteMode::Rr);
+        assert_eq!(cfg.route.prefix_len, 16);
+        assert_eq!(cfg.route.vnodes, 128);
+        assert_eq!(cfg.route.max_depth, 8);
+        assert!(!cfg.route.spill);
+        assert!(cfg.set("route", "random").is_err());
+        assert!(cfg.set("route_prefix_len", "0").is_err());
+        assert!(cfg.set("route_vnodes", "0").is_err());
+        assert!(cfg.set("route_max_depth", "0").is_err());
+        assert!(cfg.set("route_spill", "maybe").is_err());
+        let map = cfg.to_map();
+        assert_eq!(map.get("route").unwrap(), "rr");
+        assert_eq!(map.get("route_prefix_len").unwrap(), "16");
+        assert_eq!(map.get("route_vnodes").unwrap(), "128");
+        assert_eq!(map.get("route_max_depth").unwrap(), "8");
+        assert_eq!(map.get("route_spill").unwrap(), "off");
+        cfg.set("route", "affinity").unwrap();
+        assert_eq!(cfg.route.mode, RouteMode::Affinity);
+        for m in [RouteMode::Affinity, RouteMode::Rr] {
+            assert_eq!(RouteMode::parse(m.name()), Some(m));
+        }
     }
 
     /// The invariant `cache::verify_bill` prices against: fetching a

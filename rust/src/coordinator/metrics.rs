@@ -55,6 +55,14 @@ pub struct Metrics {
     outbox_frames: AtomicU64,
     backpressure_closed: AtomicU64,
     transport_threads: AtomicU64,
+    /// Router tier (DESIGN.md §Router Tier): requests routed to a shard
+    /// (admitted through the ring or rr cursor), requests spilled off an
+    /// overloaded owner to the least-loaded healthy worker, and failover
+    /// events (a routing decision that had to skip a dead owner, plus
+    /// one count per worker kill).
+    router_routed: AtomicU64,
+    router_spilled: AtomicU64,
+    router_failover: AtomicU64,
 }
 
 impl Metrics {
@@ -85,7 +93,35 @@ impl Metrics {
             outbox_frames: AtomicU64::new(0),
             backpressure_closed: AtomicU64::new(0),
             transport_threads: AtomicU64::new(0),
+            router_routed: AtomicU64::new(0),
+            router_spilled: AtomicU64::new(0),
+            router_failover: AtomicU64::new(0),
         }
+    }
+
+    /// Router-tier counters (`router/`).
+    pub fn on_routed(&self) {
+        self.router_routed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_route_spilled(&self) {
+        self.router_spilled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_route_failover(&self) {
+        self.router_failover.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn router_routed(&self) -> u64 {
+        self.router_routed.load(Ordering::Relaxed)
+    }
+
+    pub fn router_spilled(&self) -> u64 {
+        self.router_spilled.load(Ordering::Relaxed)
+    }
+
+    pub fn router_failover(&self) -> u64 {
+        self.router_failover.load(Ordering::Relaxed)
     }
 
     /// Transport gauges/counters (reactor, `server/`).
@@ -395,6 +431,12 @@ impl Metrics {
                 "transport_threads",
                 Json::Num(self.transport_threads() as f64),
             ),
+            ("router_routed", Json::Num(self.router_routed() as f64)),
+            ("router_spilled", Json::Num(self.router_spilled() as f64)),
+            (
+                "router_failover",
+                Json::Num(self.router_failover() as f64),
+            ),
         ])
     }
 }
@@ -494,6 +536,22 @@ mod tests {
     }
 
     #[test]
+    fn router_counters_flow() {
+        let m = Metrics::new();
+        m.on_routed();
+        m.on_routed();
+        m.on_route_spilled();
+        m.on_route_failover();
+        assert_eq!(m.router_routed(), 2);
+        assert_eq!(m.router_spilled(), 1);
+        assert_eq!(m.router_failover(), 1);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("router_routed").unwrap().as_usize(), Some(2));
+        assert_eq!(snap.get("router_spilled").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("router_failover").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
     fn snapshot_is_json_object() {
         let m = Metrics::new();
         m.on_admitted();
@@ -520,7 +578,7 @@ mod tests {
         m.on_cache(5, 10, 2);
         let obs = crate::obs::Observatory::new(1, false, 16);
         let snap = m.snapshot();
-        let text = crate::obs::render_prometheus(&snap, &obs);
+        let text = crate::obs::render_prometheus(&snap, &obs, &[]);
         let Json::Obj(map) = &snap else {
             panic!("snapshot must be an object")
         };

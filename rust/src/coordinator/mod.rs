@@ -1,6 +1,16 @@
-//! Serving coordinator: bounded admission queue → scheduler → worker
-//! threads running speculative engines → per-request event routing +
-//! metrics.
+//! Serving coordinator: router tier → per-worker admission queues →
+//! scheduler → worker threads running speculative engines → per-request
+//! event routing + metrics.
+//!
+//! Since the router tier (DESIGN.md §Router Tier) each worker owns its
+//! OWN bounded [`RequestQueue`] (and, behind it, its own engine/batcher
+//! and KV block pool); admitted requests are routed by consistent-
+//! hashing their prompt prefix so a worker's cache concentrates
+//! residency for the prefixes it owns (`route=affinity`, the default;
+//! `route=rr` round-robins for comparison). The router also owns worker
+//! health: spill off an overloaded owner, deterministic failover off a
+//! dead one, and [`Coordinator::kill_worker`] to take a worker down
+//! mid-run with its in-flight requests cancelled cleanly.
 //!
 //! The scheduler is config-selectable (`scheduler = fcfs | continuous`):
 //! FCFS runs one request per worker to completion; continuous runs a
@@ -30,13 +40,14 @@ pub use queue::{
     RequestHandle, RequestQueue, Response, RoundStats,
 };
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::{Config, ServerConfig};
 use crate::models::LogitModel;
 use crate::obs::Observatory;
+use crate::router::Router;
 use crate::util::json::Json;
 
 /// Constructs a (draft, target) pair inside a worker thread.
@@ -45,41 +56,50 @@ pub type ModelFactory =
 
 /// Running coordinator handle.
 pub struct Coordinator {
-    queue: RequestQueue,
+    /// Prefix-affinity router over the per-worker admission queues.
+    router: Router,
     pub metrics: Arc<Metrics>,
     /// Tracing + acceptance observatory shared by every worker (spans are
     /// recorded only when `obs.trace = on`; counters always).
     obs: Arc<Observatory>,
     shutdown: Arc<AtomicBool>,
-    workers: Vec<JoinHandle<()>>,
+    /// Worker join handles; a slot goes `None` once that worker has been
+    /// killed and joined ([`Coordinator::kill_worker`]).
+    workers: Mutex<Vec<Option<JoinHandle<()>>>>,
     /// Serving-layer knobs the TCP transport reads back (reactor pool
     /// size, connection/outbox limits).
     server_cfg: ServerConfig,
 }
 
 impl Coordinator {
-    /// Start `cfg.server.workers` workers over `factory`-built models.
+    /// Start `cfg.server.workers` workers, each over its own admission
+    /// queue (capacity `cfg.server.queue_capacity` PER worker) and its
+    /// own `factory`-built model pair, behind the router tier.
     pub fn start(cfg: Config, factory: ModelFactory) -> Self {
         let server_cfg = cfg.server.clone();
+        let n = cfg.server.workers.max(1);
         let metrics = Arc::new(Metrics::new());
-        let obs = Arc::new(Observatory::new(
-            cfg.server.workers.max(1),
-            cfg.obs.trace,
-            cfg.obs.trace_ring,
-        ));
+        let obs = Arc::new(Observatory::new(n, cfg.obs.trace, cfg.obs.trace_ring));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (queue, rx) = RequestQueue::new(cfg.server.queue_capacity, metrics.clone());
-        let queue = queue.with_tracing(cfg.obs.trace);
-        let shared_rx = Arc::new(std::sync::Mutex::new(rx));
+        // One id counter across every shard queue: ids stay unique and
+        // increasing per coordinator, exactly as in the single-queue era.
+        let ids = Arc::new(AtomicU64::new(1));
 
-        let workers = (0..cfg.server.workers.max(1))
-            .map(|wid| {
-                let rx = shared_rx.clone();
-                let factory = factory.clone();
-                let metrics = metrics.clone();
-                let obs = obs.clone();
-                let shutdown = shutdown.clone();
-                let cfg = cfg.clone();
+        let mut queues = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for wid in 0..n {
+            let (queue, rx) =
+                RequestQueue::new(cfg.server.queue_capacity, metrics.clone());
+            queues.push(
+                queue.with_tracing(cfg.obs.trace).with_ids(ids.clone()),
+            );
+            let rx = Arc::new(Mutex::new(rx));
+            let factory = factory.clone();
+            let metrics = metrics.clone();
+            let obs = obs.clone();
+            let shutdown = shutdown.clone();
+            let cfg = cfg.clone();
+            workers.push(Some(
                 std::thread::Builder::new()
                     .name(format!("dyspec-worker-{wid}"))
                     .spawn(move || {
@@ -87,16 +107,17 @@ impl Coordinator {
                             wid, cfg, factory, rx, metrics, obs, shutdown,
                         )
                     })
-                    .expect("spawning worker")
-            })
-            .collect();
+                    .expect("spawning worker"),
+            ));
+        }
+        let router = Router::new(cfg.route.clone(), queues, metrics.clone());
 
         Self {
-            queue,
+            router,
             metrics,
             obs,
             shutdown,
-            workers,
+            workers: Mutex::new(workers),
             server_cfg,
         }
     }
@@ -112,10 +133,21 @@ impl Coordinator {
         &self.obs
     }
 
+    /// The router tier (ring ownership, per-worker load, health). Tests
+    /// and the loadtest harness read routing decisions through this.
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
     /// Prometheus text exposition of the full metrics snapshot plus the
-    /// observatory series (the `{"cmd":"metrics"}` payload).
+    /// observatory series and the per-worker router rows (the
+    /// `{"cmd":"metrics"}` payload).
     pub fn prometheus(&self) -> String {
-        crate::obs::render_prometheus(&self.metrics.snapshot(), &self.obs)
+        crate::obs::render_prometheus(
+            &self.metrics.snapshot(),
+            &self.obs,
+            &self.router.worker_stats(),
+        )
     }
 
     /// Flight-recorder dump (the `{"cmd":"trace"}` payload): recorded
@@ -131,7 +163,13 @@ impl Coordinator {
         prompt: Vec<u32>,
         params: GenParams,
     ) -> Result<RequestHandle, String> {
-        self.queue.try_submit(prompt, params)
+        let (events, rx) = mpsc::channel();
+        let (id, cancel) = self.router.submit(prompt, params, Box::new(events))?;
+        Ok(RequestHandle {
+            id,
+            events: rx,
+            cancel,
+        })
     }
 
     /// Submit a request whose events land in a caller-supplied sink (the
@@ -144,7 +182,7 @@ impl Coordinator {
         params: GenParams,
         events: Box<dyn EventSink>,
     ) -> Result<(u64, CancelToken), String> {
-        self.queue.try_submit_sink(prompt, params, events)
+        self.router.submit(prompt, params, events)
     }
 
     /// Blocking convenience: submit and wait for the final response.
@@ -158,11 +196,35 @@ impl Coordinator {
             .wait()
     }
 
-    /// Drain and stop all workers.
-    pub fn shutdown(mut self) {
+    /// Take one worker down mid-run: mark it dead on the ring (its
+    /// prefixes re-own to the next live worker), cancel everything
+    /// queued or in flight on its shard via the shared [`CancelToken`]s
+    /// (clients get a prompt `finish=cancelled` done frame — or a
+    /// sink-drop error if the worker dies without answering), close its
+    /// queue, and join its thread. Returns `false` if the worker was
+    /// already dead or out of range.
+    pub fn kill_worker(&self, wid: usize) -> bool {
+        if !self.router.kill(wid) {
+            return false;
+        }
+        let handle = self
+            .workers
+            .lock()
+            .unwrap()
+            .get_mut(wid)
+            .and_then(|slot| slot.take());
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        true
+    }
+
+    /// Drain and stop all workers: every shard queue closes, workers
+    /// finish what they hold (graceful drain), then exit.
+    pub fn shutdown(self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        self.queue.close();
-        for w in self.workers.drain(..) {
+        self.router.close_all();
+        for w in self.workers.lock().unwrap().drain(..).flatten() {
             let _ = w.join();
         }
     }
@@ -344,6 +406,44 @@ mod tests {
             let resp = h.wait().expect("request dropped during shutdown");
             assert_eq!(resp.tokens.len(), 16);
         }
+    }
+
+    #[test]
+    fn kill_worker_cancels_in_flight_and_reroutes_the_prefix() {
+        let coord = Coordinator::start(test_cfg(2, 32), sim_factory(0.5));
+        let prompt = vec![11, 12, 13, 14];
+        let owner = coord.router().route(&prompt).unwrap().worker;
+        let h = coord
+            .try_submit(prompt.clone(), GenParams::simple(4096, 0.6))
+            .unwrap();
+        // Wait until the request is demonstrably in flight on the owner.
+        match h.events.recv().unwrap() {
+            GenEvent::Chunk { .. } => {}
+            GenEvent::Done(_) => panic!("4096-token request finished instantly"),
+        }
+        assert!(coord.kill_worker(owner));
+        assert!(!coord.kill_worker(owner), "second kill is a no-op");
+        // The in-flight request finishes promptly and cleanly cancelled.
+        let resp = loop {
+            match h.events.recv() {
+                Ok(GenEvent::Done(resp)) => break *resp,
+                Ok(GenEvent::Chunk { .. }) => continue,
+                Err(_) => panic!("killed worker dropped the stream without Done"),
+            }
+        };
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(resp.tokens.len() < 4096);
+        // The dead shard's gauges have drained to zero.
+        let stats = &coord.router().worker_stats()[owner];
+        assert!(!stats.alive);
+        assert_eq!((stats.queued, stats.inflight), (0, 0));
+        // Same-prefix traffic is re-owned by the survivor and still serves.
+        let d = coord.router().route(&prompt).unwrap();
+        assert_ne!(d.worker, owner);
+        let resp = coord.generate(prompt, 8, 0.0).unwrap();
+        assert_eq!(resp.tokens.len(), 8);
+        assert_eq!(resp.worker, d.worker);
+        coord.shutdown();
     }
 
     #[test]

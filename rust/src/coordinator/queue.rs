@@ -14,7 +14,7 @@
 //!     worker events land there directly with no forwarder thread.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use super::metrics::Metrics;
@@ -65,8 +65,13 @@ impl RequestHandle {
 
 /// Sender half (held by the coordinator/server).
 pub struct RequestQueue {
-    tx: Option<mpsc::SyncSender<Request>>,
-    next_id: AtomicU64,
+    /// Interior-mutable so the router tier can close one shard's queue
+    /// (worker kill / drain) through a shared reference.
+    tx: Mutex<Option<mpsc::SyncSender<Request>>>,
+    /// Id source — per-queue by default; the router shares ONE counter
+    /// across all shard queues (via [`RequestQueue::with_ids`]) so ids
+    /// stay unique per coordinator no matter which worker owns them.
+    next_id: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
     tracing: bool,
 }
@@ -76,8 +81,8 @@ impl RequestQueue {
         let (tx, rx) = mpsc::sync_channel(capacity.max(1));
         (
             Self {
-                tx: Some(tx),
-                next_id: AtomicU64::new(1),
+                tx: Mutex::new(Some(tx)),
+                next_id: Arc::new(AtomicU64::new(1)),
                 metrics,
                 tracing: false,
             },
@@ -89,6 +94,15 @@ impl RequestQueue {
     /// default so existing construction sites and tests are unchanged.
     pub fn with_tracing(mut self, tracing: bool) -> Self {
         self.tracing = tracing;
+        self
+    }
+
+    /// Mint ids from a shared counter instead of this queue's own. The
+    /// router tier hands every shard queue the same counter, preserving
+    /// the "unique and increasing per coordinator" id contract of the
+    /// single-queue era.
+    pub fn with_ids(mut self, ids: Arc<AtomicU64>) -> Self {
+        self.next_id = ids;
         self
     }
 
@@ -146,7 +160,15 @@ impl RequestQueue {
             events,
             trace,
         };
-        let tx = self.tx.as_ref().ok_or("queue closed")?;
+        // Clone the sender out of the lock so a closing shard never
+        // blocks behind an in-flight try_send (the transient clone keeps
+        // the channel open only for the duration of this call).
+        let tx = self
+            .tx
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or("queue closed")?;
         match tx.try_send(req) {
             Ok(()) => {
                 self.metrics.on_admitted();
@@ -161,8 +183,10 @@ impl RequestQueue {
     }
 
     /// Close the queue: workers drain remaining requests, then exit.
-    pub fn close(&mut self) {
-        self.tx = None;
+    /// Shared-reference so the router can close one shard at a time
+    /// (worker kill) as well as all of them (coordinator shutdown).
+    pub fn close(&self) {
+        *self.tx.lock().unwrap() = None;
     }
 }
 
@@ -200,9 +224,24 @@ mod tests {
     }
 
     #[test]
+    fn shared_id_counter_spans_queues() {
+        let metrics = Arc::new(Metrics::new());
+        let ids = Arc::new(AtomicU64::new(1));
+        let (qa, rxa) = RequestQueue::new(4, metrics.clone());
+        let qa = qa.with_ids(ids.clone());
+        let (qb, rxb) = RequestQueue::new(4, metrics);
+        let qb = qb.with_ids(ids);
+        qa.try_submit(vec![1], GenParams::simple(8, 0.0)).unwrap();
+        qb.try_submit(vec![2], GenParams::simple(8, 0.0)).unwrap();
+        let a = rxa.recv().unwrap();
+        let b = rxb.recv().unwrap();
+        assert_eq!(b.id, a.id + 1, "shard queues must share one id space");
+    }
+
+    #[test]
     fn close_disconnects() {
         let metrics = Arc::new(Metrics::new());
-        let (mut q, rx) = RequestQueue::new(1, metrics);
+        let (q, rx) = RequestQueue::new(1, metrics);
         q.close();
         assert!(q.try_submit(vec![1], GenParams::simple(8, 0.0)).is_err());
         assert!(rx.recv().is_err());

@@ -32,6 +32,7 @@ pub mod engine;
 pub mod models;
 pub mod obs;
 pub mod round;
+pub mod router;
 pub mod runtime;
 pub mod sampling;
 pub mod sched;

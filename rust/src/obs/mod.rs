@@ -474,12 +474,31 @@ fn bucket_hi(b: usize) -> f64 {
     2f64.powi(b as i32 + 1 - PROB_BUCKETS as i32)
 }
 
+/// One worker's router-tier row in the exposition: health, load gauges,
+/// and routed/spilled counters, labeled `worker="<id>"` so the scrape is
+/// disaggregable per shard. Produced by `router::Router::worker_stats`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerStat {
+    pub worker: usize,
+    pub alive: bool,
+    pub queued: u64,
+    pub inflight: u64,
+    pub routed: u64,
+    pub spilled: u64,
+}
+
 /// Render the full telemetry surface in Prometheus text exposition
 /// format: every scalar of the `Metrics` snapshot as a `dyspec_*` gauge,
-/// per-stage round-latency summaries, and the acceptance observatory
-/// series. `snapshot` is the JSON object from `Metrics::snapshot()`, so
-/// new metrics fields appear here automatically.
-pub fn render_prometheus(snapshot: &Json, obs: &Observatory) -> String {
+/// per-stage round-latency summaries, the acceptance observatory
+/// series, and per-worker router rows. `snapshot` is the JSON object
+/// from `Metrics::snapshot()`, so new metrics fields appear here
+/// automatically; `workers` is empty for surfaces without a router tier
+/// (direct engine benches, unit tests).
+pub fn render_prometheus(
+    snapshot: &Json,
+    obs: &Observatory,
+    workers: &[WorkerStat],
+) -> String {
     let mut out = String::new();
     if let Json::Obj(map) = snapshot {
         for (key, val) in map {
@@ -625,6 +644,52 @@ pub fn render_prometheus(snapshot: &Json, obs: &Observatory) -> String {
             &labels,
             samples as f64,
         );
+    }
+
+    if !workers.is_empty() {
+        prom_header(
+            &mut out,
+            "dyspec_worker_alive",
+            "1 while the worker is healthy on the router ring",
+            "gauge",
+        );
+        prom_header(
+            &mut out,
+            "dyspec_worker_queue_depth",
+            "requests admitted to the worker's shard queue, not yet started",
+            "gauge",
+        );
+        prom_header(
+            &mut out,
+            "dyspec_worker_inflight",
+            "requests the worker is actively generating",
+            "gauge",
+        );
+        prom_header(
+            &mut out,
+            "dyspec_worker_routed_total",
+            "requests routed to this worker (spill-ins included)",
+            "counter",
+        );
+        prom_header(
+            &mut out,
+            "dyspec_worker_spilled_total",
+            "requests this worker absorbed by spill rather than ring ownership",
+            "counter",
+        );
+        for w in workers {
+            let labels = vec![("worker", w.worker.to_string())];
+            let rows: [(&str, f64); 5] = [
+                ("dyspec_worker_alive", if w.alive { 1.0 } else { 0.0 }),
+                ("dyspec_worker_queue_depth", w.queued as f64),
+                ("dyspec_worker_inflight", w.inflight as f64),
+                ("dyspec_worker_routed_total", w.routed as f64),
+                ("dyspec_worker_spilled_total", w.spilled as f64),
+            ];
+            for (name, v) in rows {
+                prom_row(&mut out, name, &labels, v);
+            }
+        }
     }
 
     prom_gauge(
@@ -855,7 +920,25 @@ mod tests {
             ("admitted", Json::Num(3.0)),
             ("tokens_per_sec", Json::Num(12.5)),
         ]);
-        let text = render_prometheus(&snapshot, &obs);
+        let workers = [
+            WorkerStat {
+                worker: 0,
+                alive: true,
+                queued: 2,
+                inflight: 1,
+                routed: 7,
+                spilled: 0,
+            },
+            WorkerStat {
+                worker: 1,
+                alive: false,
+                queued: 0,
+                inflight: 0,
+                routed: 3,
+                spilled: 2,
+            },
+        ];
+        let text = render_prometheus(&snapshot, &obs, &workers);
         assert!(text.ends_with('\n'));
         for line in text.lines() {
             if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
@@ -894,6 +977,16 @@ mod tests {
             "dyspec_adaptive_drafter_samples_total{drafter=\"dyspec\"} 2\n"
         ));
         assert!(text.contains("dyspec_tracing_enabled 1\n"));
+        // Per-worker router rows carry the worker label.
+        assert!(text.contains("dyspec_worker_alive{worker=\"0\"} 1\n"));
+        assert!(text.contains("dyspec_worker_alive{worker=\"1\"} 0\n"));
+        assert!(text.contains("dyspec_worker_queue_depth{worker=\"0\"} 2\n"));
+        assert!(text.contains("dyspec_worker_inflight{worker=\"0\"} 1\n"));
+        assert!(text.contains("dyspec_worker_routed_total{worker=\"1\"} 3\n"));
+        assert!(text.contains("dyspec_worker_spilled_total{worker=\"1\"} 2\n"));
+        // Without a router tier the worker series are absent entirely.
+        let bare = render_prometheus(&snapshot, &obs, &[]);
+        assert!(!bare.contains("dyspec_worker_"));
     }
 
     #[test]

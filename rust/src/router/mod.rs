@@ -1,0 +1,544 @@
+//! Prefix-affinity router tier: N independent workers behind one
+//! admission surface (DESIGN.md §Router Tier).
+//!
+//! The coordinator used to push every request into ONE shared queue that
+//! N workers competed over — correct, but it scatters same-prefix
+//! requests across workers, so KV residency (and, later, the
+//! cross-request radix cache) dilutes as workers are added. This tier
+//! gives every worker its own [`RequestQueue`] (its own engine/batcher,
+//! block pool, and obs recorder behind it) and routes each admitted
+//! request by consistent-hashing its prompt prefix ([`ring::HashRing`]),
+//! so the worker that owns a prefix sees *all* of that prefix's traffic.
+//!
+//! The tier also owns worker health:
+//!
+//!   - per-shard `queued`/`inflight` gauges, maintained by wrapping each
+//!     request's [`EventSink`] (settled exactly once, on `Done` or on
+//!     sink drop — the same path that already guarantees clients an
+//!     error when a worker drops a request);
+//!   - a spill policy (`route_spill=on`): when the owner's load exceeds
+//!     `route_max_depth`, the request goes to the least-loaded healthy
+//!     worker instead, and is *counted* as a spill so affinity stats
+//!     stay honest;
+//!   - deterministic failover: a dead worker's prefixes re-own to the
+//!     next live vnode clockwise on the ring, and [`Router::kill`]
+//!     cancels everything queued or in flight on the dead shard via the
+//!     existing [`CancelToken`] path (clients see a clean
+//!     `finish=cancelled` / sink-drop error, never a hang);
+//!   - graceful drain: [`Router::close_all`] closes every shard queue so
+//!     workers finish what they hold and exit.
+//!
+//! Single-worker deployments are bit-identical to the pre-router
+//! pipeline: the ring short-circuits to worker 0 before hashing, the
+//! sink wrapper forwards events unchanged, and ids/traces are minted by
+//! the same shared counter (pinned by `tests/router.rs`).
+
+pub mod ring;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{RouteConfig, RouteMode};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::{
+    CancelToken, EventSink, GenEvent, GenParams, RequestQueue,
+};
+use crate::obs::WorkerStat;
+use ring::HashRing;
+
+/// Fixed ring seed (the default serve port, for grep-ability). Fixed —
+/// not per-process random — so prefix ownership survives reconnects and
+/// restarts, which is the whole point of affinity routing.
+pub const RING_SEED: u64 = 0x7341_0000_0000_0001;
+
+/// Lifecycle of one routed request, shared between the gauge-keeping
+/// sink wrapper and the shard's cancellation registry.
+const QUEUED: u8 = 0;
+const ACTIVE: u8 = 1;
+const SETTLED: u8 = 2;
+
+fn gauge_dec(g: &AtomicU64) {
+    let _ = g.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+        Some(cur.saturating_sub(1))
+    });
+}
+
+/// Per-shard health + load accounting (lock-free; scraped by the
+/// Prometheus exposition via [`Router::worker_stats`]).
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// Requests admitted to the shard queue, not yet picked up (first
+    /// event not yet emitted).
+    queued: AtomicU64,
+    /// Requests the worker is actively generating (first chunk emitted,
+    /// `Done` not yet).
+    inflight: AtomicU64,
+    /// Requests ever routed to this shard (includes spill-ins).
+    routed: AtomicU64,
+    /// Requests that landed here by spill rather than ring ownership.
+    spilled: AtomicU64,
+    alive: AtomicBool,
+}
+
+impl ShardStats {
+    fn new() -> Self {
+        Self {
+            alive: AtomicBool::new(true),
+            ..Self::default()
+        }
+    }
+
+    pub fn alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Load = queued + inflight; the spill policy and the least-loaded
+    /// pick both read this.
+    pub fn load(&self) -> u64 {
+        self.queued.load(Ordering::Relaxed) + self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// One worker's admission side: its private queue, load gauges, and the
+/// cancel registry used to abort its work on kill.
+pub struct Shard {
+    queue: RequestQueue,
+    stats: Arc<ShardStats>,
+    /// `(lifecycle, cancel)` for every request routed here that has not
+    /// settled; pruned opportunistically on each admit.
+    tracked: Mutex<Vec<(Arc<AtomicU8>, CancelToken)>>,
+}
+
+impl Shard {
+    fn new(queue: RequestQueue) -> Self {
+        Self {
+            queue,
+            stats: Arc::new(ShardStats::new()),
+            tracked: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn track(&self, state: Arc<AtomicU8>, cancel: CancelToken) {
+        let mut t = self.tracked.lock().unwrap();
+        t.retain(|(s, _)| s.load(Ordering::SeqCst) != SETTLED);
+        t.push((state, cancel));
+    }
+}
+
+/// Event-sink wrapper that keeps the shard gauges honest. Forwards every
+/// event byte-for-byte (wire streams are unchanged by routing); settles
+/// the gauges exactly once — on `Done`, or on drop for requests the
+/// worker never answered (rejected admissions, dropped queues).
+struct RoutedSink {
+    inner: Box<dyn EventSink>,
+    stats: Arc<ShardStats>,
+    state: Arc<AtomicU8>,
+}
+
+impl RoutedSink {
+    fn new(inner: Box<dyn EventSink>, stats: Arc<ShardStats>) -> (Self, Arc<AtomicU8>) {
+        let state = Arc::new(AtomicU8::new(QUEUED));
+        stats.queued.fetch_add(1, Ordering::Relaxed);
+        (
+            Self {
+                inner,
+                stats: stats.clone(),
+                state: state.clone(),
+            },
+            state,
+        )
+    }
+
+    fn settle(&self) {
+        match self.state.swap(SETTLED, Ordering::SeqCst) {
+            QUEUED => gauge_dec(&self.stats.queued),
+            ACTIVE => gauge_dec(&self.stats.inflight),
+            _ => {}
+        }
+    }
+}
+
+impl EventSink for RoutedSink {
+    fn send(&self, ev: GenEvent) -> bool {
+        match &ev {
+            GenEvent::Chunk { .. } => {
+                if self
+                    .state
+                    .compare_exchange(QUEUED, ACTIVE, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    gauge_dec(&self.stats.queued);
+                    self.stats.inflight.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            GenEvent::Done(_) => self.settle(),
+        }
+        self.inner.send(ev)
+    }
+
+    fn attach_trace(&self, trace: u64) {
+        self.inner.attach_trace(trace);
+    }
+}
+
+impl Drop for RoutedSink {
+    fn drop(&mut self) {
+        self.settle();
+    }
+}
+
+/// The routing decision for one request (what [`Router::submit`] chose
+/// and why — surfaced for tests and the loadtest skew report).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub worker: usize,
+    pub spilled: bool,
+    pub failover: bool,
+}
+
+/// The router tier proper: the ring, the shards, and the counters.
+pub struct Router {
+    cfg: RouteConfig,
+    ring: HashRing,
+    shards: Vec<Shard>,
+    metrics: Arc<Metrics>,
+    /// Round-robin cursor (`route=rr`, the affinity-off baseline).
+    rr_next: AtomicUsize,
+}
+
+impl Router {
+    /// Build over per-worker queues (one per worker, already wired to
+    /// their receivers). The ring is seeded with [`RING_SEED`].
+    pub fn new(cfg: RouteConfig, queues: Vec<RequestQueue>, metrics: Arc<Metrics>) -> Self {
+        let ring = HashRing::new(queues.len(), cfg.vnodes, RING_SEED);
+        let shards = queues.into_iter().map(Shard::new).collect();
+        Self {
+            cfg,
+            ring,
+            shards,
+            metrics,
+            rr_next: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn stats(&self, wid: usize) -> &Arc<ShardStats> {
+        &self.shards[wid].stats
+    }
+
+    /// Pick the destination worker for `prompt`. Affinity mode resolves
+    /// ring ownership (with failover past dead workers), then applies
+    /// the spill policy; rr mode cycles over live workers.
+    pub fn route(&self, prompt: &[u32]) -> Result<RouteDecision, String> {
+        let n = self.shards.len();
+        // One worker: no hashing, no spill, no counters beyond routed —
+        // the bit-identity contract with the unrouted pipeline.
+        if n == 1 {
+            if !self.shards[0].stats.alive() {
+                return Err("no healthy workers".into());
+            }
+            return Ok(RouteDecision {
+                worker: 0,
+                spilled: false,
+                failover: false,
+            });
+        }
+        match self.cfg.mode {
+            RouteMode::Rr => {
+                let start = self.rr_next.fetch_add(1, Ordering::Relaxed);
+                for i in 0..n {
+                    let w = (start + i) % n;
+                    if self.shards[w].stats.alive() {
+                        return Ok(RouteDecision {
+                            worker: w,
+                            spilled: false,
+                            failover: false,
+                        });
+                    }
+                }
+                Err("no healthy workers".into())
+            }
+            RouteMode::Affinity => {
+                let owner = self
+                    .ring
+                    .owner(prompt, self.cfg.prefix_len, |w| {
+                        self.shards[w].stats.alive()
+                    })
+                    .ok_or_else(|| String::from("no healthy workers"))?;
+                let failover = owner != self.ring.primary(prompt, self.cfg.prefix_len);
+                let mut worker = owner;
+                let mut spilled = false;
+                if self.cfg.spill
+                    && self.shards[owner].stats.load() > self.cfg.max_depth as u64
+                {
+                    let least = (0..n)
+                        .filter(|&w| self.shards[w].stats.alive())
+                        .min_by_key(|&w| (self.shards[w].stats.load(), w))
+                        .unwrap_or(owner);
+                    if least != owner {
+                        worker = least;
+                        spilled = true;
+                    }
+                }
+                Ok(RouteDecision {
+                    worker,
+                    spilled,
+                    failover,
+                })
+            }
+        }
+    }
+
+    /// Route + admit: the single submit path behind
+    /// `Coordinator::try_submit_sink`. Validation, id/trace minting, and
+    /// backpressure semantics are the shard queue's, unchanged; this
+    /// tier only chooses the queue and keeps the gauges/registry.
+    pub fn submit(
+        &self,
+        prompt: Vec<u32>,
+        params: GenParams,
+        events: Box<dyn EventSink>,
+    ) -> Result<(u64, CancelToken), String> {
+        let decision = self.route(&prompt)?;
+        let shard = &self.shards[decision.worker];
+        let (sink, state) = RoutedSink::new(events, shard.stats.clone());
+        let (id, cancel) = shard.queue.try_submit_sink(prompt, params, Box::new(sink))?;
+        shard.stats.routed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.on_routed();
+        if decision.spilled {
+            shard.stats.spilled.fetch_add(1, Ordering::Relaxed);
+            self.metrics.on_route_spilled();
+        }
+        if decision.failover {
+            self.metrics.on_route_failover();
+        }
+        shard.track(state, cancel.clone());
+        Ok((id, cancel))
+    }
+
+    /// Kill a worker: mark it dead (its prefixes re-own on the next
+    /// route), cancel everything queued or in flight on its shard, and
+    /// close its queue so the worker thread drains and exits. Returns
+    /// `false` if the worker was already dead (or out of range).
+    pub fn kill(&self, wid: usize) -> bool {
+        let Some(shard) = self.shards.get(wid) else {
+            return false;
+        };
+        if !shard.stats.alive.swap(false, Ordering::SeqCst) {
+            return false;
+        }
+        self.metrics.on_route_failover();
+        let tracked = std::mem::take(&mut *shard.tracked.lock().unwrap());
+        for (state, cancel) in tracked {
+            if state.load(Ordering::SeqCst) != SETTLED {
+                cancel.cancel();
+            }
+        }
+        shard.queue.close();
+        true
+    }
+
+    /// Graceful drain: close every shard queue. Workers finish what they
+    /// hold (queued and in-flight requests complete normally) and exit.
+    pub fn close_all(&self) {
+        for shard in &self.shards {
+            shard.queue.close();
+        }
+    }
+
+    /// Per-worker rows for the Prometheus exposition.
+    pub fn worker_stats(&self) -> Vec<WorkerStat> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(wid, s)| WorkerStat {
+                worker: wid,
+                alive: s.stats.alive(),
+                queued: s.stats.queued.load(Ordering::Relaxed),
+                inflight: s.stats.inflight.load(Ordering::Relaxed),
+                routed: s.stats.routed.load(Ordering::Relaxed),
+                spilled: s.stats.spilled.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// A router over `n` live queues; receivers are kept so admissions
+    /// don't see a disconnected channel.
+    fn test_router(
+        n: usize,
+        cfg: RouteConfig,
+    ) -> (Router, Vec<mpsc::Receiver<crate::coordinator::queue::Request>>, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let mut queues = Vec::new();
+        let mut rxs = Vec::new();
+        let ids = Arc::new(AtomicU64::new(1));
+        for _ in 0..n {
+            let (q, rx) = RequestQueue::new(256, metrics.clone());
+            queues.push(q.with_ids(ids.clone()));
+            rxs.push(rx);
+        }
+        (Router::new(cfg, queues, metrics.clone()), rxs, metrics)
+    }
+
+    fn sink() -> (Box<dyn EventSink>, mpsc::Receiver<GenEvent>) {
+        let (tx, rx) = mpsc::channel();
+        (Box::new(tx), rx)
+    }
+
+    fn done_event() -> GenEvent {
+        use crate::coordinator::queue::{FinishReason, Response};
+        GenEvent::Done(Box::new(Response {
+            id: 0,
+            worker: 0,
+            tokens: Vec::new(),
+            steps: 0,
+            emitted_per_step: 0.0,
+            queue_secs: 0.0,
+            gen_secs: 0.0,
+            ttft_secs: 0.0,
+            virtual_secs: 0.0,
+            cache_hits: 0,
+            finish: FinishReason::Length,
+        }))
+    }
+
+    fn prompt(group: u32, salt: u32) -> Vec<u32> {
+        // 8-token shared prefix per group, then a unique suffix.
+        let mut p: Vec<u32> = (0..8).map(|i| group * 1000 + i).collect();
+        p.push(90_000 + salt);
+        p
+    }
+
+    #[test]
+    fn affinity_is_sticky_per_prefix_group() {
+        let (router, _rxs, _m) = test_router(4, RouteConfig::default());
+        for group in 0..6 {
+            let owner = router.route(&prompt(group, 0)).unwrap().worker;
+            for salt in 1..8 {
+                let d = router.route(&prompt(group, salt)).unwrap();
+                assert_eq!(d.worker, owner, "group {group} not sticky");
+                assert!(!d.spilled && !d.failover);
+            }
+        }
+    }
+
+    #[test]
+    fn rr_cycles_over_live_workers() {
+        let cfg = RouteConfig {
+            mode: RouteMode::Rr,
+            ..RouteConfig::default()
+        };
+        let (router, _rxs, _m) = test_router(3, cfg);
+        let hits: Vec<usize> = (0..6)
+            .map(|_| router.route(&[1, 2, 3]).unwrap().worker)
+            .collect();
+        assert_eq!(hits, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn spill_moves_overflow_to_least_loaded_and_counts_it() {
+        let cfg = RouteConfig {
+            max_depth: 3,
+            ..RouteConfig::default()
+        };
+        let (router, rxs, metrics) = test_router(4, cfg);
+        // Hammer one prefix group; no worker drains, so the owner's
+        // queued gauge climbs past max_depth and overflow spills.
+        let owner = router.route(&prompt(7, 0)).unwrap().worker;
+        let mut streams = Vec::new();
+        let mut spills = 0;
+        for salt in 0..12 {
+            let (s, rx) = sink();
+            router
+                .submit(prompt(7, salt), GenParams::simple(8, 0.0), s)
+                .unwrap();
+            streams.push(rx);
+            spills += router.worker_stats()[owner].spilled;
+        }
+        let stats = router.worker_stats();
+        assert_eq!(stats[owner].queued, 4, "owner held to max_depth + 1");
+        assert_eq!(metrics.router_spilled(), 12 - 4);
+        assert_eq!(metrics.router_routed(), 12);
+        // Spills are attributed to the shards that absorbed them, never
+        // the owner.
+        assert_eq!(stats[owner].spilled, 0);
+        assert_eq!(spills, 0);
+        let absorbed: u64 = stats.iter().map(|s| s.spilled).sum();
+        assert_eq!(absorbed, 12 - 4);
+        drop(rxs);
+    }
+
+    #[test]
+    fn kill_cancels_tracked_requests_and_reroutes_the_prefix() {
+        let (router, rxs, metrics) = test_router(4, RouteConfig::default());
+        let owner = router.route(&prompt(3, 0)).unwrap().worker;
+        let (s, _ev) = sink();
+        let (_, cancel) = router
+            .submit(prompt(3, 1), GenParams::simple(8, 0.0), s)
+            .unwrap();
+        assert!(!cancel.is_cancelled());
+        assert!(router.kill(owner));
+        assert!(!router.kill(owner), "second kill is a no-op");
+        assert!(cancel.is_cancelled(), "kill must cancel tracked requests");
+        // The group's traffic re-owns deterministically off the ring.
+        let d = router.route(&prompt(3, 2)).unwrap();
+        assert_ne!(d.worker, owner);
+        assert!(d.failover);
+        assert_eq!(d.worker, router.route(&prompt(3, 3)).unwrap().worker);
+        assert!(metrics.router_failover() >= 1);
+        // Dead shard's queue is closed: direct submissions now fail.
+        let (s, _ev) = sink();
+        let err = router.shards[owner]
+            .queue
+            .try_submit_sink(vec![1], GenParams::simple(8, 0.0), s)
+            .unwrap_err();
+        assert_eq!(err, "queue closed");
+        drop(rxs);
+    }
+
+    #[test]
+    fn gauges_settle_through_the_sink_lifecycle() {
+        let (router, rxs, _m) = test_router(2, RouteConfig::default());
+        let (s, _ev) = sink();
+        let d = router.route(&prompt(1, 0)).unwrap();
+        router
+            .submit(prompt(1, 0), GenParams::simple(8, 0.0), s)
+            .unwrap();
+        assert_eq!(router.worker_stats()[d.worker].queued, 1);
+        // Simulate the worker: pull the request, emit a chunk, then Done.
+        let req = rxs[d.worker].try_recv().unwrap();
+        req.events.send(GenEvent::Chunk {
+            tokens: vec![1],
+            stats: crate::coordinator::queue::RoundStats::default(),
+        });
+        let st = router.worker_stats();
+        assert_eq!((st[d.worker].queued, st[d.worker].inflight), (0, 1));
+        req.events.send(done_event());
+        let st = router.worker_stats();
+        assert_eq!((st[d.worker].queued, st[d.worker].inflight), (0, 0));
+    }
+
+    #[test]
+    fn single_worker_routes_without_state() {
+        let (router, _rxs, metrics) = test_router(1, RouteConfig::default());
+        let d = router.route(&[1, 2, 3]).unwrap();
+        assert_eq!(
+            d,
+            RouteDecision {
+                worker: 0,
+                spilled: false,
+                failover: false
+            }
+        );
+        assert_eq!(metrics.router_spilled(), 0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Seeded consistent-hash ring over prompt prefixes.
+//!
+//! Each worker contributes `vnodes` virtual points to a sorted u64 ring;
+//! a request hashes its first `prefix_len` prompt tokens and is owned by
+//! the first point clockwise from the hash. Virtual nodes smooth the
+//! per-worker arc length so removing one worker only re-owns that
+//! worker's arcs (its keys scatter across the survivors) instead of
+//! rotating every assignment the way modulo hashing would.
+//!
+//! Determinism contract: point placement and prefix hashing are seeded
+//! splitmix64 scrambles (the same mixer as `obs::TraceId`), so the same
+//! `(workers, vnodes, seed)` triple always builds the same ring and the
+//! same prompt prefix always lands on the same worker — across requests,
+//! reconnects, and process restarts. A ring with ONE worker never hashes
+//! at all: `owner` short-circuits to worker 0 before touching the prompt,
+//! which is what makes single-worker routing bit-identical to the
+//! unrouted pipeline (pinned by `tests/router.rs`).
+
+/// splitmix64 finalizer — the crate's standard cheap scramble.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash the routing prefix of a prompt: the first `prefix_len` tokens
+/// folded through splitmix64. Prompts shorter than the prefix hash their
+/// full length, so "same prefix" degrades gracefully to "same prompt".
+pub fn hash_prefix(prompt: &[u32], prefix_len: usize, seed: u64) -> u64 {
+    let take = prefix_len.max(1).min(prompt.len());
+    let mut h = mix(seed);
+    for &tok in &prompt[..take] {
+        h = mix(h ^ u64::from(tok));
+    }
+    h
+}
+
+/// Sorted-vnode consistent-hash ring.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// `(point, worker)` sorted by point; `workers * vnodes` entries.
+    points: Vec<(u64, usize)>,
+    workers: usize,
+    seed: u64,
+}
+
+impl HashRing {
+    pub fn new(workers: usize, vnodes: usize, seed: u64) -> Self {
+        let workers = workers.max(1);
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(workers * vnodes);
+        for wid in 0..workers {
+            for v in 0..vnodes {
+                let point =
+                    mix(seed ^ mix(((wid as u64) << 32) | v as u64));
+                points.push((point, wid));
+            }
+        }
+        points.sort_unstable();
+        Self {
+            points,
+            workers,
+            seed,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The ring-primary owner of `prompt`, ignoring health. Single-worker
+    /// rings short-circuit to 0 before any hashing.
+    pub fn primary(&self, prompt: &[u32], prefix_len: usize) -> usize {
+        if self.workers == 1 {
+            return 0;
+        }
+        let h = hash_prefix(prompt, prefix_len, self.seed);
+        self.owner_of_point(h, |_| true).unwrap_or(0)
+    }
+
+    /// The owner of `prompt` among workers for which `alive` holds:
+    /// starting at the prefix hash, the first clockwise vnode belonging
+    /// to a live worker. Deterministic failover falls out of the ring
+    /// order — a dead worker's keys re-own to whichever live worker holds
+    /// the next vnode, with no rendezvous or rebalancing step. Returns
+    /// `None` when no worker is alive.
+    pub fn owner(
+        &self,
+        prompt: &[u32],
+        prefix_len: usize,
+        alive: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        if self.workers == 1 {
+            return alive(0).then_some(0);
+        }
+        let h = hash_prefix(prompt, prefix_len, self.seed);
+        self.owner_of_point(h, alive)
+    }
+
+    fn owner_of_point(
+        &self,
+        point: u64,
+        alive: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        let start = self
+            .points
+            .partition_point(|&(p, _)| p < point);
+        let n = self.points.len();
+        for i in 0..n {
+            let (_, wid) = self.points[(start + i) % n];
+            if alive(wid) {
+                return Some(wid);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_prefix_same_owner() {
+        let ring = HashRing::new(4, 64, 7);
+        let a = ring.primary(&[1, 2, 3, 4, 90, 91], 4);
+        let b = ring.primary(&[1, 2, 3, 4, 55, 56, 57], 4);
+        assert_eq!(a, b, "shared 4-token prefix split across workers");
+        // Rebuilding the ring with the same seed keeps the assignment.
+        let again = HashRing::new(4, 64, 7);
+        assert_eq!(again.primary(&[1, 2, 3, 4, 90, 91], 4), a);
+    }
+
+    #[test]
+    fn different_prefixes_spread_across_workers() {
+        let ring = HashRing::new(4, 64, 7);
+        let mut seen = std::collections::BTreeSet::new();
+        for p in 0..64u32 {
+            seen.insert(ring.primary(&[p * 131, p * 17 + 1, 3, 4], 4));
+        }
+        assert!(
+            seen.len() >= 3,
+            "64 distinct prefixes hit only {} of 4 workers",
+            seen.len()
+        );
+    }
+
+    #[test]
+    fn single_worker_ring_short_circuits() {
+        let ring = HashRing::new(1, 64, 7);
+        assert_eq!(ring.primary(&[9, 9, 9], 4), 0);
+        assert_eq!(ring.owner(&[9, 9, 9], 4, |_| true), Some(0));
+        assert_eq!(ring.owner(&[9, 9, 9], 4, |_| false), None);
+    }
+
+    #[test]
+    fn dead_owner_fails_over_deterministically_and_minimally() {
+        let ring = HashRing::new(4, 64, 7);
+        let prompt = [5, 6, 7, 8, 1];
+        let primary = ring.primary(&prompt, 4);
+        let survivor = ring
+            .owner(&prompt, 4, |w| w != primary)
+            .expect("three workers still alive");
+        assert_ne!(survivor, primary);
+        // Deterministic: the same failover target every time.
+        assert_eq!(ring.owner(&prompt, 4, |w| w != primary), Some(survivor));
+        // Minimal disruption: keys NOT owned by the dead worker keep
+        // their owner.
+        for p in 0..128u32 {
+            let key = [p * 7 + 3, p, 11, 12];
+            let owner = ring.primary(&key, 4);
+            if owner != primary {
+                assert_eq!(ring.owner(&key, 4, |w| w != primary), Some(owner));
+            }
+        }
+    }
+
+    #[test]
+    fn short_prompts_hash_their_full_length() {
+        let ring = HashRing::new(4, 64, 7);
+        // prefix_len 8 over a 2-token prompt must not panic and must be
+        // deterministic.
+        let a = ring.primary(&[1, 2], 8);
+        assert_eq!(ring.primary(&[1, 2], 8), a);
+    }
+}

@@ -25,6 +25,14 @@
 //! queued. Enveloped v1 traffic (including cancels) flows concurrently,
 //! which the old transport could not do while a legacy wait blocked its
 //! reader thread.
+//!
+//! Submission goes through the router tier: `try_submit_sink` places
+//! each request on a per-worker queue (prefix-affinity by default), and
+//! the router's `RoutedSink` wraps this connection's [`ConnSink`]
+//! transparently — frames are forwarded byte-for-byte while the shard's
+//! queued/inflight gauges track the request lifecycle. A worker killed
+//! mid-request settles the stream with a `finish=cancelled` done frame
+//! through the same path.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};

@@ -35,6 +35,14 @@
 //! gone (connection closed, in-flight work cancelled,
 //! `backpressure_closed` counted).
 //!
+//! Behind admission sits the router tier (`router/`, DESIGN.md §Router
+//! Tier): every submitted request is placed onto one of `workers`
+//! per-worker queues by consistent-hashing its prompt prefix
+//! (`route=affinity`) or round-robin (`route=rr`); queue-full
+//! backpressure and "queue closed" (worker killed mid-flight) surface
+//! through the same error frame as before. The transport is unaware of
+//! worker count — `try_submit_sink` hides the placement.
+//!
 //! A request that cannot start (bad envelope, queue-full backpressure)
 //! gets {"v":1,"req_id":..,"event":"error","error":"..."}; un-enveloped
 //! parse errors get the legacy {"error":"..."} line. Legacy un-enveloped

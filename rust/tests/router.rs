@@ -1,0 +1,241 @@
+//! Router-tier integration (DESIGN.md §Router Tier): single-worker
+//! bit-identity against the bare engine, prefix stickiness across
+//! reconnects at four workers, spill accounting under a hot shard,
+//! worker-death failover with gauges draining to zero, and the route
+//! benchmark's acceptance criterion.
+
+use std::sync::Arc;
+
+use dyspec::bench::experiments::{run_experiment, ExpOpts};
+use dyspec::config::Config;
+use dyspec::coordinator::{Coordinator, FinishReason, GenEvent, GenParams, ModelFactory};
+use dyspec::engine::SpecEngine;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::models::LogitModel;
+
+const SIM_NOISE: f32 = 1.2;
+const SIM_SEED: u64 = 42;
+
+fn factory() -> ModelFactory {
+    Arc::new(|| {
+        let spec = SimSpec::for_dataset("c4", SIM_NOISE, SIM_SEED);
+        let (d, t) = SimModel::pair(spec);
+        (
+            Box::new(d) as Box<dyn LogitModel>,
+            Box::new(t) as Box<dyn LogitModel>,
+        )
+    })
+}
+
+fn cfg(workers: usize) -> Config {
+    let mut cfg = Config::new();
+    cfg.server.workers = workers;
+    cfg.server.queue_capacity = 64;
+    cfg.engine.tree_budget = 16;
+    cfg
+}
+
+/// Tokens for (prompt, seed) served through a one-worker coordinator in
+/// the given route mode.
+fn coord_tokens(route: &str, prompt: &[u32], seed: u64) -> Vec<u32> {
+    let mut c = cfg(1);
+    c.set("route", route).unwrap();
+    let coord = Coordinator::start(c, factory());
+    let params = GenParams {
+        seed: Some(seed),
+        ..GenParams::simple(48, 0.6)
+    };
+    let resp = coord
+        .try_submit(prompt.to_vec(), params)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.worker, 0);
+    coord.shutdown();
+    resp.tokens
+}
+
+/// The differential the router refactor is pinned by: at one worker the
+/// ring short-circuits before any hashing, so the coordinator must
+/// produce the same bytes as the bare fcfs engine — in either route mode.
+#[test]
+fn single_worker_routing_is_bit_identical_to_the_bare_engine() {
+    let prompt: Vec<u32> = (0..32).collect();
+    for seed in [1u64, 77, 4096] {
+        // Today's pipeline: the engine exactly as the fcfs worker builds
+        // it, with the same per-request overrides applied.
+        let c = cfg(1);
+        let spec = SimSpec::for_dataset("c4", SIM_NOISE, SIM_SEED);
+        let (d, t) = SimModel::pair(spec);
+        let mut engine = SpecEngine::new(
+            Box::new(d),
+            Box::new(t),
+            c.engine.clone(),
+            c.regime,
+        )
+        .with_cache(&c.cache)
+        .with_adapt(&c.adapt);
+        engine.cfg.target_temp = 0.6;
+        engine.cfg.max_new_tokens = 48;
+        engine.reseed(seed);
+        let bare = engine.generate(&prompt).tokens;
+        assert_eq!(bare.len(), 48);
+
+        let affinity = coord_tokens("affinity", &prompt, seed);
+        let rr = coord_tokens("rr", &prompt, seed);
+        assert_eq!(
+            affinity, bare,
+            "affinity @ 1 worker diverged from the bare engine (seed {seed})"
+        );
+        assert_eq!(
+            rr, bare,
+            "rr @ 1 worker diverged from the bare engine (seed {seed})"
+        );
+    }
+}
+
+/// Every request sharing a routed prefix lands on the same worker, no
+/// matter how many separate submissions ("reconnects") carry it.
+#[test]
+fn affinity_is_sticky_for_a_prefix_group_across_reconnects() {
+    let mut c = cfg(4);
+    c.set("route_prefix_len", "16").unwrap();
+    let coord = Coordinator::start(c, factory());
+    for g in 0..3u32 {
+        let prefix: Vec<u32> = (0..16).map(|i| 1000 * (g + 1) + i).collect();
+        let expect = coord.router().route(&prefix).unwrap().worker;
+        let mut seen = Vec::new();
+        for salt in 0..4u32 {
+            // Distinct suffix past `route_prefix_len`: a fresh request
+            // (new connection, new tail) with the same routed prefix.
+            let mut p = prefix.clone();
+            p.push(90_000 + salt);
+            let resp = coord.generate(p, 8, 0.0).unwrap();
+            assert_eq!(resp.tokens.len(), 8);
+            seen.push(resp.worker);
+        }
+        assert!(
+            seen.iter().all(|&w| w == expect),
+            "group {g} scattered across workers: {seen:?} (owner {expect})"
+        );
+    }
+    coord.shutdown();
+}
+
+/// A hot prefix shard past `route_max_depth` spills onto the least-loaded
+/// survivors; the spills are counted (globally and on the absorbing
+/// shards) and every request still completes.
+#[test]
+fn hot_shard_spills_to_survivors_and_accounts_for_it() {
+    let mut c = cfg(4);
+    c.set("route_prefix_len", "8").unwrap();
+    c.set("route_max_depth", "1").unwrap();
+    let coord = Coordinator::start(c, factory());
+    let prefix: Vec<u32> = (0..8).map(|i| 7000 + i).collect();
+    let owner = coord.router().route(&prefix).unwrap().worker;
+    let handles: Vec<_> = (0..16u32)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.push(90_000 + i);
+            coord.try_submit(p, GenParams::simple(64, 0.6)).unwrap()
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.wait().unwrap().tokens.len(), 64);
+    }
+    let spilled = coord.metrics.router_spilled();
+    assert!(spilled > 0, "hot shard never spilled at max_depth=1");
+    let stats = coord.router().worker_stats();
+    assert_eq!(
+        stats.iter().map(|w| w.spilled).sum::<u64>(),
+        spilled,
+        "per-shard spill counts disagree with the global counter"
+    );
+    assert_eq!(stats.iter().map(|w| w.routed).sum::<u64>(), 16);
+    assert!(stats[owner].routed >= 1, "owner served none of its prefix");
+    assert_eq!(coord.metrics.completed(), 16);
+    coord.shutdown();
+}
+
+/// Killing a worker cancels its queued + in-flight requests promptly
+/// (each stream still terminates with a `Done`), drains its gauges to
+/// zero on the Prometheus surface, and re-owns its prefixes to a
+/// survivor that keeps serving them.
+#[test]
+fn worker_death_fails_over_and_drains_its_gauges() {
+    let mut c = cfg(4);
+    c.set("route_prefix_len", "8").unwrap();
+    let coord = Coordinator::start(c, factory());
+    let prefix: Vec<u32> = (0..8).map(|i| 5000 + i).collect();
+    let owner = coord.router().route(&prefix).unwrap().worker;
+    // One request demonstrably in flight plus two queued behind it, all
+    // on the doomed shard (fcfs serves one at a time per worker).
+    let handles: Vec<_> = (0..3u32)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.push(90_000 + i);
+            coord
+                .try_submit(p, GenParams::simple(10_000, 0.6))
+                .unwrap()
+        })
+        .collect();
+    match handles[0].events.recv().unwrap() {
+        GenEvent::Chunk { .. } => {}
+        GenEvent::Done(_) => panic!("10k-token request finished instantly"),
+    }
+    assert!(coord.kill_worker(owner));
+    assert!(!coord.kill_worker(owner), "second kill must be a no-op");
+    for h in handles {
+        let resp = h.wait().expect("killed worker dropped a stream");
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(resp.tokens.len() < 10_000);
+    }
+    // Gauges drained and the death is visible on the scrape surface.
+    let stats = &coord.router().worker_stats()[owner];
+    assert!(!stats.alive);
+    assert_eq!((stats.queued, stats.inflight), (0, 0));
+    let prom = coord.prometheus();
+    assert!(
+        prom.contains(&format!("dyspec_worker_alive{{worker=\"{owner}\"}} 0\n")),
+        "dead worker not visible in exposition"
+    );
+    // The prefix re-owns deterministically to a survivor and still serves.
+    let d = coord.router().route(&prefix).unwrap();
+    assert_ne!(d.worker, owner);
+    let resp = coord.generate(prefix, 8, 0.0).unwrap();
+    assert_eq!(resp.tokens.len(), 8);
+    assert_eq!(resp.worker, d.worker);
+    assert!(coord.metrics.router_failover() >= 1);
+    coord.shutdown();
+}
+
+/// The BENCH_route acceptance criterion, on a miniature workload:
+/// affinity's cache hit rate is no worse than rr's at 4 workers while
+/// its prefix locality is strictly higher.
+#[test]
+fn route_benchmark_meets_the_acceptance_criterion() {
+    let opts = ExpOpts {
+        prompts: 2,
+        max_new_tokens: 16,
+        out: None,
+        ..ExpOpts::default()
+    };
+    let tables = run_experiment("route", &opts).unwrap();
+    let t = &tables[0];
+    assert_eq!(t.rows.len(), 4, "expected 1/4 workers x affinity/rr rows");
+    assert_eq!((t.rows[2][0].as_str(), t.rows[2][1].as_str()), ("4", "affinity"));
+    assert_eq!((t.rows[3][0].as_str(), t.rows[3][1].as_str()), ("4", "rr"));
+    let cell = |r: usize, c: usize| t.rows[r][c].parse::<f64>().unwrap();
+    assert!(
+        cell(2, 4) + 1e-9 >= cell(3, 4),
+        "affinity hit rate {} below rr {} at 4 workers",
+        cell(2, 4),
+        cell(3, 4)
+    );
+    assert!(
+        cell(2, 6) > cell(3, 6),
+        "affinity locality {} not above rr {}",
+        cell(2, 6),
+        cell(3, 6)
+    );
+}
