@@ -1,7 +1,9 @@
-//! KV prefix-cache benchmark: cached vs uncached verification cost as the
-//! context grows (see DESIGN.md §KV cache). Shares the runner with
-//! `dyspec bench --experiment cache` and records the result as
-//! BENCH_cache.json at the repo root to seed the perf trajectory.
+//! KV prefix-cache benchmark, two sweeps (see DESIGN.md §KV cache and
+//! §Radix Prefix Cache): cached vs uncached verification cost as one
+//! request's context grows, and radix-on vs radix-off cost for N clients
+//! sharing a system prompt (the cross-request warm start). Shares the
+//! runner with `dyspec bench --experiment cache` and records the result
+//! as BENCH_cache.json at the repo root to seed the perf trajectory.
 //! Env: DYSPEC_BENCH_PROMPTS (prompts per cell), DYSPEC_BENCH_TOKENS.
 use dyspec::bench::experiments::{run_experiment, ExpOpts};
 

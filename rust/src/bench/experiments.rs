@@ -914,16 +914,94 @@ fn cache_cell(
     (pos_per_step, lat, hit)
 }
 
-/// Cache experiment (the tentpole bench): cached vs uncached verification
-/// cost as the context grows. Uncached scoring re-bills the whole prefix
-/// every round, so billed positions/step and virtual latency/token climb
-/// with context length; with the KV prefix cache both stay proportional to
-/// the speculated tree. `--out BENCH_cache.json` records the trajectory.
+/// One shared-prefix cell: `clients` sequential requests on one engine,
+/// every prompt = one shared system prompt of `prompt_len` tokens + a
+/// per-client suffix, KV cache on, radix tree on/off. Returns (mean
+/// billed positions/step, virtual latency/token, cache hit rate, total
+/// warm-start tokens, radix hit rate).
+fn shared_prefix_cell(
+    prompt_len: usize,
+    clients: usize,
+    radix: bool,
+    opts: &ExpOpts,
+) -> (f64, f64, f64, u64, f64) {
+    let spec = SimSpec::for_dataset("c4", opts.noise, opts.seed ^ 0xDA7A);
+    let (draft, target) = SimModel::pair(spec);
+    let cfg = EngineConfig {
+        policy: PolicyKind::DySpec,
+        tree_budget: 32,
+        max_new_tokens: opts.max_new_tokens,
+        target_temp: 0.6,
+        seed: opts.seed,
+        ..EngineConfig::default()
+    };
+    let mut engine =
+        SpecEngine::new(Box::new(draft), Box::new(target), cfg, Some(LatencyRegime::pair_7b()))
+            .with_cache(&CacheConfig {
+                enabled: true,
+                radix,
+                ..CacheConfig::default()
+            });
+    let system = PromptSet::by_name("c4", 1, prompt_len, opts.seed)
+        .expect("dataset profile")
+        .iter()
+        .next()
+        .expect("one prompt")
+        .to_vec();
+    let (mut billed, mut cached, mut steps, mut vsecs, mut tokens) =
+        (0u64, 0u64, 0usize, 0.0f64, 0usize);
+    let mut warm = 0u64;
+    for c in 0..clients {
+        // Same per-client seed radix on and off: the streams (and hence
+        // the step counts) are identical, only the billing moves.
+        engine.reseed(opts.seed ^ (c as u64 + 1));
+        let mut p = system.clone();
+        p.push((c as u32 % 32) + 1);
+        let stats = engine.generate(&p);
+        billed += stats.total_billed_positions();
+        cached += stats.total_cached_positions();
+        steps += stats.steps.len();
+        vsecs += stats.total_virtual_secs();
+        tokens += stats.tokens.len();
+        warm += stats.total_warm_start_tokens();
+    }
+    let s = engine.cache().radix_stats();
+    let radix_hit_rate = if s.lookups == 0 {
+        0.0
+    } else {
+        s.hits as f64 / s.lookups as f64
+    };
+    let pos_per_step = billed as f64 / steps.max(1) as f64;
+    let lat = vsecs / tokens.max(1) as f64;
+    let hit = if billed + cached == 0 {
+        0.0
+    } else {
+        cached as f64 / (billed + cached) as f64
+    };
+    (pos_per_step, lat, hit, warm, radix_hit_rate)
+}
+
+/// Cache experiment (the tentpole bench), two sweeps in one table:
+///
+///   - `context` rows — cached vs uncached verification cost as ONE
+///     request's context grows. Uncached scoring re-bills the whole
+///     prefix every round, so billed positions/step and virtual
+///     latency/token climb with context length; with the KV prefix cache
+///     both stay proportional to the speculated tree.
+///   - `shared` rows — N clients sharing a system prompt, radix prefix
+///     cache off vs on (KV cache on in both): with the radix tree every
+///     client after the first starts warm at the shared prefix, so the
+///     first-round prompt bill collapses and `warm_start_tokens` /
+///     `radix_hit_rate` report the cross-request reuse.
+///
+/// `--out BENCH_cache.json` records the trajectory.
 pub fn cache_context(opts: &ExpOpts) -> BenchTable {
     let mut table = BenchTable::new(
-        "Cache: verify cost vs context length, KV prefix cache off vs on (c4, dyspec, budget 32, 7b regime)",
+        "Cache: verify cost vs context length (cache off vs on) and vs shared prefixes (radix off vs on) (c4, dyspec, budget 32, 7b regime)",
         &[
+            "scenario",
             "prompt_len",
+            "clients",
             "uncached_pos_per_step",
             "cached_pos_per_step",
             "pos_reduction",
@@ -931,13 +1009,17 @@ pub fn cache_context(opts: &ExpOpts) -> BenchTable {
             "cached_lat_per_tok",
             "lat_speedup",
             "hit_rate",
+            "warm_start_tokens",
+            "radix_hit_rate",
         ],
     );
     for prompt_len in [64usize, 256, 512, 1024] {
         let (cold_pos, cold_lat, _) = cache_cell(prompt_len, false, opts);
         let (warm_pos, warm_lat, hit) = cache_cell(prompt_len, true, opts);
         table.row(vec![
+            "context".into(),
             format!("{prompt_len}"),
+            "1".into(),
             format!("{cold_pos:.1}"),
             format!("{warm_pos:.1}"),
             format!("{:.2}x", cold_pos / warm_pos.max(1e-9)),
@@ -945,6 +1027,30 @@ pub fn cache_context(opts: &ExpOpts) -> BenchTable {
             format!("{warm_lat:.5}"),
             format!("{:.2}x", cold_lat / warm_lat.max(1e-12)),
             format!("{hit:.3}"),
+            "0".into(),
+            "0.000".into(),
+        ]);
+    }
+    // Shared-prefix sweep: "uncached" = radix off, "cached" = radix on.
+    let clients = 4usize;
+    for prompt_len in [64usize, 256, 1024] {
+        let (cold_pos, cold_lat, _, _, _) =
+            shared_prefix_cell(prompt_len, clients, false, opts);
+        let (warm_pos, warm_lat, hit, warm_tokens, radix_hit) =
+            shared_prefix_cell(prompt_len, clients, true, opts);
+        table.row(vec![
+            "shared".into(),
+            format!("{prompt_len}"),
+            format!("{clients}"),
+            format!("{cold_pos:.1}"),
+            format!("{warm_pos:.1}"),
+            format!("{:.2}x", cold_pos / warm_pos.max(1e-9)),
+            format!("{cold_lat:.5}"),
+            format!("{warm_lat:.5}"),
+            format!("{:.2}x", cold_lat / warm_lat.max(1e-12)),
+            format!("{hit:.3}"),
+            format!("{warm_tokens}"),
+            format!("{radix_hit:.3}"),
         ]);
     }
     table
@@ -1375,23 +1481,57 @@ mod tests {
     #[test]
     fn cache_experiment_flattens_context_scaling() {
         let t = &run_experiment("cache", &quick()).unwrap()[0];
-        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows.len(), 4 + 3); // context sweep + shared sweep
         let num = |cell: &str| -> f64 { cell.parse().unwrap() };
         let ratio = |row: &Vec<String>| -> f64 {
-            row[3].trim_end_matches('x').parse().unwrap()
+            row[5].trim_end_matches('x').parse().unwrap()
         };
-        for row in &t.rows {
+        let context: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[0] == "context").collect();
+        assert_eq!(context.len(), 4);
+        for row in &context {
             assert!(
-                num(&row[2]) < num(&row[1]),
+                num(&row[4]) < num(&row[3]),
                 "cached {} not below uncached {}",
-                row[2],
-                row[1]
+                row[4],
+                row[3]
             );
-            assert!(num(&row[7]) > 0.0, "zero hit rate");
+            assert!(num(&row[9]) > 0.0, "zero hit rate");
+            assert_eq!(row[10], "0", "context rows must not warm-start");
         }
         assert!(
-            ratio(t.rows.last().unwrap()) > ratio(&t.rows[0]),
+            ratio(context.last().unwrap()) > ratio(context[0]),
             "position reduction did not grow with context"
+        );
+        // Shared-prefix sweep: radix on bills less than radix off, every
+        // client past the first starts warm, and the warm tokens grow
+        // with the shared prompt.
+        let shared: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[0] == "shared").collect();
+        assert_eq!(shared.len(), 3);
+        for row in &shared {
+            assert!(
+                num(&row[4]) < num(&row[3]),
+                "radix on billed {} not below radix off {}",
+                row[4],
+                row[3]
+            );
+            let prompt_len = num(&row[1]);
+            let clients = num(&row[2]);
+            assert!(
+                num(&row[10]) >= prompt_len * (clients - 1.0),
+                "warm tokens {} below shared-prefix floor",
+                row[10]
+            );
+            assert!(
+                (num(&row[11]) - (clients - 1.0) / clients).abs() < 1e-9,
+                "radix hit rate {} off (first client is a cold miss)",
+                row[11]
+            );
+        }
+        assert!(
+            num(&shared[2][10]) > num(&shared[0][10]),
+            "warm tokens did not grow with the shared prompt"
         );
     }
 

@@ -25,6 +25,12 @@
 //! Lease allocation never evicts resident prefixes (speculative blocks are
 //! transient; residency has priority). When the pool is exhausted a node is
 //! simply left untracked and its children restart chains when space allows.
+//!
+//! The same refcount discipline applied on the *inter-request* axis is the
+//! cross-request radix tree (`super::radix`): a lease shares blocks between
+//! branches of one speculated tree for one dispatch, the radix tree shares
+//! blocks between requests across their whole lifetimes — both only ever
+//! free a block when the last reader's reference drops.
 
 use super::pool::{BlockId, KvPool};
 use crate::tree::{NodeId, TokenTree, ROOT};

@@ -1,37 +1,72 @@
 //! Per-worker cache manager: one [`KvPool`] shared by every sequence the
 //! worker multiplexes, a per-sequence resident-prefix chain retained across
-//! speculation rounds, and LRU eviction under the global block budget.
+//! speculation rounds, LRU eviction under the global block budget — and,
+//! with `radix=on`, a cross-request radix prefix tree so a new request
+//! starts resident at its longest shared prefix instead of zero.
 //!
 //! Residency protocol per speculation round:
-//!   1. [`begin_round`] — returns how many prefix positions are resident
-//!      (the dispatch bills only the rest);
+//!   1. [`begin_round`] — touches the LRU clock and reports residency; on
+//!      a sequence's *first* round with radix on, admission walks the
+//!      radix tree over the prompt, pins the matched path, and starts the
+//!      sequence warm at the block-aligned longest shared prefix;
 //!   2. [`lease_tree`] — transient COW block assignment for the speculated
 //!      branches (see [`super::lease`]);
 //!   3. after verification, [`commit`] — extends residency to
-//!      `prefix_len + accepted` (everything the dispatch scored: the miss
-//!      region plus the accepted path; the bonus token has not been a model
-//!      *input* yet, so it is not resident), allocating blocks and evicting
-//!      colder sequences when the budget is tight;
-//!   4. on retirement, [`drop_seq`] — releases the chain (leak-freedom is
-//!      pinned by the scheduler tests).
+//!      `prefix.len() + accepted.len()` (everything the dispatch scored:
+//!      the miss region plus the accepted path; the bonus token has not
+//!      been a model *input* yet, so it is not resident), allocating
+//!      blocks and evicting when the budget is tight; with radix on the
+//!      block-aligned accepted prefix is *published* into the tree
+//!      (private block ownership transfers, duplicates of runs another
+//!      sequence already published are released — cross-request dedup);
+//!   4. on retirement, [`drop_seq`] — releases the private chain and
+//!      unpins the radix path, but leaves shared nodes resident for the
+//!      next request (leak-freedom with radix off is pinned by the
+//!      scheduler tests; radix retention by the tests here).
 //!
-//! Eviction releases only the victim's own references; a block whose
-//! refcount is still held elsewhere (e.g. by an in-flight lease) survives
-//! until that reference is dropped, so eviction can never free a block a
-//! live sequence still reads.
+//! Eviction is pin-aware on two axes: [`evict_lru`] never touches a
+//! sequence that is mid-round (`begin_round` called, `commit` not yet) —
+//! a pinned *set*, not a single protected id — and never frees a radix
+//! node on any live sequence's pinned path (leaf-first, coldest
+//! `last_touch` first). Refcounts independently protect blocks an
+//! in-flight lease still reads.
 
 use std::collections::HashMap;
 
 use super::lease::TreeLease;
 use super::pool::{CacheStats, KvPool};
+use super::radix::{RadixGauges, RadixTree, RADIX_ROOT};
 use crate::config::CacheConfig;
 use crate::tree::TokenTree;
 
+/// Cumulative cross-request radix counters (metrics + bench feed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RadixStats {
+    /// Admission lookups (one per fresh sequence with radix on).
+    pub lookups: u64,
+    /// Lookups that matched at least `radix_min_tokens`.
+    pub hits: u64,
+    /// Total warm-start tokens granted at admission.
+    pub warm_tokens: u64,
+    /// Radix nodes freed by leaf eviction.
+    pub evicted_nodes: u64,
+}
+
 #[derive(Debug, Default)]
 struct SeqKv {
+    /// Private blocks covering `[warm_len, resident)`.
     blocks: Vec<usize>,
-    /// Prefix positions resident (<= blocks.len() * block_tokens).
+    /// Prefix positions resident (warm path + private chain).
     resident: usize,
+    /// Block-aligned positions covered by the pinned radix path.
+    warm_len: usize,
+    /// Deepest pinned radix node (meaningful iff `warm_len > 0`).
+    pinned: usize,
+    /// Admission result not yet consumed by [`CacheManager::take_warm_start`].
+    warm_pending: Option<usize>,
+    /// Mid-round guard: set by `begin_round`, cleared by `commit` /
+    /// `drop_seq`; `evict_lru` never picks a pinned sequence.
+    round_pinned: bool,
     last_used: u64,
 }
 
@@ -40,6 +75,10 @@ struct SeqKv {
 pub struct CacheManager {
     pool: KvPool,
     enabled: bool,
+    radix_on: bool,
+    radix_min_tokens: usize,
+    radix: RadixTree,
+    radix_stats: RadixStats,
     seqs: HashMap<u64, SeqKv>,
     clock: u64,
 }
@@ -49,6 +88,10 @@ impl CacheManager {
         Self {
             pool: KvPool::new(cfg.block_tokens, cfg.max_blocks),
             enabled: cfg.enabled,
+            radix_on: cfg.radix,
+            radix_min_tokens: cfg.radix_min_tokens,
+            radix: RadixTree::new(cfg.block_tokens.max(1)),
+            radix_stats: RadixStats::default(),
             seqs: HashMap::new(),
             clock: 0,
         }
@@ -56,6 +99,11 @@ impl CacheManager {
 
     pub fn enabled(&self) -> bool {
         self.enabled
+    }
+
+    /// True when the cross-request radix tree participates in admission.
+    pub fn radix_enabled(&self) -> bool {
+        self.enabled && self.radix_on
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -70,6 +118,19 @@ impl CacheManager {
         self.pool.stats
     }
 
+    /// Cumulative radix admission counters.
+    pub fn radix_stats(&self) -> RadixStats {
+        RadixStats {
+            evicted_nodes: self.radix.evicted_nodes,
+            ..self.radix_stats
+        }
+    }
+
+    /// Current radix tree shape (nodes / depth / shared blocks).
+    pub fn radix_gauges(&self) -> RadixGauges {
+        self.radix.gauges()
+    }
+
     pub fn used_blocks(&self) -> usize {
         self.pool.used_blocks()
     }
@@ -79,16 +140,45 @@ impl CacheManager {
         self.seqs.get(&id).map(|e| e.resident).unwrap_or(0)
     }
 
-    /// Start a round for `id`: touches the LRU clock and reports residency.
-    pub fn begin_round(&mut self, id: u64) -> usize {
+    /// Start a round for `id`: touches the LRU clock, marks the sequence
+    /// mid-round (protected from eviction until `commit`), and reports
+    /// residency. A sequence's first round with radix on additionally
+    /// walks the radix tree over `prefix` and, on a match of at least
+    /// `radix_min_tokens`, pins the matched path and starts resident at
+    /// the block-aligned longest shared prefix.
+    pub fn begin_round(&mut self, id: u64, prefix: &[u32]) -> usize {
         if !self.enabled {
             return 0;
         }
         self.clock += 1;
         let clock = self.clock;
+        if self.radix_on && !self.seqs.contains_key(&id) {
+            let (node, matched) = self.radix.match_prefix(prefix, clock);
+            self.radix_stats.lookups += 1;
+            let e = self.seqs.entry(id).or_default();
+            if matched > 0 && matched >= self.radix_min_tokens {
+                self.radix.pin_path(node);
+                e.warm_len = matched;
+                e.resident = matched;
+                e.pinned = node;
+                e.warm_pending = Some(matched);
+                self.radix_stats.hits += 1;
+                self.radix_stats.warm_tokens += matched as u64;
+            } else {
+                e.warm_pending = Some(0);
+            }
+        }
         let e = self.seqs.entry(id).or_default();
         e.last_used = clock;
+        e.round_pinned = true;
         e.resident
+    }
+
+    /// Consume the admission result recorded by the `begin_round` that
+    /// freshly admitted `id`: `Some(warm_tokens)` when a radix lookup ran
+    /// (0 = miss), `None` otherwise (known sequence, or radix off).
+    pub fn take_warm_start(&mut self, id: u64) -> Option<usize> {
+        self.seqs.get_mut(&id).and_then(|e| e.warm_pending.take())
     }
 
     /// Record a dispatch's prefix hit/miss split (metrics feed).
@@ -117,39 +207,42 @@ impl CacheManager {
         lease.end(&mut self.pool);
     }
 
-    /// Extend `id`'s residency to `prefix_len + accepted` positions,
-    /// allocating blocks (evicting colder sequences if needed). Under an
-    /// exhausted budget residency only grows as far as blocks allow.
+    /// Extend `id`'s residency to `prefix.len() + accepted.len()`
+    /// positions, allocating blocks (evicting unpinned residency when the
+    /// budget is tight) and — with radix on — publishing the block-aligned
+    /// accepted prefix into the shared tree. Under an exhausted budget
+    /// residency only grows as far as blocks allow. Clears the mid-round
+    /// eviction pin.
     ///
     /// `cached_len` is the resident snapshot the round's dispatch was
     /// billed against: the dispatch wrote KV only for
-    /// `[cached_len, prefix_len)` plus the accepted path. If this sequence
-    /// was evicted mid-round (its resident mark dropped below that
+    /// `[cached_len, prefix.len())` plus the accepted path. If this
+    /// sequence's residency was force-dropped mid-round (below that
     /// snapshot), the written region no longer attaches to a full prefix,
     /// so residency must NOT grow — the sequence re-scores from scratch
     /// next round (pinned by `mid_round_eviction_blocks_resurrection`).
-    pub fn commit(
-        &mut self,
-        id: u64,
-        cached_len: usize,
-        prefix_len: usize,
-        accepted: usize,
-    ) {
+    pub fn commit(&mut self, id: u64, cached_len: usize, prefix: &[u32], accepted: &[u32]) {
         if !self.enabled {
             return;
         }
         self.clock += 1;
         let clock = self.clock;
+        let prefix_len = prefix.len();
         let cur = self.seqs.get(&id).map(|e| e.resident).unwrap_or(0);
         if cur < cached_len.min(prefix_len) {
             if let Some(e) = self.seqs.get_mut(&id) {
                 e.last_used = clock;
+                e.round_pinned = false;
             }
             return;
         }
         let b = self.pool.block_tokens();
-        let target = prefix_len + accepted;
-        let need = target.div_ceil(b);
+        let target = prefix_len + accepted.len();
+        // Self-protect while allocating: the committing sequence must
+        // never become its own eviction victim.
+        self.seqs.entry(id).or_default().round_pinned = true;
+        let warm_len = self.seqs.get(&id).map(|e| e.warm_len).unwrap_or(0);
+        let need = target.saturating_sub(warm_len).div_ceil(b);
         loop {
             let have = self.seqs.entry(id).or_default().blocks.len();
             if have >= need {
@@ -157,41 +250,104 @@ impl CacheManager {
             }
             if let Some(blk) = self.pool.try_alloc() {
                 self.seqs.entry(id).or_default().blocks.push(blk);
-            } else if !self.evict_lru(id) {
+            } else if !self.evict_lru() {
                 break;
             }
         }
         let e = self.seqs.entry(id).or_default();
-        e.resident = target.min(e.blocks.len() * b);
+        e.resident = target.min(e.warm_len + e.blocks.len() * b);
         e.last_used = clock;
+        e.round_pinned = false;
+        if self.radix_on {
+            self.publish_seq(id, prefix, accepted, clock);
+        }
     }
 
-    /// Release everything `id` holds (sequence retired or reset).
+    /// Publish `id`'s block-aligned resident prefix past the already-warm
+    /// path into the radix tree: private block ownership transfers to the
+    /// tree (duplicates of runs another sequence already published are
+    /// released back to the pool), and the pin moves to the deeper node.
+    fn publish_seq(&mut self, id: u64, prefix: &[u32], accepted: &[u32], clock: u64) {
+        let b = self.pool.block_tokens();
+        let Some(e) = self.seqs.get_mut(&id) else {
+            return;
+        };
+        let aligned = (e.resident / b) * b;
+        if aligned <= e.warm_len {
+            return;
+        }
+        let donated: Vec<usize> = e.blocks.drain(..(aligned - e.warm_len) / b).collect();
+        let warm_len = e.warm_len;
+        let old_pin = if warm_len > 0 { Some(e.pinned) } else { None };
+        let mut run: Vec<u32> = Vec::with_capacity(aligned);
+        run.extend_from_slice(&prefix[..prefix.len().min(aligned)]);
+        if run.len() < aligned {
+            run.extend_from_slice(&accepted[..aligned - run.len()]);
+        }
+        let (node, covered) = self
+            .radix
+            .publish(&run, warm_len, donated, &mut self.pool, clock);
+        if let Some(old) = old_pin {
+            self.radix.unpin_path(old);
+        }
+        if node != RADIX_ROOT {
+            self.radix.pin_path(node);
+        }
+        let e = self.seqs.get_mut(&id).expect("publishing a live sequence");
+        e.pinned = node;
+        e.warm_len = covered;
+    }
+
+    /// Release `id`'s private chain and unpin its radix path. Shared
+    /// radix nodes stay resident — the whole point of the tree is that a
+    /// retired request's prefix warms the next one; `evict_lru` reclaims
+    /// them leaf-first under budget pressure.
     pub fn drop_seq(&mut self, id: u64) {
         if let Some(e) = self.seqs.remove(&id) {
             for blk in e.blocks {
                 self.pool.release(blk);
             }
+            if e.warm_len > 0 {
+                self.radix.unpin_path(e.pinned);
+            }
         }
     }
 
-    /// Evict the least-recently-used sequence other than `protect`.
-    /// Returns false when there is no evictable sequence left.
-    pub fn evict_lru(&mut self, protect: u64) -> bool {
+    /// Evict one victim under budget pressure, pin-aware on both axes:
+    /// first the coldest *unpinned* radix leaf (a shared prefix no live
+    /// sequence reads), then the least-recently-used sequence that is not
+    /// mid-round. Returns false when nothing is evictable (everything
+    /// left is pinned by live sequences).
+    pub fn evict_lru(&mut self) -> bool {
+        if self.radix_on && self.radix.evict_leaf(&mut self.pool) > 0 {
+            self.pool.stats.evictions += 1;
+            return true;
+        }
         let victim = self
             .seqs
             .iter()
-            .filter(|(k, v)| **k != protect && !v.blocks.is_empty())
+            .filter(|(_, v)| !v.round_pinned && !v.blocks.is_empty())
             .min_by_key(|(_, v)| v.last_used)
             .map(|(k, _)| *k);
         let Some(vid) = victim else {
             return false;
         };
-        let blocks = {
-            let e = self.seqs.get_mut(&vid).expect("victim exists");
-            e.resident = 0;
-            std::mem::take(&mut e.blocks)
+        self.evict_residency(vid)
+    }
+
+    /// Force-drop `id`'s private residency back to its pinned warm path
+    /// (ops hook + external-pressure tests; normal pressure goes through
+    /// the pin-aware [`evict_lru`]). Returns false if `id` holds no
+    /// private blocks.
+    pub fn evict_residency(&mut self, id: u64) -> bool {
+        let Some(e) = self.seqs.get_mut(&id) else {
+            return false;
         };
+        if e.blocks.is_empty() {
+            return false;
+        }
+        e.resident = e.warm_len;
+        let blocks = std::mem::take(&mut e.blocks);
         for blk in blocks {
             self.pool.release(blk);
         }
@@ -209,19 +365,32 @@ mod tests {
             enabled: true,
             block_tokens: 4,
             max_blocks: blocks,
+            ..CacheConfig::default()
         }
+    }
+
+    fn radix_cfg(blocks: usize) -> CacheConfig {
+        CacheConfig {
+            radix: true,
+            radix_min_tokens: 4,
+            ..cfg(blocks)
+        }
+    }
+
+    fn toks(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
     }
 
     #[test]
     fn residency_grows_with_commits_and_drops_clean() {
         let mut m = CacheManager::new(&cfg(64));
-        assert_eq!(m.begin_round(1), 0);
-        m.commit(1, 0, 10, 3); // 13 tokens -> 4 blocks
+        assert_eq!(m.begin_round(1, &toks(10)), 0);
+        m.commit(1, 0, &toks(10), &toks(3)); // 13 tokens -> 4 blocks
         assert_eq!(m.resident(1), 13);
         assert_eq!(m.used_blocks(), 4);
         // next round: prefix grew to 14 (accepted 3 + bonus), 13 resident
-        assert_eq!(m.begin_round(1), 13);
-        m.commit(1, 13, 14, 2); // 16 tokens -> 4 blocks, no new alloc
+        assert_eq!(m.begin_round(1, &toks(14)), 13);
+        m.commit(1, 13, &toks(14), &toks(2)); // 16 tokens -> 4 blocks, no new alloc
         assert_eq!(m.resident(1), 16);
         assert_eq!(m.used_blocks(), 4);
         m.drop_seq(1);
@@ -234,9 +403,10 @@ mod tests {
             enabled: false,
             block_tokens: 4,
             max_blocks: 8,
+            ..CacheConfig::default()
         });
-        assert_eq!(m.begin_round(1), 0);
-        m.commit(1, 0, 100, 10);
+        assert_eq!(m.begin_round(1, &toks(100)), 0);
+        m.commit(1, 0, &toks(100), &toks(10));
         assert_eq!(m.resident(1), 0);
         assert_eq!(m.used_blocks(), 0);
     }
@@ -244,14 +414,14 @@ mod tests {
     #[test]
     fn budget_pressure_evicts_lru_sequence() {
         let mut m = CacheManager::new(&cfg(4)); // 16 tokens total
-        m.begin_round(1);
-        m.commit(1, 0, 8, 0); // 2 blocks
-        m.begin_round(2);
-        m.commit(2, 0, 8, 0); // 2 blocks; pool full
+        m.begin_round(1, &toks(8));
+        m.commit(1, 0, &toks(8), &[]); // 2 blocks
+        m.begin_round(2, &toks(8));
+        m.commit(2, 0, &toks(8), &[]); // 2 blocks; pool full
         assert_eq!(m.used_blocks(), 4);
         // Seq 3 needs space: seq 1 is LRU and must be evicted.
-        m.begin_round(3);
-        m.commit(3, 0, 8, 0);
+        m.begin_round(3, &toks(8));
+        m.commit(3, 0, &toks(8), &[]);
         assert_eq!(m.resident(3), 8);
         assert_eq!(m.resident(1), 0, "LRU sequence not evicted");
         assert_eq!(m.resident(2), 8, "warmer sequence wrongly evicted");
@@ -262,30 +432,60 @@ mod tests {
     #[test]
     fn mid_round_eviction_blocks_resurrection() {
         let mut m = CacheManager::new(&cfg(64));
-        m.begin_round(1);
-        m.commit(1, 0, 8, 0);
-        let snap = m.begin_round(1);
+        m.begin_round(1, &toks(8));
+        m.commit(1, 0, &toks(8), &[]);
+        let snap = m.begin_round(1, &toks(9));
         assert_eq!(snap, 8);
-        // Another sequence's pressure evicts seq 1 mid-round…
-        assert!(m.evict_lru(2));
+        // External pressure force-drops seq 1's residency mid-round
+        // (normal `evict_lru` pressure can no longer pick a mid-round
+        // sequence — that path is pinned)…
+        assert!(m.evict_residency(1));
         // …so committing against the stale snapshot must NOT mark the
         // never-rewritten region resident again.
-        m.commit(1, snap, 9, 3);
+        m.commit(1, snap, &toks(9), &toks(3));
         assert_eq!(m.resident(1), 0, "residency resurrected after eviction");
         // The next round re-scores from scratch and residency grows again.
-        assert_eq!(m.begin_round(1), 0);
-        m.commit(1, 0, 9, 3);
+        assert_eq!(m.begin_round(1, &toks(9)), 0);
+        m.commit(1, 0, &toks(9), &toks(3));
         assert_eq!(m.resident(1), 12);
         m.drop_seq(1);
         assert_eq!(m.used_blocks(), 0);
     }
 
     #[test]
+    fn mid_round_sequences_survive_pressure_together() {
+        // Regression for the old `evict_lru(protect: u64)` single-id
+        // guard: with several sequences mid-round, pressure from one
+        // commit must not evict any *other* live round's residency.
+        let mut m = CacheManager::new(&cfg(2)); // 8 tokens total
+        m.begin_round(2, &toks(4));
+        m.commit(2, 0, &toks(4), &[]); // 1 block
+        m.begin_round(3, &toks(4));
+        m.commit(3, 0, &toks(4), &[]); // 1 block; pool full
+        // Next batched round: all three sequences begin before any commits.
+        m.begin_round(1, &toks(4));
+        assert_eq!(m.begin_round(2, &toks(5)), 4);
+        assert_eq!(m.begin_round(3, &toks(5)), 4);
+        // Seq 1's commit finds the pool full and NO evictable victim:
+        // seqs 2 and 3 are mid-round (the old code would have evicted
+        // seq 2 here, protecting only the committing id).
+        m.commit(1, 0, &toks(4), &[]);
+        assert_eq!(m.resident(1), 0, "seq 1 must wait, not steal");
+        assert_eq!(m.resident(2), 4, "mid-round sequence evicted");
+        assert_eq!(m.resident(3), 4, "mid-round sequence evicted");
+        assert_eq!(m.stats().evictions, 0);
+        m.commit(2, 4, &toks(5), &[]);
+        m.commit(3, 4, &toks(5), &[]);
+        assert!(m.resident(2) >= 4);
+        assert!(m.resident(3) >= 4);
+    }
+
+    #[test]
     fn eviction_cannot_free_leased_blocks() {
         use crate::tree::{TokenTree, ROOT};
         let mut m = CacheManager::new(&cfg(3));
-        m.begin_round(1);
-        m.commit(1, 0, 4, 0); // seq 1 holds 1 block
+        m.begin_round(1, &toks(4));
+        m.commit(1, 0, &toks(4), &[]); // seq 1 holds 1 block
         // A tree lease for seq 2 takes the remaining blocks.
         let mut tree = TokenTree::new(0, vec![]);
         let a = tree.add_child(ROOT, 1, 0.9);
@@ -295,8 +495,8 @@ mod tests {
         assert_eq!(m.used_blocks(), 3);
         // Committing a huge prefix for seq 3 evicts seq 1 but can never
         // free the leased blocks: refcounts protect them.
-        m.begin_round(3);
-        m.commit(3, 0, 12, 0);
+        m.begin_round(3, &toks(12));
+        m.commit(3, 0, &toks(12), &[]);
         assert!(m.pool().refcount(leased) > 0, "leased block freed");
         assert_eq!(m.resident(1), 0);
         // Seq 3 got only what eviction could free (1 block = 4 tokens).
@@ -304,5 +504,104 @@ mod tests {
         m.end_lease(lease, &tree, &[]);
         m.drop_seq(3);
         assert_eq!(m.used_blocks(), 0);
+    }
+
+    #[test]
+    fn second_request_starts_warm_at_the_shared_prefix() {
+        let mut m = CacheManager::new(&radix_cfg(64));
+        // Request 1: 10-token prompt, 3 accepted; then it retires.
+        let prompt1 = toks(10);
+        assert_eq!(m.begin_round(1, &prompt1), 0, "cold tree: no warm start");
+        assert_eq!(m.take_warm_start(1), Some(0));
+        m.commit(1, 0, &prompt1, &[90, 91, 92]);
+        assert_eq!(m.resident(1), 13);
+        m.drop_seq(1);
+        // The block-aligned accepted prefix (12 tokens = 3 blocks) stays
+        // resident in the tree after retirement.
+        assert_eq!(m.used_blocks(), 3, "shared nodes freed on drop");
+        assert_eq!(m.radix_gauges().shared_blocks, 3);
+        // Request 2 shares the first 8 prompt tokens, then diverges.
+        let mut prompt2 = toks(8);
+        prompt2.extend([500, 501, 502, 503]);
+        let warm = m.begin_round(2, &prompt2);
+        assert_eq!(warm, 8, "admission missed the shared prefix");
+        assert_eq!(m.take_warm_start(2), Some(8));
+        assert_eq!(m.take_warm_start(2), None, "warm start consumed twice");
+        // Billing: request 2's first dispatch computes strictly fewer
+        // positions than request 1's (the acceptance criterion).
+        let rows = 4;
+        let cold = super::super::verify_bill(prompt1.len(), 0, rows, 4);
+        let warm_bill = super::super::verify_bill(prompt2.len(), warm, rows, 4);
+        assert!(warm_bill.billed_positions < cold.billed_positions);
+        assert_eq!(warm_bill.cached_positions, 8);
+        let s = m.radix_stats();
+        assert_eq!((s.lookups, s.hits, s.warm_tokens), (2, 1, 8));
+        m.commit(2, warm, &prompt2, &[]);
+        m.drop_seq(2);
+    }
+
+    #[test]
+    fn radix_blocks_drain_to_zero_after_all_sharers_retire() {
+        let mut m = CacheManager::new(&radix_cfg(64));
+        let shared = toks(8);
+        // Two concurrent sequences share the prompt; the second is
+        // admitted warm off the first's published prefix.
+        m.begin_round(1, &shared);
+        m.commit(1, 0, &shared, &[]); // publishes 2 blocks
+        assert_eq!(m.begin_round(2, &shared), 8, "second sharer starts warm");
+        m.commit(2, 8, &shared, &[40, 41, 42, 43]);
+        // Dedup: the shared 2 blocks exist once; seq 2 published 1 more.
+        assert_eq!(m.used_blocks(), 3);
+        m.drop_seq(1);
+        m.drop_seq(2);
+        assert_eq!(m.used_blocks(), 3, "retirement must not free shared nodes");
+        // With no pins left, eviction drains the tree leaf-first to zero.
+        while m.evict_lru() {}
+        assert_eq!(m.used_blocks(), 0, "refcounts leaked after all sharers retired");
+        assert_eq!(m.radix_gauges().shared_blocks, 0);
+        assert!(m.radix_stats().evicted_nodes >= 2);
+    }
+
+    #[test]
+    fn eviction_never_frees_a_live_pinned_radix_path() {
+        let mut m = CacheManager::new(&radix_cfg(3));
+        let shared = toks(8);
+        m.begin_round(1, &shared);
+        m.commit(1, 0, &shared, &[]); // 2 blocks published + pinned by seq 1
+        // Seq 2 (disjoint prompt) needs all 3 blocks; only the 1
+        // unpinned block of headroom exists, so its residency is capped —
+        // seq 1's pinned path must survive untouched.
+        let other: Vec<u32> = (900..912).collect();
+        m.begin_round(2, &other);
+        m.commit(2, 0, &other, &[]);
+        assert_eq!(m.resident(1), 8, "pinned radix path evicted");
+        assert!(m.radix_gauges().shared_blocks >= 2);
+        assert!(m.resident(2) <= 4);
+        m.drop_seq(1);
+        m.drop_seq(2);
+        while m.evict_lru() {}
+        assert_eq!(m.used_blocks(), 0);
+    }
+
+    #[test]
+    fn short_matches_below_radix_min_tokens_stay_cold() {
+        let mut m = CacheManager::new(&CacheConfig {
+            radix: true,
+            radix_min_tokens: 8,
+            ..cfg(64)
+        });
+        let shared = toks(8);
+        m.begin_round(1, &shared);
+        m.commit(1, 0, &shared, &[]);
+        m.drop_seq(1);
+        // Only one block (4 tokens) is shared — below the 8-token floor.
+        let mut short = toks(4);
+        short.extend([700, 701, 702, 703]);
+        assert_eq!(m.begin_round(2, &short), 0, "sub-threshold match pinned");
+        assert_eq!(m.take_warm_start(2), Some(0));
+        // A full 8-token match clears the floor.
+        assert_eq!(m.begin_round(3, &shared), 8);
+        m.drop_seq(2);
+        m.drop_seq(3);
     }
 }

@@ -7,7 +7,11 @@
 //!
 //!   - [`pool`] — refcounted paged block allocator under a global budget;
 //!   - [`manager`] — per-worker residency: accepted-prefix chains retained
-//!     across speculation rounds, LRU eviction, per-sequence drop;
+//!     across speculation rounds, pin-aware eviction, per-sequence drop;
+//!   - [`radix`] — cross-request radix prefix tree (`radix=on`): committed
+//!     prefixes are published into a shared block-aligned token tree so
+//!     the next request starts resident at its longest shared prefix
+//!     (DESIGN.md §Radix Prefix Cache);
 //!   - [`lease`] — transient copy-on-write block assignment for one
 //!     speculated tree (branches share ancestor blocks exactly where the
 //!     `tree::mask` attention mask lets them attend);
@@ -24,10 +28,12 @@
 pub mod lease;
 pub mod manager;
 pub mod pool;
+pub mod radix;
 
 pub use lease::TreeLease;
-pub use manager::CacheManager;
+pub use manager::{CacheManager, RadixStats};
 pub use pool::{BlockId, CacheStats, KvPool};
+pub use radix::{RadixGauges, RadixTree};
 
 /// Per-dispatch verify-cost split for one sequence's slice.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

@@ -5,9 +5,11 @@
 //! (`max_blocks`). Ownership is reference-counted: a sequence's resident
 //! prefix holds one reference per block, and a speculation-round tree lease
 //! adds references wherever branches share an ancestor's tail block
-//! (copy-on-write forks allocate instead). A block returns to the free list
-//! only when its refcount hits zero — eviction can therefore never free a
-//! block that a live lease or sequence still references.
+//! (copy-on-write forks allocate instead), and the cross-request radix
+//! tree (`cache::radix`) holds one reference per block of every published
+//! run it retains. A block returns to the free list only when its refcount
+//! hits zero — eviction can therefore never free a block that a live
+//! lease, sequence, or radix node still references.
 
 /// Identifier of one KV block (a slot index into the pool).
 pub type BlockId = usize;

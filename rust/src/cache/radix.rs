@@ -1,0 +1,438 @@
+//! Cross-request radix prefix tree (DESIGN.md §Radix Prefix Cache).
+//!
+//! The pool (`pool.rs`) retains accepted prefixes *per sequence*; at
+//! many-users scale the dominant reuse is *across* requests — shared
+//! system prompts, few-shot templates, multi-turn resumption. This tree
+//! extends the PR 2 refcount discipline to the inter-request axis: nodes
+//! own block-aligned token runs with one pool reference per block, held
+//! by the tree itself, so a prefix stays resident after every sequence
+//! that produced it has retired.
+//!
+//! Invariants:
+//!
+//!   - every non-root node's run is a whole number of blocks
+//!     (`tokens.len() == blocks.len() * block_tokens`); the root owns the
+//!     empty run and no blocks;
+//!   - children of one node start with pairwise-distinct tokens, so
+//!     longest-prefix matching is deterministic;
+//!   - `pins` counts live sequences whose pinned path passes through the
+//!     node; eviction (`evict_leaf`) only ever frees an *unpinned leaf*,
+//!     coldest `last_touch` first, so it can never free a node on any
+//!     live sequence's pinned path;
+//!   - splitting (`match_prefix` at a mid-node divergence) rewires but
+//!     never changes the token spelling of any root-to-node path, so a
+//!     pinned node id stays valid across splits performed by other
+//!     sequences.
+
+use super::pool::{BlockId, KvPool};
+
+/// Node id of the root (empty run; never evicted, never holds blocks).
+pub const RADIX_ROOT: usize = 0;
+
+/// Gauges over the current tree shape, read per step for the metrics
+/// snapshot (`dyspec_radix_*`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RadixGauges {
+    /// Live nodes, excluding the root.
+    pub nodes: usize,
+    /// Longest root-to-leaf path, in tokens.
+    pub depth_tokens: usize,
+    /// KV blocks owned by the tree (shared across requests).
+    pub shared_blocks: usize,
+}
+
+#[derive(Debug, Default)]
+struct RadixNode {
+    /// Token run owned by this node (block-aligned except the root).
+    tokens: Vec<u32>,
+    /// One pool reference per block of the run, held by the tree.
+    blocks: Vec<BlockId>,
+    children: Vec<usize>,
+    parent: usize,
+    /// Live sequences whose pinned path passes through this node.
+    pins: u32,
+    /// Manager clock at the last admission/publish touching this node.
+    last_touch: u64,
+    /// Slot liveness — evicted slots are recycled through `free_slots`.
+    live: bool,
+}
+
+/// Block-aligned token radix tree over the refcounted pool.
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<RadixNode>,
+    free_slots: Vec<usize>,
+    block_tokens: usize,
+    resident_blocks: usize,
+    /// Nodes freed by leaf eviction (monotone counter).
+    pub evicted_nodes: u64,
+}
+
+impl RadixTree {
+    pub fn new(block_tokens: usize) -> Self {
+        let root = RadixNode {
+            live: true,
+            ..RadixNode::default()
+        };
+        Self {
+            nodes: vec![root],
+            free_slots: Vec::new(),
+            block_tokens: block_tokens.max(1),
+            resident_blocks: 0,
+            evicted_nodes: 0,
+        }
+    }
+
+    /// KV blocks currently owned by the tree.
+    pub fn resident_blocks(&self) -> usize {
+        self.resident_blocks
+    }
+
+    pub fn gauges(&self) -> RadixGauges {
+        RadixGauges {
+            nodes: self.nodes.iter().filter(|n| n.live).count() - 1,
+            depth_tokens: self.max_depth_tokens(),
+            shared_blocks: self.resident_blocks,
+        }
+    }
+
+    fn max_depth_tokens(&self) -> usize {
+        let mut max = 0;
+        let mut stack = vec![(RADIX_ROOT, 0usize)];
+        while let Some((id, depth)) = stack.pop() {
+            max = max.max(depth);
+            for &c in &self.nodes[id].children {
+                stack.push((c, depth + self.nodes[c].tokens.len()));
+            }
+        }
+        max
+    }
+
+    fn alloc_node(&mut self, node: RadixNode) -> usize {
+        debug_assert!(node.live);
+        debug_assert_eq!(
+            node.tokens.len(),
+            node.blocks.len() * self.block_tokens,
+            "radix run must be block-aligned"
+        );
+        if let Some(slot) = self.free_slots.pop() {
+            self.nodes[slot] = node;
+            slot
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Walk `tokens` from the root, splitting a node at the block-aligned
+    /// divergence point if the match ends mid-run, and return the deepest
+    /// node on the matched path plus the matched token count (a multiple
+    /// of `block_tokens`). Touches every node on the path.
+    pub fn match_prefix(&mut self, tokens: &[u32], clock: u64) -> (usize, usize) {
+        let b = self.block_tokens;
+        let mut cur = RADIX_ROOT;
+        let mut matched = 0usize;
+        self.nodes[cur].last_touch = clock;
+        loop {
+            let rest = &tokens[matched..];
+            if rest.len() < b {
+                break;
+            }
+            let Some(&child) = self.nodes[cur]
+                .children
+                .iter()
+                .find(|&&c| self.nodes[c].tokens[0] == rest[0])
+            else {
+                break;
+            };
+            let run = &self.nodes[child].tokens;
+            let common = run.iter().zip(rest.iter()).take_while(|(x, y)| x == y).count();
+            let aligned = (common / b) * b;
+            if aligned == 0 {
+                break;
+            }
+            if aligned == run.len() {
+                matched += aligned;
+                cur = child;
+                self.nodes[cur].last_touch = clock;
+                continue;
+            }
+            // Divergence inside the run: split so the shared head becomes
+            // its own node. The tail (and any deeper query tokens) diverge
+            // within one block, so no further whole-block match exists.
+            let upper = self.split(child, aligned, clock);
+            matched += aligned;
+            cur = upper;
+            break;
+        }
+        (cur, matched)
+    }
+
+    /// Split `child` at `at_tokens` (block-aligned, strictly inside the
+    /// run): a new upper node takes the head run + blocks, `child` keeps
+    /// the tail. Pinned paths through `child` pass through the new upper
+    /// node, so it inherits the pin count.
+    fn split(&mut self, child: usize, at_tokens: usize, clock: u64) -> usize {
+        let b = self.block_tokens;
+        debug_assert!(at_tokens % b == 0);
+        debug_assert!(at_tokens > 0 && at_tokens < self.nodes[child].tokens.len());
+        let parent = self.nodes[child].parent;
+        let head_tokens: Vec<u32> = self.nodes[child].tokens.drain(..at_tokens).collect();
+        let head_blocks: Vec<BlockId> = self.nodes[child].blocks.drain(..at_tokens / b).collect();
+        let upper = self.alloc_node(RadixNode {
+            tokens: head_tokens,
+            blocks: head_blocks,
+            children: vec![child],
+            parent,
+            pins: self.nodes[child].pins,
+            last_touch: self.nodes[child].last_touch.max(clock),
+            live: true,
+        });
+        let slot = self.nodes[parent]
+            .children
+            .iter()
+            .position(|&c| c == child)
+            .expect("split child missing from parent");
+        self.nodes[parent].children[slot] = upper;
+        self.nodes[child].parent = upper;
+        upper
+    }
+
+    /// Publish `tokens` (block-aligned length) into the tree. The caller
+    /// donates one already-owned pool block per run block past
+    /// `from_tokens` (ownership transfers to the tree); donations for
+    /// ranges the tree already holds are released back to the pool
+    /// (cross-request dedup). Returns the deepest node covering the run
+    /// and the covered token count.
+    pub fn publish(
+        &mut self,
+        tokens: &[u32],
+        from_tokens: usize,
+        donated: Vec<BlockId>,
+        pool: &mut KvPool,
+        clock: u64,
+    ) -> (usize, usize) {
+        let b = self.block_tokens;
+        debug_assert!(tokens.len() % b == 0 && from_tokens % b == 0);
+        debug_assert_eq!(donated.len() * b, tokens.len() - from_tokens);
+        let (node, matched) = self.match_prefix(tokens, clock);
+        debug_assert!(
+            matched >= from_tokens,
+            "pinned path missing from radix tree"
+        );
+        let mut donor = donated.into_iter();
+        // Another sequence already published [from_tokens, matched): the
+        // donor's private copies of those blocks are redundant.
+        for _ in 0..(matched - from_tokens) / b {
+            if let Some(blk) = donor.next() {
+                pool.release(blk);
+            }
+        }
+        let rest: Vec<BlockId> = donor.collect();
+        if rest.is_empty() {
+            return (node, matched);
+        }
+        let run = tokens[matched..matched + rest.len() * b].to_vec();
+        self.resident_blocks += rest.len();
+        let child = self.alloc_node(RadixNode {
+            tokens: run,
+            blocks: rest,
+            children: Vec::new(),
+            parent: node,
+            pins: 0,
+            last_touch: clock,
+            live: true,
+        });
+        let covered = matched + self.nodes[child].tokens.len();
+        self.nodes[node].children.push(child);
+        (child, covered)
+    }
+
+    /// Pin the root-to-`id` path for one live sequence.
+    pub fn pin_path(&mut self, mut id: usize) {
+        while id != RADIX_ROOT {
+            self.nodes[id].pins += 1;
+            id = self.nodes[id].parent;
+        }
+    }
+
+    /// Drop one sequence's pin on the root-to-`id` path.
+    pub fn unpin_path(&mut self, mut id: usize) {
+        while id != RADIX_ROOT {
+            debug_assert!(self.nodes[id].pins > 0, "unpin of an unpinned node");
+            self.nodes[id].pins = self.nodes[id].pins.saturating_sub(1);
+            id = self.nodes[id].parent;
+        }
+    }
+
+    /// Evict the coldest unpinned leaf, releasing its blocks to the pool.
+    /// Returns the number of blocks freed (0 = nothing evictable: every
+    /// remaining node is on a live sequence's pinned path, or the tree is
+    /// empty). Repeated calls walk up the tree as parents become leaves.
+    pub fn evict_leaf(&mut self, pool: &mut KvPool) -> usize {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| {
+                *i != RADIX_ROOT && n.live && n.pins == 0 && n.children.is_empty()
+            })
+            .min_by_key(|(_, n)| n.last_touch)
+            .map(|(i, _)| i);
+        let Some(v) = victim else {
+            return 0;
+        };
+        let node = std::mem::take(&mut self.nodes[v]);
+        let freed = node.blocks.len();
+        for blk in node.blocks {
+            pool.release(blk);
+        }
+        self.resident_blocks -= freed;
+        let parent = node.parent;
+        self.nodes[parent].children.retain(|&c| c != v);
+        self.free_slots.push(v);
+        self.evicted_nodes += 1;
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: usize = 4;
+
+    fn pool() -> KvPool {
+        KvPool::new(B, 64)
+    }
+
+    /// Allocate `n` pool blocks to donate.
+    fn donate(pool: &mut KvPool, n: usize) -> Vec<BlockId> {
+        (0..n).map(|_| pool.try_alloc().unwrap()).collect()
+    }
+
+    fn run(start: u32, len: usize) -> Vec<u32> {
+        (0..len as u32).map(|i| start + i).collect()
+    }
+
+    #[test]
+    fn publish_then_match_full_prefix() {
+        let mut p = pool();
+        let mut t = RadixTree::new(B);
+        let toks = run(100, 8);
+        let d = donate(&mut p, 2);
+        let (node, covered) = t.publish(&toks, 0, d, &mut p, 1);
+        assert_eq!(covered, 8);
+        assert_ne!(node, RADIX_ROOT);
+        assert_eq!(t.resident_blocks(), 2);
+        // A longer query matches exactly the published 8 tokens.
+        let mut q = toks.clone();
+        q.extend(run(900, 4));
+        let (m, matched) = t.match_prefix(&q, 2);
+        assert_eq!((m, matched), (node, 8));
+        // A disjoint query matches nothing.
+        let (m2, matched2) = t.match_prefix(&run(500, 8), 3);
+        assert_eq!((m2, matched2), (RADIX_ROOT, 0));
+    }
+
+    #[test]
+    fn node_splits_at_block_aligned_divergence() {
+        let mut p = pool();
+        let mut t = RadixTree::new(B);
+        // First publish: 3 blocks [100..112).
+        let a = run(100, 12);
+        let d = donate(&mut p, 3);
+        t.publish(&a, 0, d, &mut p, 1);
+        assert_eq!(t.gauges().nodes, 1);
+        // Second run shares the first block, diverges in the second.
+        let mut b2 = run(100, B);
+        b2.extend(run(700, 8));
+        let d = donate(&mut p, 3);
+        let (nb, covered) = t.publish(&b2, 0, d, &mut p, 2);
+        assert_eq!(covered, 12);
+        // Split produced: shared head (1 block) + old tail + new tail.
+        let g = t.gauges();
+        assert_eq!(g.nodes, 3);
+        // One shared block was deduped back to the pool: 3 + 3 donated,
+        // 1 released, 5 resident in the tree.
+        assert_eq!(g.shared_blocks, 5);
+        assert_eq!(p.used_blocks(), 5);
+        // Both full runs still match end to end.
+        let (ma, la) = t.match_prefix(&a, 3);
+        assert_eq!(la, 12);
+        assert_ne!(ma, RADIX_ROOT);
+        let (mb, lb) = t.match_prefix(&b2, 4);
+        assert_eq!((mb, lb), (nb, 12));
+        assert_eq!(g.depth_tokens, 12);
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_and_never_frees_a_pinned_path() {
+        let mut p = pool();
+        let mut t = RadixTree::new(B);
+        let a = run(100, 8);
+        let d = donate(&mut p, 2);
+        let (na, _) = t.publish(&a, 0, d, &mut p, 1);
+        // A colder sibling branch, unpinned.
+        let b2 = run(300, 8);
+        let d = donate(&mut p, 2);
+        let (nb, _) = t.publish(&b2, 0, d, &mut p, 2);
+        t.pin_path(na);
+        // Touch the unpinned branch so it is *newer* — pins, not
+        // recency, must protect the pinned path.
+        t.match_prefix(&b2, 5);
+        assert_eq!(t.evict_leaf(&mut p), 2, "unpinned leaf goes first");
+        assert_eq!(t.gauges().nodes, 1);
+        // Only the pinned path remains: nothing evictable.
+        assert_eq!(t.evict_leaf(&mut p), 0);
+        let (m, l) = t.match_prefix(&a, 6);
+        assert_eq!((m, l), (na, 8));
+        // Unpinning releases it for eviction; the tree drains to zero.
+        t.unpin_path(na);
+        assert_eq!(t.evict_leaf(&mut p), 2);
+        assert_eq!(t.resident_blocks(), 0);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(t.evicted_nodes, 2);
+        let _ = nb;
+    }
+
+    #[test]
+    fn split_preserves_pins_on_the_shared_head() {
+        let mut p = pool();
+        let mut t = RadixTree::new(B);
+        let a = run(100, 8);
+        let d = donate(&mut p, 2);
+        let (na, _) = t.publish(&a, 0, d, &mut p, 1);
+        t.pin_path(na);
+        // A second request diverges after the first block, splitting the
+        // pinned node. The pinned path must survive eviction pressure.
+        let mut b2 = run(100, B);
+        b2.extend(run(800, B));
+        let d = donate(&mut p, 2);
+        let (nb, _) = t.publish(&b2, 0, d, &mut p, 2);
+        // Evict everything evictable: only the unpinned fork may go.
+        let mut freed = 0;
+        while let n @ 1.. = t.evict_leaf(&mut p) {
+            freed += n;
+        }
+        assert_eq!(freed, 1, "only the unpinned divergent block is evictable");
+        let (m, l) = t.match_prefix(&a, 9);
+        assert_eq!(l, 8, "pinned run intact across the split");
+        assert_eq!(m, na, "pinned node id survives the split");
+        let _ = nb;
+    }
+
+    #[test]
+    fn partial_block_tail_is_not_published_or_matched() {
+        let mut p = pool();
+        let mut t = RadixTree::new(B);
+        let toks = run(100, 8);
+        let d = donate(&mut p, 2);
+        t.publish(&toks, 0, d, &mut p, 1);
+        // Query shares 6 tokens (1.5 blocks): match stops at the block edge.
+        let mut q = run(100, 6);
+        q.extend(run(900, 6));
+        let (_, matched) = t.match_prefix(&q, 2);
+        assert_eq!(matched, B);
+    }
+}

@@ -208,6 +208,15 @@ pub struct CacheConfig {
     /// Global per-worker block budget; LRU sequences are evicted when a
     /// commit cannot allocate within it.
     pub max_blocks: usize,
+    /// Cross-request radix prefix tree (`radix=on`): committed prefixes
+    /// stay resident in a shared token-keyed tree after their sequence
+    /// retires, so the next request starts warm at its longest shared
+    /// prefix (DESIGN.md §Radix Prefix Cache). Default off: per-sequence
+    /// residency only, bit-identical billing to the pre-radix pipeline.
+    pub radix: bool,
+    /// Minimum matched tokens for a radix admission to count (and pin):
+    /// shorter matches start cold instead of pinning near-root nodes.
+    pub radix_min_tokens: usize,
 }
 
 impl Default for CacheConfig {
@@ -216,6 +225,8 @@ impl Default for CacheConfig {
             enabled: true,
             block_tokens: 16,
             max_blocks: 4096,
+            radix: false,
+            radix_min_tokens: 16,
         }
     }
 }
@@ -726,6 +737,15 @@ impl Config {
                 Ok(v) if v > 0 => self.cache.max_blocks = v,
                 _ => return bad("cache_blocks"),
             },
+            "radix" => match value {
+                "on" | "true" | "1" => self.cache.radix = true,
+                "off" | "false" | "0" => self.cache.radix = false,
+                _ => return bad("radix"),
+            },
+            "radix_min_tokens" => match value.parse() {
+                Ok(v) if v >= 1 => self.cache.radix_min_tokens = v,
+                _ => return bad("radix_min_tokens"),
+            },
             "trace" => match value {
                 "on" | "true" | "1" => self.obs.trace = true,
                 "off" | "false" | "0" => self.obs.trace = false,
@@ -853,6 +873,14 @@ impl Config {
             self.cache.block_tokens.to_string(),
         );
         m.insert("cache_blocks".into(), self.cache.max_blocks.to_string());
+        m.insert(
+            "radix".into(),
+            if self.cache.radix { "on" } else { "off" }.into(),
+        );
+        m.insert(
+            "radix_min_tokens".into(),
+            self.cache.radix_min_tokens.to_string(),
+        );
         m.insert(
             "trace".into(),
             if self.obs.trace { "on" } else { "off" }.into(),
@@ -1019,6 +1047,20 @@ mod tests {
         assert!(cfg.set("cache", "maybe").is_err());
         assert!(cfg.set("cache_block", "0").is_err());
         assert!(cfg.set("cache_blocks", "zero").is_err());
+        // Radix keys: default off, on/off syntax, floor validation.
+        assert!(!cfg.cache.radix);
+        assert_eq!(cfg.cache.radix_min_tokens, 16);
+        cfg.set("radix", "on").unwrap();
+        cfg.set("radix_min_tokens", "64").unwrap();
+        assert!(cfg.cache.radix);
+        assert_eq!(cfg.cache.radix_min_tokens, 64);
+        assert!(cfg.set("radix", "maybe").is_err());
+        assert!(cfg.set("radix_min_tokens", "0").is_err());
+        let map = cfg.to_map();
+        assert_eq!(map.get("radix").unwrap(), "on");
+        assert_eq!(map.get("radix_min_tokens").unwrap(), "64");
+        cfg.set("radix", "off").unwrap();
+        assert!(!cfg.cache.radix);
     }
 
     #[test]

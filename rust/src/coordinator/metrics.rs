@@ -63,6 +63,16 @@ pub struct Metrics {
     router_routed: AtomicU64,
     router_spilled: AtomicU64,
     router_failover: AtomicU64,
+    /// Cross-request radix prefix cache (DESIGN.md §Radix Prefix Cache):
+    /// admission lookups, lookups that matched a usable shared prefix,
+    /// warm-start tokens granted, and the tree-shape gauges (node count,
+    /// deepest resident run in tokens, blocks held by the shared tree).
+    radix_lookups: AtomicU64,
+    radix_hits: AtomicU64,
+    radix_warm_tokens: AtomicU64,
+    radix_nodes: AtomicU64,
+    radix_depth: AtomicU64,
+    radix_shared_blocks: AtomicU64,
 }
 
 impl Metrics {
@@ -96,6 +106,58 @@ impl Metrics {
             router_routed: AtomicU64::new(0),
             router_spilled: AtomicU64::new(0),
             router_failover: AtomicU64::new(0),
+            radix_lookups: AtomicU64::new(0),
+            radix_hits: AtomicU64::new(0),
+            radix_warm_tokens: AtomicU64::new(0),
+            radix_nodes: AtomicU64::new(0),
+            radix_depth: AtomicU64::new(0),
+            radix_shared_blocks: AtomicU64::new(0),
+        }
+    }
+
+    /// Record radix prefix-cache activity: `lookups` admission lookups of
+    /// which `hits` matched a usable shared prefix granting `warm_tokens`
+    /// warm-start tokens, plus the worker's current tree-shape gauges
+    /// (last writer wins across workers, fine for a dashboard gauge).
+    pub fn on_radix(
+        &self,
+        lookups: u64,
+        hits: u64,
+        warm_tokens: u64,
+        nodes: u64,
+        depth: u64,
+        shared_blocks: u64,
+    ) {
+        self.radix_lookups.fetch_add(lookups, Ordering::Relaxed);
+        self.radix_hits.fetch_add(hits, Ordering::Relaxed);
+        self.radix_warm_tokens
+            .fetch_add(warm_tokens, Ordering::Relaxed);
+        self.radix_nodes.store(nodes, Ordering::Relaxed);
+        self.radix_depth.store(depth, Ordering::Relaxed);
+        self.radix_shared_blocks
+            .store(shared_blocks, Ordering::Relaxed);
+    }
+
+    pub fn radix_lookups(&self) -> u64 {
+        self.radix_lookups.load(Ordering::Relaxed)
+    }
+
+    pub fn radix_hits(&self) -> u64 {
+        self.radix_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn radix_warm_tokens(&self) -> u64 {
+        self.radix_warm_tokens.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of admission lookups that started warm (0 when the radix
+    /// tree is off or nothing was recorded).
+    pub fn radix_hit_rate(&self) -> f64 {
+        let lookups = self.radix_lookups() as f64;
+        if lookups <= 0.0 {
+            0.0
+        } else {
+            self.radix_hits() as f64 / lookups
         }
     }
 
@@ -437,6 +499,27 @@ impl Metrics {
                 "router_failover",
                 Json::Num(self.router_failover() as f64),
             ),
+            ("radix_lookups", Json::Num(self.radix_lookups() as f64)),
+            ("radix_hits", Json::Num(self.radix_hits() as f64)),
+            ("radix_hit_rate", Json::Num(self.radix_hit_rate())),
+            (
+                "radix_warm_tokens",
+                Json::Num(self.radix_warm_tokens() as f64),
+            ),
+            (
+                "radix_nodes",
+                Json::Num(self.radix_nodes.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "radix_depth",
+                Json::Num(self.radix_depth.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "radix_shared_blocks",
+                Json::Num(
+                    self.radix_shared_blocks.load(Ordering::Relaxed) as f64,
+                ),
+            ),
         ])
     }
 }
@@ -549,6 +632,32 @@ mod tests {
         assert_eq!(snap.get("router_routed").unwrap().as_usize(), Some(2));
         assert_eq!(snap.get("router_spilled").unwrap().as_usize(), Some(1));
         assert_eq!(snap.get("router_failover").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn radix_counters_flow() {
+        let m = Metrics::new();
+        assert_eq!(m.radix_hit_rate(), 0.0, "empty rate must be 0");
+        m.on_radix(3, 1, 64, 5, 80, 20);
+        m.on_radix(1, 1, 16, 6, 96, 24);
+        assert_eq!(m.radix_lookups(), 4);
+        assert_eq!(m.radix_hits(), 2);
+        assert_eq!(m.radix_warm_tokens(), 80);
+        assert!((m.radix_hit_rate() - 0.5).abs() < 1e-12);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("radix_lookups").unwrap().as_usize(), Some(4));
+        assert_eq!(snap.get("radix_hits").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            snap.get("radix_warm_tokens").unwrap().as_usize(),
+            Some(80)
+        );
+        // Gauges take the last writer's value.
+        assert_eq!(snap.get("radix_nodes").unwrap().as_usize(), Some(6));
+        assert_eq!(snap.get("radix_depth").unwrap().as_usize(), Some(96));
+        assert_eq!(
+            snap.get("radix_shared_blocks").unwrap().as_usize(),
+            Some(24)
+        );
     }
 
     #[test]

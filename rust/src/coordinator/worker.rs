@@ -186,6 +186,21 @@ fn serve_one(
         stats.total_billed_positions(),
         engine.cache().used_blocks() as u64,
     );
+    // One radix admission per FCFS generation (the engine re-admits its
+    // sequence at the first round); warm tokens come from the per-step
+    // aggregate, which is nonzero only on that first step.
+    if engine.cache().radix_enabled() {
+        let warm = stats.total_warm_start_tokens();
+        let g = engine.cache().radix_gauges();
+        metrics.on_radix(
+            1,
+            (warm > 0) as u64,
+            warm,
+            g.nodes as u64,
+            g.depth_tokens as u64,
+            g.shared_blocks as u64,
+        );
+    }
     match finish {
         FinishReason::Cancelled => metrics.on_cancelled(),
         _ => metrics.on_completed(stats.tokens.len(), gen_secs),

@@ -173,8 +173,12 @@ impl SpecEngine {
         mut sink: F,
     ) -> (GenerationStats, FinishReason) {
         assert!(!prompt.is_empty(), "empty prompt");
-        // Fresh cache session per generation: nothing of a previous
-        // request's prefix may be considered resident.
+        // Fresh cache session per generation: the previous request's
+        // PRIVATE residency is released here. With `cache.radix=on` its
+        // published prefix stays resident in the shared radix tree, so
+        // this request's first `begin_round` may start warm at the
+        // longest shared prefix — warm positions bill as cached fetches
+        // and the token stream is untouched.
         self.cache.drop_seq(ENGINE_SEQ);
         let mut ctx = prompt.to_vec();
         let mut stats = GenerationStats::new(prompt.len());
@@ -212,9 +216,11 @@ impl SpecEngine {
                 break;
             }
         }
-        // The request is complete (or cancelled): release its residency now
-        // rather than holding the blocks while the worker sits idle (the
-        // resident-block gauge must return to zero between requests).
+        // The request is complete (or cancelled): release its private
+        // residency now rather than holding the blocks while the worker
+        // sits idle (radix off, the resident-block gauge returns to zero
+        // between requests; radix on, published shared blocks stay
+        // resident — unpinned — for the next request to warm-start on).
         self.cache.drop_seq(ENGINE_SEQ);
         (stats, finish)
     }
@@ -291,6 +297,7 @@ impl SpecEngine {
             target_dispatches: outcome.target_dispatches,
             billed_positions: seq.bill.billed_positions,
             cached_positions: seq.bill.cached_positions,
+            warm_start_tokens: seq.warm_start,
             times: outcome.times,
             virtual_secs: outcome.virtual_secs,
         };

@@ -20,6 +20,9 @@ pub struct StepStats {
     pub billed_positions: usize,
     /// Prefix positions served from the resident KV cache this step.
     pub cached_positions: usize,
+    /// Radix warm-start tokens granted when this step admitted the
+    /// sequence (nonzero only on a generation's first step, radix on).
+    pub warm_start_tokens: usize,
     /// Measured wall time per component (Fig 4 buckets).
     pub times: ComponentTimes,
     /// Virtual step latency under the configured hardware regime.
@@ -124,6 +127,12 @@ impl GenerationStats {
 
     pub fn total_cached_positions(&self) -> u64 {
         self.steps.iter().map(|s| s.cached_positions as u64).sum()
+    }
+
+    /// Radix warm-start tokens granted at admission (cross-request prefix
+    /// reuse; nonzero only with `cache.radix=on` and a shared prefix).
+    pub fn total_warm_start_tokens(&self) -> u64 {
+        self.steps.iter().map(|s| s.warm_start_tokens as u64).sum()
     }
 
     /// Mean computed verification positions per step — the context-scaling

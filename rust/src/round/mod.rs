@@ -96,8 +96,14 @@ pub struct RoundPlan {
     pub orders: Vec<Vec<NodeId>>,
     pub row_maps: Vec<Vec<usize>>,
     /// Resident prefix positions per sequence, snapshotted before the
-    /// dispatch (the bill is computed against this mark).
+    /// dispatch (the bill is computed against this mark). Includes any
+    /// radix warm start granted at admission.
     pub cached_lens: Vec<usize>,
+    /// Radix admission outcome per sequence: `Some(w)` when this round
+    /// admitted the sequence and the radix lookup matched `w` tokens
+    /// (0 = cold admission), `None` when no lookup ran (already-admitted
+    /// sequence, or radix off).
+    pub warm_starts: Vec<Option<usize>>,
     /// Speculated tokens allocated per sequence (== trees[i].size()).
     pub allocated: Vec<usize>,
     /// Effective budget: the caller's `global_budget`, or 0 when no
@@ -127,6 +133,9 @@ pub struct SeqRoundOutcome {
     /// Speculated tokens allocated to this sequence (its tree size).
     pub allocated: usize,
     pub tree_depth: usize,
+    /// Radix warm-start tokens granted when this round admitted the
+    /// sequence (0 for already-admitted sequences or radix off).
+    pub warm_start: usize,
     pub bill: VerifyBill,
 }
 
@@ -159,6 +168,12 @@ pub struct RoundOutcome {
     pub cached_positions: usize,
     pub fetched_blocks: usize,
     pub written_blocks: usize,
+    /// Σ radix warm-start tokens granted at this round's admissions.
+    pub warm_start_tokens: usize,
+    /// Radix admission lookups this round (fresh sequences only).
+    pub radix_lookups: usize,
+    /// Lookups that matched a usable shared prefix (warm start > 0).
+    pub radix_hits: usize,
     /// Σ allocated — the speculated tokens the dispatch carried.
     pub spec_tokens: usize,
     /// Measured wall time per component (Fig 4 buckets: draft_infer,
@@ -196,11 +211,21 @@ pub fn plan_round(
     // Residency snapshots (also touches the LRU clock). Tree construction
     // never consults the cache, so snapshotting before the build is
     // equivalent to after it — and matches the FCFS engine's historical
-    // begin-round-first ordering.
+    // begin-round-first ordering. For a sequence's FIRST round the
+    // admission may resolve against the cross-request radix tree
+    // (DESIGN.md §Radix Prefix Cache): `begin_round` then returns the
+    // longest shared resident prefix, so the warm positions flow into
+    // `cached_lens` and `verify_bill` prices them as cached fetches with
+    // no further caller logic.
     let cached_lens: Vec<usize> = seqs
         .iter()
-        .map(|v| cache.begin_round(v.id).min(v.prefix.len()))
+        .map(|v| cache.begin_round(v.id, v.prefix).min(v.prefix.len()))
         .collect();
+    // Warm-start observability: Some(w) exactly when `begin_round` above
+    // ran a radix admission lookup for a fresh sequence (w = matched
+    // tokens, possibly 0); None for known sequences or radix off.
+    let warm_starts: Vec<Option<usize>> =
+        seqs.iter().map(|v| cache.take_warm_start(v.id)).collect();
 
     // Who speculates this round. Baseline takes the bare-row path for
     // every sequence: autoregressive decoding pays no draft dispatch.
@@ -288,6 +313,7 @@ pub fn plan_round(
         orders,
         row_maps,
         cached_lens,
+        warm_starts,
         allocated,
         global_budget,
         draft_dispatches,
@@ -378,17 +404,13 @@ pub fn conclude_round(
 
         // Cache round end (the "commit" stage): rejected branches roll
         // back (refcounts to zero), the accepted path + the scored miss
-        // region become the new resident prefix, and the dispatch slice
-        // is priced.
+        // region become the new resident prefix — and, radix on, the
+        // block-aligned accepted prefix is published into the shared
+        // radix tree — and the dispatch slice is priced.
         let t = Timer::start();
         let lease = std::mem::take(&mut leases[i]);
         cache.end_lease(lease, &plan.trees[i], &walked.accepted_nodes);
-        cache.commit(
-            v.id,
-            plan.cached_lens[i],
-            prefix_len,
-            walked.accepted.len(),
-        );
+        cache.commit(v.id, plan.cached_lens[i], v.prefix, &walked.accepted);
         let bill = verify_bill(
             prefix_len,
             plan.cached_lens[i],
@@ -414,6 +436,7 @@ pub fn conclude_round(
             accepted,
             allocated: plan.allocated[i],
             tree_depth: plan.trees[i].depth(),
+            warm_start: plan.warm_starts[i].unwrap_or(0),
             bill,
         });
     }
@@ -457,6 +480,17 @@ pub fn conclude_round(
         cached_positions: cached,
         fetched_blocks: fetched,
         written_blocks: written,
+        warm_start_tokens: plan
+            .warm_starts
+            .iter()
+            .map(|w| w.unwrap_or(0))
+            .sum(),
+        radix_lookups: plan.warm_starts.iter().flatten().count(),
+        radix_hits: plan
+            .warm_starts
+            .iter()
+            .filter(|w| w.unwrap_or(0) > 0)
+            .count(),
         spec_tokens,
         times,
         virtual_secs,

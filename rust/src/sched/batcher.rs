@@ -302,6 +302,11 @@ impl Batcher {
         let virt = outcome.virtual_secs_or_zero();
         report.virtual_secs = virt;
         let used = outcome.spec_tokens;
+        let (radix_lookups, radix_hits, warm_tokens) = (
+            outcome.radix_lookups,
+            outcome.radix_hits,
+            outcome.warm_start_tokens,
+        );
 
         if let Some(a) = &mut self.adapt {
             a.observe(policy_kind, &outcome.accept);
@@ -357,6 +362,17 @@ impl Batcher {
             report.billed_positions as u64,
             self.cache.used_blocks() as u64,
         );
+        if self.cache.radix_enabled() {
+            let g = self.cache.radix_gauges();
+            metrics.on_radix(
+                radix_lookups as u64,
+                radix_hits as u64,
+                warm_tokens as u64,
+                g.nodes as u64,
+                g.depth_tokens as u64,
+                g.shared_blocks as u64,
+            );
+        }
 
         // Retire finished sequences (largest index first keeps the
         // remaining swap_remove indices valid).

@@ -238,6 +238,7 @@ fn eviction_forced_rescoring_keeps_streams_identical() {
         enabled: true,
         block_tokens: 4,
         max_blocks: 3, // far below 4 sequences' residency needs
+        ..CacheConfig::default()
     };
     let (warm, evictions) = batcher_tokens(PolicyKind::DySpec, tiny, 4);
     assert!(evictions > 0, "budget never forced an eviction");

@@ -161,6 +161,15 @@ fn exposition_is_populated_with_tracing_off() {
         "dyspec_accept_depth_proposed_total{drafter=\"dyspec\"",
         "dyspec_accept_prob_proposed_total{drafter=\"dyspec\"",
         "# TYPE dyspec_total_tokens gauge",
+        // Radix prefix-cache series render (zero-valued here: the run
+        // keeps `cache.radix` at its off default).
+        "# TYPE dyspec_radix_lookups gauge",
+        "# TYPE dyspec_radix_hits gauge",
+        "# TYPE dyspec_radix_hit_rate gauge",
+        "# TYPE dyspec_radix_warm_tokens gauge",
+        "# TYPE dyspec_radix_nodes gauge",
+        "# TYPE dyspec_radix_depth gauge",
+        "# TYPE dyspec_radix_shared_blocks gauge",
     ] {
         assert!(prom.contains(series), "exposition missing: {series}\n{prom}");
     }

@@ -38,6 +38,7 @@ fn start_server(
         enabled: cache,
         block_tokens: 4,
         max_blocks: 256,
+        ..CacheConfig::default()
     };
     let coord = Arc::new(Coordinator::start(cfg, sim_factory()));
     let server = Server::bind("127.0.0.1:0", coord).unwrap();

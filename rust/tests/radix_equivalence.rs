@@ -1,0 +1,277 @@
+//! Differential wall for the cross-request radix prefix cache (ISSUE 9
+//! tentpole):
+//!
+//!   1. engine level — back-to-back generations sharing a prompt prefix
+//!      emit BIT-IDENTICAL token streams radix on vs off, for all four
+//!      drafters × cache on/off (radix is billing/residency only; the
+//!      sampling stream never observes it);
+//!   2. the ISSUE acceptance criterion — a second request sharing a
+//!      ≥1-block prefix with a RETIRED first request starts with nonzero
+//!      resident tokens (warm start) and bills strictly fewer computed
+//!      positions than the first;
+//!   3. batcher level — same stream identity under forest batching,
+//!      including a tiny block budget that forces evictions against
+//!      pinned radix paths, and staged admission where the radix hit
+//!      actually lands.
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dyspec::config::{CacheConfig, Config, EngineConfig, PolicyKind, SchedKind};
+use dyspec::coordinator::{
+    CancelToken, GenEvent, GenParams, Metrics, Request,
+};
+use dyspec::engine::SpecEngine;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::sched::Batcher;
+
+const POLICIES: [PolicyKind; 4] = [
+    PolicyKind::DySpec,
+    PolicyKind::Sequoia,
+    PolicyKind::SpecInfer,
+    PolicyKind::Chain,
+];
+
+fn sim_pair(seed: u64) -> (SimModel, SimModel) {
+    SimModel::pair(SimSpec::new(64, 2.0, 1.0, seed))
+}
+
+fn radix_cfg(enabled: bool, radix: bool) -> CacheConfig {
+    CacheConfig {
+        enabled,
+        radix,
+        block_tokens: 4,
+        radix_min_tokens: 4,
+        ..CacheConfig::default()
+    }
+}
+
+/// Two sequential generations on ONE engine, prompts sharing an 8-token
+/// (2-block) prefix, each reseeded for per-request determinism. With
+/// radix on the second admission starts warm; the streams must not care.
+fn engine_pair(
+    policy: PolicyKind,
+    cache: &CacheConfig,
+    seed: u64,
+) -> Vec<dyspec::engine::GenerationStats> {
+    let (draft, target) = sim_pair(99);
+    let cfg = EngineConfig {
+        policy,
+        tree_budget: 10,
+        max_new_tokens: 24,
+        target_temp: 0.6,
+        draft_temp: 0.6,
+        seed,
+        ..EngineConfig::default()
+    };
+    let mut e = SpecEngine::new(Box::new(draft), Box::new(target), cfg, None)
+        .with_cache(cache);
+    let shared = [3u32, 1, 4, 1, 5, 9, 2, 6];
+    [vec![7u32], vec![8u32]]
+        .into_iter()
+        .map(|suffix| {
+            let mut prompt = shared.to_vec();
+            prompt.extend_from_slice(&suffix);
+            e.reseed(seed ^ 0xF00D);
+            e.generate(&prompt)
+        })
+        .collect()
+}
+
+/// 1. Radix on vs off is stream-invariant for every drafter, with the
+/// KV cache on AND off (radix with the cache off is inert but must not
+/// perturb anything either).
+#[test]
+fn streams_identical_radix_on_vs_off_all_drafters() {
+    for policy in POLICIES {
+        for cache_on in [true, false] {
+            for seed in 0..2u64 {
+                let off = engine_pair(policy, &radix_cfg(cache_on, false), seed);
+                let on = engine_pair(policy, &radix_cfg(cache_on, true), seed);
+                for (k, (a, b)) in on.iter().zip(&off).enumerate() {
+                    assert_eq!(
+                        a.tokens, b.tokens,
+                        "{policy} cache={cache_on} seed {seed} req {k}: \
+                         radix changed the stream"
+                    );
+                    assert_eq!(a.steps.len(), b.steps.len());
+                }
+                if !cache_on {
+                    // Inert: no lookups may have been recorded.
+                    let warm: u64 = on
+                        .iter()
+                        .map(|g| g.total_warm_start_tokens())
+                        .sum();
+                    assert_eq!(warm, 0, "radix ran with the cache off");
+                }
+            }
+        }
+    }
+}
+
+/// 2. The acceptance criterion: the first request retires, the second
+/// shares a 2-block prefix — it must start resident at that prefix
+/// (nonzero warm start, cached positions on its FIRST step) and bill
+/// strictly fewer computed positions, both than its own radix-off twin
+/// (identical stream, so the comparison is exact) and than the first
+/// request's cold admission.
+#[test]
+fn second_request_starts_warm_and_bills_strictly_less() {
+    for policy in POLICIES {
+        let on = engine_pair(policy, &radix_cfg(true, true), 5);
+        let off = engine_pair(policy, &radix_cfg(true, false), 5);
+        let (first, second) = (&on[0], &on[1]);
+        assert_eq!(first.steps[0].warm_start_tokens, 0, "{policy}: cold tree");
+        assert_eq!(first.steps[0].cached_positions, 0);
+        let warm = second.steps[0].warm_start_tokens;
+        assert_eq!(
+            warm, 8,
+            "{policy}: second request must warm-start at the shared 2-block \
+             prefix, got {warm}"
+        );
+        assert!(
+            second.steps[0].cached_positions >= 8,
+            "{policy}: warm start not billed as cached fetches"
+        );
+        // Exact twin comparison (same stream, same trees): the warm start
+        // converts exactly `warm` first-step computed positions into
+        // cached fetches.
+        assert_eq!(
+            second.steps[0].billed_positions + warm,
+            off[1].steps[0].billed_positions,
+            "{policy}: warm start did not shrink the first-step bill"
+        );
+        assert!(
+            second.total_billed_positions() < off[1].total_billed_positions(),
+            "{policy}: warm request billed {} !< its cold twin {}",
+            second.total_billed_positions(),
+            off[1].total_billed_positions()
+        );
+        // Cross-request comparison: computed PREFIX positions on the first
+        // step (the bill minus the verification rows, which depend only on
+        // the tree) collapse from the full 9-token prompt to the 1
+        // unshared token.
+        let prefix_billed = |s: &dyspec::engine::StepStats| {
+            s.billed_positions - s.tree_size
+        };
+        assert_eq!(prefix_billed(&first.steps[0]), 9, "{policy}");
+        assert_eq!(prefix_billed(&second.steps[0]), 1, "{policy}");
+        assert!(
+            second.steps[0].billed_positions
+                < first.steps[0].billed_positions,
+            "{policy}: warm first step billed {} !< cold first step {}",
+            second.steps[0].billed_positions,
+            first.steps[0].billed_positions
+        );
+    }
+}
+
+fn batcher_run(
+    policy: PolicyKind,
+    cache: CacheConfig,
+    n_seqs: u64,
+    staged: bool,
+) -> (Vec<Vec<u32>>, u64, u64) {
+    let mut cfg = Config::new();
+    cfg.engine.policy = policy;
+    cfg.engine.tree_budget = 8;
+    cfg.engine.seed = 5;
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.sched.max_active = 16;
+    cfg.sched.global_budget = 8 * n_seqs as usize;
+    cfg.cache = cache;
+    let (d, t) = sim_pair(17);
+    let mut b = Batcher::new(
+        0,
+        cfg,
+        Box::new(d),
+        Box::new(t),
+        Arc::new(Metrics::new()),
+    );
+    let admit = |b: &mut Batcher, i: u64| {
+        let (tx, rx) = mpsc::channel();
+        // 8 shared tokens (2 blocks at block_tokens=4) + unique tail.
+        let mut prompt = vec![3u32, 1, 4, 1, 5, 9, 2, 6];
+        prompt.push(20 + i as u32);
+        b.admit(Request {
+            id: i + 1,
+            prompt,
+            params: GenParams::simple(16, 0.6),
+            submitted_at: Instant::now(),
+            cancel: CancelToken::new(),
+            events: Box::new(tx),
+            trace: 0,
+        });
+        rx
+    };
+    let rxs: Vec<mpsc::Receiver<GenEvent>> = (0..n_seqs)
+        .map(|i| {
+            if staged {
+                // Drain the previous request completely before admitting
+                // the next: every admission past the first then resolves
+                // against a tree of RETIRED sequences only.
+                while b.active() > 0 {
+                    b.step();
+                }
+            }
+            admit(&mut b, i)
+        })
+        .collect();
+    while b.active() > 0 {
+        b.step();
+    }
+    let evictions = b.cache().stats().evictions;
+    let radix_hits = b.cache().radix_stats().hits;
+    let wait_tokens = |rx: &mpsc::Receiver<GenEvent>| loop {
+        match rx.recv().expect("request dropped") {
+            GenEvent::Done(resp) => return resp.tokens,
+            GenEvent::Chunk { .. } => continue,
+        }
+    };
+    (rxs.iter().map(wait_tokens).collect(), evictions, radix_hits)
+}
+
+/// 3a. Forest batching (concurrent admissions): identical streams radix
+/// on vs off for every drafter.
+#[test]
+fn batched_streams_identical_radix_on_vs_off() {
+    for policy in POLICIES {
+        let (on, _, _) = batcher_run(policy, radix_cfg(true, true), 3, false);
+        let (off, _, _) =
+            batcher_run(policy, radix_cfg(true, false), 3, false);
+        assert_eq!(on, off, "{policy}: radix changed batched streams");
+    }
+}
+
+/// 3b. Staged admission: each request retires before the next arrives,
+/// so every later admission warm-starts off the shared radix tree — and
+/// the streams still match the radix-off run exactly.
+#[test]
+fn staged_admissions_hit_the_radix_tree_without_changing_streams() {
+    let (on, _, hits) =
+        batcher_run(PolicyKind::DySpec, radix_cfg(true, true), 4, true);
+    let (off, _, off_hits) =
+        batcher_run(PolicyKind::DySpec, radix_cfg(true, false), 4, true);
+    assert_eq!(on, off, "staged radix reuse changed streams");
+    assert_eq!(hits, 3, "every admission past the first must warm-start");
+    assert_eq!(off_hits, 0, "radix off must never record a hit");
+}
+
+/// 3c. A tiny block budget forces evictions against live pinned radix
+/// paths mid-run — streams must still be identical to radix off, and the
+/// run must actually have evicted.
+#[test]
+fn eviction_pressure_with_pinned_paths_keeps_streams_identical() {
+    let tiny = CacheConfig {
+        max_blocks: 3, // far below 4 sequences' residency needs
+        ..radix_cfg(true, true)
+    };
+    let (on, evictions, _) = batcher_run(PolicyKind::DySpec, tiny, 4, false);
+    let tiny_off = CacheConfig {
+        max_blocks: 3,
+        ..radix_cfg(true, false)
+    };
+    let (off, _, _) = batcher_run(PolicyKind::DySpec, tiny_off, 4, false);
+    assert_eq!(on, off, "pressure-forced eviction changed streams");
+    assert!(evictions > 0, "budget never forced an eviction");
+}

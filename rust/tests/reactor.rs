@@ -63,6 +63,7 @@ fn start_server(
         enabled: true,
         block_tokens: 4,
         max_blocks: 4096,
+        ..CacheConfig::default()
     };
     let coord = Arc::new(Coordinator::start(cfg, sim_factory()));
     let server = Server::bind("127.0.0.1:0", coord).unwrap();

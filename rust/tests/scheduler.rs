@@ -255,6 +255,7 @@ fn cache_blocks_never_leak_after_drain_done() {
         enabled: true,
         block_tokens: 4,
         max_blocks: 32,
+        ..CacheConfig::default()
     };
     let mut b = mk_batcher(cfg);
     let lens = [1usize, 5, 12, 20];
@@ -300,10 +301,12 @@ fn tree_rollback_and_eviction_respect_refcounts_on_real_trees() {
         enabled: true,
         block_tokens: 2,
         max_blocks: 64,
+        ..CacheConfig::default()
     });
     // A warm co-resident sequence that eviction may legally reclaim.
-    manager.begin_round(7);
-    manager.commit(7, 0, 10, 0);
+    let warm_prefix = vec![9u32; 10];
+    manager.begin_round(7, &warm_prefix);
+    manager.commit(7, 0, &warm_prefix, &[]);
     let baseline = manager.used_blocks();
 
     for seed in 0..10u64 {
@@ -321,7 +324,7 @@ fn tree_rollback_and_eviction_respect_refcounts_on_real_trees() {
         // Budget pressure mid-lease: evicting the warm sequence must not
         // free any leased block.
         if seed == 0 {
-            assert!(manager.evict_lru(0));
+            assert!(manager.evict_lru());
             for &blk in &tracked {
                 assert!(
                     manager.pool().refcount(blk) > 0,
