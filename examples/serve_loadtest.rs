@@ -8,7 +8,8 @@
 //!   cargo run --release --example serve_loadtest -- \
 //!       [requests] [rate_rps] [workers] [scheduler] \
 //!       [--reactor-threads N] [--max-conns N] [--outbox N] \
-//!       [--cancel-every N] [--route affinity|rr] [--kill-worker N]
+//!       [--cancel-every N] [--route affinity|rr] [--kill-worker N] \
+//!       [--prompt-len-mix short:N,long:M] [--prefill-chunk N]
 //!
 //! `scheduler` is `fcfs` (default) or `continuous` — the latter runs the
 //! step-level batcher (`sched/`), so one worker multiplexes many
@@ -29,10 +30,21 @@
 //! through the trace: its in-flight requests must settle as
 //! finish="cancelled" (counted as kill casualties, not failures), its
 //! gauges must drain to zero, and the survivors must absorb the rest —
-//! the CI routed-conformance step drives this at 4 workers. Compare:
+//! the CI routed-conformance step drives this at 4 workers.
+//!
+//! `--prompt-len-mix short:N,long:M` replays a mixed pool — N 64-token
+//! chatter prompts plus M 1024-token cold prompts, interleaved by the
+//! trace — and `--prefill-chunk C` turns on chunked prefill
+//! (`prefill_chunk=C`, `prefill_budget=C`) so the long prompts enter the
+//! continuous batch as C-token rows instead of stalling it; the
+//! post-drain check requires `dyspec_prefill_tokens_in_flight` back at
+//! zero. Compare:
 //!
 //!   cargo run --release --example serve_loadtest -- 48 40 1 fcfs
 //!   cargo run --release --example serve_loadtest -- 48 40 1 continuous
+//!   cargo run --release --example serve_loadtest -- \
+//!       32 100 1 continuous --prompt-len-mix short:12,long:4 \
+//!       --prefill-chunk 256
 //!   cargo run --release --example serve_loadtest -- \
 //!       64 400 2 continuous --reactor-threads 4 --cancel-every 4
 //!   cargo run --release --example serve_loadtest -- \
@@ -84,6 +96,20 @@ fn flag<T: std::str::FromStr>(
     }
 }
 
+/// `short:N,long:M` (either key optional, any order).
+fn parse_mix(spec: &str) -> Option<(usize, usize)> {
+    let (mut short, mut long) = (0usize, 0usize);
+    for part in spec.split(',') {
+        let (k, v) = part.split_once(':')?;
+        match k.trim() {
+            "short" => short = v.trim().parse().ok()?,
+            "long" => long = v.trim().parse().ok()?,
+            _ => return None,
+        }
+    }
+    Some((short, long))
+}
+
 /// Value of an unlabelled series in a Prometheus text exposition
 /// (`name value`), or -1 when the series is absent.
 fn prom_gauge(text: &str, name: &str) -> f64 {
@@ -132,6 +158,16 @@ fn main() {
             }
         });
     let kill_mode = kill_worker.is_some();
+    // Mixed prompt pool: "short:N,long:M" => N 64-token + M 1024-token
+    // prompts, picked by the trace's prompt index.
+    let prompt_mix: Option<(usize, usize)> =
+        flags.get("prompt-len-mix").map(|spec| {
+            parse_mix(spec).unwrap_or_else(|| {
+                eprintln!("bad value for --prompt-len-mix: {spec} (want short:N,long:M)");
+                std::process::exit(2);
+            })
+        });
+    let prefill_chunk: usize = flag(&flags, "prefill-chunk", 0);
 
     let mut cfg = Config::new();
     cfg.server.workers = workers;
@@ -142,6 +178,8 @@ fn main() {
     cfg.engine.tree_budget = 24;
     cfg.sched.kind = scheduler;
     cfg.sched.max_active = 16;
+    cfg.engine.prefill_chunk = prefill_chunk;
+    cfg.sched.prefill_budget = prefill_chunk;
     cfg.set("route", &route).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
@@ -162,8 +200,26 @@ fn main() {
         let _ = server.run();
     });
 
-    let prompts = PromptSet::by_name("c4", 8, 64, 5).unwrap();
-    let trace = RequestTrace::poisson(n_requests, rate, prompts.len(), 64, 0.6, 9);
+    let pool: Vec<Vec<u32>> = match prompt_mix {
+        None => {
+            let set = PromptSet::by_name("c4", 8, 64, 5).unwrap();
+            (0..set.len()).map(|i| set.get(i).to_vec()).collect()
+        }
+        Some((short, long)) => {
+            let shorts = PromptSet::by_name("c4", short.max(1), 64, 5).unwrap();
+            let longs = PromptSet::by_name("c4", long.max(1), 1024, 6).unwrap();
+            (0..shorts.len())
+                .map(|i| shorts.get(i).to_vec())
+                .chain((0..longs.len()).map(|i| longs.get(i).to_vec()))
+                .collect()
+        }
+    };
+    let trace = RequestTrace::poisson(n_requests, rate, pool.len(), 64, 0.6, 9);
+    if let Some((short, long)) = prompt_mix {
+        println!(
+            "prompt mix: {short} short (64 tok) + {long} long (1024 tok), prefill_chunk={prefill_chunk}"
+        );
+    }
     println!(
         "replaying {} requests at {:.0} rps over {} workers ({} scheduler, {route} routing, {} reactor threads, cancel-every={})  -> {addr}",
         trace.len(),
@@ -178,7 +234,7 @@ fn main() {
     let mut handles = Vec::new();
     for (idx, ev) in trace.events.clone().into_iter().enumerate() {
         let addr = addr.clone();
-        let prompt: Vec<u32> = prompts.get(ev.prompt_idx).to_vec();
+        let prompt: Vec<u32> = pool[ev.prompt_idx % pool.len()].clone();
         let cancel_this = cancel_every > 0 && (idx + 1) % cancel_every == 0;
         handles.push(std::thread::spawn(move || {
             let wait = ev.at_secs - t0.elapsed().as_secs_f64();
@@ -348,6 +404,13 @@ fn main() {
         gauge("backpressure_closed"),
         gauge("conns_rejected"),
     );
+    if prefill_chunk > 0 {
+        println!(
+            "chunked prefill: {} chunk rows, {} prompt tokens",
+            gauge("prefill_chunks"),
+            gauge("prefill_tokens"),
+        );
+    }
     // Post-drain scrape: the in-flight gauges must return to zero once
     // every request finished and every client connection is gone — the
     // one allowed remainder is this scraper's own connection. Teardown
@@ -357,6 +420,7 @@ fn main() {
         ("dyspec_open_conns", 1.0),
         ("dyspec_outbox_frames", 0.0),
         ("dyspec_tokens_in_flight", 0.0),
+        ("dyspec_prefill_tokens_in_flight", 0.0),
         ("dyspec_queue_depth", 0.0),
         ("dyspec_cache_resident_blocks", 0.0),
     ]

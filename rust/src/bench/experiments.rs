@@ -7,7 +7,11 @@ use crate::bench::table::BenchTable;
 use crate::config::{
     CacheConfig, Config, EngineConfig, LatencyRegime, PolicyKind, SchedKind,
 };
-use crate::coordinator::{Coordinator, GenParams, ModelFactory};
+use crate::coordinator::{
+    CancelToken, Coordinator, GenEvent, GenParams, Metrics, ModelFactory,
+    Request,
+};
+use crate::sched::Batcher;
 use crate::server::{Client, Server};
 use crate::data::markov::Corpus;
 use crate::data::prompts::PromptSet;
@@ -637,6 +641,156 @@ fn reactor_cell(
     (tokens, wall, vsecs, occupancy, lat_v, ttft, transport_threads)
 }
 
+/// Mixed-workload cell (ISSUE 10 acceptance): 15 chatter requests
+/// (64-token prompts) stream on the continuous batcher; three steps in, a
+/// cold 4096-token prompt arrives. With `chunk=0` its whole prompt lands
+/// inside one co-batched dispatch (the chatters' inter-token gap spikes
+/// by the full prefill bill); with chunking on it enters as
+/// `chunk`-token rows under the prefill budget split. Driven on a bare
+/// `Batcher` so admission timing — and therefore the virtual-time
+/// accounting — is deterministic. Returns (tokens, wall, vsecs,
+/// occupancy, per-request virtual-latency hist, chatter virtual-TTFT
+/// hist, chatter inter-chunk virtual-gap hist, long request's virtual
+/// TTFT).
+#[allow(clippy::type_complexity)]
+fn serve_mixed_cell(
+    chunk: usize,
+    opts: &ExpOpts,
+) -> (usize, f64, f64, f64, Histogram, Histogram, Histogram, f64) {
+    const CHATTERS: usize = 15;
+    let mut cfg = Config::new();
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.sched.max_active = 16;
+    // Budget split: speculation keeps a healthy pool even while the
+    // reserved prefill tokens are in use.
+    cfg.sched.global_budget = 320;
+    cfg.sched.prefill_budget = chunk;
+    cfg.engine.prefill_chunk = chunk;
+    cfg.engine.tree_budget = 24;
+    cfg.engine.seed = opts.seed;
+    cfg.regime = Some(LatencyRegime::pair_7b());
+
+    let spec = SimSpec::for_dataset("c4", opts.noise, opts.seed ^ 0xDA7A);
+    let (d, t) = SimModel::pair(spec);
+    let metrics = Arc::new(Metrics::new());
+    let mut b = Batcher::new(
+        0,
+        cfg,
+        Box::new(d),
+        Box::new(t),
+        metrics.clone(),
+    );
+    let prompts = PromptSet::by_name("c4", CHATTERS, 64, opts.seed)
+        .expect("dataset profile");
+
+    struct Tracked {
+        rx: std::sync::mpsc::Receiver<GenEvent>,
+        admitted_virt: f64,
+        first_virt: Option<f64>,
+        long: bool,
+        resp: Option<Box<crate::coordinator::Response>>,
+    }
+    let submit = |b: &mut Batcher,
+                  id: u64,
+                  prompt: Vec<u32>,
+                  max_new: usize,
+                  long: bool,
+                  virt: f64| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        b.admit(Request {
+            id,
+            prompt,
+            params: GenParams::simple(max_new, 0.6),
+            submitted_at: std::time::Instant::now(),
+            cancel: CancelToken::new(),
+            events: Box::new(tx),
+            trace: 0,
+        });
+        Tracked {
+            rx,
+            admitted_virt: virt,
+            first_virt: None,
+            long,
+            resp: None,
+        }
+    };
+
+    let t0 = Timer::start();
+    let mut virt_acc = 0.0f64;
+    let mut tracked: Vec<Tracked> = (0..CHATTERS)
+        .map(|c| {
+            submit(
+                &mut b,
+                c as u64 + 1,
+                prompts.get(c).to_vec(),
+                32,
+                false,
+                virt_acc,
+            )
+        })
+        .collect();
+    let mut itl = Histogram::new();
+    let drain = |tracked: &mut Vec<Tracked>,
+                 itl: &mut Histogram,
+                 virt_acc: f64| {
+        for tr in tracked.iter_mut() {
+            loop {
+                match tr.rx.try_recv() {
+                    Ok(GenEvent::Chunk { stats, .. }) => {
+                        if tr.first_virt.is_none() {
+                            tr.first_virt = Some(virt_acc - tr.admitted_virt);
+                        } else if !tr.long {
+                            itl.record(stats.virtual_secs);
+                        }
+                    }
+                    Ok(GenEvent::Done(resp)) => tr.resp = Some(resp),
+                    Err(_) => break,
+                }
+            }
+        }
+    };
+    // Three warm steps, then the long prompt arrives mid-stream.
+    for _ in 0..3 {
+        virt_acc += b.step().virtual_secs;
+        drain(&mut tracked, &mut itl, virt_acc);
+    }
+    let long_prompt: Vec<u32> =
+        (0..4096u32).map(|k| (k * 11 + 3) % 64).collect();
+    tracked.push(submit(
+        &mut b,
+        CHATTERS as u64 + 1,
+        long_prompt,
+        16,
+        true,
+        virt_acc,
+    ));
+    while b.active() > 0 {
+        virt_acc += b.step().virtual_secs;
+        drain(&mut tracked, &mut itl, virt_acc);
+    }
+    drain(&mut tracked, &mut itl, virt_acc);
+    let wall = t0.elapsed_secs();
+
+    let mut lat_v = Histogram::new();
+    let mut ttft = Histogram::new();
+    let mut ttft_long = 0.0f64;
+    let mut tokens = 0usize;
+    for tr in &tracked {
+        let resp = tr.resp.as_ref().expect("request did not complete");
+        tokens += resp.tokens.len();
+        lat_v.record(resp.virtual_secs);
+        let first = tr.first_virt.expect("request never emitted");
+        if tr.long {
+            ttft_long = first;
+        } else {
+            ttft.record(first);
+        }
+    }
+    let vsecs = metrics.virtual_secs();
+    let occupancy = metrics.batch_occupancy();
+    (tokens, wall, vsecs, occupancy, lat_v, ttft, itl, ttft_long)
+}
+
 /// Serving benchmark (ROADMAP "heavy traffic" deliverable): throughput and
 /// latency vs concurrency, fcfs vs continuous, on the sim model pair with
 /// 7b-regime virtual accounting. Throughput is tokens per VIRTUAL second —
@@ -648,7 +802,7 @@ fn reactor_cell(
 /// the trajectory.
 pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
     let mut table = BenchTable::new(
-        "Serve: throughput/latency vs concurrency, fcfs vs continuous (sim, 7b regime, 1 worker); reactor rows over real sockets",
+        "Serve: throughput/latency vs concurrency, fcfs vs continuous (sim, 7b regime, 1 worker); reactor rows over real sockets; mixed rows = 15 chatters + 1x4096-token arrival, chunked prefill off/on",
         &[
             "scheduler",
             "clients",
@@ -661,12 +815,14 @@ pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
             "ttft_p50_s",
             "occupancy",
             "srv_threads",
+            "itl_p95",
+            "ttft_long",
         ],
     );
     let per_client = opts.prompts.max(1);
     for kind in [SchedKind::Fcfs, SchedKind::Continuous] {
         for clients in [1usize, 4, 16] {
-            let (tokens, wall, vsecs, occupancy, mut lat_v, mut ttft) =
+            let (tokens, wall, vsecs, occupancy, lat_v, ttft) =
                 serve_cell(kind, clients, per_client, opts);
             table.row(vec![
                 kind.name().into(),
@@ -680,12 +836,14 @@ pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
                 format!("{:.4}", ttft.p50()),
                 format!("{:.2}", occupancy),
                 "-".into(), // in-process cells: no transport
+                "-".into(), // itl_p95: mixed rows only
+                "-".into(), // ttft_long: mixed rows only
             ]);
         }
     }
     const REACTOR_THREADS: usize = 4;
     for conns in [64usize, 256] {
-        let (tokens, wall, vsecs, occupancy, mut lat_v, mut ttft, threads) =
+        let (tokens, wall, vsecs, occupancy, lat_v, ttft, threads) =
             reactor_cell(conns, per_client, REACTOR_THREADS, opts);
         table.row(vec![
             "continuous+reactor".into(),
@@ -699,6 +857,34 @@ pub fn serve_concurrency(opts: &ExpOpts) -> BenchTable {
             format!("{:.4}", ttft.p50()),
             format!("{:.2}", occupancy),
             format!("{threads}"),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    // Mixed rows (ISSUE 10): a long cold arrival mid-stream; the chunked
+    // row must show strictly lower chatter inter-token p95 (virtual secs
+    // per co-batched round) at <= 5% total-virtual-time regression.
+    for chunk in [0usize, 256] {
+        let (tokens, wall, vsecs, occupancy, lat_v, ttft, itl, ttft_long) =
+            serve_mixed_cell(chunk, opts);
+        table.row(vec![
+            if chunk == 0 {
+                "mixed".into()
+            } else {
+                format!("mixed+chunk{chunk}")
+            },
+            "16".into(),
+            "16".into(),
+            format!("{tokens}"),
+            format!("{:.1}", tokens as f64 / vsecs.max(1e-9)),
+            format!("{:.1}", tokens as f64 / wall.max(1e-9)),
+            format!("{:.4}", lat_v.p50()),
+            format!("{:.4}", lat_v.p99()),
+            format!("{:.4}", ttft.p50()),
+            format!("{:.2}", occupancy),
+            "-".into(),
+            format!("{:.5}", itl.p95()),
+            format!("{:.4}", ttft_long),
         ]);
     }
     table
@@ -850,7 +1036,7 @@ pub fn stream_latency(opts: &ExpOpts) -> BenchTable {
     let per_client = opts.prompts.max(1);
     for stream in [false, true] {
         for clients in [1usize, 4, 16] {
-            let (tokens, mut ttft, mut gap, mut e2e) =
+            let (tokens, ttft, gap, e2e) =
                 stream_cell(clients, per_client, stream, opts);
             table.row(vec![
                 if stream { "stream" } else { "oneshot" }.into(),
@@ -1416,7 +1602,8 @@ mod tests {
         };
         let t = &run_experiment("serve", &opts).unwrap()[0];
         // 2 schedulers x 3 in-process concurrency levels + 2 reactor rows
-        assert_eq!(t.rows.len(), 8);
+        // + 2 mixed-workload rows (chunked prefill off/on)
+        assert_eq!(t.rows.len(), 10);
         let tput = |row: &Vec<String>| -> f64 { row[4].parse().unwrap() };
         let fcfs16 = &t.rows[2];
         let cont16 = &t.rows[5];
@@ -1442,6 +1629,35 @@ mod tests {
             let tokens: usize = row[3].parse().unwrap();
             assert_eq!(tokens, requests * opts.max_new_tokens);
             assert_eq!(row[10], "4", "transport not O(pool): {}", row[10]);
+        }
+        // The chunked-prefill acceptance (ISSUE 10): with a 4096-token
+        // arrival landing mid-stream, chunking must strictly lower the
+        // co-batched chatters' inter-token p95 while total virtual time
+        // regresses at most 5%.
+        let oneshot = &t.rows[8];
+        let chunked = &t.rows[9];
+        assert_eq!(oneshot[0], "mixed");
+        assert!(chunked[0].starts_with("mixed+chunk"));
+        // both variants served the full 16-request workload
+        assert_eq!(oneshot[3], chunked[3]);
+        let itl = |row: &Vec<String>| -> f64 { row[11].parse().unwrap() };
+        assert!(
+            itl(chunked) < itl(oneshot),
+            "chunked itl_p95 {} not below one-shot {}",
+            chunked[11],
+            oneshot[11]
+        );
+        // equal tokens, so tput ratio == inverse virtual-time ratio
+        assert!(
+            tput(chunked) >= tput(oneshot) / 1.05,
+            "chunking cost >5% virtual time: {} vs {} tok/vsec",
+            chunked[4],
+            oneshot[4]
+        );
+        // the long request's own TTFT is finite in both modes
+        for row in [oneshot, chunked] {
+            let ttft_long: f64 = row[12].parse().unwrap();
+            assert!(ttft_long > 0.0, "long request never emitted");
         }
     }
 

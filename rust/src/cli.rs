@@ -110,6 +110,8 @@ CONFIG KEYS (key=value, see config/mod.rs):
   backend (sim|hlo|hlo-pallas), regime (7b|13b|70b),
   dataset (cnn|c4|owt), artifacts, prompt_len, num_prompts, addr, workers,
   scheduler (fcfs|continuous), global_budget, max_active, idle_tick_ms,
+  prefill_chunk (tokens per chunked-prefill round, 0 = one-shot prefill),
+  prefill_budget (per-step token pool for prefill chunks, 0 = prefill_chunk),
   cache (on|off), cache_block, cache_blocks,
   reactor_threads, max_conns, outbox_frames,
   trace (on|off — per-round span recording + trace-id echo on v1 frames),

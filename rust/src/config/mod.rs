@@ -183,6 +183,12 @@ pub struct SchedConfig {
     /// Queue poll interval while idle, in ms — also the FCFS worker's
     /// shutdown-poll tick (previously hardcoded at 50 ms).
     pub idle_tick_ms: u64,
+    /// Per-step token budget reserved for prefill chunks when chunked
+    /// prefill is on (`engine.prefill_chunk > 0`); positions left over
+    /// after chunk scheduling go to the cross-request speculation
+    /// allocator. 0 = inherit `engine.prefill_chunk` (one chunk's worth
+    /// per step). Ignored while chunking is off.
+    pub prefill_budget: usize,
 }
 
 impl Default for SchedConfig {
@@ -192,6 +198,7 @@ impl Default for SchedConfig {
             global_budget: 0,
             max_active: 8,
             idle_tick_ms: 50,
+            prefill_budget: 0,
         }
     }
 }
@@ -379,6 +386,15 @@ pub struct EngineConfig {
     /// (reason `stop`, the token included). Protocol-v1 requests override
     /// this per request.
     pub stop_tokens: Vec<u32>,
+    /// Chunked prefill (DESIGN.md §Chunked Prefill): split a cold
+    /// prompt's first computation into chunks of at most this many
+    /// tokens, one bare forest row per step, so a long arrival bounds
+    /// each co-batched step's extra cost to `prefill_chunk` positions
+    /// instead of the whole prompt. 0 (default) = off: the entire
+    /// non-resident prompt is computed in the first dispatch, exactly
+    /// the pre-chunking pipeline. Token streams are bit-identical on vs
+    /// off (pinned by `tests/prefill_equivalence.rs`).
+    pub prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -395,6 +411,7 @@ impl Default for EngineConfig {
             sequoia_accept_rate: 0.75,
             seed: 0,
             stop_tokens: Vec::new(),
+            prefill_chunk: 0,
         }
     }
 }
@@ -724,6 +741,14 @@ impl Config {
                 Ok(v) => self.sched.idle_tick_ms = v,
                 Err(_) => return bad("idle_tick_ms"),
             },
+            "prefill_chunk" => match value.parse() {
+                Ok(v) => self.engine.prefill_chunk = v,
+                Err(_) => return bad("prefill_chunk"),
+            },
+            "prefill_budget" => match value.parse() {
+                Ok(v) => self.sched.prefill_budget = v,
+                Err(_) => return bad("prefill_budget"),
+            },
             "cache" => match value {
                 "on" | "true" | "1" => self.cache.enabled = true,
                 "off" | "false" | "0" => self.cache.enabled = false,
@@ -865,6 +890,14 @@ impl Config {
             self.sched.idle_tick_ms.to_string(),
         );
         m.insert(
+            "prefill_chunk".into(),
+            self.engine.prefill_chunk.to_string(),
+        );
+        m.insert(
+            "prefill_budget".into(),
+            self.sched.prefill_budget.to_string(),
+        );
+        m.insert(
             "cache".into(),
             if self.cache.enabled { "on" } else { "off" }.into(),
         );
@@ -973,6 +1006,22 @@ mod tests {
         for k in [SchedKind::Fcfs, SchedKind::Continuous] {
             assert_eq!(SchedKind::parse(k.name()), Some(k));
         }
+    }
+
+    #[test]
+    fn prefill_keys_round_trip_and_default_off() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.engine.prefill_chunk, 0, "chunking must default off");
+        assert_eq!(cfg.sched.prefill_budget, 0);
+        cfg.set("prefill_chunk", "128").unwrap();
+        cfg.set("prefill_budget", "256").unwrap();
+        assert_eq!(cfg.engine.prefill_chunk, 128);
+        assert_eq!(cfg.sched.prefill_budget, 256);
+        assert!(cfg.set("prefill_chunk", "lots").is_err());
+        assert!(cfg.set("prefill_budget", "-1").is_err());
+        let map = cfg.to_map();
+        assert_eq!(map.get("prefill_chunk").unwrap(), "128");
+        assert_eq!(map.get("prefill_budget").unwrap(), "256");
     }
 
     #[test]

@@ -73,6 +73,12 @@ pub struct Metrics {
     radix_nodes: AtomicU64,
     radix_depth: AtomicU64,
     radix_shared_blocks: AtomicU64,
+    /// Chunked prefill (DESIGN.md §Chunked Prefill): chunk rows dispatched,
+    /// prompt positions those rows computed, and a gauge of prompt
+    /// positions already resident for sequences still mid-prefill.
+    prefill_chunks: AtomicU64,
+    prefill_tokens: AtomicU64,
+    prefill_tokens_in_flight: AtomicU64,
 }
 
 impl Metrics {
@@ -112,7 +118,36 @@ impl Metrics {
             radix_nodes: AtomicU64::new(0),
             radix_depth: AtomicU64::new(0),
             radix_shared_blocks: AtomicU64::new(0),
+            prefill_chunks: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            prefill_tokens_in_flight: AtomicU64::new(0),
         }
+    }
+
+    /// Record chunked-prefill work: `chunks` bare prefill rows that
+    /// computed `tokens` prompt positions this dispatch.
+    pub fn on_prefill(&self, chunks: u64, tokens: u64) {
+        self.prefill_chunks.fetch_add(chunks, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(tokens, Ordering::Relaxed);
+    }
+
+    /// Publish the mid-prefill in-flight gauge (prompt positions already
+    /// computed for sequences that have not yet sampled a token).
+    pub fn set_prefill_in_flight(&self, tokens: u64) {
+        self.prefill_tokens_in_flight
+            .store(tokens, Ordering::Relaxed);
+    }
+
+    pub fn prefill_chunks(&self) -> u64 {
+        self.prefill_chunks.load(Ordering::Relaxed)
+    }
+
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefill_tokens.load(Ordering::Relaxed)
+    }
+
+    pub fn prefill_tokens_in_flight(&self) -> u64 {
+        self.prefill_tokens_in_flight.load(Ordering::Relaxed)
     }
 
     /// Record radix prefix-cache activity: `lookups` admission lookups of
@@ -520,6 +555,12 @@ impl Metrics {
                     self.radix_shared_blocks.load(Ordering::Relaxed) as f64,
                 ),
             ),
+            ("prefill_chunks", Json::Num(self.prefill_chunks() as f64)),
+            ("prefill_tokens", Json::Num(self.prefill_tokens() as f64)),
+            (
+                "prefill_tokens_in_flight",
+                Json::Num(self.prefill_tokens_in_flight() as f64),
+            ),
         ])
     }
 }
@@ -555,6 +596,26 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap.get("cancelled").unwrap().as_usize(), Some(1));
         assert_eq!(snap.get("chunks").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn prefill_counters_flow() {
+        let m = Metrics::new();
+        m.on_prefill(2, 64);
+        m.on_prefill(1, 32);
+        m.set_prefill_in_flight(96);
+        assert_eq!(m.prefill_chunks(), 3);
+        assert_eq!(m.prefill_tokens(), 96);
+        assert_eq!(m.prefill_tokens_in_flight(), 96);
+        m.set_prefill_in_flight(0); // gauge drains on retire
+        assert_eq!(m.prefill_tokens_in_flight(), 0);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("prefill_chunks").unwrap().as_usize(), Some(3));
+        assert_eq!(snap.get("prefill_tokens").unwrap().as_usize(), Some(96));
+        assert_eq!(
+            snap.get("prefill_tokens_in_flight").unwrap().as_usize(),
+            Some(0)
+        );
     }
 
     #[test]

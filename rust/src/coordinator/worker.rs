@@ -186,6 +186,13 @@ fn serve_one(
         stats.total_billed_positions(),
         engine.cache().used_blocks() as u64,
     );
+    // FCFS chunked prefill: the generation is synchronous, so by the time
+    // stats land here every chunk has already committed — the in-flight
+    // gauge stays 0 and only the totals accrue.
+    let prefill_chunks = stats.total_prefill_chunks();
+    if prefill_chunks > 0 {
+        metrics.on_prefill(prefill_chunks, stats.total_prefill_tokens());
+    }
     // One radix admission per FCFS generation (the engine re-admits its
     // sequence at the first round); warm tokens come from the per-step
     // aggregate, which is nonzero only on that first step.

@@ -184,6 +184,43 @@ impl SpecEngine {
         let mut stats = GenerationStats::new(prompt.len());
         let mut finish = FinishReason::Length;
 
+        // Chunked prefill (DESIGN.md §Chunked Prefill): compute the cold
+        // prompt in block-aligned chunks of at most `prefill_chunk`
+        // tokens, one bare prefill round each, so the eventual first
+        // speculation round pays at most `prefill_chunk` fresh prompt
+        // positions plus its tree rows. Chunks emit nothing and draw
+        // nothing from the rng, so the token stream is bit-identical to
+        // the one-shot path (`prefill_chunk=0`, the default) — pinned by
+        // `rust/tests/prefill_equivalence.rs`. The loop always leaves at
+        // least one prompt position for the first speculation round.
+        let chunk = self.cfg.prefill_chunk;
+        if chunk > 0 {
+            let b = self.cache.block_tokens().max(1);
+            let mut pos = 0usize;
+            while ctx.len() - pos > chunk {
+                if cancel.map(CancelToken::is_cancelled).unwrap_or(false) {
+                    break; // the main loop settles finish=Cancelled
+                }
+                // Chunk ends round down to a block boundary so committed
+                // residency (and radix publication) is block-tight; tiny
+                // chunks still make >= 1 token of progress.
+                let mut end = ((pos + chunk) / b) * b;
+                if end <= pos {
+                    end = pos + chunk;
+                }
+                let step = self.prefill_step(&ctx[..end]);
+                // No sink call: prefill chunks are not emissions, so TTFT
+                // stays pinned to the first real chunk.
+                stats.push_step(
+                    Vec::new(),
+                    step,
+                    &mut ctx,
+                    self.cfg.max_new_tokens,
+                );
+                pos = end;
+            }
+        }
+
         while stats.tokens.len() < self.cfg.max_new_tokens {
             if cancel.map(CancelToken::is_cancelled).unwrap_or(false) {
                 finish = FinishReason::Cancelled;
@@ -266,6 +303,7 @@ impl SpecEngine {
             temperature: self.cfg.target_temp,
             cap: budget,
             wants_spec: remaining > 1,
+            prefill: false,
         }];
         let outcome = round::run_round(
             &rc,
@@ -298,10 +336,69 @@ impl SpecEngine {
             billed_positions: seq.bill.billed_positions,
             cached_positions: seq.bill.cached_positions,
             warm_start_tokens: seq.warm_start,
+            prefill: false,
+            prefill_tokens: 0,
             times: outcome.times,
             virtual_secs: outcome.virtual_secs,
         };
         (seq.tokens, step)
+    }
+
+    /// One prefill chunk round: a batch-of-1 prefill row over a partial
+    /// prompt (`round::SeqRound::prefill`). Commits the chunk's positions
+    /// into residency — and, radix on, publishes them — while sampling
+    /// nothing; the rng stream is untouched. No draft tree is built, so
+    /// drafter resolution (adaptive or static) is irrelevant here.
+    fn prefill_step(&mut self, ctx: &[u32]) -> StepStats {
+        let rc = RoundCtx {
+            cfg: &self.cfg,
+            policy: self.policy.as_ref(),
+            policy_kind: self.cfg.policy,
+            global_budget: 0,
+            regime: self.regime,
+        };
+        let mut seqs = [SeqRound {
+            id: ENGINE_SEQ,
+            prefix: ctx,
+            rng: &mut self.rng,
+            temperature: self.cfg.target_temp,
+            cap: 0,
+            wants_spec: false,
+            prefill: true,
+        }];
+        let outcome = round::run_round(
+            &rc,
+            self.draft.as_mut(),
+            self.target.as_mut(),
+            &mut self.cache,
+            &mut seqs,
+        );
+        if let Some((obs, wid)) = &self.obs {
+            obs.record_round(
+                *wid,
+                TraceId(self.trace),
+                1,
+                self.cfg.policy,
+                &outcome.times,
+                &outcome.accept,
+            );
+        }
+        let seq = outcome.seqs.into_iter().next().expect("batch of one");
+        StepStats {
+            tree_size: 0,
+            tree_depth: 0,
+            accepted_speculated: 0,
+            emitted: 0,
+            draft_dispatches: 0,
+            target_dispatches: outcome.target_dispatches,
+            billed_positions: seq.bill.billed_positions,
+            cached_positions: seq.bill.cached_positions,
+            warm_start_tokens: seq.warm_start,
+            prefill: true,
+            prefill_tokens: outcome.prefill_tokens,
+            times: outcome.times,
+            virtual_secs: outcome.virtual_secs,
+        }
     }
 }
 
@@ -483,6 +580,47 @@ mod tests {
         assert_eq!(chunks, stats.tokens);
         assert_eq!(rounds, stats.steps.len());
         assert_eq!(finish, FinishReason::Length);
+    }
+
+    /// Chunked prefill at engine level: the token stream is bit-identical
+    /// to one-shot, the extra steps are exactly the chunk rounds (which
+    /// emit nothing and build no trees), and with the cache on the total
+    /// computed positions match — chunking only re-times the prompt work,
+    /// it never re-does it. (The full matrix across schedulers × cache ×
+    /// radix × drafters lives in `rust/tests/prefill_equivalence.rs`.)
+    #[test]
+    fn chunked_prefill_matches_one_shot_and_rebills_nothing() {
+        let prompt: Vec<u32> = (1..=37).collect();
+        let cache = crate::config::CacheConfig {
+            block_tokens: 4,
+            ..crate::config::CacheConfig::default()
+        };
+        let mut off = engine(PolicyKind::DySpec, 0.8, 0.6, 23).with_cache(&cache);
+        let base = off.generate(&prompt);
+
+        let mut on = engine(PolicyKind::DySpec, 0.8, 0.6, 23).with_cache(&cache);
+        on.cfg.prefill_chunk = 8;
+        let chunked = on.generate(&prompt);
+
+        assert_eq!(chunked.tokens, base.tokens, "chunking changed the stream");
+        // 37-token prompt, chunk 8, block 4: chunks end at 8/16/24/32, the
+        // final 5 prompt positions ride the first speculation round.
+        assert_eq!(chunked.total_prefill_chunks(), 4);
+        assert_eq!(chunked.total_prefill_tokens(), 32);
+        assert_eq!(chunked.steps.len(), base.steps.len() + 4);
+        for s in &chunked.steps[..4] {
+            assert!(s.prefill);
+            assert_eq!(s.emitted, 0);
+            assert_eq!(s.tree_size, 0);
+            assert_eq!(s.draft_dispatches, 0);
+        }
+        assert!(chunked.steps[4..].iter().all(|s| !s.prefill));
+        assert_eq!(
+            chunked.total_billed_positions(),
+            base.total_billed_positions(),
+            "chunking re-billed prompt positions"
+        );
+        assert_eq!(chunked.steps[4].cached_positions, 32, "chunks not resident");
     }
 
     #[test]

@@ -23,6 +23,12 @@ pub struct StepStats {
     /// Radix warm-start tokens granted when this step admitted the
     /// sequence (nonzero only on a generation's first step, radix on).
     pub warm_start_tokens: usize,
+    /// This step was a prefill chunk round (DESIGN.md §Chunked Prefill):
+    /// it computed prompt positions into residency and emitted nothing.
+    pub prefill: bool,
+    /// Prompt positions computed by this step's prefill chunk (its
+    /// billed positions; 0 for decode steps and fully-warm chunks).
+    pub prefill_tokens: usize,
     /// Measured wall time per component (Fig 4 buckets).
     pub times: ComponentTimes,
     /// Virtual step latency under the configured hardware regime.
@@ -65,14 +71,17 @@ impl GenerationStats {
         self.steps.push(step);
     }
 
-    /// Mean tokens emitted per target-model step — the paper's
+    /// Mean tokens emitted per target-model DECODE step — the paper's
     /// "(accepted tokens)" parenthetical, and ≈ the acceleration rate in
-    /// the T_t-dominated regime (§5.3).
+    /// the T_t-dominated regime (§5.3). Prefill chunk steps emit nothing
+    /// by construction and are excluded from the denominator so the
+    /// metric keeps its meaning with chunking on.
     pub fn mean_emitted_per_step(&self) -> f64 {
-        if self.steps.is_empty() {
+        let decode = self.steps.iter().filter(|s| !s.prefill).count();
+        if decode == 0 {
             return 0.0;
         }
-        self.tokens.len() as f64 / self.steps.len() as f64
+        self.tokens.len() as f64 / decode as f64
     }
 
     pub fn mean_tree_size(&self) -> f64 {
@@ -133,6 +142,17 @@ impl GenerationStats {
     /// reuse; nonzero only with `cache.radix=on` and a shared prefix).
     pub fn total_warm_start_tokens(&self) -> u64 {
         self.steps.iter().map(|s| s.warm_start_tokens as u64).sum()
+    }
+
+    /// Prefill chunk rounds taken before the first speculation round
+    /// (0 with chunking off).
+    pub fn total_prefill_chunks(&self) -> u64 {
+        self.steps.iter().filter(|s| s.prefill).count() as u64
+    }
+
+    /// Prompt positions computed by prefill chunk rounds.
+    pub fn total_prefill_tokens(&self) -> u64 {
+        self.steps.iter().map(|s| s.prefill_tokens as u64).sum()
     }
 
     /// Mean computed verification positions per step — the context-scaling
@@ -237,6 +257,28 @@ mod tests {
         assert!((g.mean_tree_size() - 10.0).abs() < 1e-12);
         assert!((g.total_virtual_secs() - 1.5).abs() < 1e-12);
         assert!((g.virtual_latency_per_token() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefill_steps_do_not_dilute_emitted_per_step() {
+        let mut g = GenerationStats::new(8);
+        let mut ctx = vec![1; 8];
+        let chunk = StepStats {
+            prefill: true,
+            prefill_tokens: 4,
+            billed_positions: 4,
+            ..StepStats::default()
+        };
+        g.push_step(Vec::new(), chunk.clone(), &mut ctx, 100);
+        g.push_step(Vec::new(), chunk, &mut ctx, 100);
+        g.push_step(vec![7, 8], step(2, 10, 0.5), &mut ctx, 100);
+        assert_eq!(g.total_prefill_chunks(), 2);
+        assert_eq!(g.total_prefill_tokens(), 8);
+        assert_eq!(g.tokens.len(), 2);
+        // Two chunk rounds + one decode round, but the mean divides by
+        // decode rounds only.
+        assert_eq!(g.steps.len(), 3);
+        assert!((g.mean_emitted_per_step() - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -88,6 +88,13 @@ pub struct SeqRound<'a> {
     pub cap: usize,
     /// False = bare verification row (draining / no speculation wanted).
     pub wants_spec: bool,
+    /// Prefill chunk row (DESIGN.md §Chunked Prefill): `prefix` is a
+    /// PARTIAL prompt — the round computes and commits its positions into
+    /// residency but samples NOTHING. The sequence's rng is untouched, no
+    /// token is emitted, and the bill is exactly the chunk's non-resident
+    /// positions (bare tree, zero verification rows). Implies
+    /// `wants_spec == false`.
+    pub prefill: bool,
 }
 
 /// Phase 1 output: residency snapshots + the allocated draft forest.
@@ -136,6 +143,9 @@ pub struct SeqRoundOutcome {
     /// Radix warm-start tokens granted when this round admitted the
     /// sequence (0 for already-admitted sequences or radix off).
     pub warm_start: usize,
+    /// True for a prefill chunk row: `tokens` is empty by construction
+    /// and the bill covers only the chunk's computed positions.
+    pub prefill: bool,
     pub bill: VerifyBill,
 }
 
@@ -176,6 +186,11 @@ pub struct RoundOutcome {
     pub radix_hits: usize,
     /// Σ allocated — the speculated tokens the dispatch carried.
     pub spec_tokens: usize,
+    /// Σ prompt positions computed by prefill chunk rows this round
+    /// (their `bill.billed_positions`; zero when chunking is off).
+    pub prefill_tokens: usize,
+    /// Prefill chunk rows in the dispatch.
+    pub prefill_rows: usize,
     /// Measured wall time per component (Fig 4 buckets: draft_infer,
     /// tree_construct, mask, target_infer, sample, verify — plus the KV
     /// commit/rollback under "commit").
@@ -232,7 +247,9 @@ pub fn plan_round(
     let spec: Vec<usize> = if rc.policy_kind == PolicyKind::Baseline {
         Vec::new()
     } else {
-        (0..n).filter(|&i| seqs[i].wants_spec).collect()
+        (0..n)
+            .filter(|&i| seqs[i].wants_spec && !seqs[i].prefill)
+            .collect()
     };
     let global_budget = if spec.is_empty() { 0 } else { rc.global_budget };
 
@@ -372,8 +389,52 @@ pub fn conclude_round(
     let (mut fetched, mut written) = (0usize, 0usize);
     let (mut sample_secs, mut verify_secs, mut commit_secs) =
         (0.0f64, 0.0f64, 0.0f64);
+    let mut prefill_tokens = 0usize;
+    let mut prefill_rows = 0usize;
     for (i, v) in seqs.iter_mut().enumerate() {
         let prefix_len = v.prefix.len();
+
+        // Prefill chunk rows sample NOTHING: no dists, no verification
+        // walk, no bonus draw — the sequence's rng stream is untouched, so
+        // the eventual first speculation round (over the full prompt)
+        // draws exactly what a one-shot prefill would have. The chunk's
+        // computed positions commit into residency (and, radix on,
+        // publish), and the bill is the chunk's miss region alone (bare
+        // tree, zero verification rows).
+        if v.prefill {
+            let t = Timer::start();
+            let lease = std::mem::take(&mut leases[i]);
+            cache.end_lease(lease, &plan.trees[i], &[]);
+            cache.commit(v.id, plan.cached_lens[i], v.prefix, &[]);
+            let bill = verify_bill(
+                prefix_len,
+                plan.cached_lens[i],
+                plan.orders[i].len(),
+                block_tokens,
+            );
+            cache.record_lookup(
+                bill.cached_positions as u64,
+                (prefix_len - bill.cached_positions) as u64,
+            );
+            commit_secs += t.elapsed_secs();
+            billed += bill.billed_positions;
+            cached += bill.cached_positions;
+            fetched += bill.fetched_blocks;
+            written += bill.written_blocks;
+            prefill_tokens += bill.billed_positions;
+            prefill_rows += 1;
+            out.push(SeqRoundOutcome {
+                id: v.id,
+                tokens: Vec::new(),
+                accepted: 0,
+                allocated: 0,
+                tree_depth: 0,
+                warm_start: plan.warm_starts[i].unwrap_or(0),
+                prefill: true,
+                bill,
+            });
+            continue;
+        }
 
         // --- temperature + sampling dists (Fig 4: "sampling") ---
         let t = Timer::start();
@@ -437,6 +498,7 @@ pub fn conclude_round(
             allocated: plan.allocated[i],
             tree_depth: plan.trees[i].depth(),
             warm_start: plan.warm_starts[i].unwrap_or(0),
+            prefill: false,
             bill,
         });
     }
@@ -492,6 +554,8 @@ pub fn conclude_round(
             .filter(|w| w.unwrap_or(0) > 0)
             .count(),
         spec_tokens,
+        prefill_tokens,
+        prefill_rows,
         times,
         virtual_secs,
         accept,
@@ -554,6 +618,7 @@ mod tests {
             temperature: 0.6,
             cap: budget,
             wants_spec,
+            prefill: false,
         }];
         run_round(&rc, &mut draft, &mut target, &mut cache, &mut seqs)
     }
@@ -594,6 +659,72 @@ mod tests {
         assert_eq!(s.tokens.len(), 1);
         assert_eq!(out.draft_dispatches, 0);
         assert_eq!(out.global_budget, 0, "no speculator, no budget");
+    }
+
+    #[test]
+    fn prefill_chunk_row_commits_without_sampling() {
+        let (mut draft, mut target) =
+            SimModel::pair(SimSpec::new(64, 2.0, 0.8, 11));
+        let cfg = ctx_cfg(PolicyKind::DySpec, 12);
+        let pol = make_policy(PolicyKind::DySpec);
+        let rc = RoundCtx {
+            cfg: &cfg,
+            policy: pol.as_ref(),
+            policy_kind: PolicyKind::DySpec,
+            global_budget: 12,
+            regime: None,
+        };
+        let mut cache = CacheManager::new(&CacheConfig {
+            enabled: true,
+            block_tokens: 4,
+            ..CacheConfig::default()
+        });
+        let mut rng = Rng::new(3);
+        let before = rng.clone();
+        let prompt = [5u32, 6, 7, 8, 9, 10, 11, 12];
+        let mut seqs = [SeqRound {
+            id: 1,
+            prefix: &prompt[..4],
+            rng: &mut rng,
+            temperature: 0.6,
+            cap: 12,
+            wants_spec: false,
+            prefill: true,
+        }];
+        let out =
+            run_round(&rc, &mut draft, &mut target, &mut cache, &mut seqs);
+        let s = &out.seqs[0];
+        assert!(s.prefill);
+        assert!(s.tokens.is_empty(), "prefill chunk sampled a token");
+        assert_eq!(s.accepted, 0);
+        assert_eq!(s.allocated, 0);
+        // Bare tree, zero verification rows: the bill is the chunk alone.
+        assert_eq!(s.bill.billed_positions, 4);
+        assert_eq!(out.prefill_tokens, 4);
+        assert_eq!(out.prefill_rows, 1);
+        assert_eq!(out.draft_dispatches, 0, "prefill paid a draft dispatch");
+        assert!(out.accept.is_empty());
+        // The sampling stream is untouched: the eventual first speculation
+        // round draws exactly what a one-shot prefill would have.
+        assert_eq!(rng.clone().next_u64(), before.clone().next_u64());
+        // The chunk's positions are now resident; the next chunk's round
+        // bills only its own fresh positions.
+        assert_eq!(cache.resident(1), 4);
+        let mut seqs = [SeqRound {
+            id: 1,
+            prefix: &prompt[..],
+            rng: &mut rng,
+            temperature: 0.6,
+            cap: 12,
+            wants_spec: false,
+            prefill: true,
+        }];
+        let out =
+            run_round(&rc, &mut draft, &mut target, &mut cache, &mut seqs);
+        assert_eq!(out.seqs[0].bill.billed_positions, 4);
+        assert_eq!(out.seqs[0].bill.cached_positions, 4);
+        cache.drop_seq(1);
+        assert_eq!(cache.used_blocks(), 0);
     }
 
     #[test]
@@ -696,6 +827,7 @@ mod tests {
                 cap: 8,
                 // middle sequence drains: bare row
                 wants_spec: i != 1,
+                prefill: false,
             })
             .collect();
         let out =

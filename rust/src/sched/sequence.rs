@@ -61,6 +61,12 @@ pub struct Sequence {
     /// hit-rate metric; residency itself lives in `cache::CacheManager`,
     /// keyed by `id`).
     pub cache_hits: u64,
+    /// Chunked-prefill progress: prompt positions already computed by
+    /// prefill chunk rounds (DESIGN.md §Chunked Prefill). Tracked
+    /// independently of cache residency so the schedule is identical
+    /// with the cache off (chunks are then wasted compute, but the token
+    /// stream never observes them). 0 when chunking is off.
+    pub prefill_pos: usize,
     /// Per-sequence sampling stream. With an explicit request `seed` the
     /// stream is derived from it alone (same seed -> same stream on any
     /// worker); otherwise it is seeded from (scheduler seed, request id)
@@ -112,6 +118,7 @@ impl Sequence {
             steps: 0,
             budget_tokens: 0,
             cache_hits: 0,
+            prefill_pos: 0,
             rng,
             submitted_at: req.submitted_at,
             admitted_at: Instant::now(),
@@ -147,10 +154,38 @@ impl Sequence {
     }
 
     /// Eligible for speculation-budget shares this step? Draining
-    /// sequences (one token left) and finished ones are not.
+    /// sequences (one token left) and finished ones are not. A sequence
+    /// still mid-chunked-prefill also is not — the batcher filters those
+    /// with [`Sequence::mid_prefill`] before consulting this.
     pub fn wants_speculation(&self) -> bool {
         matches!(self.state, SeqState::Prefill | SeqState::Speculate)
             && self.remaining() > 1
+    }
+
+    /// Still inside chunked prefill at chunk size `chunk`? True while
+    /// more than one chunk's worth of prompt remains uncomputed: the
+    /// sequence then takes a prefill chunk row this step (or sits out if
+    /// the per-step prefill budget is spent) instead of a speculation
+    /// round. Once the tail fits in one chunk, the ordinary first
+    /// speculation round computes it together with its tree — exactly
+    /// the rows a one-shot prefill would have computed, so the sampled
+    /// stream is bit-identical. Always false with chunking off.
+    pub fn mid_prefill(&self, chunk: usize) -> bool {
+        chunk > 0
+            && self.state == SeqState::Prefill
+            && self.ctx.len() - self.prefill_pos > chunk
+    }
+
+    /// Record one prefill chunk round: prompt positions up to `end` are
+    /// now computed (and, cache on, resident). No token was sampled, no
+    /// event is streamed, and `steps` counts decode rounds only.
+    pub fn on_prefill_chunk(&mut self, end: usize) {
+        debug_assert!(self.state == SeqState::Prefill);
+        debug_assert!(
+            end > self.prefill_pos && end < self.ctx.len(),
+            "chunk must make progress and leave a tail for the first round"
+        );
+        self.prefill_pos = end;
     }
 
     /// Record one step's emitted tokens (overshoot truncated, stop tokens
@@ -331,6 +366,26 @@ mod tests {
         // remaining() == 1 from the start: never asks for tree budget.
         assert!(!s.wants_speculation());
         assert_eq!(s.state, SeqState::Prefill);
+    }
+
+    #[test]
+    fn chunked_prefill_progress_walk() {
+        let (req, _rx) =
+            mk_req(7, (1..=10).collect(), GenParams::simple(8, 0.6));
+        let mut s = Sequence::new(req, 42);
+        assert!(!s.mid_prefill(0), "chunking off is never mid-prefill");
+        assert!(s.mid_prefill(4));
+        s.on_prefill_chunk(4);
+        assert!(s.mid_prefill(4), "6 uncomputed tokens > chunk 4");
+        s.on_prefill_chunk(8);
+        assert!(
+            !s.mid_prefill(4),
+            "2-token tail rides the first speculation round"
+        );
+        assert_eq!(s.state, SeqState::Prefill);
+        assert!(s.wants_speculation());
+        assert!(!s.on_step(vec![11], 3, RoundStats::default()));
+        assert_eq!(s.state, SeqState::Speculate);
     }
 
     #[test]

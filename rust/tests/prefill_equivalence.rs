@@ -1,0 +1,233 @@
+//! Differential wall for chunked prefill (ISSUE 10 tentpole):
+//!
+//!   1. engine level (the FCFS scheduler is a batch-of-1 engine) — token
+//!      streams are BIT-IDENTICAL chunking on vs off for all four
+//!      drafters × cache on/off × radix on/off: chunk rows consume no rng
+//!      draws and sim logits are residency-independent, so chunking only
+//!      re-times the prompt computation;
+//!   2. billing — with the cache on, chunking never re-bills a prompt
+//!      position: total computed positions match the one-shot run
+//!      exactly;
+//!   3. radix composition — chunks publish into the shared prefix tree,
+//!      so a chunked prefill warm-starts later sharers exactly like a
+//!      one-shot prefill does;
+//!   4. batcher level (continuous scheduler) — same stream identity under
+//!      the step loop, chunking on vs off.
+//!
+//! Identity is pinned on single-request workloads: with co-batched
+//! sequences the budget split intentionally re-times speculation (that is
+//! the point of the feature), so cross-sequence forests differ by design.
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dyspec::config::{CacheConfig, Config, EngineConfig, PolicyKind, SchedKind};
+use dyspec::coordinator::{CancelToken, GenEvent, GenParams, Metrics, Request};
+use dyspec::engine::SpecEngine;
+use dyspec::models::sim::{SimModel, SimSpec};
+use dyspec::sched::Batcher;
+
+const POLICIES: [PolicyKind; 4] = [
+    PolicyKind::DySpec,
+    PolicyKind::Sequoia,
+    PolicyKind::SpecInfer,
+    PolicyKind::Chain,
+];
+
+fn sim_pair(seed: u64) -> (SimModel, SimModel) {
+    SimModel::pair(SimSpec::new(64, 2.0, 1.0, seed))
+}
+
+fn cache_cfg(enabled: bool, radix: bool) -> CacheConfig {
+    CacheConfig {
+        enabled,
+        radix,
+        block_tokens: 4,
+        radix_min_tokens: 4,
+        ..CacheConfig::default()
+    }
+}
+
+/// One generation over a 37-token prompt (not block-aligned on purpose:
+/// the chunk walk exercises both the round-down and the tail).
+fn engine_run(
+    policy: PolicyKind,
+    cache: &CacheConfig,
+    chunk: usize,
+    seed: u64,
+) -> dyspec::engine::GenerationStats {
+    let (draft, target) = sim_pair(99);
+    let cfg = EngineConfig {
+        policy,
+        tree_budget: 10,
+        max_new_tokens: 24,
+        target_temp: 0.6,
+        draft_temp: 0.6,
+        seed,
+        prefill_chunk: chunk,
+        ..EngineConfig::default()
+    };
+    let mut e = SpecEngine::new(Box::new(draft), Box::new(target), cfg, None)
+        .with_cache(cache);
+    e.reseed(seed ^ 0xF00D);
+    let prompt: Vec<u32> =
+        (0..37u32).map(|k| (k * 7 + seed as u32) % 64).collect();
+    e.generate(&prompt)
+}
+
+/// 1+2. The full engine matrix: drafters × cache × radix × seeds. Streams
+/// identical, the extra steps are exactly the chunk rounds, and (cache
+/// on) the total computed positions match one-shot.
+#[test]
+fn engine_streams_identical_chunking_on_vs_off_full_matrix() {
+    for policy in POLICIES {
+        for cache_on in [true, false] {
+            for radix in [true, false] {
+                if radix && !cache_on {
+                    continue; // radix is a cache feature; inert otherwise
+                }
+                for seed in 0..2u64 {
+                    let cache = cache_cfg(cache_on, radix);
+                    let off = engine_run(policy, &cache, 0, seed);
+                    let on = engine_run(policy, &cache, 8, seed);
+                    assert_eq!(
+                        on.tokens, off.tokens,
+                        "{policy} cache={cache_on} radix={radix} seed \
+                         {seed}: chunking changed the stream"
+                    );
+                    let chunks = on.total_prefill_chunks() as usize;
+                    assert!(chunks > 0, "{policy}: chunking never engaged");
+                    assert_eq!(off.total_prefill_chunks(), 0);
+                    assert_eq!(on.steps.len(), off.steps.len() + chunks);
+                    if cache_on {
+                        assert_eq!(
+                            on.total_billed_positions(),
+                            off.total_billed_positions(),
+                            "{policy} radix={radix} seed {seed}: chunking \
+                             re-billed prompt positions"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 3. Radix composition: generation 1 prefills (chunked or one-shot) and
+/// retires; generation 2 — always one-shot — shares the whole 36-token
+/// (9-block) prompt except its final token. The second admission must not
+/// be able to tell HOW the first prefilled: same warm-start grant, same
+/// stream. That is the "chunks publish into the radix tree" guarantee.
+#[test]
+fn chunked_prefill_publishes_into_radix_for_later_sharers() {
+    let run = |first_chunk: usize| {
+        let (draft, target) = sim_pair(99);
+        let cfg = EngineConfig {
+            policy: PolicyKind::DySpec,
+            tree_budget: 10,
+            max_new_tokens: 16,
+            target_temp: 0.6,
+            draft_temp: 0.6,
+            seed: 7,
+            prefill_chunk: first_chunk,
+            ..EngineConfig::default()
+        };
+        let mut e =
+            SpecEngine::new(Box::new(draft), Box::new(target), cfg, None)
+                .with_cache(&cache_cfg(true, true));
+        let shared: Vec<u32> = (0..36u32).map(|k| (k * 5 + 3) % 64).collect();
+        let mut first = shared.clone();
+        first.push(7);
+        e.reseed(0xF00D);
+        let g1 = e.generate(&first);
+        // The sharer always prefills one-shot; only the PUBLISHER varies.
+        e.cfg.prefill_chunk = 0;
+        let mut second = shared;
+        second.push(8);
+        e.reseed(0xF00D);
+        let g2 = e.generate(&second);
+        (g1, g2)
+    };
+    let (off1, off2) = run(0);
+    let (on1, on2) = run(8);
+    assert!(on1.total_prefill_chunks() > 0, "first run never chunked");
+    assert_eq!(off1.total_prefill_chunks(), 0);
+    assert_eq!(on1.tokens, off1.tokens);
+    assert_eq!(on2.tokens, off2.tokens, "publisher mode changed the sharer");
+    let warm = on2.total_warm_start_tokens();
+    assert_eq!(
+        warm,
+        off2.total_warm_start_tokens(),
+        "chunked publication granted a different warm start"
+    );
+    assert!(warm >= 36, "sharer did not warm-start off the chunked prefill");
+    assert_eq!(
+        on2.total_billed_positions(),
+        off2.total_billed_positions(),
+        "sharer billed differently depending on publisher mode"
+    );
+}
+
+/// One single-request continuous-batcher run (the identity workload).
+fn batcher_run(policy: PolicyKind, cache: CacheConfig, chunk: usize) -> Vec<u32> {
+    let mut cfg = Config::new();
+    cfg.engine.policy = policy;
+    cfg.engine.tree_budget = 8;
+    cfg.engine.seed = 5;
+    cfg.engine.prefill_chunk = chunk;
+    cfg.sched.kind = SchedKind::Continuous;
+    cfg.sched.max_active = 16;
+    cfg.sched.global_budget = 8;
+    cfg.sched.prefill_budget = chunk;
+    cfg.cache = cache;
+    let (d, t) = sim_pair(17);
+    let mut b = Batcher::new(
+        0,
+        cfg,
+        Box::new(d),
+        Box::new(t),
+        Arc::new(Metrics::new()),
+    );
+    let (tx, rx) = mpsc::channel();
+    let prompt: Vec<u32> = (0..40u32).map(|k| (k * 3 + 2) % 64).collect();
+    b.admit(Request {
+        id: 1,
+        prompt,
+        params: GenParams::simple(16, 0.6),
+        submitted_at: Instant::now(),
+        cancel: CancelToken::new(),
+        events: Box::new(tx),
+        trace: 0,
+    });
+    while b.active() > 0 {
+        b.step();
+    }
+    loop {
+        match rx.recv().expect("request dropped") {
+            GenEvent::Done(resp) => return resp.tokens,
+            GenEvent::Chunk { .. } => continue,
+        }
+    }
+}
+
+/// 4. Continuous scheduler, cache on/off × radix on/off × all drafters:
+/// the chunked step loop emits the same stream as one-shot admission.
+#[test]
+fn batched_streams_identical_chunking_on_vs_off_full_matrix() {
+    for policy in POLICIES {
+        for cache_on in [true, false] {
+            for radix in [true, false] {
+                if radix && !cache_on {
+                    continue;
+                }
+                let off = batcher_run(policy, cache_cfg(cache_on, radix), 0);
+                let on = batcher_run(policy, cache_cfg(cache_on, radix), 8);
+                assert_eq!(
+                    on, off,
+                    "{policy} cache={cache_on} radix={radix}: chunking \
+                     changed the batched stream"
+                );
+            }
+        }
+    }
+}

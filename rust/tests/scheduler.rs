@@ -355,6 +355,114 @@ fn tree_rollback_and_eviction_respect_refcounts_on_real_trees() {
     assert_eq!(stats.allocated, stats.freed, "alloc/free imbalance");
 }
 
+/// Chunked prefill bounds head-of-line blocking (ISSUE 10): with a long
+/// cold prompt co-batched against a chatter, every step the chatter takes
+/// part in bills at most its OWN round cost plus `prefill_chunk` prompt
+/// positions — never the long prompt in one lump, which is exactly what
+/// the one-shot path does on its first co-batched step.
+#[test]
+fn chunked_prefill_bounds_co_batched_billing() {
+    const CHUNK: usize = 16;
+    let long_prompt: Vec<u32> = (0..200u32).map(|k| k % 64).collect();
+
+    let mk = |chunk: usize| {
+        let mut cfg = base_cfg();
+        cfg.cache.block_tokens = 4;
+        cfg.engine.prefill_chunk = chunk;
+        cfg.sched.prefill_budget = chunk;
+        mk_batcher(cfg)
+    };
+
+    // One-shot reference: the cold long prompt lands entirely inside the
+    // chatter's first co-batched step.
+    let mut b = mk(0);
+    let (long_req, _lh) = mk_request(1, long_prompt.clone(), 4, 0.6);
+    let (short_req, _sh) = mk_request(2, vec![3, 1, 4], 4, 0.6);
+    b.admit(long_req);
+    b.admit(short_req);
+    let rep = b.step();
+    assert!(
+        rep.billed_positions >= long_prompt.len(),
+        "one-shot first step billed {} < the {}-token prompt",
+        rep.billed_positions,
+        long_prompt.len()
+    );
+
+    // Chunked: the long prompt enters as chunk rows, each bounded by the
+    // grant, so the chatter's per-step bill is its own cost + <= CHUNK.
+    let mut b = mk(CHUNK);
+    let (long_req, lh) = mk_request(1, long_prompt.clone(), 4, 0.6);
+    let (short_req, sh) = mk_request(2, vec![3, 1, 4], 4, 0.6);
+    b.admit(long_req);
+    b.admit(short_req);
+    let mut saw_interleaved_chunk = false;
+    while b.active() > 0 {
+        let rep = b.step();
+        assert!(rep.prefill_tokens <= CHUNK, "chunk grant exceeded");
+        if rep.prefill_chunks > 0 && rep.billed.len() == 2 {
+            saw_interleaved_chunk = true;
+            // active-set order: long (id 1) first, then the chatter.
+            let own = rep.billed[1];
+            assert_eq!(
+                rep.billed[0], rep.prefill_tokens,
+                "chunk row billed beyond its grant"
+            );
+            assert!(
+                rep.billed_positions <= own + CHUNK,
+                "HOL bound broken: step billed {} > own {} + chunk {}",
+                rep.billed_positions,
+                own,
+                CHUNK
+            );
+        }
+    }
+    assert!(saw_interleaved_chunk, "no co-batched chunk step observed");
+    assert_eq!(lh.wait().unwrap().tokens.len(), 4);
+    assert_eq!(sh.wait().unwrap().tokens.len(), 4);
+}
+
+/// A sequence cancelled mid-prefill releases everything it holds: cache
+/// residency drains to zero and the prefill in-flight gauge does not
+/// stick at the committed chunk positions.
+#[test]
+fn cancel_mid_prefill_releases_residency_and_gauges() {
+    let mut cfg = base_cfg();
+    cfg.cache.block_tokens = 4;
+    cfg.engine.prefill_chunk = 8;
+    cfg.sched.prefill_budget = 8;
+    let metrics = Arc::new(Metrics::new());
+    let (d, t) = sim_pair(17);
+    let mut b =
+        Batcher::new(0, cfg, Box::new(d), Box::new(t), metrics.clone());
+
+    let long_prompt: Vec<u32> = (0..100u32).map(|k| k % 64).collect();
+    let (req, h) = mk_request(1, long_prompt, 8, 0.6);
+    b.admit(req);
+    b.step();
+    b.step();
+    assert_eq!(
+        metrics.prefill_tokens_in_flight(),
+        16,
+        "two 8-token chunks should be in flight"
+    );
+    assert!(b.cache().used_blocks() > 0, "chunks committed no residency");
+
+    h.cancel.cancel();
+    let rep = b.step();
+    assert_eq!(rep.cancelled, 1);
+    let resp = h.wait().unwrap();
+    assert_eq!(resp.finish, dyspec::coordinator::FinishReason::Cancelled);
+    assert!(resp.tokens.is_empty(), "mid-prefill seq emitted tokens");
+    assert_eq!(b.cache().used_blocks(), 0, "cancel leaked blocks");
+    assert_eq!(
+        metrics.prefill_tokens_in_flight(),
+        0,
+        "prefill gauge stuck after cancel"
+    );
+    assert_eq!(metrics.prefill_chunks(), 2);
+    assert_eq!(metrics.prefill_tokens(), 16);
+}
+
 #[test]
 fn mixed_lengths_retire_incrementally() {
     // Different max_new_tokens finish at different steps; the batcher must
